@@ -1,0 +1,64 @@
+//! Continuous k-means (§3.1 "Application to the continuous case"):
+//! build the 1-round coreset C_w, run weighted Lloyd on it, and compare
+//! with Lloyd on the full input — the α+O(ε) continuous guarantee.
+//!
+//!     cargo run --release --example continuous
+
+use std::sync::Arc;
+
+use mrcoreset::algorithms::lloyd::{continuous_cost, lloyd, ContinuousSolution, LloydCfg};
+use mrcoreset::coreset::{one_round_coreset, CoresetConfig};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::{default_l, PartitionStrategy, Simulator};
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::Objective;
+
+/// best-of-3 restarts: vanilla Lloyd is sensitive to seeding, and the
+/// comparison needs a stable reference on both sides.
+fn lloyd_best(
+    data: &mrcoreset::points::VectorData,
+    pts: &[u32],
+    w: &[u64],
+    k: usize,
+) -> ContinuousSolution {
+    (0..3)
+        .map(|s| lloyd(data, pts, w, k, &LloydCfg { seed: 0xF00D + s, ..Default::default() }))
+        .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+        .unwrap()
+}
+
+fn main() {
+    let (n, d, k) = (12_000, 4, 8);
+    let (data, _) = GaussianMixtureSpec { n, d, k, seed: 3, ..Default::default() }.generate();
+    let pts: Vec<u32> = (0..n as u32).collect();
+    let unit = vec![1u64; n];
+
+    // reference: weighted Lloyd on the full input
+    let full = lloyd_best(&data, &pts, &unit, k);
+    println!("full-input Lloyd: cost = {:.1}", full.cost);
+
+    let space = EuclideanSpace::new(Arc::new(data.clone()));
+    for eps in [0.2, 0.4, 0.8] {
+        let sim = Simulator::new();
+        let cfg = CoresetConfig::new(k, eps);
+        let out = one_round_coreset(
+            &space,
+            Objective::Means,
+            &pts,
+            default_l(n, k),
+            PartitionStrategy::RoundRobin,
+            &cfg,
+            &sim,
+        );
+        let sol = lloyd_best(&data, &out.coreset.indices, &out.coreset.weights, k);
+        let cost = continuous_cost(&data, &pts, &unit, &sol.centroids);
+        println!(
+            "eps={eps:<4} |C_w|={:>6}  Lloyd-on-coreset cost = {:>10.1}  ratio = {:.4}",
+            out.coreset.len(),
+            cost,
+            cost / full.cost
+        );
+        assert!(cost / full.cost < 1.3, "coreset Lloyd should track full Lloyd");
+    }
+    println!("continuous OK (1 MapReduce round for the coreset, as §3.1 promises)");
+}

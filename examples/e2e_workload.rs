@@ -1,0 +1,79 @@
+//! End-to-end validation driver (DESIGN.md §3, EXPERIMENTS.md §E2E):
+//! run the full stack — L3 rust coordinator → MapReduce simulator →
+//! CoverWithBalls coreset → XLA/PJRT distance kernels (L1 Pallas via AOT
+//! HLO) → weighted local search — on a realistic 20k-point workload
+//! trace, for both k-median and k-means, and report the paper's headline
+//! metrics: cost ratio to the sequential α-approximation, round count,
+//! local/aggregate memory, coreset size, and wall-clock throughput.
+//!
+//!     make artifacts && cargo run --release --example e2e_workload
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mrcoreset::algorithms::local_search::{local_search, LocalSearchCfg};
+use mrcoreset::algorithms::Instance;
+use mrcoreset::coordinator::{solve, ClusterConfig};
+use mrcoreset::data::trace::TraceSpec;
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::Objective;
+use mrcoreset::runtime::XlaEngine;
+
+fn main() {
+    let n = 20_000;
+    let k = 12;
+    let eps = 0.4;
+
+    // Workload: drifting-source trace with bursts and 2% noise — the
+    // synthetic stand-in for a production feature log (DESIGN.md §5).
+    let (data, _) = TraceSpec { n, d: 4, sources: k, ..Default::default() }.generate();
+    println!("workload: trace n={n} d=4 sources={k}");
+
+    let shared = Arc::new(data);
+    let engine = XlaEngine::load_default();
+    let space = match engine {
+        Some(e) => {
+            println!(
+                "engine: XLA/PJRT loaded ({} artifacts; CPU auto-select keeps the tiled scalar path — see EXPERIMENTS.md §Perf)",
+                e.manifest().entries.len()
+            );
+            EuclideanSpace::with_engine(shared, Arc::new(e))
+        }
+        None => {
+            println!("engine: scalar fallback (run `make artifacts` for the XLA path)");
+            EuclideanSpace::new(shared)
+        }
+    };
+    let pts: Vec<u32> = (0..n as u32).collect();
+
+    for obj in [Objective::Median, Objective::Means] {
+        println!("\n=== {obj} (k={k}, eps={eps}) ===");
+
+        // sequential reference: strong local search on the full input
+        let t0 = Instant::now();
+        let w = vec![1u64; n];
+        let seq_cfg =
+            LocalSearchCfg { max_passes: 60, sample_candidates: 128, ..Default::default() };
+        let seq = local_search(&space, obj, Instance::new(&pts, &w), k, None, &seq_cfg);
+        let seq_wall = t0.elapsed();
+
+        // the paper's 3-round MapReduce algorithm
+        let cfg = ClusterConfig::new(obj, k, eps);
+        let rep = solve(&space, &pts, &cfg);
+
+        print!("{}", rep.summary());
+        let ratio = rep.full_cost / seq.cost;
+        println!("sequential reference: cost={:.1} wall={:.2}s", seq.cost, seq_wall.as_secs_f64());
+        println!("HEADLINE cost(MR)/cost(seq) = {ratio:.4}  (theory: α+O(ε) vs α ⇒ ≈ 1+O(ε))");
+        println!(
+            "throughput: {:.0} points/s end-to-end ({} rounds, M_L={} = {:.1}% of n)",
+            n as f64 / rep.wall.as_secs_f64(),
+            rep.rounds,
+            rep.max_local_memory,
+            100.0 * rep.max_local_memory as f64 / n as f64
+        );
+        assert_eq!(rep.rounds, 3);
+        assert!(ratio < 1.5, "MR solution should be close to the sequential reference");
+    }
+    println!("\nE2E OK");
+}

@@ -1,0 +1,46 @@
+//! Phase-level timing of the 3-round solve (perf-report substitute).
+use mrcoreset::algorithms::Instance;
+use mrcoreset::algorithms::local_search::{local_search, LocalSearchCfg};
+use mrcoreset::coreset::{cover_with_balls, two_round_coreset, CoresetConfig};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::{default_l, partition, PartitionStrategy, Simulator};
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::{MetricSpace, Objective};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let n = 20_000;
+    let k = 8;
+    let (data, _) = GaussianMixtureSpec { n, d: 4, k, seed: 1, ..Default::default() }.generate();
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..n as u32).collect();
+    let l = default_l(n, k);
+    let cfg = CoresetConfig::new(k, 0.5);
+
+    // two-round pipeline with external timing
+    let sim = Simulator::new().with_threads(1); // serialize for clean attribution
+    let t0 = Instant::now();
+    let out = two_round_coreset(&space, Objective::Median, &pts, l, PartitionStrategy::RoundRobin, &cfg, &sim);
+    let t_pipe = t0.elapsed();
+    let stats = sim.take_stats();
+    for r in &stats.rounds { println!("{}: {:.3}s", r.name, r.wall.as_secs_f64()); }
+    println!("pipeline total {:.3}s; |C_w|={} |E_w|={}", t_pipe.as_secs_f64(), out.cw_size, out.coreset.len());
+
+    // round-2 internals: assign vs greedy for one partition
+    let parts = partition(&pts, l, PartitionStrategy::RoundRobin);
+    let cw: Vec<u32> = out.coreset.indices.clone(); // ~|E_w| as stand-in for C_w
+    let t1 = Instant::now();
+    let a = space.assign(&parts[0], &cw);
+    println!("r2 initial assign {}x{}: {:.3}s", parts[0].len(), cw.len(), t1.elapsed().as_secs_f64());
+    std::hint::black_box(a);
+    let t2 = Instant::now();
+    let res = cover_with_balls(&space, &parts[0], &cw, out.global_r.unwrap(), 0.5, 2.0);
+    println!("r2 cover_with_balls on partition: {:.3}s (|E_l|={})", t2.elapsed().as_secs_f64(), res.set.len());
+
+    // round 3
+    let t3 = Instant::now();
+    let inst = Instance::new(&out.coreset.indices, &out.coreset.weights);
+    let sol = local_search(&space, Objective::Median, inst, k, None, &LocalSearchCfg::default());
+    println!("round-3 local search on {}: {:.3}s cost {}", out.coreset.len(), t3.elapsed().as_secs_f64(), sol.cost);
+}

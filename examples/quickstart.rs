@@ -1,0 +1,40 @@
+//! Quickstart: cluster a synthetic point set with the paper's 3-round
+//! MapReduce k-median algorithm and inspect the report.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use mrcoreset::coordinator::{solve, ClusterConfig};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::Objective;
+
+fn main() {
+    // 1. Data: 10k points in R², 8 well-separated Gaussian clusters.
+    let (data, _labels) =
+        GaussianMixtureSpec { n: 10_000, d: 2, k: 8, seed: 42, ..Default::default() }.generate();
+
+    // 2. Space: Euclidean metric over the point store. (Attach the XLA
+    //    engine with `EuclideanSpace::with_engine` for the fast path —
+    //    see examples/e2e_workload.rs.)
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..10_000).collect();
+
+    // 3. Solve: k-median, k=8, precision ε=0.8. Defaults follow §3.4:
+    //    L = ∛(n/k) partitions, T_ℓ via k-means++ with 2k oversampling,
+    //    final round = weighted local search on the coreset.
+    let cfg = ClusterConfig::new(Objective::Median, 8, 0.8);
+    let report = solve(&space, &pts, &cfg);
+
+    // 4. Inspect.
+    print!("{}", report.summary());
+    assert_eq!(report.rounds, 3);
+    println!("\ncenters (point indices): {:?}", report.solution.centers);
+    println!(
+        "compression: {} points -> |E_w| = {} ({:.1}%)",
+        pts.len(),
+        report.coreset_size,
+        100.0 * report.coreset_size as f64 / pts.len() as f64
+    );
+}

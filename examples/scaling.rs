@@ -1,0 +1,40 @@
+//! Scaling demo: local memory and coreset size vs input size at the
+//! paper's L = ∛(n/k) — the sublinearity that makes the algorithm a
+//! MapReduce algorithm (Theorem 3.14).
+//!
+//!     cargo run --release --example scaling
+
+use mrcoreset::coordinator::{solve, ClusterConfig};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::Objective;
+use mrcoreset::util::stats::power_fit;
+use std::sync::Arc;
+
+fn main() {
+    let k = 8;
+    println!("{:>8} {:>4} {:>8} {:>10} {:>10} {:>8}", "n", "L", "|E_w|", "M_L", "M_A", "M_L/n");
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for n in [4_000usize, 8_000, 16_000, 32_000, 64_000] {
+        let (data, _) = GaussianMixtureSpec { n, d: 2, k, seed: 9, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..n as u32).collect();
+        let rep = solve(&space, &pts, &ClusterConfig::new(Objective::Median, k, 0.6));
+        println!(
+            "{:>8} {:>4} {:>8} {:>10} {:>10} {:>8.3}",
+            n,
+            rep.l,
+            rep.coreset_size,
+            rep.max_local_memory,
+            rep.aggregate_memory,
+            rep.max_local_memory as f64 / n as f64
+        );
+        xs.push(n as f64);
+        ys.push(rep.max_local_memory as f64);
+    }
+    let (c, e, r2) = power_fit(&xs, &ys);
+    println!("\nfit: M_L ≈ {c:.2} · n^{e:.3} (r²={r2:.4}); theory: exponent ≈ 2/3");
+    assert!(e < 0.95, "local memory must grow sublinearly (got n^{e:.3})");
+    println!("scaling OK");
+}

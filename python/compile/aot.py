@@ -1,0 +1,103 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for rust.
+
+Emits HLO *text* (NOT `lowered.compile().serialize()` or proto bytes): the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction
+ids, while `HloModuleProto::from_text_file` re-parses text and reassigns
+ids cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-bucketed: the rust runtime pads a real (n, d, k)
+problem up to the smallest bucket that fits, masks padded rows, and uses
+PAD_CENTER_VALUE-initialized center slots that can never win an argmin.
+
+Outputs, under --out-dir (default ../artifacts):
+  assign_cost_{N}x{D}x{K}.hlo.txt   (x, c, w)       -> (nu, mu, dmin_sq, idx)
+  min_update_{N}x{D}.hlo.txt        (x, c1, cur)    -> (new_min,)
+  manifest.txt                      one line per artifact (kind n d k file)
+
+Usage: cd python && python -m compile.aot [--out-dir DIR] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape buckets. Clustering blocks are padded up to these; keep the grid
+# coarse to bound artifact count (3 * 3 * 4 assign_cost + 3 * 3 min_update).
+N_BUCKETS = [256, 1024, 4096, 16384]
+D_BUCKETS = [4, 16, 64]
+K_BUCKETS = [128, 512, 2048]
+
+QUICK_N = [256, 1024]
+QUICK_D = [4, 16]
+QUICK_K = [128]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_assign_cost(n: int, d: int, k: int) -> str:
+    return to_hlo_text(jax.jit(model.assign_cost).lower(f32(n, d), f32(k, d), f32(n)))
+
+
+def lower_min_update(n: int, d: int) -> str:
+    return to_hlo_text(jax.jit(model.min_update).lower(f32(n, d), f32(1, d), f32(n)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--quick", action="store_true", help="small bucket set for fast CI builds"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    ns = QUICK_N if args.quick else N_BUCKETS
+    ds = QUICK_D if args.quick else D_BUCKETS
+    ks = QUICK_K if args.quick else K_BUCKETS
+
+    manifest = []
+    for d in ds:
+        for n in ns:
+            name = f"min_update_{n}x{d}.hlo.txt"
+            path = os.path.join(args.out_dir, name)
+            text = lower_min_update(n, d)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(f"min_update {n} {d} 1 {name}")
+            print(f"wrote {name} ({len(text)} chars)", file=sys.stderr)
+            for k in ks:
+                name = f"assign_cost_{n}x{d}x{k}.hlo.txt"
+                path = os.path.join(args.out_dir, name)
+                text = lower_assign_cost(n, d, k)
+                with open(path, "w") as f:
+                    f.write(text)
+                manifest.append(f"assign_cost {n} {d} {k} {name}")
+                print(f"wrote {name} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("# kind n d k file\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"{len(manifest)} artifacts -> {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

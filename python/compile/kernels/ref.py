@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model entry points.
+
+These are the correctness ground truth: simple, obviously-right broadcast
+formulations with no tiling. pytest asserts kernel == ref across a
+hypothesis-driven sweep of shapes and value regimes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_ref(x, c):
+    """(n, d), (k, d) -> (n, k) squared Euclidean distances, clamped at 0."""
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+
+
+def assign_ref(x, c):
+    """Nearest-center assignment: (min squared distance, argmin index)."""
+    d2 = pairwise_sq_ref(x, c)
+    return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def min_update_ref(x, c, cur):
+    """Elementwise min of current best squared distance and d(x, c)^2.
+
+    x: (n, d), c: (d,) single new center, cur: (n,) current best d^2.
+    """
+    diff = x - c[None, :]
+    d2 = jnp.maximum(jnp.sum(diff * diff, axis=1), 0.0)
+    return jnp.minimum(cur, d2)
+
+
+def weighted_cost_ref(dmin_sq, w, squared):
+    """Weighted clustering cost from per-point min squared distances.
+
+    squared=True  -> k-means cost  mu  = sum w_i * d_i^2
+    squared=False -> k-median cost nu  = sum w_i * d_i
+    """
+    d = dmin_sq if squared else jnp.sqrt(dmin_sq)
+    return jnp.sum(w * d)

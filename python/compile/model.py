@@ -1,0 +1,56 @@
+"""L2: JAX compute graphs for the distance hot path, calling the L1 kernel.
+
+Three entry points are AOT-lowered (see aot.py) and executed from the rust
+coordinator via PJRT:
+
+  assign(x, c)            -> (dmin_sq (n,) f32, idx (n,) i32)
+      nearest-center assignment; used by clustering passes, coreset
+      weighting, and cost evaluation. Pallas pairwise kernel inside.
+
+  min_update(x, c, cur)   -> (new_min (n,) f32,)
+      one greedy step of CoverWithBalls / k-means++ / Gonzalez: fold a
+      single new center into the running min squared distance.
+
+  assign_cost(x, c, w)    -> (nu f32, mu f32, dmin_sq (n,), idx (n,))
+      fused assignment + weighted k-median (nu) and k-means (mu) costs,
+      avoiding a second pass over the distance matrix.
+
+All inputs are f32; `x` rows beyond the true n are padding (the rust side
+masks them out via the returned per-point vectors, and passes w=0 for
+padded rows in assign_cost so the scalar costs are already exact).
+Padded centers are set to PAD_CENTER_VALUE so they never win an argmin.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels.pairwise import pairwise_sq
+
+# Rust pads unused center slots with this coordinate value; with genuine
+# data normalized to O(1e3) magnitudes these are never the argmin.
+PAD_CENTER_VALUE = 3.0e18
+
+
+def assign(x, c):
+    """Nearest-center assignment over a block of points."""
+    d2 = pairwise_sq(x, c)
+    dmin = jnp.min(d2, axis=1)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return dmin, idx
+
+
+def min_update(x, c, cur):
+    """Fold one new center (c: (1, d)) into the running min d^2 (cur: (n,))."""
+    d2 = pairwise_sq(x, c)[:, 0]
+    return (jnp.minimum(cur, d2),)
+
+
+def assign_cost(x, c, w):
+    """Fused assignment + weighted nu/mu costs (w: (n,) f32, 0 for padding)."""
+    d2 = pairwise_sq(x, c)
+    dmin = jnp.min(d2, axis=1)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    nu = jnp.sum(w * jnp.sqrt(dmin))
+    mu = jnp.sum(w * dmin)
+    return nu, mu, dmin, idx

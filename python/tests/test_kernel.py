@@ -1,0 +1,109 @@
+"""L1 correctness: Pallas pairwise kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes and value regimes; fixed cases pin the edge
+behaviours the rust runtime relies on (clamping, tie-breaking, padding).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pairwise import pairwise_sq
+from compile.kernels import ref
+
+# Block-divisible shape grid the AOT buckets use. The kernel requires
+# n % block_n == 0 and k % block_k == 0 (blocks shrink to fit small inputs).
+NS = [1, 2, 8, 256, 512]
+KS = [1, 2, 128, 256]
+DS = [1, 2, 3, 4, 16, 64]
+
+
+def _rand(shape, seed, scale=1.0, dtype=np.float32):
+    rs = np.random.RandomState(seed)
+    return (rs.randn(*shape) * scale).astype(dtype)
+
+
+def _check(x, c, atol=1e-4, rtol=1e-4):
+    got = np.asarray(pairwise_sq(jnp.asarray(x), jnp.asarray(c)))
+    want = np.asarray(ref.pairwise_sq_ref(jnp.asarray(x), jnp.asarray(c)))
+    np.testing.assert_allclose(got, want, atol=atol, rtol=rtol)
+    assert (got >= 0.0).all(), "squared distances must be clamped at 0"
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("k", KS)
+def test_pairwise_shape_grid(n, k):
+    d = 8
+    _check(_rand((n, d), seed=n * 1000 + k), _rand((k, d), seed=k))
+
+
+@pytest.mark.parametrize("d", DS)
+def test_pairwise_feature_dims(d):
+    _check(_rand((256, d), seed=d), _rand((128, d), seed=d + 1))
+
+
+def test_identical_points_zero_distance():
+    x = _rand((256, 16), seed=3)
+    got = np.asarray(pairwise_sq(jnp.asarray(x), jnp.asarray(x[:128])))
+    # diagonal of the first 128 rows is exact 0 after clamping
+    np.testing.assert_allclose(np.diag(got[:128]), 0.0, atol=1e-5)
+
+
+def test_translation_near_invariance():
+    # d(x+t, c+t) == d(x, c) up to float error
+    x = _rand((256, 8), seed=4)
+    c = _rand((128, 8), seed=5)
+    t = np.full((1, 8), 7.25, np.float32)
+    a = np.asarray(pairwise_sq(jnp.asarray(x), jnp.asarray(c)))
+    b = np.asarray(pairwise_sq(jnp.asarray(x + t), jnp.asarray(c + t)))
+    np.testing.assert_allclose(a, b, atol=1e-3, rtol=1e-3)
+
+
+def test_large_magnitudes_no_nan():
+    x = _rand((256, 4), seed=6, scale=1e6)
+    c = _rand((128, 4), seed=7, scale=1e6)
+    got = np.asarray(pairwise_sq(jnp.asarray(x), jnp.asarray(c)))
+    assert np.isfinite(got).all()
+    _check(x, c, atol=1e8, rtol=1e-3)  # relative check dominates at this scale
+
+
+def test_pad_center_value_never_wins():
+    # centers at PAD_CENTER_VALUE are farther than any real center
+    from compile.model import PAD_CENTER_VALUE
+
+    x = _rand((256, 4), seed=8, scale=100.0)
+    c = _rand((128, 4), seed=9, scale=100.0)
+    c[64:] = PAD_CENTER_VALUE
+    got = np.asarray(pairwise_sq(jnp.asarray(x), jnp.asarray(c)))
+    assert (np.argmin(got, axis=1) < 64).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 4, 64, 256]),
+    k=st.sampled_from([1, 2, 64, 128]),
+    d=st.integers(min_value=1, max_value=24),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pairwise_hypothesis_sweep(n, k, d, scale, seed):
+    x = _rand((n, d), seed=seed, scale=scale)
+    c = _rand((k, d), seed=seed + 1, scale=scale)
+    got = np.asarray(pairwise_sq(jnp.asarray(x), jnp.asarray(c)))
+    want = np.asarray(ref.pairwise_sq_ref(jnp.asarray(x), jnp.asarray(c)))
+    np.testing.assert_allclose(got, want, atol=1e-4 * scale * scale * d, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bn=st.sampled_from([32, 64, 128, 256]),
+    bk=st.sampled_from([16, 32, 128]),
+)
+def test_pairwise_block_size_invariance(bn, bk):
+    # the tiling must not change the numbers
+    x = _rand((256, 8), seed=10)
+    c = _rand((128, 8), seed=11)
+    got = np.asarray(pairwise_sq(jnp.asarray(x), jnp.asarray(c), block_n=bn, block_k=bk))
+    base = np.asarray(pairwise_sq(jnp.asarray(x), jnp.asarray(c)))
+    np.testing.assert_allclose(got, base, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,98 @@
+"""L2 correctness: model entry points vs oracles + AOT contract tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(shape, seed, scale=1.0):
+    rs = np.random.RandomState(seed)
+    return (rs.randn(*shape) * scale).astype(np.float32)
+
+
+def test_assign_matches_ref():
+    x, c = _rand((256, 8), 0), _rand((128, 8), 1)
+    dmin, idx = model.assign(jnp.asarray(x), jnp.asarray(c))
+    rdmin, ridx = ref.assign_ref(jnp.asarray(x), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(dmin), np.asarray(rdmin), atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+def test_assign_idx_dtype_i32():
+    x, c = _rand((256, 4), 2), _rand((128, 4), 3)
+    _, idx = model.assign(jnp.asarray(x), jnp.asarray(c))
+    assert idx.dtype == jnp.int32
+
+
+def test_min_update_matches_ref():
+    x = _rand((256, 8), 4)
+    c = _rand((1, 8), 5)
+    cur = np.abs(_rand((256,), 6)) * 10
+    (got,) = model.min_update(jnp.asarray(x), jnp.asarray(c), jnp.asarray(cur))
+    want = ref.min_update_ref(jnp.asarray(x), jnp.asarray(c[0]), jnp.asarray(cur))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_min_update_monotone():
+    # result never exceeds the running minimum
+    x = _rand((256, 8), 7)
+    c = _rand((1, 8), 8)
+    cur = np.abs(_rand((256,), 9))
+    (got,) = model.min_update(jnp.asarray(x), jnp.asarray(c), jnp.asarray(cur))
+    assert (np.asarray(got) <= cur + 1e-6).all()
+
+
+def test_assign_cost_fused_matches_parts():
+    x, c = _rand((256, 8), 10), _rand((128, 8), 11)
+    w = np.abs(_rand((256,), 12)) + 0.5
+    nu, mu, dmin, idx = model.assign_cost(jnp.asarray(x), jnp.asarray(c), jnp.asarray(w))
+    rdmin, ridx = ref.assign_ref(jnp.asarray(x), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(dmin), np.asarray(rdmin), atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(
+        float(nu), float(ref.weighted_cost_ref(rdmin, jnp.asarray(w), False)), rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        float(mu), float(ref.weighted_cost_ref(rdmin, jnp.asarray(w), True)), rtol=1e-4
+    )
+
+
+def test_assign_cost_zero_weights_mask_padding():
+    # padded rows (w = 0) must not contribute to nu/mu even with garbage coords
+    x = _rand((256, 8), 13)
+    x[200:] = 1e6  # garbage padding rows
+    c = _rand((128, 8), 14)
+    w = np.ones(256, np.float32)
+    w[200:] = 0.0
+    nu, mu, _, _ = model.assign_cost(jnp.asarray(x), jnp.asarray(c), jnp.asarray(w))
+    rdmin, _ = ref.assign_ref(jnp.asarray(x[:200]), jnp.asarray(c))
+    np.testing.assert_allclose(
+        float(nu), float(jnp.sum(jnp.sqrt(rdmin))), rtol=1e-3
+    )
+    np.testing.assert_allclose(float(mu), float(jnp.sum(rdmin)), rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 4, 64, 256]),
+    k=st.sampled_from([1, 2, 128]),
+    d=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_assign_hypothesis(n, k, d, seed):
+    x, c = _rand((n, d), seed), _rand((k, d), seed + 1)
+    dmin, idx = model.assign(jnp.asarray(x), jnp.asarray(c))
+    rdmin, ridx = ref.assign_ref(jnp.asarray(x), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(dmin), np.asarray(rdmin), atol=1e-4, rtol=1e-4)
+    # ties can differ only where distances are equal within tolerance
+    same = np.asarray(idx) == np.asarray(ridx)
+    if not same.all():
+        bad = ~same
+        d2 = np.asarray(ref.pairwise_sq_ref(jnp.asarray(x), jnp.asarray(c)))
+        np.testing.assert_allclose(
+            d2[bad, np.asarray(idx)[bad]], d2[bad, np.asarray(ridx)[bad]], rtol=1e-5
+        )

@@ -1,0 +1,109 @@
+//! Benchmark harness (criterion is unavailable offline; this is a
+//! custom `harness = false` bench binary driven by `util::bench`).
+//!
+//! Two layers of output:
+//!   1. Experiment tables E1..E10 — the "tables & figures" of the paper
+//!      reproduction (quick mode by default; `-- --full` for the sizes
+//!      recorded in EXPERIMENTS.md).
+//!   2. Micro/throughput benchmarks of the hot paths: CoverWithBalls,
+//!      bulk assignment (scalar vs XLA engine), local search, and the
+//!      end-to-end 3-round solve.
+//!
+//! Usage:
+//!   cargo bench                    # everything, quick experiments
+//!   cargo bench -- e4              # one experiment
+//!   cargo bench -- micro           # only the micro benches
+//!   cargo bench -- --full          # full-size experiment tables
+
+use std::sync::Arc;
+
+use mrcoreset::algorithms::local_search::{local_search, LocalSearchCfg};
+use mrcoreset::algorithms::Instance;
+use mrcoreset::coordinator::{solve, ClusterConfig};
+use mrcoreset::coreset::cover_with_balls;
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::eval::{run_experiment, ALL_IDS};
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::{MetricSpace, Objective};
+use mrcoreset::runtime::XlaEngine;
+use mrcoreset::util::bench::bench;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let filters: Vec<&String> =
+        args.iter().filter(|a| !a.starts_with("--") && !a.contains("bench")).collect();
+    let want = |name: &str| {
+        filters.is_empty() || filters.iter().any(|f| name.contains(f.as_str()))
+    };
+
+    // ---- experiment tables -------------------------------------------
+    for id in ALL_IDS {
+        if want(id) && (filters.iter().any(|f| f.as_str() == *id) || filters.is_empty()) {
+            let res = run_experiment(id, !full).expect("known id");
+            println!("{}", res.render());
+        }
+    }
+
+    // ---- micro benches ------------------------------------------------
+    if !want("micro") && !filters.is_empty() {
+        return;
+    }
+    println!("## micro benchmarks\n");
+    let n = 20_000usize;
+    let k = 8usize;
+    let (data, _) = GaussianMixtureSpec { n, d: 4, k, seed: 1, ..Default::default() }.generate();
+    let shared = Arc::new(data);
+    let plain = EuclideanSpace::new(shared.clone());
+    let pts: Vec<u32> = (0..n as u32).collect();
+    let centers: Vec<u32> = (0..256u32).collect();
+
+    // bulk assignment: scalar vs engine
+    let r = bench("assign 20k x 256 (scalar)", 1, 5, || {
+        std::hint::black_box(plain.assign(&pts, &centers));
+    });
+    println!("{r}   [{:.1} Mpairs/s]", r.throughput_per_sec(n * 256) / 1e6);
+    if let Some(engine) = XlaEngine::load_default() {
+        let mut engine = engine;
+        engine.set_dispatch_threshold(1);
+        let fast = EuclideanSpace::with_engine(shared.clone(), Arc::new(engine));
+        let r = bench("assign 20k x 256 (xla engine)", 1, 5, || {
+            std::hint::black_box(fast.assign(&pts, &centers));
+        });
+        println!("{r}   [{:.1} Mpairs/s]", r.throughput_per_sec(n * 256) / 1e6);
+    }
+
+    // CoverWithBalls throughput
+    let t: Vec<u32> = (0..16u32).map(|i| i * 1000).collect();
+    let a = plain.assign(&pts, &t);
+    let radius = a.dist.iter().sum::<f64>() / n as f64;
+    let r = bench("cover_with_balls 20k (eps=.5 b=2)", 1, 5, || {
+        std::hint::black_box(cover_with_balls(&plain, &pts, &t, radius, 0.5, 2.0));
+    });
+    println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(n) / 1e3);
+
+    // weighted local search on a coreset-sized instance
+    let sub: Vec<u32> = (0..2000u32).map(|i| i * 10).collect();
+    let w = vec![10u64; sub.len()];
+    let r = bench("local_search 2k weighted k=8", 1, 3, || {
+        let cfg = LocalSearchCfg::default();
+        std::hint::black_box(local_search(
+            &plain,
+            Objective::Median,
+            Instance::new(&sub, &w),
+            k,
+            None,
+            &cfg,
+        ));
+    });
+    println!("{r}");
+
+    // end-to-end 3-round solve
+    for obj in [Objective::Median, Objective::Means] {
+        let r = bench(&format!("solve 3-round {obj} 20k eps=.5"), 1, 3, || {
+            let cfg = ClusterConfig::new(obj, k, 0.5);
+            std::hint::black_box(solve(&plain, &pts, &cfg));
+        });
+        println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(n) / 1e3);
+    }
+}

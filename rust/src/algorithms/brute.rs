@@ -1,0 +1,125 @@
+//! Exact solvers by enumeration — the test oracle for tiny instances.
+
+use crate::metric::{MetricSpace, Objective};
+
+use super::{Instance, Solution};
+
+/// Exact optimum over all k-subsets of the instance's points. Cost is
+/// exponential in k; guarded to tiny instances (C(n, k) ≤ ~2e6).
+pub fn brute_force(space: &dyn MetricSpace, obj: Objective, inst: Instance<'_>, k: usize) -> Solution {
+    let n = inst.n();
+    let k = k.min(n);
+    assert!(binomial(n, k) <= 2_000_000, "brute_force: instance too large (n={n}, k={k})");
+    let mut comb: Vec<usize> = (0..k).collect();
+    let mut best = Solution { centers: Vec::new(), cost: f64::INFINITY };
+    loop {
+        let centers: Vec<u32> = comb.iter().map(|&i| inst.pts[i]).collect();
+        let cost = inst.cost(space, obj, &centers);
+        if cost < best.cost {
+            best = Solution { centers, cost };
+        }
+        // next combination (lexicographic)
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return best;
+            }
+            i -= 1;
+            if comb[i] != i + n - k {
+                break;
+            }
+        }
+        comb[i] += 1;
+        for j in i + 1..k {
+            comb[j] = comb[j - 1] + 1;
+        }
+    }
+}
+
+/// Exact 1-median/1-mean of a weighted sub-cluster (used by PAM-style
+/// refinement): the point of `pts` minimizing the weighted cost.
+pub fn exact_one_center(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+) -> (u32, f64) {
+    let mut best = (inst.pts[0], f64::INFINITY);
+    for &c in inst.pts {
+        let mut cost = 0.0;
+        for (x, &p) in inst.pts.iter().enumerate() {
+            cost += inst.weights[x] as f64 * obj.cost_of(space.dist(p, c));
+            if cost >= best.1 {
+                break; // early cutoff
+            }
+        }
+        if cost < best.1 {
+            best = (c, cost);
+        }
+    }
+    best
+}
+
+fn binomial(n: usize, k: usize) -> u128 {
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc * (n - i) as u128 / (i + 1) as u128;
+        if acc > 1 << 60 {
+            return acc;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::three_cluster_line;
+
+    #[test]
+    fn finds_obvious_optimum() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        let sol = brute_force(&space, Objective::Median, inst, 3);
+        // optimum: cluster midpoints (indices 2, 7, 12), cost 3*(2+1+0+1+2)=18... per cluster 6
+        assert_eq!(sol.cost, 18.0);
+        let mut c = sol.centers.clone();
+        c.sort_unstable();
+        assert_eq!(c, vec![2, 7, 12]);
+    }
+
+    #[test]
+    fn k1_matches_exact_one_center() {
+        let (space, pts) = three_cluster_line();
+        let w: Vec<u64> = (0..pts.len() as u64).map(|i| i + 1).collect();
+        let inst = Instance::new(&pts, &w);
+        for obj in [Objective::Median, Objective::Means] {
+            let b = brute_force(&space, obj, inst, 1);
+            let (c, cost) = exact_one_center(&space, obj, inst);
+            assert_eq!(b.centers, vec![c]);
+            assert!((b.cost - cost).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn binomial_sane() {
+        assert_eq!(binomial(5, 2), 10);
+        assert_eq!(binomial(10, 0), 1);
+        assert_eq!(binomial(10, 10), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "too large")]
+    fn guards_large_instances() {
+        use crate::metric::dense::EuclideanSpace;
+        use crate::points::VectorData;
+        use std::sync::Arc;
+        let rows: Vec<Vec<f32>> = (0..60).map(|i| vec![i as f32]).collect();
+        let space = EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows)));
+        let pts: Vec<u32> = (0..60).collect();
+        let w = vec![1u64; 60];
+        // C(60, 10) ≈ 7.5e10 — must be rejected
+        let _ = brute_force(&space, Objective::Median, Instance::new(&pts, &w), 10);
+    }
+}

@@ -1,0 +1,195 @@
+//! Weighted Lloyd iteration for the CONTINUOUS k-means variant (§3.1
+//! "Application to the continuous case", §3.3 closing remark): centers
+//! are arbitrary points of R^d (centroids), not members of P. Works
+//! directly on dense vectors, outside the `MetricSpace` index world.
+
+use crate::metric::dense::sq_euclidean;
+use crate::points::VectorData;
+use crate::util::rng::Rng;
+
+/// A continuous solution: k centroids in R^d + its weighted k-means cost.
+#[derive(Clone, Debug)]
+pub struct ContinuousSolution {
+    pub centroids: VectorData,
+    pub cost: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct LloydCfg {
+    pub max_iters: usize,
+    /// Stop when relative cost improvement falls below this.
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for LloydCfg {
+    fn default() -> Self {
+        LloydCfg { max_iters: 50, tol: 1e-6, seed: 0xF00D }
+    }
+}
+
+/// Weighted k-means++ initialization over dense rows.
+fn init_pp(data: &VectorData, pts: &[u32], weights: &[u64], k: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let n = pts.len();
+    let wprobs: Vec<f64> = weights.iter().map(|&w| w as f64).collect();
+    let first = pts[rng.weighted_index(&wprobs).expect("positive weights")];
+    let mut centers: Vec<Vec<f32>> = vec![data.row(first).to_vec()];
+    let mut mind: Vec<f64> = pts.iter().map(|&p| sq_euclidean(data.row(p), &centers[0])).collect();
+    let mut probs = vec![0.0; n];
+    while centers.len() < k.min(n) {
+        for i in 0..n {
+            probs[i] = weights[i] as f64 * mind[i];
+        }
+        let next = match rng.weighted_index(&probs) {
+            Some(i) => pts[i],
+            None => break, // all residuals zero
+        };
+        let row = data.row(next).to_vec();
+        for (i, &p) in pts.iter().enumerate() {
+            let d = sq_euclidean(data.row(p), &row);
+            if d < mind[i] {
+                mind[i] = d;
+            }
+        }
+        centers.push(row);
+    }
+    centers
+}
+
+/// Weighted Lloyd on (pts ⊆ data, weights). Returns centroids + cost
+/// (sum of w·d² to nearest centroid).
+pub fn lloyd(
+    data: &VectorData,
+    pts: &[u32],
+    weights: &[u64],
+    k: usize,
+    cfg: &LloydCfg,
+) -> ContinuousSolution {
+    assert_eq!(pts.len(), weights.len());
+    assert!(!pts.is_empty());
+    let d = data.d();
+    let mut rng = Rng::new(cfg.seed);
+    let mut centers = init_pp(data, pts, weights, k, &mut rng);
+    let mut prev_cost = f64::INFINITY;
+    #[allow(unused_assignments)]
+    let mut cost = 0.0;
+    for _ in 0..cfg.max_iters {
+        // assignment
+        let mut sums = vec![vec![0.0f64; d]; centers.len()];
+        let mut wsum = vec![0u64; centers.len()];
+        cost = 0.0;
+        for (i, &p) in pts.iter().enumerate() {
+            let row = data.row(p);
+            let mut best = f64::INFINITY;
+            let mut bj = 0usize;
+            for (j, c) in centers.iter().enumerate() {
+                let dd = sq_euclidean(row, c);
+                if dd < best {
+                    best = dd;
+                    bj = j;
+                }
+            }
+            cost += weights[i] as f64 * best;
+            wsum[bj] += weights[i];
+            for (s, &x) in sums[bj].iter_mut().zip(row) {
+                *s += weights[i] as f64 * x as f64;
+            }
+        }
+        // update (empty clusters re-seeded from the heaviest-cost point)
+        for (j, c) in centers.iter_mut().enumerate() {
+            if wsum[j] > 0 {
+                for (x, s) in c.iter_mut().zip(&sums[j]) {
+                    *x = (*s / wsum[j] as f64) as f32;
+                }
+            } else {
+                let far = pts[rng.below(pts.len())];
+                *c = data.row(far).to_vec();
+            }
+        }
+        if prev_cost.is_finite() && (prev_cost - cost).abs() <= cfg.tol * prev_cost {
+            break;
+        }
+        prev_cost = cost;
+    }
+    // final cost against final centroids
+    cost = 0.0;
+    for (i, &p) in pts.iter().enumerate() {
+        let row = data.row(p);
+        let best = centers.iter().map(|c| sq_euclidean(row, c)).fold(f64::INFINITY, f64::min);
+        cost += weights[i] as f64 * best;
+    }
+    ContinuousSolution { centroids: VectorData::from_rows(&centers), cost }
+}
+
+/// Continuous k-means cost of arbitrary centroids over a weighted set.
+pub fn continuous_cost(data: &VectorData, pts: &[u32], weights: &[u64], centroids: &VectorData) -> f64 {
+    let mut cost = 0.0;
+    for (i, &p) in pts.iter().enumerate() {
+        let row = data.row(p);
+        let best = (0..centroids.n())
+            .map(|j| sq_euclidean(row, centroids.row(j as u32)))
+            .fold(f64::INFINITY, f64::min);
+        cost += weights[i] as f64 * best;
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blobs() -> VectorData {
+        let mut rows = Vec::new();
+        let mut rng = Rng::new(5);
+        for c in [-50.0f64, 50.0] {
+            for _ in 0..100 {
+                rows.push(vec![(c + rng.gaussian()) as f32, (c + rng.gaussian()) as f32]);
+            }
+        }
+        VectorData::from_rows(&rows)
+    }
+
+    #[test]
+    fn recovers_centroids() {
+        let data = two_blobs();
+        let pts: Vec<u32> = (0..200).collect();
+        let w = vec![1u64; 200];
+        let sol = lloyd(&data, &pts, &w, 2, &LloydCfg::default());
+        assert_eq!(sol.centroids.n(), 2);
+        // centroids near (±50, ±50): per-point cost ~2 (2 dims of unit var)
+        assert!(sol.cost / 200.0 < 4.0, "avg cost {}", sol.cost / 200.0);
+        let mut xs: Vec<f32> = (0..2).map(|j| sol.centroids.row(j)[0]).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((xs[0] + 50.0).abs() < 2.0 && (xs[1] - 50.0).abs() < 2.0, "{xs:?}");
+    }
+
+    #[test]
+    fn weights_shift_centroid() {
+        let data = VectorData::from_rows(&[vec![0.0], vec![10.0]]);
+        let pts = vec![0u32, 1u32];
+        let w = vec![9u64, 1u64];
+        let sol = lloyd(&data, &pts, &w, 1, &LloydCfg::default());
+        let c = sol.centroids.row(0)[0];
+        assert!((c - 1.0).abs() < 1e-5, "weighted centroid {c}");
+    }
+
+    #[test]
+    fn continuous_beats_discrete_cost() {
+        // the centroid of {0, 1} at 0.5 costs 0.5; any discrete center costs 1.0
+        let data = VectorData::from_rows(&[vec![0.0], vec![1.0]]);
+        let pts = vec![0u32, 1u32];
+        let w = vec![1u64, 1u64];
+        let sol = lloyd(&data, &pts, &w, 1, &LloydCfg::default());
+        assert!((sol.cost - 0.5).abs() < 1e-6, "cost {}", sol.cost);
+    }
+
+    #[test]
+    fn continuous_cost_helper_agrees() {
+        let data = two_blobs();
+        let pts: Vec<u32> = (0..200).collect();
+        let w = vec![1u64; 200];
+        let sol = lloyd(&data, &pts, &w, 2, &LloydCfg::default());
+        let c = continuous_cost(&data, &pts, &w, &sol.centroids);
+        assert!((c - sol.cost).abs() < 1e-6 * (1.0 + c.abs()));
+    }
+}

@@ -1,0 +1,283 @@
+//! Single-swap local search for weighted k-median / k-means
+//! (Arya et al. [2] for k-median; Gupta–Tangwongsan [12] / Kanungo et
+//! al. [18] analyses for k-means). This is the paper's sequential
+//! α-approximation — it runs on each partition (T_ℓ, §3.2/3.3 step 1,
+//! optionally) and on the final coreset instance (§3.4 round 3).
+//!
+//! Swap evaluation uses the standard nearest/second-nearest bookkeeping:
+//! with d₁/d₂ maintained per point, the cost of solution S − {out} + {in}
+//! is computable in one O(n) pass per candidate, so a full improvement
+//! scan is O(n·(k + |candidates|)) distance evaluations.
+//!
+//! `t`-swap (multi-swap) gives α = 3+2/t (median) / 5+4/t (means); we
+//! implement t = 1 plus a sampled multi-candidate scan, which already
+//! sits far below the worst-case bound on non-adversarial instances.
+
+use crate::metric::{MetricSpace, Objective};
+use crate::util::rng::Rng;
+
+use super::{seeding, Instance, Solution};
+
+#[derive(Clone, Debug)]
+pub struct LocalSearchCfg {
+    /// Minimum relative improvement to accept a swap (the 1−δ factor in
+    /// Arya et al.; guarantees polynomial convergence).
+    pub min_rel_improvement: f64,
+    /// Upper bound on improvement passes.
+    pub max_passes: usize,
+    /// Swap-in candidates per pass: all points if n ≤ exhaustive_below,
+    /// else a uniform sample of this size.
+    pub sample_candidates: usize,
+    pub exhaustive_below: usize,
+    /// With sampled candidate pools, stop only after this many
+    /// consecutive passes without an improving swap (a single unlucky
+    /// sample must not end the search); exhaustive pools stop at once.
+    pub patience: usize,
+    pub seed: u64,
+}
+
+impl Default for LocalSearchCfg {
+    fn default() -> Self {
+        LocalSearchCfg {
+            min_rel_improvement: 1e-4,
+            max_passes: 40,
+            sample_candidates: 64,
+            exhaustive_below: 256,
+            patience: 5,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Nearest + second-nearest center bookkeeping for each point.
+struct Book {
+    d1: Vec<f64>,
+    i1: Vec<u32>, // position within `centers`
+    d2: Vec<f64>,
+}
+
+fn rebuild_book(space: &dyn MetricSpace, pts: &[u32], centers: &[u32]) -> Book {
+    let n = pts.len();
+    let mut d1 = vec![f64::INFINITY; n];
+    let mut i1 = vec![0u32; n];
+    let mut d2 = vec![f64::INFINITY; n];
+    for (j, &c) in centers.iter().enumerate() {
+        for (x, &p) in pts.iter().enumerate() {
+            let d = space.dist(p, c);
+            if d < d1[x] {
+                d2[x] = d1[x];
+                d1[x] = d;
+                i1[x] = j as u32;
+            } else if d < d2[x] {
+                d2[x] = d;
+            }
+        }
+    }
+    Book { d1, i1, d2 }
+}
+
+/// Cost of the current solution from the book.
+fn book_cost(book: &Book, obj: Objective, weights: &[u64]) -> f64 {
+    book.d1.iter().zip(weights).map(|(&d, &w)| w as f64 * obj.cost_of(d)).sum()
+}
+
+/// Evaluate all k swaps (out ∈ S) for one candidate `cand` in a single
+/// pass: returns (best_out_position, best_total_cost).
+fn eval_candidate(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    book: &Book,
+    k: usize,
+    cand: u32,
+) -> (usize, f64) {
+    // base: cost if we only ADD cand (each point takes min(d1, d(cand)));
+    // delta[q]: correction if center q is REMOVED — points whose nearest
+    // is q fall back to min(d2, d(cand)) instead of min(d1, d(cand)).
+    let mut base = 0.0f64;
+    let mut delta = vec![0.0f64; k];
+    for (x, &p) in inst.pts.iter().enumerate() {
+        let w = inst.weights[x] as f64;
+        let dc = space.dist(p, cand);
+        let with_add = obj.cost_of(dc.min(book.d1[x]));
+        base += w * with_add;
+        let q = book.i1[x] as usize;
+        let fallback = obj.cost_of(dc.min(book.d2[x]));
+        delta[q] += w * (fallback - with_add);
+    }
+    let mut best_q = 0usize;
+    let mut best = f64::INFINITY;
+    for (q, &dq) in delta.iter().enumerate() {
+        let total = base + dq;
+        if total < best {
+            best = total;
+            best_q = q;
+        }
+    }
+    (best_q, best)
+}
+
+/// Run local search from an initial solution (seeded with D^p sampling if
+/// `init` is None). Returns the locally-optimal solution.
+pub fn local_search(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+    init: Option<Vec<u32>>,
+    cfg: &LocalSearchCfg,
+) -> Solution {
+    let n = inst.n();
+    let k = k.min(n);
+    let mut rng = Rng::new(cfg.seed);
+    let mut centers = match init {
+        Some(c) => {
+            assert!(!c.is_empty());
+            c
+        }
+        None => seeding::dpp_seeding(space, obj, inst, k, &mut rng).centers,
+    };
+    if centers.len() >= n {
+        // every point can be a center
+        let cost = inst.cost(space, obj, &centers);
+        return Solution { centers, cost };
+    }
+    let mut book = rebuild_book(space, inst.pts, &centers);
+    let mut cost = book_cost(&book, obj, inst.weights);
+    let exhaustive = n <= cfg.exhaustive_below;
+    let mut dry_passes = 0usize;
+    for _pass in 0..cfg.max_passes {
+        // candidate pool: exhaustive for small instances; otherwise half
+        // uniform, half cost-biased (w·cost(d1) — the D^p intuition:
+        // badly-served heavy points are the promising swap-ins, and rare
+        // far clusters would almost never enter a uniform sample).
+        let cand_idx: Vec<usize> = if exhaustive {
+            (0..n).collect()
+        } else {
+            let m = cfg.sample_candidates.min(n);
+            let mut pool = rng.sample_distinct(n, m / 2);
+            let probs: Vec<f64> = (0..n)
+                .map(|i| inst.weights[i] as f64 * obj.cost_of(book.d1[i]))
+                .collect();
+            for _ in 0..(m - m / 2) {
+                if let Some(i) = rng.weighted_index(&probs) {
+                    pool.push(i);
+                }
+            }
+            pool.sort_unstable();
+            pool.dedup();
+            pool
+        };
+        let mut best_cost = cost;
+        let mut best_swap: Option<(usize, u32)> = None;
+        for ci in cand_idx {
+            let cand = inst.pts[ci];
+            if centers.contains(&cand) {
+                continue;
+            }
+            let (q, total) = eval_candidate(space, obj, inst, &book, centers.len(), cand);
+            if total < best_cost {
+                best_cost = total;
+                best_swap = Some((q, cand));
+            }
+        }
+        match best_swap {
+            Some((q, cand)) if best_cost <= cost * (1.0 - cfg.min_rel_improvement) => {
+                centers[q] = cand;
+                book = rebuild_book(space, inst.pts, &centers);
+                cost = book_cost(&book, obj, inst.weights);
+                dry_passes = 0;
+            }
+            _ if exhaustive => break, // true local optimum
+            _ => {
+                dry_passes += 1;
+                if dry_passes >= cfg.patience {
+                    break; // repeatedly dry sampled pools: call it converged
+                }
+            }
+        }
+    }
+    Solution { centers, cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::brute::brute_force;
+    use crate::algorithms::testutil::three_cluster_line;
+
+    #[test]
+    fn reaches_cluster_structure() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        for obj in [Objective::Median, Objective::Means] {
+            let sol = local_search(&space, obj, inst, 3, None, &LocalSearchCfg::default());
+            let mut buckets = [0; 3];
+            for c in &sol.centers {
+                buckets[(*c / 5) as usize] += 1;
+            }
+            assert_eq!(buckets, [1, 1, 1], "{obj}: centers {:?}", sol.centers);
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_on_tiny_instances() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        for obj in [Objective::Median, Objective::Means] {
+            let opt = brute_force(&space, obj, inst, 2);
+            let ls = local_search(&space, obj, inst, 2, None, &LocalSearchCfg::default());
+            assert!(
+                ls.cost <= opt.cost * 1.7 + 1e-9,
+                "{obj}: ls {} vs opt {}",
+                ls.cost,
+                opt.cost
+            );
+        }
+    }
+
+    #[test]
+    fn respects_initial_solution_and_improves_it() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        let bad_init = vec![pts[0], pts[1], pts[2]]; // all in one cluster
+        let init_cost = inst.cost(&space, Objective::Median, &bad_init);
+        let sol = local_search(
+            &space,
+            Objective::Median,
+            inst,
+            3,
+            Some(bad_init),
+            &LocalSearchCfg::default(),
+        );
+        assert!(sol.cost < init_cost * 0.2, "cost {} vs init {}", sol.cost, init_cost);
+    }
+
+    #[test]
+    fn weighted_points_pull_centers() {
+        let (space, pts) = three_cluster_line();
+        let mut w = vec![1u64; pts.len()];
+        w[12] = 10_000; // heavy point in the third cluster
+        let inst = Instance::new(&pts, &w);
+        let sol = local_search(&space, Objective::Means, inst, 1, None, &LocalSearchCfg::default());
+        assert_eq!(sol.centers, vec![pts[12]]);
+    }
+
+    #[test]
+    fn k_ge_n_is_exact_zero() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let sol = local_search(
+            &space,
+            Objective::Means,
+            Instance::new(&pts, &w),
+            pts.len() + 5,
+            None,
+            &LocalSearchCfg::default(),
+        );
+        assert_eq!(sol.cost, 0.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Sequential clustering algorithms (paper §3.4 building blocks).
+//!
+//! The MapReduce constructions need two sequential primitives, both run
+//! on weighted instances:
+//!   1. a β-approximation (possibly bi-criteria, m ≥ k centers) to
+//!      bootstrap each partition's `T_ℓ` — `seeding::*` (k-means++‖
+//!      bi-criteria, refs [1, 5, 25]) or `local_search` (refs [2, 12, 18]);
+//!   2. an α-approximation to solve the final weighted coreset instance —
+//!      `local_search`, or `pam` / `lloyd` for baselines & the continuous
+//!      variant.
+//! `brute` provides exact optima on tiny instances as the test oracle.
+
+pub mod brute;
+pub mod lloyd;
+pub mod local_search;
+pub mod multi_swap;
+pub mod pam;
+pub mod seeding;
+
+use crate::metric::{MetricSpace, Objective};
+
+/// A clustering solution: center point indices (global, `S ⊆ P` per the
+/// paper's discrete formulation) plus its cost on the instance it was
+/// computed for.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Solution {
+    pub centers: Vec<u32>,
+    pub cost: f64,
+}
+
+impl Solution {
+    pub fn k(&self) -> usize {
+        self.centers.len()
+    }
+}
+
+/// A weighted instance view: points (global indices) + parallel weights.
+#[derive(Clone, Copy, Debug)]
+pub struct Instance<'a> {
+    pub pts: &'a [u32],
+    pub weights: &'a [u64],
+}
+
+impl<'a> Instance<'a> {
+    pub fn new(pts: &'a [u32], weights: &'a [u64]) -> Instance<'a> {
+        assert_eq!(pts.len(), weights.len());
+        assert!(!pts.is_empty(), "empty instance");
+        Instance { pts, weights }
+    }
+
+    pub fn n(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn total_weight(&self) -> u64 {
+        self.weights.iter().sum()
+    }
+
+    pub fn cost(&self, space: &dyn MetricSpace, obj: Objective, centers: &[u32]) -> f64 {
+        space.weighted_cost(obj, self.pts, self.weights, centers)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::metric::dense::EuclideanSpace;
+    use crate::points::VectorData;
+    use std::sync::Arc;
+
+    /// Tiny 1-d space with three obvious clusters around 0, 100, 200.
+    pub fn three_cluster_line() -> (EuclideanSpace, Vec<u32>) {
+        let mut rows = Vec::new();
+        for c in [0.0f32, 100.0, 200.0] {
+            for off in [-2.0f32, -1.0, 0.0, 1.0, 2.0] {
+                rows.push(vec![c + off]);
+            }
+        }
+        let n = rows.len() as u32;
+        (EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows))), (0..n).collect())
+    }
+}

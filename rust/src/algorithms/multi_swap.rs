@@ -1,0 +1,155 @@
+//! t-swap local search (paper §3.4: Arya et al. [2] achieve α = 3 + 2/t
+//! for k-median and Gupta–Tangwongsan [12] α = 5 + 4/t for k-means with
+//! t simultaneous swaps). Exhaustive t-swap is O(n^t k^t); this is the
+//! standard sampled variant: start from the 1-swap local optimum, then
+//! attempt random t-subsets of (out-centers, in-candidates), with
+//! candidates drawn cost-biased. Never worse than its 1-swap start.
+
+use crate::metric::{MetricSpace, Objective};
+use crate::util::rng::Rng;
+
+use super::local_search::{local_search, LocalSearchCfg};
+use super::{Instance, Solution};
+
+#[derive(Clone, Debug)]
+pub struct MultiSwapCfg {
+    /// Simultaneous swaps t ≥ 1 (t = 1 degenerates to `local_search`).
+    pub t: usize,
+    /// Random t-swap attempts per pass.
+    pub tries_per_pass: usize,
+    pub max_passes: usize,
+    pub seed: u64,
+}
+
+impl Default for MultiSwapCfg {
+    fn default() -> Self {
+        MultiSwapCfg { t: 2, tries_per_pass: 64, max_passes: 20, seed: 0x7557 }
+    }
+}
+
+/// Run 1-swap local search to a local optimum, then escape with sampled
+/// t-swaps.
+pub fn multi_swap_search(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+    cfg: &MultiSwapCfg,
+    ls_cfg: &LocalSearchCfg,
+) -> Solution {
+    assert!(cfg.t >= 1);
+    let base = local_search(space, obj, inst, k, None, ls_cfg);
+    if cfg.t == 1 || base.centers.len() < cfg.t || inst.n() <= base.centers.len() {
+        return base;
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut centers = base.centers;
+    let mut cost = base.cost;
+    let n = inst.n();
+    for _pass in 0..cfg.max_passes {
+        let mut improved = false;
+        // cost-biased candidate weights from the current assignment
+        let assign = space.assign(inst.pts, &centers);
+        let probs: Vec<f64> = (0..n)
+            .map(|i| inst.weights[i] as f64 * obj.cost_of(assign.dist[i]))
+            .collect();
+        for _ in 0..cfg.tries_per_pass {
+            // t distinct out-positions
+            let outs = rng.sample_distinct(centers.len(), cfg.t);
+            // t distinct in-candidates (cost-biased, not already centers)
+            let mut ins: Vec<u32> = Vec::with_capacity(cfg.t);
+            let mut guard = 0;
+            while ins.len() < cfg.t && guard < 32 * cfg.t {
+                guard += 1;
+                let pick = match rng.weighted_index(&probs) {
+                    Some(i) => inst.pts[i],
+                    None => inst.pts[rng.below(n)],
+                };
+                if !centers.contains(&pick) && !ins.contains(&pick) {
+                    ins.push(pick);
+                }
+            }
+            if ins.len() < cfg.t {
+                continue;
+            }
+            let mut trial = centers.clone();
+            for (o, i) in outs.iter().zip(&ins) {
+                trial[*o] = *i;
+            }
+            let c = inst.cost(space, obj, &trial);
+            if c + 1e-12 < cost {
+                centers = trial;
+                cost = c;
+                improved = true;
+                break; // re-derive biases from the new solution
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    Solution { centers, cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::three_cluster_line;
+
+    #[test]
+    fn never_worse_than_single_swap() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        for obj in [Objective::Median, Objective::Means] {
+            let ls_cfg = LocalSearchCfg::default();
+            let single = local_search(&space, obj, inst, 3, None, &ls_cfg);
+            let multi =
+                multi_swap_search(&space, obj, inst, 3, &MultiSwapCfg::default(), &ls_cfg);
+            assert!(multi.cost <= single.cost + 1e-9, "{obj}");
+            assert_eq!(multi.centers.len(), 3);
+        }
+    }
+
+    #[test]
+    fn t1_equals_local_search() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        let ls_cfg = LocalSearchCfg::default();
+        let cfg = MultiSwapCfg { t: 1, ..Default::default() };
+        let a = local_search(&space, Objective::Median, inst, 3, None, &ls_cfg);
+        let b = multi_swap_search(&space, Objective::Median, inst, 3, &cfg, &ls_cfg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn escapes_paired_local_optimum() {
+        // Geometry where 1-swap stalls: two tight far pairs and a broad
+        // middle cluster, k=2. From centers (mid, mid) a single swap that
+        // grabs one far pair strands the other; 2-swap grabs both pairs.
+        use crate::metric::dense::EuclideanSpace;
+        use crate::points::VectorData;
+        use std::sync::Arc;
+        let mut rows = vec![];
+        for off in [-1.0f32, 1.0] {
+            rows.push(vec![-1000.0 + off]);
+        }
+        for off in [-1.0f32, 1.0] {
+            rows.push(vec![1000.0 + off]);
+        }
+        for i in 0..20 {
+            rows.push(vec![(i as f32 - 10.0) * 0.5]);
+        }
+        let space = EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows)));
+        let pts: Vec<u32> = (0..rows.len() as u32).collect();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        let ls_cfg = LocalSearchCfg::default();
+        let cfg = MultiSwapCfg { t: 2, tries_per_pass: 256, max_passes: 40, seed: 3 };
+        let multi = multi_swap_search(&space, Objective::Means, inst, 3, &cfg, &ls_cfg);
+        // good solutions serve both far pairs: cost < 1e5 (a stranded pair
+        // alone costs ~ (2000)^2 * 2 = 8e6)
+        assert!(multi.cost < 1.0e5, "cost {}", multi.cost);
+    }
+}

@@ -1,0 +1,122 @@
+//! PAM (Partitioning Around Medoids, Kaufman–Rousseeuw [19]): BUILD +
+//! exhaustive SWAP on weighted instances. O(k·n²)-ish per iteration, so
+//! it is reserved for small instances — exactly how the PAMAE baseline
+//! [24] uses it (PAM on random samples).
+
+use crate::metric::{MetricSpace, Objective};
+
+use super::{Instance, Solution};
+
+#[derive(Clone, Debug)]
+pub struct PamCfg {
+    pub max_iters: usize,
+    /// Hard cap on instance size (distance matrix cost grows as n²).
+    pub max_n: usize,
+}
+
+impl Default for PamCfg {
+    fn default() -> Self {
+        PamCfg { max_iters: 30, max_n: 2048 }
+    }
+}
+
+/// BUILD: greedily add the medoid that most decreases total cost.
+fn build(space: &dyn MetricSpace, obj: Objective, inst: Instance<'_>, k: usize) -> Vec<u32> {
+    let n = inst.n();
+    let mut centers: Vec<u32> = Vec::with_capacity(k);
+    let mut mind = vec![f64::INFINITY; n];
+    for _ in 0..k.min(n) {
+        let mut best: Option<(usize, f64)> = None;
+        for (ci, &c) in inst.pts.iter().enumerate() {
+            if centers.contains(&c) {
+                continue;
+            }
+            let mut cost = 0.0;
+            for (x, &p) in inst.pts.iter().enumerate() {
+                let d = space.dist(p, c).min(mind[x]);
+                cost += inst.weights[x] as f64 * obj.cost_of(d);
+            }
+            if best.map_or(true, |(_, bc)| cost < bc) {
+                best = Some((ci, cost));
+            }
+        }
+        let (ci, _) = best.expect("nonempty instance");
+        let c = inst.pts[ci];
+        centers.push(c);
+        space.min_update(inst.pts, c, &mut mind);
+    }
+    centers
+}
+
+/// Full PAM: BUILD then first-improvement SWAP passes until local optimum.
+pub fn pam(space: &dyn MetricSpace, obj: Objective, inst: Instance<'_>, k: usize, cfg: &PamCfg) -> Solution {
+    assert!(
+        inst.n() <= cfg.max_n,
+        "pam: n={} exceeds cfg.max_n={} (use local_search for large instances)",
+        inst.n(),
+        cfg.max_n
+    );
+    let mut centers = build(space, obj, inst, k);
+    let mut cost = inst.cost(space, obj, &centers);
+    for _ in 0..cfg.max_iters {
+        let mut improved = false;
+        'swap: for q in 0..centers.len() {
+            for &cand in inst.pts {
+                if centers.contains(&cand) {
+                    continue;
+                }
+                let old = centers[q];
+                centers[q] = cand;
+                let c = inst.cost(space, obj, &centers);
+                if c + 1e-12 < cost {
+                    cost = c;
+                    improved = true;
+                    break 'swap;
+                }
+                centers[q] = old;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    Solution { centers, cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::brute::brute_force;
+    use crate::algorithms::testutil::three_cluster_line;
+
+    #[test]
+    fn pam_matches_brute_on_tiny() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        for obj in [Objective::Median, Objective::Means] {
+            let opt = brute_force(&space, obj, inst, 3);
+            let p = pam(&space, obj, inst, 3, &PamCfg::default());
+            assert!((p.cost - opt.cost).abs() < 1e-9, "{obj}: pam {} opt {}", p.cost, opt.cost);
+        }
+    }
+
+    #[test]
+    fn weighted_medoid_shifts() {
+        let (space, pts) = three_cluster_line();
+        let mut w = vec![1u64; pts.len()];
+        w[0] = 1000; // pull the first cluster's medoid to index 0
+        let inst = Instance::new(&pts, &w);
+        let p = pam(&space, Objective::Median, inst, 3, &PamCfg::default());
+        assert!(p.centers.contains(&pts[0]), "centers {:?}", p.centers);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds cfg.max_n")]
+    fn size_guard() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let cfg = PamCfg { max_n: 10, ..Default::default() };
+        let _ = pam(&space, Objective::Median, Instance::new(&pts, &w), 2, &cfg);
+    }
+}

@@ -1,0 +1,186 @@
+//! Seeding / bi-criteria approximations.
+//!
+//! `dpp_seeding` is weighted k-means++ / k-median++: iteratively sample
+//! the next center with probability proportional to `w(x) · cost(d(x, S))`
+//! (D² weighting for k-means [1], D¹ for k-median). With oversampling
+//! `m > k` this is the bi-criteria β-approximation the paper recommends
+//! for the per-partition sets `T_ℓ` (§3.4, refs [5, 25]): small constant
+//! β, fast, and the coreset size only grows linearly in m.
+//!
+//! `gonzalez` (farthest-first traversal) is the classic 2-approximation
+//! for k-center, used as a deterministic alternative T_ℓ and by tests.
+
+use crate::metric::{MetricSpace, Objective};
+use crate::util::rng::Rng;
+
+use super::{Instance, Solution};
+
+/// Weighted D^p-sampling seeding with `m` centers (m ≥ 1). Returns the
+/// selected centers and the final instance cost.
+pub fn dpp_seeding(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    m: usize,
+    rng: &mut Rng,
+) -> Solution {
+    let n = inst.n();
+    assert!(m >= 1);
+    let m = m.min(n);
+    // first center ~ weights
+    let wprobs: Vec<f64> = inst.weights.iter().map(|&w| w as f64).collect();
+    let first = inst.pts[rng.weighted_index(&wprobs).expect("positive weights")];
+    let mut centers = vec![first];
+    let mut mind: Vec<f64> = vec![f64::INFINITY; n];
+    space.min_update(inst.pts, first, &mut mind);
+    let mut probs = vec![0.0f64; n];
+    while centers.len() < m {
+        for i in 0..n {
+            probs[i] = inst.weights[i] as f64 * obj.cost_of(mind[i]);
+        }
+        let next = match rng.weighted_index(&probs) {
+            Some(i) => inst.pts[i],
+            // All residual distances zero: every point coincides with a
+            // center; pick an arbitrary non-center if any remain.
+            None => match inst.pts.iter().find(|p| !centers.contains(p)) {
+                Some(&p) => p,
+                None => break,
+            },
+        };
+        if !centers.contains(&next) {
+            centers.push(next);
+            space.min_update(inst.pts, next, &mut mind);
+        } else {
+            // zero-probability guard: duplicated sample (possible only via
+            // float round-off); fall back to best uncovered point
+            let far = (0..n)
+                .filter(|&i| !centers.contains(&inst.pts[i]))
+                .max_by(|&a, &b| mind[a].partial_cmp(&mind[b]).unwrap());
+            match far {
+                Some(i) => {
+                    let p = inst.pts[i];
+                    centers.push(p);
+                    space.min_update(inst.pts, p, &mut mind);
+                }
+                None => break,
+            }
+        }
+    }
+    let cost = (0..n).map(|i| inst.weights[i] as f64 * obj.cost_of(mind[i])).sum();
+    Solution { centers, cost }
+}
+
+/// Farthest-first traversal (Gonzalez). Deterministic given the start.
+pub fn gonzalez(space: &dyn MetricSpace, inst: Instance<'_>, m: usize, start: usize) -> Vec<u32> {
+    let n = inst.n();
+    assert!(n > 0 && start < n);
+    let m = m.min(n);
+    let mut centers = vec![inst.pts[start]];
+    let mut mind = vec![f64::INFINITY; n];
+    space.min_update(inst.pts, inst.pts[start], &mut mind);
+    while centers.len() < m {
+        let far = (0..n).max_by(|&a, &b| mind[a].partial_cmp(&mind[b]).unwrap()).unwrap();
+        if mind[far] == 0.0 {
+            break; // all points covered exactly (duplicates)
+        }
+        centers.push(inst.pts[far]);
+        space.min_update(inst.pts, inst.pts[far], &mut mind);
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::three_cluster_line;
+    use crate::metric::cost_unit;
+
+    #[test]
+    fn kmeanspp_finds_all_clusters() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        let mut rng = Rng::new(42);
+        let sol = dpp_seeding(&space, Objective::Means, inst, 3, &mut rng);
+        assert_eq!(sol.centers.len(), 3);
+        // one center per cluster: cost must be near-floor (clusters 100 apart)
+        assert!(sol.cost < 100.0, "cost {}", sol.cost);
+        // clusters are index ranges 0..5, 5..10, 10..15
+        let mut buckets = [0; 3];
+        for c in &sol.centers {
+            buckets[(*c / 5) as usize] += 1;
+        }
+        assert_eq!(buckets, [1, 1, 1]);
+    }
+
+    #[test]
+    fn median_seeding_works_too() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let mut rng = Rng::new(7);
+        let sol = dpp_seeding(&space, Objective::Median, Instance::new(&pts, &w), 3, &mut rng);
+        assert!(sol.cost <= 30.0, "cost {}", sol.cost);
+    }
+
+    #[test]
+    fn oversampling_reduces_cost() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let k3 = dpp_seeding(&space, Objective::Means, Instance::new(&pts, &w), 3, &mut r1);
+        let k9 = dpp_seeding(&space, Objective::Means, Instance::new(&pts, &w), 9, &mut r2);
+        assert!(k9.cost <= k3.cost);
+        assert_eq!(k9.centers.len(), 9);
+    }
+
+    #[test]
+    fn weights_bias_selection() {
+        // heavy point must be chosen as the first (and only) center w.h.p.
+        let (space, pts) = three_cluster_line();
+        let mut w = vec![1u64; pts.len()];
+        w[7] = 1_000_000;
+        let mut hits = 0;
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let sol = dpp_seeding(&space, Objective::Means, Instance::new(&pts, &w), 1, &mut rng);
+            if sol.centers[0] == pts[7] {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 18, "heavy point chosen {hits}/20");
+    }
+
+    #[test]
+    fn m_capped_at_n_and_duplicates_handled() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let mut rng = Rng::new(9);
+        let sol = dpp_seeding(&space, Objective::Means, Instance::new(&pts, &w), 100, &mut rng);
+        assert_eq!(sol.centers.len(), pts.len());
+        assert_eq!(sol.cost, 0.0);
+    }
+
+    #[test]
+    fn gonzalez_covers_clusters() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let centers = gonzalez(&space, Instance::new(&pts, &w), 3, 0);
+        assert_eq!(centers.len(), 3);
+        let c = cost_unit(&space, Objective::Median, &pts, &centers);
+        assert!(c <= 30.0, "cost {c}");
+    }
+
+    #[test]
+    fn gonzalez_stops_on_duplicates() {
+        use crate::metric::dense::EuclideanSpace;
+        use crate::points::VectorData;
+        use std::sync::Arc;
+        let v = VectorData::from_rows(&vec![vec![1.0f32]; 6]);
+        let space = EuclideanSpace::new(Arc::new(v));
+        let pts: Vec<u32> = (0..6).collect();
+        let w = vec![1u64; 6];
+        let centers = gonzalez(&space, Instance::new(&pts, &w), 4, 2);
+        assert_eq!(centers.len(), 1, "all duplicates: one center suffices");
+    }
+}

@@ -1,0 +1,170 @@
+//! Ene–Im–Moseley iterative-sampling MapReduce coreset (KDD'11, paper
+//! ref [10]), adapted to our substrate.
+//!
+//! Their `Iterative-Sample` routine builds a coreset by repeated uniform
+//! sampling: in each iteration, add a uniform sample S to the pivot set
+//! C, compute every remaining point's distance to C, and discard the
+//! closest half (they are "well served" by C); stop when the remainder
+//! fits in one machine and add it wholesale. Points are finally weighted
+//! by the Voronoi cell sizes of the pivots over the whole input. Running
+//! an α-approximation on the weighted pivots gives their weak
+//! (10α + 3)-style guarantee — the accuracy gap E8 measures against the
+//! paper's ε-coreset.
+//!
+//! MapReduce shape: the sampling iterations are driven from the leader
+//! over the simulator in O(log(n / (k·n^δ))) implicit rounds; we count
+//! one round per sampling iteration plus one weighting round.
+
+use crate::algorithms::local_search::{local_search, LocalSearchCfg};
+use crate::algorithms::Instance;
+use crate::mapreduce::Simulator;
+use crate::metric::{MetricSpace, Objective};
+use crate::points::WeightedSet;
+use crate::util::rng::Rng;
+
+use super::BaselineReport;
+
+pub struct EimCfg {
+    /// Per-iteration sample size (their k·|P|^δ; pick ~coreset_target/iters).
+    pub sample_per_iter: usize,
+    /// Stop when the remaining set is at most this large.
+    pub stop_below: usize,
+    pub seed: u64,
+}
+
+pub fn run(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &EimCfg,
+    sim: &Simulator,
+) -> BaselineReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut remaining: Vec<u32> = pts.to_vec();
+    let mut pivots: Vec<u32> = Vec::new();
+    let mut rounds = 0usize;
+
+    while remaining.len() > cfg.stop_below.max(1) {
+        // sample uniformly from the remaining points
+        let s = cfg.sample_per_iter.min(remaining.len());
+        let sample: Vec<u32> =
+            rng.sample_distinct(remaining.len(), s).into_iter().map(|i| remaining[i]).collect();
+        pivots.extend_from_slice(&sample);
+
+        // one MR round: distance of each remaining point to the pivots
+        let parts = crate::mapreduce::partition(
+            &remaining,
+            8,
+            crate::mapreduce::PartitionStrategy::RoundRobin,
+        );
+        let pivots_ref = &pivots;
+        let dist_parts = sim.round("eim-sample-filter", parts, move |_, part, meter| {
+            meter.charge(part.len() + pivots_ref.len());
+            let a = space.assign(part, pivots_ref);
+            meter.release(part.len() + pivots_ref.len());
+            (part.clone(), a.dist)
+        });
+        rounds += 1;
+
+        // discard the closest half (well-served points)
+        let mut flat: Vec<(u32, f64)> = dist_parts
+            .into_iter()
+            .flat_map(|(part, dist)| part.into_iter().zip(dist))
+            .collect();
+        flat.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let keep_from = flat.len() / 2;
+        remaining = flat[keep_from..].iter().map(|&(p, _)| p).collect();
+    }
+    pivots.extend_from_slice(&remaining);
+    pivots.sort_unstable();
+    pivots.dedup();
+
+    // weighting round: Voronoi counts of pivots over the full input
+    let parts =
+        crate::mapreduce::partition(pts, 8, crate::mapreduce::PartitionStrategy::RoundRobin);
+    let pivots_ref = &pivots;
+    let counts = sim.round("eim-weight", parts, move |_, part, meter| {
+        meter.charge(part.len() + pivots_ref.len());
+        let a = space.assign(part, pivots_ref);
+        let mut w = vec![0u64; pivots_ref.len()];
+        for &j in &a.idx {
+            w[j as usize] += 1;
+        }
+        meter.release(part.len() + pivots_ref.len());
+        w
+    });
+    rounds += 1;
+    let mut weights = vec![0u64; pivots.len()];
+    for w in counts {
+        for (acc, wi) in weights.iter_mut().zip(w) {
+            *acc += wi;
+        }
+    }
+    // drop zero-weight pivots (duplicates that never win an assignment)
+    let mut idxs = Vec::new();
+    let mut wts = Vec::new();
+    for (i, &w) in weights.iter().enumerate() {
+        if w > 0 {
+            idxs.push(pivots[i]);
+            wts.push(w);
+        }
+    }
+    let coreset = WeightedSet::new(idxs, wts);
+
+    // final solve on the weighted pivots
+    let sols = sim.round("eim-solve", vec![coreset.clone()], |_, cs, meter| {
+        meter.charge(cs.len());
+        let ls = LocalSearchCfg { seed: cfg.seed ^ 0xE1E, ..Default::default() };
+        local_search(space, obj, Instance::new(&cs.indices, &cs.weights), k, None, &ls)
+    });
+    rounds += 1;
+    let solution = sols.into_iter().next().unwrap();
+    let full_cost = space.assign(pts, &solution.centers).cost_unit(obj);
+    BaselineReport {
+        name: "ene-im-moseley",
+        solution,
+        full_cost,
+        summary_size: coreset.len(),
+        rounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianMixtureSpec;
+    use crate::metric::dense::EuclideanSpace;
+    use std::sync::Arc;
+
+    #[test]
+    fn terminates_and_solves() {
+        let (data, _) =
+            GaussianMixtureSpec { n: 2000, d: 2, k: 4, seed: 1, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..2000).collect();
+        let sim = Simulator::new();
+        let cfg = EimCfg { sample_per_iter: 60, stop_below: 100, seed: 7 };
+        let rep = run(&space, Objective::Median, &pts, 4, &cfg, &sim);
+        assert_eq!(rep.solution.centers.len(), 4);
+        assert!(rep.full_cost.is_finite() && rep.full_cost > 0.0);
+        // halving from 2000 to 100: ~5 sample rounds + weight + solve
+        assert!(rep.rounds >= 4 && rep.rounds <= 10, "rounds {}", rep.rounds);
+        assert!(rep.summary_size >= 100);
+    }
+
+    #[test]
+    fn weight_total_conserved() {
+        let (data, _) =
+            GaussianMixtureSpec { n: 1000, d: 2, k: 3, seed: 2, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..1000).collect();
+        let sim = Simulator::new();
+        let cfg = EimCfg { sample_per_iter: 40, stop_below: 80, seed: 9 };
+        // the report doesn't expose the coreset, so sanity-check the
+        // externally-visible invariants instead:
+        let rep = run(&space, Objective::Means, &pts, 3, &cfg, &sim);
+        assert!(rep.summary_size < 1000);
+        assert!(rep.full_cost > 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! k-means‖ (Bahmani, Moseley, Vattani, Kumar, Vassilvitskii, PVLDB'12 —
+//! paper ref [5]): oversampled parallel seeding.
+//!
+//! Starting from one random center, run ~O(log n) rounds; in each round
+//! every point joins the candidate set independently with probability
+//! min(1, ℓ · cost(x) / total_cost). Candidates are then weighted by
+//! Voronoi counts and reduced to k centers with a weighted sequential
+//! algorithm. The candidate set is the "coreset" analogue (size ≈ ℓ ×
+//! rounds), and the guarantee is O(α) — weaker than the paper's α+O(ε).
+
+use crate::algorithms::local_search::{local_search, LocalSearchCfg};
+use crate::algorithms::Instance;
+use crate::mapreduce::{partition, PartitionStrategy, Simulator};
+use crate::metric::{MetricSpace, Objective};
+use crate::points::WeightedSet;
+use crate::util::rng::Rng;
+
+use super::BaselineReport;
+
+pub struct KmeansParCfg {
+    /// Oversampling factor ℓ (expected new candidates per round); the
+    /// original paper suggests ℓ = Θ(k) (e.g. 2k).
+    pub ell: f64,
+    /// Sampling rounds (≈ 5 suffices in practice per the original paper).
+    pub rounds: usize,
+    pub seed: u64,
+}
+
+impl KmeansParCfg {
+    pub fn new(k: usize) -> KmeansParCfg {
+        KmeansParCfg { ell: 2.0 * k as f64, rounds: 5, seed: 0xBAA }
+    }
+}
+
+pub fn run(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &KmeansParCfg,
+    sim: &Simulator,
+) -> BaselineReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut candidates: Vec<u32> = vec![pts[rng.below(pts.len())]];
+    // running min cost(x, C): plain distances; objective decides the power
+    let mut mind = vec![f64::INFINITY; pts.len()];
+    space.min_update(pts, candidates[0], &mut mind);
+    let mut mr_rounds = 0usize;
+
+    for round in 0..cfg.rounds {
+        let total: f64 = mind.iter().map(|&d| obj.cost_of(d)).sum();
+        if total <= 0.0 {
+            break; // all points are candidates already
+        }
+        // one MR round: each partition samples independently
+        let parts = partition(pts, 8, PartitionStrategy::RoundRobin);
+        let mind_ref = &mind;
+        let round_seed = cfg.seed ^ ((round as u64 + 1) << 32);
+        let new_parts = sim.round("kmeans||-sample", parts, move |ell_idx, part, meter| {
+            meter.charge(part.len());
+            let mut prng = Rng::new(round_seed ^ ell_idx as u64);
+            let mut picked = Vec::new();
+            for &p in part {
+                // mind is indexed by position in pts == point id here
+                let c = obj.cost_of(mind_ref[p as usize]);
+                let prob = (cfg.ell * c / total).min(1.0);
+                if prng.f64() < prob {
+                    picked.push(p);
+                }
+            }
+            meter.release(part.len());
+            picked
+        });
+        mr_rounds += 1;
+        let mut added = false;
+        for np in new_parts {
+            for p in np {
+                if !candidates.contains(&p) {
+                    candidates.push(p);
+                    space.min_update(pts, p, &mut mind);
+                    added = true;
+                }
+            }
+        }
+        if !added {
+            break;
+        }
+    }
+
+    // weight candidates by Voronoi counts and reduce to k
+    let assign = space.assign(pts, &candidates);
+    let mut w = vec![0u64; candidates.len()];
+    for &j in &assign.idx {
+        w[j as usize] += 1;
+    }
+    let mut idxs = Vec::new();
+    let mut wts = Vec::new();
+    for (i, &wi) in w.iter().enumerate() {
+        if wi > 0 {
+            idxs.push(candidates[i]);
+            wts.push(wi);
+        }
+    }
+    let cand = WeightedSet::new(idxs, wts);
+    let sols = sim.round("kmeans||-reduce", vec![cand.clone()], |_, cs, meter| {
+        meter.charge(cs.len());
+        let ls = LocalSearchCfg { seed: cfg.seed ^ 0x88, ..Default::default() };
+        local_search(space, obj, Instance::new(&cs.indices, &cs.weights), k, None, &ls)
+    });
+    mr_rounds += 1;
+    let solution = sols.into_iter().next().unwrap();
+    let full_cost = space.assign(pts, &solution.centers).cost_unit(obj);
+    BaselineReport {
+        name: "kmeans||",
+        solution,
+        full_cost,
+        summary_size: cand.len(),
+        rounds: mr_rounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianMixtureSpec;
+    use crate::metric::dense::EuclideanSpace;
+    use std::sync::Arc;
+
+    #[test]
+    fn finds_reasonable_centers() {
+        let (data, _) = GaussianMixtureSpec { n: 2000, d: 2, k: 5, spread: 50.0, seed: 1, ..Default::default() }
+            .generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..2000).collect();
+        let sim = Simulator::new();
+        let rep = run(&space, Objective::Means, &pts, 5, &KmeansParCfg::new(5), &sim);
+        assert_eq!(rep.solution.centers.len(), 5);
+        // well-separated blobs (unit variance, spread 50): near-opt cost is
+        // ~2n (d=2); allow generous slack
+        assert!(rep.full_cost < 2000.0 * 2.0 * 4.0, "cost {}", rep.full_cost);
+        assert!(rep.summary_size >= 5);
+        assert!(rep.rounds <= 7);
+    }
+
+    #[test]
+    fn candidate_set_grows_with_ell() {
+        let (data, _) =
+            GaussianMixtureSpec { n: 3000, d: 2, k: 6, seed: 2, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..3000).collect();
+        let sim = Simulator::new();
+        let small = run(
+            &space,
+            Objective::Means,
+            &pts,
+            6,
+            &KmeansParCfg { ell: 6.0, rounds: 4, seed: 3 },
+            &sim,
+        );
+        let big = run(
+            &space,
+            Objective::Means,
+            &pts,
+            6,
+            &KmeansParCfg { ell: 30.0, rounds: 4, seed: 3 },
+            &sim,
+        );
+        assert!(big.summary_size > small.summary_size);
+    }
+}

@@ -1,0 +1,32 @@
+//! Literature baselines the paper positions itself against (§1.1):
+//!
+//! - `uniform`: uniform-sample coreset (the naive composable baseline).
+//! - `ene_im_moseley`: the iterative-sampling MapReduce coreset of Ene,
+//!   Im, Moseley (KDD'11, ref [10]) — weak (10α+3)-style guarantee.
+//! - `kmeans_parallel`: k-means‖ (Bahmani et al., PVLDB'12, ref [5]).
+//! - `pamae_lite`: sampling + PAM + refinement in the spirit of PAMAE
+//!   (Song, Lee, Han, KDD'17, ref [24]).
+//!
+//! All baselines consume the same `MetricSpace`/`Simulator` substrate and
+//! emit a `BaselineReport` so E8 can compare them at matched coreset
+//! sizes against the paper's construction.
+
+pub mod ene_im_moseley;
+pub mod kmeans_parallel;
+pub mod pamae_lite;
+pub mod uniform;
+
+use crate::algorithms::Solution;
+
+/// Uniform result shape for the comparison experiments.
+#[derive(Clone, Debug)]
+pub struct BaselineReport {
+    pub name: &'static str,
+    pub solution: Solution,
+    /// Cost of `solution` on the full input under the experiment's
+    /// objective (filled by the caller's evaluation pass).
+    pub full_cost: f64,
+    /// Size of the summary the method built (coreset / candidate set).
+    pub summary_size: usize,
+    pub rounds: usize,
+}

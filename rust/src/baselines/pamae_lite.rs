@@ -1,0 +1,142 @@
+//! PAMAE-style baseline (Song, Lee, Han, KDD'17 — paper ref [24]):
+//! parallel k-medoids via sampling + PAM + global refinement.
+//!
+//! Phase 1: draw S independent uniform samples of size s; run PAM on
+//! each (in parallel, one MR round); keep the candidate solution with
+//! the best *global* cost (second MR round evaluates all candidates).
+//! Phase 2: assign all points to the winning medoids, then refine each
+//! cluster's medoid by exact 1-median over a per-cluster sample (third
+//! round). As the paper notes, PAMAE has strong practice but no tight
+//! approximation analysis — E8 shows where it lands.
+
+use crate::algorithms::brute::exact_one_center;
+use crate::algorithms::pam::{pam, PamCfg};
+use crate::algorithms::{Instance, Solution};
+use crate::mapreduce::Simulator;
+use crate::metric::{MetricSpace, Objective};
+use crate::util::rng::Rng;
+
+use super::BaselineReport;
+
+pub struct PamaeCfg {
+    /// Number of parallel samples (candidate solutions).
+    pub num_samples: usize,
+    /// Sample size for each PAM run.
+    pub sample_size: usize,
+    /// Per-cluster refinement sample size (phase 2).
+    pub refine_size: usize,
+    pub seed: u64,
+}
+
+impl PamaeCfg {
+    pub fn new(k: usize) -> PamaeCfg {
+        PamaeCfg { num_samples: 5, sample_size: (40 * k).max(120), refine_size: 400, seed: 0x9A3 }
+    }
+}
+
+pub fn run(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &PamaeCfg,
+    sim: &Simulator,
+) -> BaselineReport {
+    let mut rng = Rng::new(cfg.seed);
+    let s = cfg.sample_size.min(pts.len());
+
+    // Phase 1a: PAM on each sample (one parallel round)
+    let samples: Vec<Vec<u32>> = (0..cfg.num_samples)
+        .map(|_| rng.sample_distinct(pts.len(), s).into_iter().map(|i| pts[i]).collect())
+        .collect();
+    let candidates: Vec<Solution> = sim.round("pamae-pam", samples, |_, sample, meter| {
+        meter.charge(sample.len());
+        let w = vec![1u64; sample.len()];
+        let pc = PamCfg { max_n: sample.len().max(1), max_iters: 20 };
+        pam(space, obj, Instance::new(sample, &w), k, &pc)
+    });
+
+    // Phase 1b: global evaluation of every candidate (one round,
+    // partition-parallel in a real deployment; here one pass each)
+    let best = sim
+        .round("pamae-eval", candidates, |_, cand, meter| {
+            meter.charge(pts.len() / 8); // per-partition share in a real run
+            let cost = space.assign(pts, &cand.centers).cost_unit(obj);
+            (cand.centers.clone(), cost)
+        })
+        .into_iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("at least one candidate");
+
+    // Phase 2: per-cluster exact medoid over a refinement sample
+    let assign = space.assign(pts, &best.0);
+    let kk = best.0.len();
+    let mut clusters: Vec<Vec<u32>> = vec![Vec::new(); kk];
+    for (i, &p) in pts.iter().enumerate() {
+        clusters[assign.idx[i] as usize].push(p);
+    }
+    let refined: Vec<u32> = sim.round("pamae-refine", clusters, |j, cluster, meter| {
+        if cluster.is_empty() {
+            return best.0[j];
+        }
+        let mut crng = Rng::new(cfg.seed ^ (j as u64 + 0x51));
+        let take = cfg.refine_size.min(cluster.len());
+        let sample: Vec<u32> =
+            crng.sample_distinct(cluster.len(), take).into_iter().map(|i| cluster[i]).collect();
+        meter.charge(sample.len());
+        let w = vec![1u64; sample.len()];
+        let (c, _) = exact_one_center(space, obj, Instance::new(&sample, &w));
+        c
+    });
+
+    // keep the better of (refined, phase-1 best) — refinement on a sample
+    // can regress on adversarial weights
+    let refined_cost = space.assign(pts, &refined).cost_unit(obj);
+    let (centers, full_cost) =
+        if refined_cost <= best.1 { (refined, refined_cost) } else { (best.0, best.1) };
+
+    BaselineReport {
+        name: "pamae-lite",
+        solution: Solution { centers, cost: full_cost },
+        full_cost,
+        summary_size: cfg.num_samples * s,
+        rounds: 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianMixtureSpec;
+    use crate::metric::dense::EuclideanSpace;
+    use std::sync::Arc;
+
+    #[test]
+    fn solves_separated_mixture_well() {
+        let (data, _) = GaussianMixtureSpec { n: 1500, d: 2, k: 4, spread: 60.0, seed: 1, ..Default::default() }
+            .generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..1500).collect();
+        let sim = Simulator::new();
+        let cfg = PamaeCfg { num_samples: 3, sample_size: 150, refine_size: 200, seed: 5 };
+        let rep = run(&space, Objective::Median, &pts, 4, &cfg, &sim);
+        assert_eq!(rep.solution.centers.len(), 4);
+        // separated blobs: average distance to own center ~1.25 (d=2)
+        assert!(rep.full_cost / 1500.0 < 2.5, "avg cost {}", rep.full_cost / 1500.0);
+        assert_eq!(rep.rounds, 3);
+    }
+
+    #[test]
+    fn refinement_never_hurts() {
+        let (data, _) =
+            GaussianMixtureSpec { n: 800, d: 2, k: 3, seed: 2, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..800).collect();
+        let sim = Simulator::new();
+        let cfg = PamaeCfg { num_samples: 2, sample_size: 80, refine_size: 100, seed: 6 };
+        let rep = run(&space, Objective::Means, &pts, 3, &cfg, &sim);
+        // phase-2 keeps the better of refined/unrefined by construction;
+        // just assert the solve completed with finite cost
+        assert!(rep.full_cost.is_finite());
+    }
+}

@@ -1,0 +1,133 @@
+//! Uniform-sampling coreset baseline (1 MapReduce round).
+//!
+//! Each reducer samples `s/L` of its points uniformly, weights each
+//! sample point by the size of its Voronoi cell within the partition
+//! (so total weight is conserved), and the union is the coreset. This is
+//! the natural composable baseline: cheap, unbiased, but with no
+//! per-point proximity guarantee — sparse regions are missed, which is
+//! exactly what CoverWithBalls fixes. E8 quantifies the gap.
+
+use crate::algorithms::local_search::{local_search, LocalSearchCfg};
+use crate::algorithms::Instance;
+use crate::mapreduce::{partition, PartitionStrategy, Simulator};
+use crate::metric::{MetricSpace, Objective};
+use crate::points::WeightedSet;
+use crate::util::rng::Rng;
+
+use super::BaselineReport;
+
+pub struct UniformCfg {
+    /// Total coreset size across all partitions.
+    pub size: usize,
+    pub l: usize,
+    pub seed: u64,
+}
+
+pub fn run(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &UniformCfg,
+    sim: &Simulator,
+) -> BaselineReport {
+    let parts = partition(pts, cfg.l, PartitionStrategy::RoundRobin);
+    let per_part = (cfg.size / parts.len()).max(k).max(1);
+    let inputs: Vec<(usize, Vec<u32>)> = parts.into_iter().enumerate().collect();
+    let locals = sim.round("uniform-sample", inputs, |_, (ell, part), meter| {
+        meter.charge(part.len());
+        let mut rng = Rng::new(cfg.seed ^ (0x17 + *ell as u64));
+        let s = per_part.min(part.len());
+        let sample_pos = rng.sample_distinct(part.len(), s);
+        let sample: Vec<u32> = sample_pos.iter().map(|&i| part[i]).collect();
+        // weight by Voronoi counts within the partition
+        let assign = space.assign(part, &sample);
+        let mut w = vec![0u64; sample.len()];
+        for &j in &assign.idx {
+            w[j as usize] += 1;
+        }
+        // drop zero-weight samples (possible only with duplicate points)
+        let mut idxs = Vec::new();
+        let mut wts = Vec::new();
+        for (i, &wi) in w.iter().enumerate() {
+            if wi > 0 {
+                idxs.push(sample[i]);
+                wts.push(wi);
+            }
+        }
+        meter.charge(idxs.len());
+        meter.release(part.len());
+        WeightedSet::new(idxs, wts)
+    });
+    let coreset = WeightedSet::union(&locals);
+
+    let sols = sim.round("uniform-solve", vec![coreset.clone()], |_, cs, meter| {
+        meter.charge(cs.len());
+        let ls = LocalSearchCfg { seed: cfg.seed ^ 0xBEE, ..Default::default() };
+        local_search(space, obj, Instance::new(&cs.indices, &cs.weights), k, None, &ls)
+    });
+    let solution = sols.into_iter().next().unwrap();
+    let full_cost = space.assign(pts, &solution.centers).cost_unit(obj);
+    BaselineReport {
+        name: "uniform",
+        solution,
+        full_cost,
+        summary_size: coreset.len(),
+        rounds: 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianMixtureSpec;
+    use crate::metric::dense::EuclideanSpace;
+    use std::sync::Arc;
+
+    #[test]
+    fn produces_valid_solution_and_conserves_weight() {
+        let (data, _) =
+            GaussianMixtureSpec { n: 2000, d: 2, k: 4, seed: 1, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..2000).collect();
+        let sim = Simulator::new();
+        let cfg = UniformCfg { size: 200, l: 5, seed: 3 };
+        let rep = run(&space, Objective::Median, &pts, 4, &cfg, &sim);
+        assert_eq!(rep.solution.centers.len(), 4);
+        assert!(rep.summary_size <= 200 + 5);
+        assert!(rep.full_cost.is_finite());
+        assert_eq!(sim.take_stats().num_rounds(), 2);
+    }
+
+    #[test]
+    fn bigger_sample_no_worse_on_average() {
+        let (data, _) =
+            GaussianMixtureSpec { n: 3000, d: 2, k: 6, seed: 2, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..3000).collect();
+        let sim = Simulator::new();
+        let mut small_total = 0.0;
+        let mut big_total = 0.0;
+        for seed in 0..3 {
+            let small = run(
+                &space,
+                Objective::Median,
+                &pts,
+                6,
+                &UniformCfg { size: 30, l: 5, seed },
+                &sim,
+            );
+            let big = run(
+                &space,
+                Objective::Median,
+                &pts,
+                6,
+                &UniformCfg { size: 600, l: 5, seed },
+                &sim,
+            );
+            small_total += small.full_cost;
+            big_total += big.full_cost;
+        }
+        assert!(big_total <= small_total * 1.1, "big {big_total} vs small {small_total}");
+    }
+}

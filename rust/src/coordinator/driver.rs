@@ -1,0 +1,266 @@
+//! The 3-round MapReduce solver (paper §3.4, Theorem 3.14).
+//!
+//! Round 1 + Round 2: the two-round coreset construction of §3.2
+//! (k-median) / §3.3 (k-means) produces E_w, which is simultaneously an
+//! O(ε)-bounded coreset and an O(ε)-centroid set.
+//! Round 3: a single reducer runs a sequential α-approximation on the
+//! weighted instance (E_w, k); Theorems 3.9/3.13 give α + O(ε) overall.
+//!
+//! With L = ∛(|P|/k) the per-reducer memory is
+//! O(|P|^{2/3} k^{1/3} (c/ε)^{2D} log² |P|) — substantially sublinear
+//! for small doubling dimension D.
+
+use std::time::Instant;
+
+use crate::algorithms::local_search::{local_search, LocalSearchCfg};
+use crate::algorithms::pam::{pam, PamCfg};
+use crate::algorithms::{Instance, Solution};
+use crate::coreset::pipeline::{one_round_coreset, two_round_coreset, CoresetConfig};
+use crate::mapreduce::{default_l, JobStats, PartitionStrategy, Simulator};
+use crate::metric::{MetricSpace, Objective};
+use crate::coreset::TlAlgo;
+
+/// Final-round sequential solver choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinalAlgo {
+    /// Sampled-candidate local search (default; scales to large coresets).
+    LocalSearch,
+    /// PAM (exhaustive swaps; small coresets only).
+    Pam,
+}
+
+/// Full configuration of a 3-round run.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub objective: Objective,
+    pub k: usize,
+    /// Precision parameter ε (trades coreset size for accuracy).
+    pub eps: f64,
+    /// Number of partitions L; `None` = the paper's ∛(|P|/k).
+    pub l: Option<usize>,
+    /// Oversampling for the per-partition rough solutions T_ℓ; `None` = 2k.
+    pub m: Option<usize>,
+    /// Assumed approximation factor of the T_ℓ algorithm.
+    pub beta: f64,
+    pub tl: TlAlgo,
+    pub final_algo: FinalAlgo,
+    pub strategy: PartitionStrategy,
+    /// Use the 1-round construction of §3.1 instead of the 2-round one
+    /// (ablation: costs a factor ~2 in the approximation).
+    pub one_round: bool,
+    pub seed: u64,
+    /// Worker threads for the simulator (None = auto).
+    pub threads: Option<usize>,
+}
+
+impl ClusterConfig {
+    pub fn new(objective: Objective, k: usize, eps: f64) -> ClusterConfig {
+        ClusterConfig {
+            objective,
+            k,
+            eps,
+            l: None,
+            m: None,
+            beta: 2.0,
+            tl: TlAlgo::DppSeeding,
+            final_algo: FinalAlgo::LocalSearch,
+            strategy: PartitionStrategy::RoundRobin,
+            one_round: false,
+            seed: 0xD15C0,
+            threads: None,
+        }
+    }
+}
+
+/// Everything a run produces: the solution plus the measured quantities
+/// the theory speaks about.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub solution: Solution,
+    /// Solution cost evaluated on the FULL input (not just the coreset).
+    pub full_cost: f64,
+    pub coreset_size: usize,
+    pub cw_size: usize,
+    pub l: usize,
+    pub m: usize,
+    pub rounds: usize,
+    pub max_local_memory: usize,
+    pub aggregate_memory: usize,
+    pub wall: std::time::Duration,
+    pub stats: JobStats,
+}
+
+/// Run the full 3-round algorithm on (pts, k).
+pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunReport {
+    assert!(cfg.k >= 1 && cfg.k <= pts.len(), "require 1 <= k <= |P|");
+    assert!(cfg.eps > 0.0, "eps must be positive");
+    let t0 = Instant::now();
+    let n = pts.len();
+    let l = cfg.l.unwrap_or_else(|| default_l(n, cfg.k));
+    let m = cfg.m.unwrap_or(2 * cfg.k).max(cfg.k);
+    let mut sim = Simulator::new();
+    if let Some(t) = cfg.threads {
+        sim = sim.with_threads(t);
+    }
+    let ccfg = CoresetConfig { eps: cfg.eps, beta: cfg.beta, m, tl: cfg.tl, seed: cfg.seed };
+
+    // Rounds 1–2: coreset construction.
+    let pipe = if cfg.one_round {
+        one_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &sim)
+    } else {
+        two_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &sim)
+    };
+    let coreset = pipe.coreset;
+
+    // Round 3: sequential solve on the weighted coreset instance
+    // (single reducer holding E_w).
+    let solutions = sim.round("final-solve", vec![coreset.clone()], |_, cs, meter| {
+        meter.charge(cs.len());
+        let inst = Instance::new(&cs.indices, &cs.weights);
+        match cfg.final_algo {
+            FinalAlgo::LocalSearch => {
+                // init = better of D^p-seeding and farthest-first: the
+                // former nails dense structure, the latter provably covers
+                // rare far clusters (which the coreset preserved and the
+                // solver must not re-lose).
+                let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0x1217);
+                let dpp = crate::algorithms::seeding::dpp_seeding(
+                    space,
+                    cfg.objective,
+                    inst,
+                    cfg.k,
+                    &mut rng,
+                );
+                let gon = crate::algorithms::seeding::gonzalez(space, inst, cfg.k, 0);
+                let gon_cost = inst.cost(space, cfg.objective, &gon);
+                let init = if gon_cost < dpp.cost { gon } else { dpp.centers };
+                let ls = LocalSearchCfg { seed: cfg.seed ^ 0xF1A1, ..Default::default() };
+                local_search(space, cfg.objective, inst, cfg.k, Some(init), &ls)
+            }
+            FinalAlgo::Pam => {
+                let pc = PamCfg { max_n: cs.len().max(1), ..Default::default() };
+                pam(space, cfg.objective, inst, cfg.k, &pc)
+            }
+        }
+    });
+    let solution = solutions.into_iter().next().expect("one reducer");
+
+    // Evaluation (outside the MR job): cost on the full input.
+    let full_cost = space.assign(pts, &solution.centers).cost_unit(cfg.objective);
+
+    let stats = sim.take_stats();
+    RunReport {
+        full_cost,
+        coreset_size: coreset.len(),
+        cw_size: pipe.cw_size,
+        l,
+        m,
+        rounds: stats.num_rounds(),
+        max_local_memory: stats.max_local_memory(),
+        aggregate_memory: stats.aggregate_memory(),
+        wall: t0.elapsed(),
+        stats,
+        solution,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::local_search::{local_search, LocalSearchCfg};
+    use crate::data::synth::GaussianMixtureSpec;
+    use crate::metric::dense::EuclideanSpace;
+    use std::sync::Arc;
+
+    fn mixture(n: usize, k: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+        let (data, _) = GaussianMixtureSpec { n, d: 4, k, seed, ..Default::default() }.generate();
+        (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+    }
+
+    #[test]
+    fn three_rounds_and_k_centers() {
+        let (space, pts) = mixture(2000, 5, 1);
+        for obj in [Objective::Median, Objective::Means] {
+            let cfg = ClusterConfig::new(obj, 5, 0.5);
+            let rep = solve(&space, &pts, &cfg);
+            assert_eq!(rep.rounds, 3, "{obj}: paper promises exactly 3 rounds");
+            assert_eq!(rep.solution.centers.len(), 5);
+            assert!(rep.full_cost.is_finite() && rep.full_cost > 0.0);
+            assert!(rep.coreset_size < 2000);
+        }
+    }
+
+    #[test]
+    fn close_to_sequential_reference() {
+        let (space, pts) = mixture(3000, 5, 2);
+        let w = vec![1u64; pts.len()];
+        let seq = local_search(
+            &space,
+            Objective::Median,
+            Instance::new(&pts, &w),
+            5,
+            None,
+            &LocalSearchCfg::default(),
+        );
+        let cfg = ClusterConfig::new(Objective::Median, 5, 0.25);
+        let rep = solve(&space, &pts, &cfg);
+        let ratio = rep.full_cost / seq.cost;
+        assert!(ratio < 1.35, "MR/seq cost ratio {ratio}");
+    }
+
+    #[test]
+    fn one_round_ablation_runs_two_rounds_total() {
+        let (space, pts) = mixture(1000, 4, 3);
+        let mut cfg = ClusterConfig::new(Objective::Means, 4, 0.5);
+        cfg.one_round = true;
+        let rep = solve(&space, &pts, &cfg);
+        assert_eq!(rep.rounds, 2, "1-round coreset + 1 solve round");
+        assert_eq!(rep.solution.centers.len(), 4);
+    }
+
+    #[test]
+    fn local_memory_sublinear() {
+        // low-dimensional workload: the ball-cover compresses (size is
+        // exponential in D, so D=1 keeps the test fast and decisive)
+        let (data, _) = GaussianMixtureSpec { n: 8000, d: 1, k: 8, seed: 4, ..Default::default() }
+            .generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..8000).collect();
+        let cfg = ClusterConfig::new(Objective::Median, 8, 0.8);
+        let rep = solve(&space, &pts, &cfg);
+        assert!(
+            rep.max_local_memory < pts.len() / 2,
+            "M_L {} vs n {}",
+            rep.max_local_memory,
+            pts.len()
+        );
+        assert!(rep.aggregate_memory >= pts.len(), "M_A covers the input");
+    }
+
+    #[test]
+    fn pam_final_works_on_small_instances() {
+        let (space, pts) = mixture(400, 3, 5);
+        let mut cfg = ClusterConfig::new(Objective::Median, 3, 0.6);
+        cfg.final_algo = FinalAlgo::Pam;
+        let rep = solve(&space, &pts, &cfg);
+        assert_eq!(rep.solution.centers.len(), 3);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (space, pts) = mixture(1000, 4, 6);
+        let cfg = ClusterConfig::new(Objective::Median, 4, 0.5);
+        let a = solve(&space, &pts, &cfg);
+        let b = solve(&space, &pts, &cfg);
+        assert_eq!(a.solution.centers, b.solution.centers);
+        assert_eq!(a.coreset_size, b.coreset_size);
+    }
+
+    #[test]
+    #[should_panic(expected = "1 <= k <= |P|")]
+    fn rejects_bad_k() {
+        let (space, pts) = mixture(50, 2, 7);
+        let cfg = ClusterConfig::new(Objective::Median, 0, 0.5);
+        let _ = solve(&space, &pts, &cfg);
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordinator: the paper's end-to-end 3-round MapReduce algorithms
+//! (§3.4) — two coreset-construction rounds followed by a sequential
+//! solve of the weighted coreset instance — plus run configuration and
+//! reporting.
+
+pub mod driver;
+pub mod report;
+
+pub use driver::{solve, ClusterConfig, FinalAlgo, RunReport};

@@ -1,0 +1,78 @@
+//! Human-readable run reports.
+
+use crate::util::table::{fnum, Table};
+
+use super::driver::RunReport;
+
+impl RunReport {
+    /// Multi-line summary for CLI output.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "solution: k={} cost(full input)={}\n",
+            self.solution.centers.len(),
+            fnum(self.full_cost)
+        ));
+        s.push_str(&format!(
+            "coreset:  |E_w|={} (|C_w|={}), L={}, m={}\n",
+            self.coreset_size, self.cw_size, self.l, self.m
+        ));
+        s.push_str(&format!(
+            "mapreduce: rounds={} M_L={} pts M_A={} pts wall={:.3}s\n",
+            self.rounds,
+            self.max_local_memory,
+            self.aggregate_memory,
+            self.wall.as_secs_f64()
+        ));
+        for r in &self.stats.rounds {
+            s.push_str(&format!(
+                "  round {:22} reducers={:4} peak_local={:8} wall={:.3}s\n",
+                r.name,
+                r.reducers,
+                r.max_local_peak,
+                r.wall.as_secs_f64()
+            ));
+        }
+        s
+    }
+
+    /// One row for experiment tables:
+    /// (eps, L, coreset, M_L, rounds, cost).
+    pub fn table_row(&self, eps: f64) -> Vec<String> {
+        vec![
+            fnum(eps),
+            self.l.to_string(),
+            self.coreset_size.to_string(),
+            self.max_local_memory.to_string(),
+            self.rounds.to_string(),
+            fnum(self.full_cost),
+        ]
+    }
+
+    pub fn table_header() -> Table {
+        Table::new(vec!["eps", "L", "|E_w|", "M_L", "rounds", "cost"])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::{solve, ClusterConfig};
+    use crate::data::synth::GaussianMixtureSpec;
+    use crate::metric::dense::EuclideanSpace;
+    use crate::metric::Objective;
+    use std::sync::Arc;
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let (data, _) =
+            GaussianMixtureSpec { n: 500, d: 2, k: 3, seed: 1, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..500).collect();
+        let rep = solve(&space, &pts, &ClusterConfig::new(Objective::Median, 3, 0.5));
+        let s = rep.summary();
+        assert!(s.contains("rounds=3"));
+        assert!(s.contains("coreset:"));
+        let row = rep.table_row(0.5);
+        assert_eq!(row.len(), 6);
+    }
+}

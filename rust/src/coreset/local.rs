@@ -1,0 +1,184 @@
+//! Per-partition local coreset step (first round of §3.1/§3.2/§3.3):
+//!
+//! 1. T_ℓ ← β-approximate (bi-criteria, m ≥ k centers) solution on P_ℓ
+//!   2. R_ℓ ← ν_{P_ℓ}(T_ℓ)/|P_ℓ|           (k-median)
+//!      R_ℓ ← √(μ_{P_ℓ}(T_ℓ)/|P_ℓ|)        (k-means)
+//!   3. C_{w,ℓ} ← CoverWithBalls(P_ℓ, T_ℓ, R_ℓ, ε, β)      (k-median)
+//!      C_{w,ℓ} ← CoverWithBalls(P_ℓ, T_ℓ, R_ℓ, √2·ε, √β)  (k-means)
+//!
+//! Lemma 3.4 / 3.10: the result is an ε-bounded (resp. ε²-bounded)
+//! coreset of the partition instance.
+
+use crate::algorithms::local_search::{local_search, LocalSearchCfg};
+use crate::algorithms::seeding::{dpp_seeding, gonzalez};
+use crate::algorithms::Instance;
+use crate::metric::{MetricSpace, Objective};
+use crate::util::rng::Rng;
+
+use super::cover::{cover_with_balls, CoverResult};
+
+/// Algorithm used for the per-partition rough solution T_ℓ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TlAlgo {
+    /// Weighted D^p-sampling (k-means++ family) with oversampling — the
+    /// bi-criteria route the paper recommends for larger D (§3.4).
+    DppSeeding,
+    /// Local search (Arya et al. / Gupta–Tangwongsan) — the
+    /// constant-β full-criteria route.
+    LocalSearch,
+    /// Farthest-first traversal (deterministic; k-center flavoured).
+    Gonzalez,
+}
+
+/// Output of the local step.
+#[derive(Clone, Debug)]
+pub struct LocalCoresetOut {
+    pub cover: CoverResult,
+    /// Tolerance radius R_ℓ of step 2.
+    pub r: f64,
+    /// The rough solution T_ℓ.
+    pub t: Vec<u32>,
+    /// ν_{P_ℓ}(T_ℓ) or μ_{P_ℓ}(T_ℓ) under the objective.
+    pub t_cost: f64,
+}
+
+/// The CoverWithBalls parameters the objective dictates (§3.3 adapts
+/// (ε, β) → (√2·ε, √β) to account for squared distances).
+pub fn cover_params(obj: Objective, eps: f64, beta: f64) -> (f64, f64) {
+    match obj {
+        Objective::Median => (eps, beta),
+        Objective::Means => (std::f64::consts::SQRT_2 * eps, beta.sqrt()),
+    }
+}
+
+/// Compute T_ℓ with `m` centers using the chosen algorithm.
+pub fn rough_solution(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    m: usize,
+    tl: TlAlgo,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let weights = vec![1u64; pts.len()];
+    let inst = Instance::new(pts, &weights);
+    match tl {
+        TlAlgo::DppSeeding => dpp_seeding(space, obj, inst, m, rng).centers,
+        TlAlgo::LocalSearch => {
+            let cfg = LocalSearchCfg { seed: rng.next_u64(), ..Default::default() };
+            local_search(space, obj, inst, m, None, &cfg).centers
+        }
+        TlAlgo::Gonzalez => gonzalez(space, inst, m, 0),
+    }
+}
+
+/// Run the full local step on one partition.
+pub fn local_coreset(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    m: usize,
+    eps: f64,
+    beta: f64,
+    tl: TlAlgo,
+    rng: &mut Rng,
+) -> LocalCoresetOut {
+    assert!(!pts.is_empty());
+    let t = rough_solution(space, obj, pts, m, tl, rng);
+    let assign = space.assign(pts, &t);
+    let t_cost = assign.cost_unit(obj);
+    let n = pts.len() as f64;
+    let r = match obj {
+        Objective::Median => t_cost / n,
+        Objective::Means => (t_cost / n).sqrt(),
+    };
+    let (ce, cb) = cover_params(obj, eps, beta);
+    let cover = cover_with_balls(space, pts, &t, r, ce, cb);
+    LocalCoresetOut { cover, r, t, t_cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianMixtureSpec;
+    use crate::metric::dense::EuclideanSpace;
+    use std::sync::Arc;
+
+    fn mixture(n: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+        let (data, _) =
+            GaussianMixtureSpec { n, d: 4, k: 5, seed, ..Default::default() }.generate();
+        (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+    }
+
+    /// Lemma 3.4: Σ d(x, τ(x)) ≤ ε · ν(opt) — checked against the
+    /// (upper-bounding) surrogate ν(T_ℓ)/β ≥ ν(opt)... we use the sound
+    /// direction: Σ ≤ ε/(2β)(R·n + ν(T)) = ε/β · ν(T) ≤ ε·ν(opt)·(β/β),
+    /// so Σ ≤ ε·ν(T)/β must hold unconditionally. That's what we assert.
+    #[test]
+    fn bounded_coreset_inequality_kmedian() {
+        let (space, pts) = mixture(1200, 1);
+        let mut rng = Rng::new(7);
+        let eps = 0.4;
+        let beta = 4.0;
+        let out =
+            local_coreset(&space, Objective::Median, &pts, 10, eps, beta, TlAlgo::DppSeeding, &mut rng);
+        let prox = out.cover.proximity_sum(&space, &pts);
+        let bound = eps / beta * out.t_cost; // = ε/(2β)·(R·n + ν(T)) with R·n = ν(T)
+        assert!(prox <= bound + 1e-6, "prox {prox} > bound {bound}");
+    }
+
+    #[test]
+    fn bounded_coreset_inequality_kmeans() {
+        let (space, pts) = mixture(1200, 2);
+        let mut rng = Rng::new(8);
+        let eps = 0.3;
+        let beta = 4.0;
+        let out =
+            local_coreset(&space, Objective::Means, &pts, 10, eps, beta, TlAlgo::DppSeeding, &mut rng);
+        // Lemma 3.10: Σ d(x,τ(x))² ≤ (2ε²/2β)(R²n + μ(T)) = 2ε²·μ(T)/β... with
+        // cover params (√2ε, √β): shrink² = 2ε²/(4β) = ε²/(2β); bound:
+        // shrink²·Σ(max(R, d)²) ≤ shrink²·(R²·n + μ(T)) = ε²/(2β)·2μ(T) = ε²μ(T)/β
+        let prox2 = out.cover.proximity_sum_sq(&space, &pts);
+        let bound = eps * eps / beta * out.t_cost;
+        assert!(prox2 <= bound + 1e-6, "prox² {prox2} > bound {bound}");
+    }
+
+    #[test]
+    fn all_tl_algos_produce_valid_covers() {
+        let (space, pts) = mixture(600, 3);
+        for tl in [TlAlgo::DppSeeding, TlAlgo::LocalSearch, TlAlgo::Gonzalez] {
+            let mut rng = Rng::new(9);
+            let out = local_coreset(&space, Objective::Median, &pts, 8, 0.5, 4.0, tl, &mut rng);
+            assert_eq!(out.cover.set.total_weight(), pts.len() as u64, "{tl:?}");
+            assert!(out.r > 0.0);
+            assert!(out.t.len() <= 8 && !out.t.is_empty());
+        }
+    }
+
+    #[test]
+    fn means_params_shrink_more_gently() {
+        let (e, b) = cover_params(Objective::Means, 0.3, 4.0);
+        assert!((e - 0.3 * std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+        let (e2, b2) = cover_params(Objective::Median, 0.3, 4.0);
+        assert_eq!((e2, b2), (0.3, 4.0));
+    }
+
+    #[test]
+    fn coreset_smaller_than_input_on_clustered_data() {
+        // D=1 so the ball cover compresses decisively (size ~ (16β/ε)^D)
+        let (data, _) =
+            GaussianMixtureSpec { n: 2000, d: 1, k: 5, seed: 4, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..2000).collect();
+        let mut rng = Rng::new(10);
+        let out =
+            local_coreset(&space, Objective::Median, &pts, 10, 0.8, 2.0, TlAlgo::DppSeeding, &mut rng);
+        assert!(
+            out.cover.set.len() < pts.len() / 2,
+            "coreset {} not much smaller than n {}",
+            out.cover.set.len(),
+            pts.len()
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Coreset constructions (paper §3) — the paper's primary contribution.
+//!
+//! - `cover`: CoverWithBalls (Algorithm 1), the selection primitive.
+//! - `local`: the per-partition construction shared by all algorithms
+//!   (steps 1–3 of §3.1/§3.2/§3.3 first rounds, both objectives).
+//! - `pipeline`: the 1-round (§3.1) and 2-round (§3.2 k-median, §3.3
+//!   k-means) MapReduce coreset constructions over the simulator.
+
+pub mod cover;
+pub mod kcenter;
+pub mod local;
+pub mod pipeline;
+
+pub use cover::{cover_with_balls, cover_with_balls_weighted, CoverResult};
+pub use kcenter::{solve_kcenter, KCenterReport};
+pub use local::{local_coreset, LocalCoresetOut, TlAlgo};
+pub use pipeline::{one_round_coreset, two_round_coreset, CoresetConfig, PipelineOutput};

@@ -1,0 +1,276 @@
+//! The MapReduce coreset pipelines over the simulator.
+//!
+//! - `one_round_coreset` (§3.1): partition → local coreset per reducer →
+//!   union C_w. An α-approximation on C_w yields 2α+O(ε) (discrete) or
+//!   α+O(ε) (continuous).
+//! - `two_round_coreset` (§3.2 k-median / §3.3 k-means): round 1 as
+//!   above; round 2 broadcasts C_w and all R_i to every reducer, which
+//!   runs CoverWithBalls(P_ℓ, C_w, R, ·, ·) with the global tolerance
+//!
+//! ```text
+//! R = Σ_i |P_i|·R_i / |P|            (k-median)
+//! R = √(Σ_i |P_i|·R_i² / |P|)        (k-means)
+//! ```
+//!
+//!   producing E_w = ∪ E_{w,ℓ}, which is both an O(ε)-bounded coreset
+//!   and an O(ε)-centroid set (Lemmas 3.7/3.11) — the property that
+//!   removes the factor 2 from the approximation ratio.
+//!
+//! Memory accounting per reducer (charged to the simulator's meter):
+//! round 1 holds P_ℓ + T_ℓ + C_{w,ℓ}; round 2 holds P_ℓ + C_w (broadcast)
+//! + E_{w,ℓ}.
+
+use crate::mapreduce::{partition, PartitionStrategy, Simulator};
+use crate::metric::{MetricSpace, Objective};
+use crate::points::WeightedSet;
+use crate::util::rng::Rng;
+
+use super::local::{cover_params, local_coreset, LocalCoresetOut, TlAlgo};
+
+/// Configuration shared by the coreset pipelines and the 3-round solver.
+#[derive(Clone, Debug)]
+pub struct CoresetConfig {
+    /// Precision parameter ε ∈ (0,1) (k-means theory additionally wants
+    /// ε + ε² ≤ 1/8; larger values still run, with weaker guarantees).
+    pub eps: f64,
+    /// Assumed approximation factor β of the T_ℓ algorithm (enters the
+    /// CoverWithBalls shrink factor ε/2β).
+    pub beta: f64,
+    /// Number of centers m ≥ k in each T_ℓ (oversampling allowed).
+    pub m: usize,
+    pub tl: TlAlgo,
+    pub seed: u64,
+}
+
+impl CoresetConfig {
+    pub fn new(k: usize, eps: f64) -> CoresetConfig {
+        CoresetConfig { eps, beta: 2.0, m: 2 * k, tl: TlAlgo::DppSeeding, seed: 0x5EED }
+    }
+}
+
+/// Output of a pipeline run.
+#[derive(Clone, Debug)]
+pub struct PipelineOutput {
+    /// The final coreset (C_w for one-round, E_w for two-round).
+    pub coreset: WeightedSet,
+    /// Per-partition local tolerance radii R_ℓ (round 1).
+    pub radii: Vec<f64>,
+    /// Partition sizes |P_ℓ|.
+    pub part_sizes: Vec<usize>,
+    /// Intermediate C_w size (== coreset for one-round).
+    pub cw_size: usize,
+    /// Global second-round tolerance R (None for one-round).
+    pub global_r: Option<f64>,
+}
+
+fn run_round1(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    parts: &[Vec<u32>],
+    cfg: &CoresetConfig,
+    sim: &Simulator,
+) -> Vec<LocalCoresetOut> {
+    let inputs: Vec<(usize, Vec<u32>)> = parts.iter().cloned().enumerate().collect();
+    sim.round("coreset-r1-local", inputs, |_, (ell, pts), meter| {
+        meter.charge(pts.len()); // resident partition
+        let mut rng = Rng::new(cfg.seed ^ (0xA5A5_0000 + *ell as u64));
+        let out = local_coreset(space, obj, pts, cfg.m, cfg.eps, cfg.beta, cfg.tl, &mut rng);
+        meter.charge(out.t.len() + out.cover.set.len()); // T_ℓ + C_{w,ℓ}
+        meter.release(pts.len() + out.t.len());
+        out
+    })
+}
+
+/// §3.1: 1-round construction, returns C_w.
+pub fn one_round_coreset(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    l: usize,
+    strategy: PartitionStrategy,
+    cfg: &CoresetConfig,
+    sim: &Simulator,
+) -> PipelineOutput {
+    let parts = partition(pts, l, strategy);
+    let locals = run_round1(space, obj, &parts, cfg, sim);
+    let coreset = WeightedSet::union(&locals.iter().map(|o| o.cover.set.clone()).collect::<Vec<_>>());
+    let cw_size = coreset.len();
+    PipelineOutput {
+        coreset,
+        radii: locals.iter().map(|o| o.r).collect(),
+        part_sizes: parts.iter().map(Vec::len).collect(),
+        cw_size,
+        global_r: None,
+    }
+}
+
+/// §3.2 (k-median) / §3.3 (k-means): 2-round construction, returns E_w.
+pub fn two_round_coreset(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    l: usize,
+    strategy: PartitionStrategy,
+    cfg: &CoresetConfig,
+    sim: &Simulator,
+) -> PipelineOutput {
+    let parts = partition(pts, l, strategy);
+    let locals = run_round1(space, obj, &parts, cfg, sim);
+    let radii: Vec<f64> = locals.iter().map(|o| o.r).collect();
+    let part_sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+    let cw = WeightedSet::union(&locals.iter().map(|o| o.cover.set.clone()).collect::<Vec<_>>());
+    let n_total: usize = part_sizes.iter().sum();
+
+    // Global tolerance radius R (step 1 of round 2).
+    let global_r = match obj {
+        Objective::Median => {
+            radii.iter().zip(&part_sizes).map(|(&r, &s)| r * s as f64).sum::<f64>() / n_total as f64
+        }
+        Objective::Means => (radii
+            .iter()
+            .zip(&part_sizes)
+            .map(|(&r, &s)| r * r * s as f64)
+            .sum::<f64>()
+            / n_total as f64)
+            .sqrt(),
+    };
+
+    // Round 2: every reducer receives its partition + broadcast C_w + R.
+    let (ce, cb) = cover_params(obj, cfg.eps, cfg.beta);
+    let cw_ref = &cw;
+    let inputs: Vec<Vec<u32>> = parts;
+    let e_parts = sim.round("coreset-r2-refine", inputs, move |_, pts_l, meter| {
+        meter.charge(pts_l.len() + cw_ref.len()); // partition + broadcast C_w
+        let res = super::cover::cover_with_balls(space, pts_l, &cw_ref.indices, global_r, ce, cb);
+        meter.charge(res.set.len()); // E_{w,ℓ}
+        meter.release(pts_l.len() + cw_ref.len());
+        res.set
+    });
+    let coreset = WeightedSet::union(&e_parts);
+    PipelineOutput {
+        coreset,
+        radii,
+        part_sizes,
+        cw_size: cw.len(),
+        global_r: Some(global_r),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianMixtureSpec;
+    use crate::metric::dense::EuclideanSpace;
+    use std::sync::Arc;
+
+    fn mixture(n: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+        let (data, _) =
+            GaussianMixtureSpec { n, d: 4, k: 5, seed, ..Default::default() }.generate();
+        (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+    }
+
+    #[test]
+    fn one_round_composes_partitions() {
+        let (space, pts) = mixture(1500, 1);
+        let sim = Simulator::new();
+        let cfg = CoresetConfig::new(5, 0.5);
+        let out = one_round_coreset(
+            &space,
+            Objective::Median,
+            &pts,
+            5,
+            PartitionStrategy::RoundRobin,
+            &cfg,
+            &sim,
+        );
+        assert_eq!(out.coreset.total_weight(), 1500);
+        assert_eq!(out.radii.len(), 5);
+        assert_eq!(sim.take_stats().num_rounds(), 1);
+    }
+
+    #[test]
+    fn two_round_runs_two_rounds_and_conserves_weight() {
+        let (space, pts) = mixture(2000, 2);
+        let sim = Simulator::new();
+        let cfg = CoresetConfig::new(5, 0.5);
+        for obj in [Objective::Median, Objective::Means] {
+            let out = two_round_coreset(
+                &space,
+                obj,
+                &pts,
+                4,
+                PartitionStrategy::RoundRobin,
+                &cfg,
+                &sim,
+            );
+            assert_eq!(out.coreset.total_weight(), 2000, "{obj}");
+            assert!(out.global_r.unwrap() > 0.0);
+            let stats = sim.take_stats();
+            assert_eq!(stats.num_rounds(), 2, "{obj}");
+        }
+    }
+
+    #[test]
+    fn second_round_refines_first() {
+        // E_w is built by covering P with C_w as the reference set, so it
+        // should not be dramatically larger than C_w, and must be ≤ n.
+        let (space, pts) = mixture(2000, 3);
+        let sim = Simulator::new();
+        let cfg = CoresetConfig::new(5, 0.4);
+        let out = two_round_coreset(
+            &space,
+            Objective::Median,
+            &pts,
+            4,
+            PartitionStrategy::RoundRobin,
+            &cfg,
+            &sim,
+        );
+        assert!(out.coreset.len() <= pts.len());
+        assert!(out.cw_size > 0);
+    }
+
+    #[test]
+    fn memory_charged_sublinearly_in_round1() {
+        let (data, _) =
+            GaussianMixtureSpec { n: 4000, d: 1, k: 5, seed: 4, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..4000).collect();
+        let sim = Simulator::new();
+        let cfg = CoresetConfig::new(5, 0.8);
+        let _ = two_round_coreset(
+            &space,
+            Objective::Median,
+            &pts,
+            8,
+            PartitionStrategy::RoundRobin,
+            &cfg,
+            &sim,
+        );
+        let stats = sim.take_stats();
+        // round 1 reducers hold ~n/L + m + |C_ℓ| ≪ n
+        assert!(
+            stats.rounds[0].max_local_peak < 4000 / 4,
+            "round-1 peak {} not sublinear",
+            stats.rounds[0].max_local_peak
+        );
+    }
+
+    #[test]
+    fn single_partition_degenerates_gracefully() {
+        let (space, pts) = mixture(500, 5);
+        let sim = Simulator::new();
+        let cfg = CoresetConfig::new(5, 0.5);
+        let out = two_round_coreset(
+            &space,
+            Objective::Means,
+            &pts,
+            1,
+            PartitionStrategy::Contiguous,
+            &cfg,
+            &sim,
+        );
+        assert_eq!(out.part_sizes, vec![500]);
+        assert_eq!(out.coreset.total_weight(), 500);
+    }
+}

@@ -1,0 +1,89 @@
+//! Minimal CSV I/O for dense f32 point sets (no header by default).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::points::VectorData;
+
+/// Load a CSV of floats. Lines starting with `#` and a first non-numeric
+/// header row are skipped. All rows must have the same arity.
+pub fn load_csv(path: &Path) -> Result<VectorData> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut data: Vec<f32> = Vec::new();
+    let mut d: Option<usize> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: Result<Vec<f32>, _> = cells.iter().map(|c| c.parse::<f32>()).collect();
+        match parsed {
+            Err(_) if data.is_empty() && d.is_none() => continue, // header row
+            Err(e) => bail!("{}:{}: {}", path.display(), lineno + 1, e),
+            Ok(row) => {
+                match d {
+                    None => d = Some(row.len()),
+                    Some(d0) if d0 != row.len() => {
+                        bail!("{}:{}: arity {} != {}", path.display(), lineno + 1, row.len(), d0)
+                    }
+                    _ => {}
+                }
+                data.extend(row);
+            }
+        }
+    }
+    let d = d.context("empty csv")?;
+    Ok(VectorData::new(data, d))
+}
+
+pub fn save_csv(path: &Path, data: &VectorData) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..data.n() {
+        let row = data.row(i as u32);
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("mrcoreset_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("pts.csv");
+        let v = VectorData::from_rows(&[vec![1.5, -2.0], vec![0.0, 3.25]]);
+        save_csv(&p, &v).unwrap();
+        let back = load_csv(&p).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn skips_header_and_comments() {
+        let dir = std::env::temp_dir().join("mrcoreset_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("hdr.csv");
+        std::fs::write(&p, "# comment\nx,y\n1,2\n3,4\n").unwrap();
+        let v = load_csv(&p).unwrap();
+        assert_eq!(v.n(), 2);
+        assert_eq!(v.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let dir = std::env::temp_dir().join("mrcoreset_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(load_csv(&p).is_err());
+    }
+}

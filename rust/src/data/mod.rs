@@ -1,0 +1,16 @@
+//! Data substrate: synthetic workload generators with controlled
+//! intrinsic dimension, a deterministic workload-trace generator, string
+//! cluster generators, and CSV I/O.
+//!
+//! The paper names no datasets (it is a theory paper); experiments use
+//! these generators, whose parameters map 1:1 onto the quantities the
+//! theory bounds: n, k, the intrinsic/doubling dimension D, and cluster
+//! separation (how easy the instance is). See DESIGN.md §5.
+
+pub mod csv;
+pub mod strings;
+pub mod synth;
+pub mod trace;
+
+pub use synth::{GaussianMixtureSpec, ManifoldSpec};
+pub use trace::TraceSpec;

@@ -1,0 +1,93 @@
+//! Clustered string dataset generator (for the Levenshtein space).
+//!
+//! Each cluster is a random seed string; members are derived by a few
+//! random edits (substitution/insertion/deletion), giving ground-truth
+//! cluster structure under edit distance — the "general metric space"
+//! workload for the k-median experiments and `examples/general_metric.rs`.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct StringClusterSpec {
+    pub n: usize,
+    pub clusters: usize,
+    pub base_len: usize,
+    /// Max edits applied to derive a member from its seed string.
+    pub max_edits: usize,
+    pub seed: u64,
+}
+
+impl Default for StringClusterSpec {
+    fn default() -> Self {
+        StringClusterSpec { n: 2000, clusters: 10, base_len: 24, max_edits: 4, seed: 1 }
+    }
+}
+
+const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz";
+
+impl StringClusterSpec {
+    pub fn generate(&self) -> (Vec<Vec<u8>>, Vec<u32>) {
+        assert!(self.clusters >= 1 && self.base_len >= self.max_edits + 1);
+        let mut rng = Rng::new(self.seed);
+        let seeds: Vec<Vec<u8>> = (0..self.clusters)
+            .map(|_| (0..self.base_len).map(|_| ALPHABET[rng.below(ALPHABET.len())]).collect())
+            .collect();
+        let mut out = Vec::with_capacity(self.n);
+        let mut labels = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let c = i % self.clusters;
+            let mut s = seeds[c].clone();
+            let edits = rng.below(self.max_edits + 1);
+            for _ in 0..edits {
+                match rng.below(3) {
+                    0 if !s.is_empty() => {
+                        // substitute
+                        let p = rng.below(s.len());
+                        s[p] = ALPHABET[rng.below(ALPHABET.len())];
+                    }
+                    1 => {
+                        // insert
+                        let p = rng.below(s.len() + 1);
+                        s.insert(p, ALPHABET[rng.below(ALPHABET.len())]);
+                    }
+                    _ if !s.is_empty() => {
+                        // delete
+                        let p = rng.below(s.len());
+                        s.remove(p);
+                    }
+                    _ => {}
+                }
+            }
+            out.push(s);
+            labels.push(c as u32);
+        }
+        (out, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::levenshtein::levenshtein;
+
+    #[test]
+    fn deterministic() {
+        let spec = StringClusterSpec { n: 100, ..Default::default() };
+        assert_eq!(spec.generate(), spec.generate());
+    }
+
+    #[test]
+    fn members_close_to_cluster_seed() {
+        let spec = StringClusterSpec { n: 200, clusters: 4, max_edits: 3, seed: 5, ..Default::default() };
+        let (strs, labels) = spec.generate();
+        // same-cluster pairs within 2*max_edits; the random 24-char seeds
+        // themselves are pairwise far apart with overwhelming probability
+        for i in 0..50 {
+            for j in 0..50 {
+                if labels[i] == labels[j] {
+                    assert!(levenshtein(&strs[i], &strs[j]) <= 6);
+                }
+            }
+        }
+    }
+}

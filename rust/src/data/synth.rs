@@ -1,0 +1,239 @@
+//! Synthetic vector workloads.
+//!
+//! `GaussianMixtureSpec`: classic well/ill-separated Gaussian mixtures in
+//! R^d with an outlier fraction — the workhorse for accuracy experiments.
+//!
+//! `ManifoldSpec`: points drawn on a random `intrinsic_dim`-dimensional
+//! affine subspace (plus small normal noise), embedded in
+//! `ambient_dim`-dimensional space via a random rotation. The *doubling*
+//! dimension of such data is ~intrinsic_dim regardless of ambient_dim —
+//! exactly the regime where the paper's bounds are interesting (E2, E10).
+
+use crate::points::VectorData;
+use crate::util::rng::Rng;
+
+/// Gaussian mixture in R^d.
+#[derive(Clone, Debug)]
+pub struct GaussianMixtureSpec {
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    /// Center box half-width; cluster stddev is 1.0, so larger = better
+    /// separated.
+    pub spread: f64,
+    /// Fraction of points replaced by uniform outliers over 2x the box.
+    pub outlier_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for GaussianMixtureSpec {
+    fn default() -> Self {
+        GaussianMixtureSpec { n: 10_000, d: 8, k: 10, spread: 20.0, outlier_frac: 0.0, seed: 1 }
+    }
+}
+
+impl GaussianMixtureSpec {
+    /// Generate points; returns (data, ground-truth component of each point).
+    pub fn generate(&self) -> (VectorData, Vec<u32>) {
+        assert!(self.k >= 1 && self.n >= self.k);
+        let mut rng = Rng::new(self.seed);
+        // component centers
+        let centers: Vec<Vec<f64>> = (0..self.k)
+            .map(|_| (0..self.d).map(|_| rng.range_f64(-self.spread, self.spread)).collect())
+            .collect();
+        let mut data = Vec::with_capacity(self.n * self.d);
+        let mut labels = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let comp = i % self.k; // balanced components, deterministic
+            if rng.f64() < self.outlier_frac {
+                for _ in 0..self.d {
+                    data.push(rng.range_f64(-2.0 * self.spread, 2.0 * self.spread) as f32);
+                }
+                labels.push(u32::MAX); // outlier marker
+            } else {
+                for j in 0..self.d {
+                    data.push((centers[comp][j] + rng.gaussian()) as f32);
+                }
+                labels.push(comp as u32);
+            }
+        }
+        (VectorData::new(data, self.d), labels)
+    }
+}
+
+/// Low-intrinsic-dimension manifold embedded in a higher ambient space.
+#[derive(Clone, Debug)]
+pub struct ManifoldSpec {
+    pub n: usize,
+    pub intrinsic_dim: usize,
+    pub ambient_dim: usize,
+    pub k: usize,
+    /// Cluster center spread within the intrinsic subspace.
+    pub spread: f64,
+    /// Isotropic ambient noise added after embedding (0 keeps the data
+    /// exactly on the subspace).
+    pub ambient_noise: f64,
+    pub seed: u64,
+}
+
+impl Default for ManifoldSpec {
+    fn default() -> Self {
+        ManifoldSpec {
+            n: 10_000,
+            intrinsic_dim: 2,
+            ambient_dim: 16,
+            k: 8,
+            spread: 20.0,
+            ambient_noise: 0.0,
+            seed: 1,
+        }
+    }
+}
+
+impl ManifoldSpec {
+    pub fn generate(&self) -> (VectorData, Vec<u32>) {
+        assert!(self.intrinsic_dim <= self.ambient_dim);
+        let mut rng = Rng::new(self.seed);
+        // random (ambient x intrinsic) orthonormal embedding via Gram-Schmidt
+        let basis = random_orthonormal(self.ambient_dim, self.intrinsic_dim, &mut rng);
+        let spec = GaussianMixtureSpec {
+            n: self.n,
+            d: self.intrinsic_dim,
+            k: self.k,
+            spread: self.spread,
+            outlier_frac: 0.0,
+            seed: rng.next_u64(),
+        };
+        let (low, labels) = spec.generate();
+        let mut data = vec![0f32; self.n * self.ambient_dim];
+        for i in 0..self.n {
+            let lrow = low.row(i as u32);
+            let orow = &mut data[i * self.ambient_dim..(i + 1) * self.ambient_dim];
+            for (a, brow) in orow.iter_mut().zip(&basis) {
+                let mut acc = 0.0f64;
+                for (x, b) in lrow.iter().zip(brow) {
+                    acc += *x as f64 * b;
+                }
+                *a = acc as f32;
+            }
+            if self.ambient_noise > 0.0 {
+                for a in orow.iter_mut() {
+                    *a += (rng.gaussian() * self.ambient_noise) as f32;
+                }
+            }
+        }
+        (VectorData::new(data, self.ambient_dim), labels)
+    }
+}
+
+/// `rows` x `cols` matrix whose ROWS are the ambient coordinates of `cols`
+/// orthonormal basis vectors... returned as `rows` rows each of length
+/// `cols`: basis[a][i] = component a of basis vector i.
+fn random_orthonormal(rows: usize, cols: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    // Build `cols` orthonormal vectors of length `rows` (Gram-Schmidt),
+    // then transpose into row-major [rows][cols].
+    let mut vecs: Vec<Vec<f64>> = Vec::with_capacity(cols);
+    while vecs.len() < cols {
+        let mut v: Vec<f64> = (0..rows).map(|_| rng.gaussian()).collect();
+        for u in &vecs {
+            let dot: f64 = v.iter().zip(u).map(|(a, b)| a * b).sum();
+            for (x, y) in v.iter_mut().zip(u) {
+                *x -= dot * y;
+            }
+        }
+        let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-9 {
+            for x in &mut v {
+                *x /= norm;
+            }
+            vecs.push(v);
+        }
+    }
+    (0..rows).map(|a| (0..cols).map(|i| vecs[i][a]).collect()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::dense::EuclideanSpace;
+    use crate::metric::doubling::correlation_dimension;
+    use crate::metric::MetricSpace;
+    use std::sync::Arc;
+
+    #[test]
+    fn mixture_shapes_and_determinism() {
+        let spec = GaussianMixtureSpec { n: 1000, d: 4, k: 5, ..Default::default() };
+        let (a, la) = spec.generate();
+        let (b, lb) = spec.generate();
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+        assert_eq!(a.n(), 1000);
+        assert_eq!(a.d(), 4);
+        assert!(la.iter().all(|&l| l < 5));
+    }
+
+    #[test]
+    fn outliers_marked() {
+        let spec = GaussianMixtureSpec {
+            n: 2000,
+            outlier_frac: 0.1,
+            seed: 3,
+            ..Default::default()
+        };
+        let (_, labels) = spec.generate();
+        let outliers = labels.iter().filter(|&&l| l == u32::MAX).count();
+        assert!((100..400).contains(&outliers), "outliers {outliers}");
+    }
+
+    #[test]
+    fn clusters_are_separated_when_spread_large() {
+        let spec = GaussianMixtureSpec { n: 500, d: 4, k: 3, spread: 100.0, seed: 5, ..Default::default() };
+        let (data, labels) = spec.generate();
+        let s = EuclideanSpace::new(Arc::new(data));
+        // same-cluster distances are far below cross-cluster ones
+        let mut same_max = 0.0f64;
+        let mut cross_min = f64::INFINITY;
+        for i in 0..200u32 {
+            for j in (i + 1)..200u32 {
+                let d = s.dist(i, j);
+                if labels[i as usize] == labels[j as usize] {
+                    same_max = same_max.max(d);
+                } else {
+                    cross_min = cross_min.min(d);
+                }
+            }
+        }
+        assert!(same_max < cross_min, "same_max={same_max} cross_min={cross_min}");
+    }
+
+    #[test]
+    fn manifold_intrinsic_dimension_visible() {
+        let spec = ManifoldSpec {
+            n: 2000,
+            intrinsic_dim: 2,
+            ambient_dim: 12,
+            k: 1,
+            spread: 0.0, // single broad cluster: pure manifold sampling
+            ..Default::default()
+        };
+        let (data, _) = spec.generate();
+        assert_eq!(data.d(), 12);
+        let s = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..2000).collect();
+        let dim = correlation_dimension(&s, &pts, 20_000, 7);
+        assert!((1.4..2.6).contains(&dim), "estimated intrinsic dim {dim}");
+    }
+
+    #[test]
+    fn orthonormal_basis_is_orthonormal() {
+        let mut rng = Rng::new(11);
+        let basis = random_orthonormal(8, 3, &mut rng); // [8][3]
+        for i in 0..3 {
+            for j in 0..3 {
+                let dot: f64 = (0..8).map(|a| basis[a][i] * basis[a][j]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-9, "gram[{i}][{j}]={dot}");
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Deterministic "workload trace" generator — the stand-in for a real
+//! production trace (none is available offline; see DESIGN.md §5).
+//!
+//! Models a stream of feature vectors arriving from a set of drifting
+//! sources with occasional bursts and background noise, the shape of data
+//! MapReduce clustering jobs actually ingest (e.g. user/session feature
+//! logs). The generator is seeded and fully reproducible, and its
+//! non-stationarity makes partitions heterogeneous — stressing exactly
+//! the composability property (Lemma 2.7) that makes the paper's coreset
+//! construction work on *arbitrary* partitions.
+
+use crate::points::VectorData;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub n: usize,
+    pub d: usize,
+    /// Number of drifting sources (true clusters).
+    pub sources: usize,
+    /// Per-step drift magnitude of each source center.
+    pub drift: f64,
+    /// Probability a source bursts (emits a dense run of points).
+    pub burst_prob: f64,
+    /// Background-noise fraction (points from no source).
+    pub noise_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            n: 20_000,
+            d: 8,
+            sources: 12,
+            drift: 0.05,
+            burst_prob: 0.002,
+            noise_frac: 0.02,
+            seed: 1,
+        }
+    }
+}
+
+impl TraceSpec {
+    /// Generate the trace in arrival order; labels give the source id
+    /// (u32::MAX for background noise).
+    pub fn generate(&self) -> (VectorData, Vec<u32>) {
+        assert!(self.sources >= 1);
+        let mut rng = Rng::new(self.seed);
+        let box_half = 25.0;
+        let mut centers: Vec<Vec<f64>> = (0..self.sources)
+            .map(|_| (0..self.d).map(|_| rng.range_f64(-box_half, box_half)).collect())
+            .collect();
+        let mut data = Vec::with_capacity(self.n * self.d);
+        let mut labels = Vec::with_capacity(self.n);
+        let mut burst_left = 0usize;
+        let mut burst_src = 0usize;
+        let mut i = 0usize;
+        while i < self.n {
+            // all sources drift each arrival
+            for c in &mut centers {
+                for x in c.iter_mut() {
+                    *x = (*x + rng.gaussian() * self.drift).clamp(-2.0 * box_half, 2.0 * box_half);
+                }
+            }
+            let src = if burst_left > 0 {
+                burst_left -= 1;
+                burst_src
+            } else if rng.f64() < self.burst_prob {
+                burst_src = rng.below(self.sources);
+                burst_left = 20 + rng.below(80);
+                burst_src
+            } else {
+                rng.below(self.sources)
+            };
+            if rng.f64() < self.noise_frac {
+                for _ in 0..self.d {
+                    data.push(rng.range_f64(-2.0 * box_half, 2.0 * box_half) as f32);
+                }
+                labels.push(u32::MAX);
+            } else {
+                for j in 0..self.d {
+                    data.push((centers[src][j] + rng.gaussian()) as f32);
+                }
+                labels.push(src as u32);
+            }
+            i += 1;
+        }
+        (VectorData::new(data, self.d), labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let spec = TraceSpec { n: 3000, d: 4, ..Default::default() };
+        let (a, la) = spec.generate();
+        let (b, _) = spec.generate();
+        assert_eq!(a, b);
+        assert_eq!(a.n(), 3000);
+        assert_eq!(la.len(), 3000);
+    }
+
+    #[test]
+    fn has_noise_and_all_sources() {
+        let spec = TraceSpec { n: 20_000, sources: 6, noise_frac: 0.05, seed: 2, ..Default::default() };
+        let (_, labels) = spec.generate();
+        let noise = labels.iter().filter(|&&l| l == u32::MAX).count();
+        assert!(noise > 500, "noise count {noise}");
+        for s in 0..6u32 {
+            assert!(labels.contains(&s), "source {s} never emitted");
+        }
+    }
+
+    #[test]
+    fn drift_moves_sources() {
+        // first and last thousand points of one source should have
+        // different means when drift is large
+        let spec = TraceSpec { n: 30_000, d: 2, sources: 1, drift: 0.2, noise_frac: 0.0, seed: 3, ..Default::default() };
+        let (data, _) = spec.generate();
+        let mean = |lo: usize, hi: usize| -> Vec<f64> {
+            let mut m = vec![0.0; 2];
+            for i in lo..hi {
+                for j in 0..2 {
+                    m[j] += data.row(i as u32)[j] as f64;
+                }
+            }
+            m.iter().map(|v| v / (hi - lo) as f64).collect()
+        };
+        let early = mean(0, 1000);
+        let late = mean(29_000, 30_000);
+        let shift: f64 = early.iter().zip(&late).map(|(a, b)| (a - b).abs()).sum();
+        assert!(shift > 1.0, "drift produced shift {shift}");
+    }
+}

@@ -1,0 +1,61 @@
+//! Shared helpers for the experiment suite.
+
+use std::sync::Arc;
+
+use crate::algorithms::local_search::{local_search, LocalSearchCfg};
+use crate::algorithms::{Instance, Solution};
+use crate::data::synth::{GaussianMixtureSpec, ManifoldSpec};
+use crate::metric::dense::EuclideanSpace;
+use crate::metric::{MetricSpace, Objective};
+use crate::points::VectorData;
+
+/// Standard mixture workload for accuracy experiments.
+pub fn mixture_space(n: usize, d: usize, k: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+    let (data, _) = GaussianMixtureSpec { n, d, k, seed, ..Default::default() }.generate();
+    (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+}
+
+/// Manifold workload with controlled intrinsic dimension.
+pub fn manifold_space(
+    n: usize,
+    intrinsic: usize,
+    ambient: usize,
+    k: usize,
+    seed: u64,
+) -> (EuclideanSpace, Vec<u32>) {
+    let (data, _) = ManifoldSpec {
+        n,
+        intrinsic_dim: intrinsic,
+        ambient_dim: ambient,
+        k,
+        seed,
+        ..Default::default()
+    }
+    .generate();
+    (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+}
+
+/// Strong sequential reference solution — the "α-approximation run on
+/// the full input" that Theorems 3.9/3.13 compare against (opt itself is
+/// intractable beyond toy sizes; see DESIGN.md §4.3).
+pub fn sequential_reference(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    seed: u64,
+) -> Solution {
+    let w = vec![1u64; pts.len()];
+    let cfg = LocalSearchCfg {
+        max_passes: 60,
+        sample_candidates: 128,
+        seed,
+        ..Default::default()
+    };
+    local_search(space, obj, Instance::new(pts, &w), k, None, &cfg)
+}
+
+/// Raw data accessor for continuous experiments.
+pub fn mixture_data(n: usize, d: usize, k: usize, seed: u64) -> VectorData {
+    GaussianMixtureSpec { n, d, k, seed, ..Default::default() }.generate().0
+}

@@ -1,0 +1,88 @@
+//! E1 — CoverWithBalls per-point guarantee (Lemma 3.1) across metrics.
+//!
+//! For each metric and (ε, β): run CoverWithBalls and report the worst
+//! observed ratio d(x, τ(x)) / max{R, d(x, T)} against the guaranteed
+//! bound ε/(2β), plus the output size. The ratio column must never
+//! exceed 1.0 of the bound — this is the paper's foundational invariant.
+
+use crate::coreset::cover_with_balls;
+use crate::data::strings::StringClusterSpec;
+use crate::metric::levenshtein::StringSpace;
+use crate::metric::MetricSpace;
+use crate::util::table::{fnum, Table};
+
+use super::common::mixture_space;
+use super::ExpResult;
+
+pub fn run(quick: bool) -> ExpResult {
+    let n = if quick { 800 } else { 6000 };
+    let mut table = Table::new(vec![
+        "metric", "eps", "beta", "|P|", "|T|", "|C_w|", "max d/max{R,dT}", "bound eps/2b", "ok",
+    ]);
+
+    let mut cases: Vec<(&'static str, Box<dyn MetricSpace>, Vec<u32>)> = Vec::new();
+    let (eu, pts_eu) = mixture_space(n, 2, 6, 11);
+    cases.push(("euclidean", Box::new(eu), pts_eu));
+    {
+        use crate::metric::dense::ManhattanSpace;
+        use std::sync::Arc;
+        let (data, _) = crate::data::synth::GaussianMixtureSpec {
+            n,
+            d: 2,
+            k: 6,
+            seed: 12,
+            ..Default::default()
+        }
+        .generate();
+        cases.push(("manhattan", Box::new(ManhattanSpace::new(Arc::new(data))), (0..n as u32).collect()));
+    }
+    {
+        let (strs, _) = StringClusterSpec {
+            n: if quick { 300 } else { 1500 },
+            clusters: 8,
+            ..Default::default()
+        }
+        .generate();
+        let ns = strs.len() as u32;
+        cases.push(("levenshtein", Box::new(StringSpace::new(strs)), (0..ns).collect()));
+    }
+
+    for (name, space, pts) in &cases {
+        let t: Vec<u32> = (0..6u32).map(|i| pts[(i as usize * pts.len() / 6).min(pts.len() - 1)]).collect();
+        let assign = space.assign(pts, &t);
+        let r = assign.dist.iter().sum::<f64>() / pts.len() as f64;
+        for (eps, beta) in [(0.25, 2.0), (0.5, 2.0), (0.5, 1.0)] {
+            let res = cover_with_balls(space.as_ref(), pts, &t, r, eps, beta);
+            let bound = eps / (2.0 * beta);
+            let mut worst: f64 = 0.0;
+            for (i, &x) in pts.iter().enumerate() {
+                let rep = res.set.indices[res.tau[i] as usize];
+                let denom = res.dist_to_t[i].max(r);
+                if denom > 0.0 {
+                    worst = worst.max(space.dist(x, rep) / denom);
+                }
+            }
+            table.row(vec![
+                name.to_string(),
+                fnum(eps),
+                fnum(beta),
+                pts.len().to_string(),
+                t.len().to_string(),
+                res.set.len().to_string(),
+                fnum(worst),
+                fnum(bound),
+                (worst <= bound + 1e-9).to_string(),
+            ]);
+        }
+    }
+
+    ExpResult {
+        id: "e1",
+        title: "CoverWithBalls per-point guarantee (Lemma 3.1)",
+        tables: vec![("guarantee".to_string(), table)],
+        notes: vec![
+            "`ok` must be true everywhere: the observed worst-case shrink ratio never exceeds ε/(2β)."
+                .to_string(),
+        ],
+    }
+}

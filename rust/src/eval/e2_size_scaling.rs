@@ -1,0 +1,100 @@
+//! E2 — Coreset size scaling (Theorem 3.3, Lemmas 3.6/3.8/3.12).
+//!
+//! The theory: |C_w| ≲ |T|·(16β/ε)^D·log n — exponential in the
+//! *doubling* dimension D, polynomial in 1/ε with exponent D, and only
+//! logarithmic in n. We sweep (intrinsic D, ε, n) on manifold workloads
+//! (ambient dim fixed at 16) and fit the growth exponent of |E_w| in
+//! 1/ε per intrinsic dimension — it should increase with D and sit in
+//! the vicinity of D — and the growth in n, which should be strongly
+//! sublinear.
+
+use crate::coreset::{two_round_coreset, CoresetConfig};
+use crate::mapreduce::{default_l, PartitionStrategy, Simulator};
+use crate::metric::Objective;
+use crate::util::stats::power_fit;
+use crate::util::table::{fnum, Table};
+
+use super::common::manifold_space;
+use super::ExpResult;
+
+pub fn run(quick: bool) -> ExpResult {
+    let k = 6;
+    let base_n = if quick { 4000 } else { 16000 };
+    let eps_grid = [0.2, 0.3, 0.45, 0.65, 0.9];
+    let dims: &[usize] = if quick { &[1, 2] } else { &[1, 2, 3] };
+
+    let mut size_tab = Table::new(vec!["intrinsic D", "eps", "|C_w|", "|E_w|", "|E_w|/n"]);
+    let mut fit_tab = Table::new(vec!["intrinsic D", "fit |E_w| ~ C*(1/eps)^e", "r2"]);
+    for &dim in dims {
+        let (space, pts) = manifold_space(base_n, dim, 16, k, 21);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &eps in &eps_grid {
+            let sim = Simulator::new();
+            let cfg = CoresetConfig::new(k, eps);
+            let out = two_round_coreset(
+                &space,
+                Objective::Median,
+                &pts,
+                default_l(base_n, k),
+                PartitionStrategy::RoundRobin,
+                &cfg,
+                &sim,
+            );
+            size_tab.row(vec![
+                dim.to_string(),
+                fnum(eps),
+                out.cw_size.to_string(),
+                out.coreset.len().to_string(),
+                fnum(out.coreset.len() as f64 / base_n as f64),
+            ]);
+            xs.push(1.0 / eps);
+            ys.push(out.coreset.len() as f64);
+        }
+        let (c, e, r2) = power_fit(&xs, &ys);
+        fit_tab.row(vec![dim.to_string(), format!("{} * (1/eps)^{}", fnum(c), fnum(e)), fnum(r2)]);
+    }
+
+    // n-scaling at fixed eps: |E_w| should grow ≪ linearly
+    let mut n_tab = Table::new(vec!["n", "|E_w|", "|E_w|/n"]);
+    let ns: Vec<usize> =
+        if quick { vec![2000, 4000, 8000] } else { vec![4000, 8000, 16000, 32000] };
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &n in &ns {
+        let (space, pts) = manifold_space(n, 2, 16, k, 22);
+        let sim = Simulator::new();
+        let cfg = CoresetConfig::new(k, 0.5);
+        let out = two_round_coreset(
+            &space,
+            Objective::Median,
+            &pts,
+            default_l(n, k),
+            PartitionStrategy::RoundRobin,
+            &cfg,
+            &sim,
+        );
+        n_tab.row(vec![
+            n.to_string(),
+            out.coreset.len().to_string(),
+            fnum(out.coreset.len() as f64 / n as f64),
+        ]);
+        xs.push(n as f64);
+        ys.push(out.coreset.len() as f64);
+    }
+    let (_, e_n, r2_n) = power_fit(&xs, &ys);
+
+    ExpResult {
+        id: "e2",
+        title: "Coreset size scaling in ε, D, n (Thm 3.3 / Lem 3.8)",
+        tables: vec![
+            ("size vs (D, eps)".to_string(), size_tab),
+            ("1/eps growth exponent per D".to_string(), fit_tab),
+            ("size vs n at eps=0.5, D=2".to_string(), n_tab),
+        ],
+        notes: vec![
+            "The 1/ε exponent should increase with intrinsic D (theory: ≈ 2D for the 2-round set in the worst case; benign data sits lower).".to_string(),
+            format!("n-scaling exponent: |E_w| ~ n^{} (r²={}) — strongly sublinear as the log²|P| bound predicts.", fnum(e_n), fnum(r2_n)),
+        ],
+    }
+}

@@ -1,0 +1,83 @@
+//! E3 — ε-bounded coreset property (Lemmas 3.5/3.7 for k-median,
+//! 3.10/3.11 for k-means).
+//!
+//! Measures the proximity sums of Definition 2.3 against the optimal
+//! cost (approximated by the strong sequential reference):
+//!   k-median: Σ d(x, τ(x))      ≤ 2ε · ν(opt)
+//!   k-means:  Σ d(x, τ(x))²     ≤ 4ε² · μ(opt)
+//! for the union C_w of round-1 local coresets, per the composability
+//! lemma (2.7). The reported ratio/bound column should stay ≤ 1 (it is
+//! an upper bound with β conservatively set, so typically ≪ 1).
+
+use crate::coreset::local::{local_coreset, TlAlgo};
+use crate::mapreduce::{partition, PartitionStrategy};
+use crate::metric::{MetricSpace, Objective};
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+use super::common::{mixture_space, sequential_reference};
+use super::ExpResult;
+
+fn proximity_over_partitions(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    l: usize,
+    eps: f64,
+    beta: f64,
+) -> (f64, usize) {
+    let parts = partition(pts, l, PartitionStrategy::RoundRobin);
+    let mut total = 0.0;
+    let mut size = 0usize;
+    for (i, part) in parts.iter().enumerate() {
+        let mut rng = Rng::new(31 + i as u64);
+        let out = local_coreset(space, obj, part, 12, eps, beta, TlAlgo::DppSeeding, &mut rng);
+        total += match obj {
+            Objective::Median => out.cover.proximity_sum(space, part),
+            Objective::Means => out.cover.proximity_sum_sq(space, part),
+        };
+        size += out.cover.set.len();
+    }
+    (total, size)
+}
+
+pub fn run(quick: bool) -> ExpResult {
+    let n = if quick { 2000 } else { 10000 };
+    let k = 6;
+    let (space, pts) = mixture_space(n, 2, k, 31);
+    let l = 4;
+    let beta = 2.0;
+
+    let mut table = Table::new(vec![
+        "objective", "eps", "proximity", "opt~ cost", "ratio", "bound", "ratio/bound",
+    ]);
+    for obj in [Objective::Median, Objective::Means] {
+        let reference = sequential_reference(&space, obj, &pts, k, 77);
+        for eps in [0.2, 0.4, 0.8] {
+            let (prox, _sz) = proximity_over_partitions(&space, obj, &pts, l, eps, beta);
+            let ratio = prox / reference.cost;
+            let bound = match obj {
+                Objective::Median => 2.0 * eps,
+                Objective::Means => 4.0 * eps * eps,
+            };
+            table.row(vec![
+                obj.name().to_string(),
+                fnum(eps),
+                fnum(prox),
+                fnum(reference.cost),
+                fnum(ratio),
+                fnum(bound),
+                fnum(ratio / bound),
+            ]);
+        }
+    }
+
+    ExpResult {
+        id: "e3",
+        title: "ε-bounded coreset property (Lemmas 3.5/3.10 + 2.7)",
+        tables: vec![("proximity vs bound".to_string(), table)],
+        notes: vec![
+            "opt~ (strong local search) upper-bounds the true opt cost, so the measured ratio slightly underestimates the true one; the ratio/bound column sitting well below 1 (not merely at 1) is what certifies the lemma with margin.".to_string(),
+        ],
+    }
+}

@@ -1,0 +1,75 @@
+//! E4 — End-to-end k-median accuracy (Theorems 3.9 / 3.14).
+//!
+//! The headline claim: the 3-round MapReduce solution costs at most
+//! (α + O(ε)) · opt. We measure cost(MR(ε)) / cost(sequential α-approx
+//! on the full input) over an ε sweep: the ratio should approach ~1 as
+//! ε shrinks, and the coreset (hence round-3 memory) should grow. The
+//! one-round §3.1 construction is included as the ablation column — the
+//! paper proves it loses a factor 2 in the worst case.
+
+use crate::coordinator::{solve, ClusterConfig};
+use crate::metric::Objective;
+use crate::util::table::{fnum, Table};
+
+use super::common::{mixture_space, sequential_reference};
+use super::ExpResult;
+
+pub fn run(quick: bool) -> ExpResult {
+    run_for(Objective::Median, "e4", "End-to-end k-median accuracy (Thm 3.9)", quick)
+}
+
+pub(super) fn run_for(
+    obj: Objective,
+    id: &'static str,
+    title: &'static str,
+    quick: bool,
+) -> ExpResult {
+    let n = if quick { 3000 } else { 20000 };
+    let k = 8;
+    let mut table = Table::new(vec![
+        "eps", "|E_w|", "M_L", "cost(MR)", "cost(seq)", "ratio", "ratio 1-round",
+    ]);
+    let mut notes = Vec::new();
+    let eps_grid = if quick { vec![0.25, 0.5, 0.9] } else { vec![0.15, 0.25, 0.4, 0.6, 0.9] };
+
+    // average over seeds to tame randomized-seeding variance
+    let seeds: &[u64] = if quick { &[1] } else { &[1, 2, 3] };
+    for &eps in &eps_grid {
+        let mut ratio_acc = 0.0;
+        let mut ratio1_acc = 0.0;
+        let mut coreset = 0usize;
+        let mut ml = 0usize;
+        let mut mr_cost = 0.0;
+        let mut seq_cost = 0.0;
+        for &seed in seeds {
+            let (space, pts) = mixture_space(n, 2, k, 40 + seed);
+            let seq = sequential_reference(&space, obj, &pts, k, 97 + seed);
+            let mut cfg = ClusterConfig::new(obj, k, eps);
+            cfg.seed = seed;
+            let rep = solve(&space, &pts, &cfg);
+            let mut cfg1 = cfg.clone();
+            cfg1.one_round = true;
+            let rep1 = solve(&space, &pts, &cfg1);
+            ratio_acc += rep.full_cost / seq.cost;
+            ratio1_acc += rep1.full_cost / seq.cost;
+            coreset = rep.coreset_size;
+            ml = rep.max_local_memory;
+            mr_cost = rep.full_cost;
+            seq_cost = seq.cost;
+        }
+        let m = seeds.len() as f64;
+        table.row(vec![
+            fnum(eps),
+            coreset.to_string(),
+            ml.to_string(),
+            fnum(mr_cost),
+            fnum(seq_cost),
+            fnum(ratio_acc / m),
+            fnum(ratio1_acc / m),
+        ]);
+    }
+    notes.push(
+        "ratio → 1+O(ε) as ε ↓ (2-round); the 1-round ablation may trail (§3.1's factor-2 analysis) though on benign data both sit close to 1.".to_string(),
+    );
+    ExpResult { id, title, tables: vec![("accuracy vs eps".to_string(), table)], notes }
+}

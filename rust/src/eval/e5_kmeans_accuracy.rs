@@ -1,0 +1,12 @@
+//! E5 — End-to-end k-means accuracy (Theorems 3.13 / 3.14): the k-means
+//! twin of E4, exercising the (√2ε, √β) parametrization and the squared
+//! objective throughout.
+
+use crate::metric::Objective;
+
+use super::e4_kmedian_accuracy::run_for;
+use super::ExpResult;
+
+pub fn run(quick: bool) -> ExpResult {
+    run_for(Objective::Means, "e5", "End-to-end k-means accuracy (Thm 3.13)", quick)
+}

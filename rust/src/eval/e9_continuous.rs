@@ -1,0 +1,90 @@
+//! E9 — Continuous variants (§3.1 "Application to the continuous case",
+//! §3.3 closing remark).
+//!
+//! In R^d with centroids unconstrained, the paper shows the 1-round C_w
+//! already yields α+O(ε) (no factor 2): we run weighted Lloyd on C_w and
+//! compare against Lloyd on the full input, sweeping ε. We also report
+//! the continuous-vs-discrete gap on the same data (continuous cost is
+//! lower by definition).
+
+use crate::algorithms::lloyd::{continuous_cost, lloyd, LloydCfg};
+use crate::coordinator::{solve, ClusterConfig};
+use crate::coreset::{one_round_coreset, CoresetConfig};
+use crate::mapreduce::{default_l, PartitionStrategy, Simulator};
+use crate::metric::dense::EuclideanSpace;
+use crate::metric::Objective;
+use crate::util::table::{fnum, Table};
+use std::sync::Arc;
+
+use super::common::mixture_data;
+use super::ExpResult;
+
+/// best-of-3 restarts: vanilla Lloyd is seed-sensitive and the ratio
+/// column needs a stable reference on both sides.
+fn lloyd_best(
+    data: &crate::points::VectorData,
+    pts: &[u32],
+    w: &[u64],
+    k: usize,
+) -> crate::algorithms::lloyd::ContinuousSolution {
+    (0..3)
+        .map(|s| lloyd(data, pts, w, k, &LloydCfg { seed: 0xF00D + s, ..Default::default() }))
+        .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+        .unwrap()
+}
+
+pub fn run(quick: bool) -> ExpResult {
+    let n = if quick { 3000 } else { 15000 };
+    let k = 8;
+    let data = mixture_data(n, 4, k, 81);
+    let pts: Vec<u32> = (0..n as u32).collect();
+    let unit = vec![1u64; n];
+
+    // full-input continuous reference
+    let full = lloyd_best(&data, &pts, &unit, k);
+
+    let space = EuclideanSpace::new(Arc::new(data.clone()));
+    let mut table = Table::new(vec!["eps", "|C_w|", "cost(Lloyd on C_w)", "cost(Lloyd full)", "ratio"]);
+    for eps in [0.25, 0.5, 0.9] {
+        let sim = Simulator::new();
+        let cfg = CoresetConfig::new(k, eps);
+        let out = one_round_coreset(
+            &space,
+            Objective::Means,
+            &pts,
+            default_l(n, k),
+            PartitionStrategy::RoundRobin,
+            &cfg,
+            &sim,
+        );
+        let sol = lloyd_best(&data, &out.coreset.indices, &out.coreset.weights, k);
+        // evaluate the coreset-derived centroids on the FULL input
+        let cost_full_input = continuous_cost(&data, &pts, &unit, &sol.centroids);
+        table.row(vec![
+            fnum(eps),
+            out.coreset.len().to_string(),
+            fnum(cost_full_input),
+            fnum(full.cost),
+            fnum(cost_full_input / full.cost),
+        ]);
+    }
+
+    // discrete-vs-continuous gap at one ε
+    let mut gap = Table::new(vec!["variant", "cost"]);
+    let rep = solve(&space, &pts, &ClusterConfig::new(Objective::Means, k, 0.5));
+    gap.row(vec!["discrete 3-round (centers ⊆ P)".to_string(), fnum(rep.full_cost)]);
+    gap.row(vec!["continuous Lloyd (full input)".to_string(), fnum(full.cost)]);
+
+    ExpResult {
+        id: "e9",
+        title: "Continuous k-means via the 1-round coreset (§3.1/§3.3)",
+        tables: vec![
+            ("coreset Lloyd vs full Lloyd".to_string(), table),
+            ("discrete vs continuous".to_string(), gap),
+        ],
+        notes: vec![
+            "ratio → 1 as ε ↓ : the 1-round C_w suffices in the continuous case (α+O(ε), no factor 2).".to_string(),
+            "continuous cost ≤ discrete cost (centroids are unconstrained); the gap is the price of S ⊆ P.".to_string(),
+        ],
+    }
+}

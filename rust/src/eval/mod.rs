@@ -1,0 +1,86 @@
+//! Experiment harness: every quantitative claim in the paper becomes an
+//! experiment (the paper has no empirical section of its own — see
+//! DESIGN.md §3 for the full index E1..E10). `cargo bench` and
+//! `mrcoreset exp <id>` both route here; results are recorded in
+//! EXPERIMENTS.md.
+
+pub mod common;
+mod e1_cover_guarantee;
+mod e2_size_scaling;
+mod e3_bounded_quality;
+mod e4_kmedian_accuracy;
+mod e5_kmeans_accuracy;
+mod e6_memory_scaling;
+mod e7_rounds;
+mod e8_baselines;
+mod e9_continuous;
+mod e10_dimension_adaptivity;
+mod e11_ablation;
+
+use crate::util::table::Table;
+
+/// Result of one experiment: named tables plus free-form notes.
+pub struct ExpResult {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub tables: Vec<(String, Table)>,
+    pub notes: Vec<String>,
+}
+
+impl ExpResult {
+    pub fn render(&self) -> String {
+        let mut s = format!("## {} — {}\n\n", self.id, self.title);
+        for (name, t) in &self.tables {
+            s.push_str(&format!("### {name}\n\n{}\n", t.to_markdown()));
+        }
+        for n in &self.notes {
+            s.push_str(&format!("- {n}\n"));
+        }
+        s
+    }
+}
+
+pub const ALL_IDS: &[&str] = &["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11"];
+
+/// Run an experiment by id. `quick` shrinks workloads for CI.
+pub fn run_experiment(id: &str, quick: bool) -> Option<ExpResult> {
+    match id {
+        "e1" => Some(e1_cover_guarantee::run(quick)),
+        "e2" => Some(e2_size_scaling::run(quick)),
+        "e3" => Some(e3_bounded_quality::run(quick)),
+        "e4" => Some(e4_kmedian_accuracy::run(quick)),
+        "e5" => Some(e5_kmeans_accuracy::run(quick)),
+        "e6" => Some(e6_memory_scaling::run(quick)),
+        "e7" => Some(e7_rounds::run(quick)),
+        "e8" => Some(e8_baselines::run(quick)),
+        "e9" => Some(e9_continuous::run(quick)),
+        "e10" => Some(e10_dimension_adaptivity::run(quick)),
+        "e11" => Some(e11_ablation::run(quick)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every experiment must run end-to-end in quick mode and produce at
+    /// least one non-empty table.
+    #[test]
+    fn all_experiments_run_quick() {
+        for id in ALL_IDS {
+            let res = run_experiment(id, true).unwrap_or_else(|| panic!("unknown id {id}"));
+            assert!(!res.tables.is_empty(), "{id}: no tables");
+            for (name, t) in &res.tables {
+                assert!(!t.is_empty(), "{id}/{name}: empty table");
+            }
+            let rendered = res.render();
+            assert!(rendered.contains(res.title));
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(run_experiment("e99", true).is_none());
+    }
+}

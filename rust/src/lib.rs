@@ -1,0 +1,25 @@
+//! # mrcoreset
+//!
+//! Production-quality reproduction of *Accurate MapReduce Algorithms for
+//! k-median and k-means in General Metric Spaces* (Mazzetto,
+//! Pietracaprina, Pucci, 2019): composable coreset constructions
+//! (CoverWithBalls) and 3-round MapReduce (α+O(ε))-approximation
+//! algorithms for k-median and k-means, with a thread-backed MapReduce
+//! simulator, sequential approximation algorithms, literature baselines,
+//! and an XLA/Pallas-accelerated Euclidean distance hot path loaded via
+//! PJRT (see `runtime`).
+//!
+//! Layout follows DESIGN.md: `coreset` + `coordinator` carry the paper's
+//! contribution; everything else is substrate.
+
+pub mod algorithms;
+pub mod baselines;
+pub mod coordinator;
+pub mod coreset;
+pub mod data;
+pub mod eval;
+pub mod mapreduce;
+pub mod metric;
+pub mod points;
+pub mod runtime;
+pub mod util;

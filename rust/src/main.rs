@@ -1,0 +1,195 @@
+//! mrcoreset CLI — leader entrypoint for the 3-round MapReduce
+//! k-median/k-means solver and its experiment suite.
+//!
+//! Subcommands:
+//!   run     solve a clustering instance (synthetic or CSV)
+//!   exp     run experiments e1..e10 (or `all`) and print their tables
+//!   gen     generate a synthetic dataset to CSV
+//!   info    report engine/artifact status
+//!
+//! Examples:
+//!   mrcoreset run --alg kmedian --n 20000 --d 2 --k 8 --eps 0.4
+//!   mrcoreset run data.csv --alg kmeans --k 10 --eps 0.25
+//!   mrcoreset exp e4 --full
+//!   mrcoreset gen --n 10000 --d 4 --k 8 --out points.csv
+
+use std::path::Path;
+use std::sync::Arc;
+
+use mrcoreset::coordinator::{solve, ClusterConfig, FinalAlgo};
+use mrcoreset::coreset::TlAlgo;
+use mrcoreset::data::csv;
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::eval::{run_experiment, ALL_IDS};
+use mrcoreset::mapreduce::PartitionStrategy;
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::Objective;
+use mrcoreset::runtime::XlaEngine;
+use mrcoreset::util::cli::Args;
+
+const USAGE: &str = "usage: mrcoreset <run|exp|gen|info> [flags]
+  run  [file.csv] --alg kmedian|kmeans --k K --eps E [--n N --d D] [--l L] [--m M]
+       [--beta B] [--tl dpp|local-search|gonzalez] [--final local-search|pam]
+       [--one-round] [--strategy rr|contig|shuffle] [--seed S] [--no-engine]
+  exp  <e1..e10|all> [--full]
+  gen  --n N --d D --k K --out FILE [--spread S] [--outliers F] [--seed S]
+  info";
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn objective_of(args: &Args) -> Objective {
+    match args.str_or("alg", "kmedian") {
+        "kmedian" | "k-median" | "median" => Objective::Median,
+        "kmeans" | "k-means" | "means" => Objective::Means,
+        other => {
+            eprintln!("error: unknown --alg {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let obj = objective_of(args);
+    let k: usize = args.parse_or("k", 8);
+    let eps: f64 = args.parse_or("eps", 0.5);
+
+    // data: CSV positional, or synthetic with --n/--d
+    let data = if let Some(file) = args.positional.first() {
+        match csv::load_csv(Path::new(file)) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    } else {
+        let n: usize = args.parse_or("n", 10_000);
+        let d: usize = args.parse_or("d", 2);
+        let seed: u64 = args.parse_or("data-seed", 1);
+        GaussianMixtureSpec { n, d, k: k.max(2), seed, ..Default::default() }.generate().0
+    };
+    let n = data.n();
+    println!("input: n={} d={} objective={}", n, data.d(), obj);
+
+    let shared = Arc::new(data);
+    let space = if args.has("no-engine") {
+        EuclideanSpace::new(shared)
+    } else {
+        match XlaEngine::load_default() {
+            Some(engine) => {
+                println!("engine: XLA/PJRT with {} artifacts", engine.manifest().entries.len());
+                EuclideanSpace::with_engine(shared, Arc::new(engine))
+            }
+            None => EuclideanSpace::new(shared),
+        }
+    };
+
+    let mut cfg = ClusterConfig::new(obj, k, eps);
+    if args.has("l") {
+        cfg.l = Some(args.parse_or("l", 0));
+    }
+    if args.has("m") {
+        cfg.m = Some(args.parse_or("m", 2 * k));
+    }
+    cfg.beta = args.parse_or("beta", cfg.beta);
+    cfg.seed = args.parse_or("seed", cfg.seed);
+    cfg.one_round = args.has("one-round");
+    cfg.tl = match args.str_or("tl", "dpp") {
+        "dpp" => TlAlgo::DppSeeding,
+        "local-search" => TlAlgo::LocalSearch,
+        "gonzalez" => TlAlgo::Gonzalez,
+        other => {
+            eprintln!("error: unknown --tl {other}");
+            std::process::exit(2);
+        }
+    };
+    cfg.final_algo = match args.str_or("final", "local-search") {
+        "local-search" => FinalAlgo::LocalSearch,
+        "pam" => FinalAlgo::Pam,
+        other => {
+            eprintln!("error: unknown --final {other}");
+            std::process::exit(2);
+        }
+    };
+    cfg.strategy = match args.str_or("strategy", "rr") {
+        "rr" => PartitionStrategy::RoundRobin,
+        "contig" => PartitionStrategy::Contiguous,
+        "shuffle" => PartitionStrategy::Shuffled(cfg.seed),
+        other => {
+            eprintln!("error: unknown --strategy {other}");
+            std::process::exit(2);
+        }
+    };
+
+    let pts: Vec<u32> = (0..n as u32).collect();
+    let rep = solve(&space, &pts, &cfg);
+    print!("{}", rep.summary());
+    println!("centers: {:?}", rep.solution.centers);
+}
+
+fn cmd_exp(args: &Args) {
+    let quick = !args.has("full");
+    let ids: Vec<&str> = match args.positional.first().map(String::as_str) {
+        Some("all") | None => ALL_IDS.to_vec(),
+        Some(id) => vec![id],
+    };
+    for id in ids {
+        match run_experiment(id, quick) {
+            Some(res) => println!("{}", res.render()),
+            None => {
+                eprintln!("error: unknown experiment {id} (known: {})", ALL_IDS.join(", "));
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+fn cmd_gen(args: &Args) {
+    let spec = GaussianMixtureSpec {
+        n: args.parse_or("n", 10_000),
+        d: args.parse_or("d", 2),
+        k: args.parse_or("k", 8),
+        spread: args.parse_or("spread", 20.0),
+        outlier_frac: args.parse_or("outliers", 0.0),
+        seed: args.parse_or("seed", 1),
+    };
+    let out = args.str_or("out", "points.csv");
+    let (data, _) = spec.generate();
+    if let Err(e) = csv::save_csv(Path::new(out), &data) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+    println!("wrote {} points ({} dims) to {out}", data.n(), data.d());
+}
+
+fn cmd_info() {
+    println!(
+        "mrcoreset {} — 3-round MapReduce k-median/k-means (Mazzetto et al. 2019)",
+        env!("CARGO_PKG_VERSION")
+    );
+    match XlaEngine::load_default() {
+        Some(engine) => {
+            let m = engine.manifest();
+            println!("engine: available, {} artifacts", m.entries.len());
+            println!(
+                "  assign_cost max n = {}, min_update max n = {}",
+                m.max_n(mrcoreset::runtime::ArtifactKind::AssignCost),
+                m.max_n(mrcoreset::runtime::ArtifactKind::MinUpdate)
+            );
+        }
+        None => println!("engine: unavailable (run `make artifacts`)"),
+    }
+    println!("threads: {}", mrcoreset::util::pool::default_threads());
+}

@@ -1,0 +1,95 @@
+//! Local-memory accounting for the MapReduce simulator.
+//!
+//! The MapReduce model (paper §2) bounds two quantities: M_L, the local
+//! memory of each reducer, and M_A, the aggregate memory. The simulator
+//! cannot introspect allocations, so drivers *charge* the meter for every
+//! object a real reducer would hold (its partition, broadcast state,
+//! output), in units of points; peak local usage is what Theorem 3.14
+//! bounds as O(|P|^{2/3} k^{1/3} (c/ε)^{2D} log² |P|).
+
+/// Per-reducer memory meter (units: points / point-sized records).
+#[derive(Clone, Debug, Default)]
+pub struct MemoryMeter {
+    current: usize,
+    peak: usize,
+    /// Optional hard budget: exceeding it marks a violation (experiments
+    /// assert none occur at the theory-predicted budget).
+    budget: Option<usize>,
+    violated: bool,
+}
+
+impl MemoryMeter {
+    pub fn new() -> MemoryMeter {
+        MemoryMeter::default()
+    }
+
+    pub fn with_budget(budget: usize) -> MemoryMeter {
+        MemoryMeter { budget: Some(budget), ..Default::default() }
+    }
+
+    /// Charge `items` resident records.
+    pub fn charge(&mut self, items: usize) {
+        self.current += items;
+        if self.current > self.peak {
+            self.peak = self.current;
+        }
+        if let Some(b) = self.budget {
+            if self.current > b {
+                self.violated = true;
+            }
+        }
+    }
+
+    /// Release `items` records (e.g. partition dropped after processing).
+    pub fn release(&mut self, items: usize) {
+        self.current = self.current.saturating_sub(items);
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    pub fn violated(&self) -> bool {
+        self.violated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_peak() {
+        let mut m = MemoryMeter::new();
+        m.charge(10);
+        m.charge(5);
+        m.release(12);
+        m.charge(4);
+        assert_eq!(m.peak(), 15);
+        assert_eq!(m.current(), 7);
+        assert!(!m.violated());
+    }
+
+    #[test]
+    fn budget_violation_latches() {
+        let mut m = MemoryMeter::with_budget(10);
+        m.charge(8);
+        assert!(!m.violated());
+        m.charge(5);
+        assert!(m.violated());
+        m.release(13);
+        assert!(m.violated(), "violation must latch");
+    }
+
+    #[test]
+    fn release_saturates() {
+        let mut m = MemoryMeter::new();
+        m.charge(3);
+        m.release(100);
+        assert_eq!(m.current(), 0);
+    }
+}

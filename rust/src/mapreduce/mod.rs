@@ -1,0 +1,195 @@
+//! Thread-backed MapReduce round simulator (substrate S1, DESIGN.md §5).
+//!
+//! The paper's model (§2): a MapReduce algorithm runs in a sequence of
+//! rounds; in each round, reducers independently process disjoint groups
+//! of key-value pairs under a local memory budget M_L, with aggregate
+//! memory M_A across all reducers. This simulator executes each round's
+//! reducers as real parallel threads, and — what the theory actually
+//! bounds — *measures* per-reducer peak local memory, aggregate memory,
+//! and shuffle volumes, via `MemoryMeter` charges from the drivers.
+//!
+//! Rounds are explicit (`Simulator::round`), so the round count of an
+//! algorithm is simply the number of `round` calls it makes (E7 asserts
+//! the paper's 3 rounds).
+
+pub mod memory;
+pub mod partition;
+
+pub use memory::MemoryMeter;
+pub use partition::{default_l, partition, PartitionStrategy};
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::pool::{default_threads, scoped_map};
+
+/// Statistics for one executed round.
+#[derive(Clone, Debug)]
+pub struct RoundStats {
+    pub name: String,
+    pub reducers: usize,
+    /// max over reducers of peak local memory (points)
+    pub max_local_peak: usize,
+    /// sum over reducers of peak local memory (points) — the round's M_A
+    pub aggregate_peak: usize,
+    pub wall: std::time::Duration,
+    pub budget_violations: usize,
+}
+
+/// Whole-job statistics.
+#[derive(Clone, Debug, Default)]
+pub struct JobStats {
+    pub rounds: Vec<RoundStats>,
+}
+
+impl JobStats {
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// The job's M_L: max over rounds of max-over-reducers peak memory.
+    pub fn max_local_memory(&self) -> usize {
+        self.rounds.iter().map(|r| r.max_local_peak).max().unwrap_or(0)
+    }
+
+    /// The job's M_A: max over rounds of aggregate peak memory.
+    pub fn aggregate_memory(&self) -> usize {
+        self.rounds.iter().map(|r| r.aggregate_peak).max().unwrap_or(0)
+    }
+
+    pub fn total_violations(&self) -> usize {
+        self.rounds.iter().map(|r| r.budget_violations).sum()
+    }
+}
+
+/// The simulator: runs rounds, accumulates stats.
+pub struct Simulator {
+    threads: usize,
+    /// Optional per-reducer local-memory budget (points); reducers
+    /// exceeding it are *recorded* (not killed), so experiments can
+    /// assert the theoretical budget holds.
+    local_budget: Option<usize>,
+    stats: Mutex<JobStats>,
+}
+
+impl Simulator {
+    pub fn new() -> Simulator {
+        Simulator { threads: default_threads(), local_budget: None, stats: Mutex::new(JobStats::default()) }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Simulator {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_local_budget(mut self, budget: usize) -> Simulator {
+        self.local_budget = Some(budget);
+        self
+    }
+
+    /// Execute one parallel round: `f(reducer_index, input, meter)` runs
+    /// for each input group on the thread pool. Returns reducer outputs
+    /// in input order.
+    pub fn round<I, O, F>(&self, name: &str, inputs: Vec<I>, f: F) -> Vec<O>
+    where
+        I: Send + Sync,
+        O: Send,
+        F: Fn(usize, &I, &mut MemoryMeter) -> O + Sync,
+    {
+        let t0 = Instant::now();
+        let reducers = inputs.len();
+        let results = scoped_map(reducers, self.threads, |i| {
+            let mut meter = match self.local_budget {
+                Some(b) => MemoryMeter::with_budget(b),
+                None => MemoryMeter::new(),
+            };
+            let out = f(i, &inputs[i], &mut meter);
+            (out, meter)
+        });
+        let mut outs = Vec::with_capacity(reducers);
+        let mut max_peak = 0usize;
+        let mut agg = 0usize;
+        let mut violations = 0usize;
+        for (o, meter) in results {
+            max_peak = max_peak.max(meter.peak());
+            agg += meter.peak();
+            violations += usize::from(meter.violated());
+            outs.push(o);
+        }
+        let stats = RoundStats {
+            name: name.to_string(),
+            reducers,
+            max_local_peak: max_peak,
+            aggregate_peak: agg,
+            wall: t0.elapsed(),
+            budget_violations: violations,
+        };
+        self.stats.lock().unwrap().rounds.push(stats);
+        outs
+    }
+
+    /// Take the accumulated job statistics (resets the simulator).
+    pub fn take_stats(&self) -> JobStats {
+        std::mem::take(&mut self.stats.lock().unwrap())
+    }
+}
+
+impl Default for Simulator {
+    fn default() -> Self {
+        Simulator::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_rounds_and_collects_stats() {
+        let sim = Simulator::new().with_threads(4);
+        let parts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![4, 5], vec![6]];
+        let sums = sim.round("sum", parts, |_, part, meter| {
+            meter.charge(part.len());
+            let s: u32 = part.iter().sum();
+            meter.release(part.len());
+            s
+        });
+        assert_eq!(sums, vec![6, 9, 6]);
+        let stats = sim.take_stats();
+        assert_eq!(stats.num_rounds(), 1);
+        assert_eq!(stats.rounds[0].reducers, 3);
+        assert_eq!(stats.rounds[0].max_local_peak, 3);
+        assert_eq!(stats.rounds[0].aggregate_peak, 6);
+    }
+
+    #[test]
+    fn budget_violations_counted() {
+        let sim = Simulator::new().with_local_budget(2);
+        let parts: Vec<Vec<u32>> = vec![vec![1], vec![2, 3, 4]];
+        let _ = sim.round("r", parts, |_, part, meter| {
+            meter.charge(part.len());
+            part.len()
+        });
+        let stats = sim.take_stats();
+        assert_eq!(stats.total_violations(), 1);
+    }
+
+    #[test]
+    fn multi_round_job_stats() {
+        let sim = Simulator::new();
+        for r in 0..3 {
+            let _ = sim.round(&format!("r{r}"), vec![()], |_, _, meter| meter.charge(r + 1));
+        }
+        let stats = sim.take_stats();
+        assert_eq!(stats.num_rounds(), 3);
+        assert_eq!(stats.max_local_memory(), 3);
+    }
+
+    #[test]
+    fn take_stats_resets() {
+        let sim = Simulator::new();
+        let _ = sim.round("r", vec![()], |_, _, m| m.charge(1));
+        assert_eq!(sim.take_stats().num_rounds(), 1);
+        assert_eq!(sim.take_stats().num_rounds(), 0);
+    }
+}

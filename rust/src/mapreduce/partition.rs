@@ -1,0 +1,108 @@
+//! Deterministic partitioning of point-index sets into L reducer inputs.
+
+use crate::util::rng::Rng;
+
+/// Partitioning strategy for splitting P across L reducers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// i-th point to reducer i mod L (equally-sized, the paper's setup).
+    RoundRobin,
+    /// Contiguous chunks (stresses heterogeneity for trace workloads:
+    /// consecutive trace points are correlated).
+    Contiguous,
+    /// Seeded random permutation, then contiguous chunks.
+    Shuffled(u64),
+}
+
+/// Split `pts` into `l` parts (sizes differ by at most 1).
+pub fn partition(pts: &[u32], l: usize, strategy: PartitionStrategy) -> Vec<Vec<u32>> {
+    assert!(l >= 1, "need at least one partition");
+    let l = l.min(pts.len().max(1));
+    match strategy {
+        PartitionStrategy::RoundRobin => {
+            let mut parts = vec![Vec::with_capacity(pts.len() / l + 1); l];
+            for (i, &p) in pts.iter().enumerate() {
+                parts[i % l].push(p);
+            }
+            parts
+        }
+        PartitionStrategy::Contiguous => chunks(pts.to_vec(), l),
+        PartitionStrategy::Shuffled(seed) => {
+            let mut v = pts.to_vec();
+            Rng::new(seed).shuffle(&mut v);
+            chunks(v, l)
+        }
+    }
+}
+
+fn chunks(v: Vec<u32>, l: usize) -> Vec<Vec<u32>> {
+    let n = v.len();
+    let base = n / l;
+    let extra = n % l;
+    let mut parts = Vec::with_capacity(l);
+    let mut off = 0;
+    for i in 0..l {
+        let sz = base + usize::from(i < extra);
+        parts.push(v[off..off + sz].to_vec());
+        off += sz;
+    }
+    parts
+}
+
+/// The paper's default L = ∛(|P| / k) (§3.4), clamped to [1, n].
+pub fn default_l(n: usize, k: usize) -> usize {
+    let l = ((n as f64 / k.max(1) as f64).cbrt()).round() as usize;
+    l.clamp(1, n.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_balanced_and_complete() {
+        let pts: Vec<u32> = (0..103).collect();
+        let parts = partition(&pts, 4, PartitionStrategy::RoundRobin);
+        assert_eq!(parts.len(), 4);
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        let mut all: Vec<u32> = parts.concat();
+        all.sort_unstable();
+        assert_eq!(all, pts);
+    }
+
+    #[test]
+    fn contiguous_preserves_order() {
+        let pts: Vec<u32> = (0..10).collect();
+        let parts = partition(&pts, 3, PartitionStrategy::Contiguous);
+        assert_eq!(parts[0], vec![0, 1, 2, 3]);
+        assert_eq!(parts[1], vec![4, 5, 6]);
+        assert_eq!(parts[2], vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn shuffled_is_deterministic_permutation() {
+        let pts: Vec<u32> = (0..50).collect();
+        let a = partition(&pts, 5, PartitionStrategy::Shuffled(9));
+        let b = partition(&pts, 5, PartitionStrategy::Shuffled(9));
+        assert_eq!(a, b);
+        let mut all: Vec<u32> = a.concat();
+        all.sort_unstable();
+        assert_eq!(all, pts);
+    }
+
+    #[test]
+    fn l_larger_than_n() {
+        let pts: Vec<u32> = (0..3).collect();
+        let parts = partition(&pts, 10, PartitionStrategy::RoundRobin);
+        assert_eq!(parts.len(), 3);
+    }
+
+    #[test]
+    fn default_l_formula() {
+        assert_eq!(default_l(1000, 1), 10);
+        assert_eq!(default_l(8000, 8), 10);
+        assert_eq!(default_l(10, 10), 1);
+        assert_eq!(default_l(0, 5), 1);
+    }
+}

@@ -1,0 +1,78 @@
+//! Instrumented wrapper counting distance evaluations — the abstract
+//! work measure used by the experiment harness and the perf pass (it is
+//! the paper's only "computation" besides bookkeeping).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{Assignment, MetricSpace};
+
+/// Wraps a space and counts `dist` evaluations (including those inside the
+/// default bulk ops; engine-dispatched bulk ops count as pts*centers).
+pub struct CountingSpace<'a> {
+    inner: &'a dyn MetricSpace,
+    count: AtomicU64,
+}
+
+impl<'a> CountingSpace<'a> {
+    pub fn new(inner: &'a dyn MetricSpace) -> CountingSpace<'a> {
+        CountingSpace { inner, count: AtomicU64::new(0) }
+    }
+
+    pub fn evals(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+impl MetricSpace for CountingSpace<'_> {
+    fn n_points(&self) -> usize {
+        self.inner.n_points()
+    }
+
+    fn dist(&self, i: u32, j: u32) -> f64 {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.dist(i, j)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn assign(&self, pts: &[u32], centers: &[u32]) -> Assignment {
+        self.count.fetch_add((pts.len() * centers.len()) as u64, Ordering::Relaxed);
+        self.inner.assign(pts, centers)
+    }
+
+    fn min_update(&self, pts: &[u32], c: u32, cur: &mut [f64]) {
+        self.count.fetch_add(pts.len() as u64, Ordering::Relaxed);
+        self.inner.min_update(pts, c, cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::dense::EuclideanSpace;
+    use crate::points::VectorData;
+    use std::sync::Arc;
+
+    #[test]
+    fn counts_dist_and_bulk() {
+        let v = Arc::new(VectorData::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]));
+        let e = EuclideanSpace::new(v);
+        let c = CountingSpace::new(&e);
+        assert_eq!(c.evals(), 0);
+        c.dist(0, 1);
+        assert_eq!(c.evals(), 1);
+        c.assign(&[0, 1, 2], &[0, 2]);
+        assert_eq!(c.evals(), 1 + 6);
+        let mut cur = vec![f64::INFINITY; 3];
+        c.min_update(&[0, 1, 2], 1, &mut cur);
+        assert_eq!(c.evals(), 1 + 6 + 3);
+        c.reset();
+        assert_eq!(c.evals(), 0);
+    }
+}

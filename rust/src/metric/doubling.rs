@@ -1,0 +1,120 @@
+//! Intrinsic-dimension estimation (correlation dimension).
+//!
+//! The paper's bounds scale with the doubling dimension D of the metric
+//! space; a very desirable property it proves is that the algorithms
+//! *adapt* to the dataset's intrinsic dimension without knowing it
+//! (§1.2). Experiment E10 uses this estimator to show the measured
+//! coreset size tracks the intrinsic (not ambient) dimension.
+//!
+//! Estimator: the Grassberger–Procaccia correlation dimension — the
+//! slope of log C(r) vs log r, where C(r) is the fraction of sampled
+//! point pairs within distance r. For doubling spaces the correlation
+//! dimension lower-bounds the doubling dimension and tracks it on the
+//! manifold-like workloads we generate.
+
+use crate::util::rng::Rng;
+use crate::util::stats::linear_fit;
+
+use super::MetricSpace;
+
+/// Estimate intrinsic dimension from `pairs` sampled distances, fitting
+/// between the q_lo and q_hi distance quantiles (avoids the noise floor
+/// and the saturated tail).
+pub fn correlation_dimension(
+    space: &dyn MetricSpace,
+    pts: &[u32],
+    pairs: usize,
+    seed: u64,
+) -> f64 {
+    assert!(pts.len() >= 2, "need at least 2 points");
+    let mut rng = Rng::new(seed);
+    let mut dists: Vec<f64> = Vec::with_capacity(pairs);
+    for _ in 0..pairs {
+        let a = pts[rng.below(pts.len())];
+        let mut b = pts[rng.below(pts.len())];
+        let mut tries = 0;
+        while b == a && tries < 16 {
+            b = pts[rng.below(pts.len())];
+            tries += 1;
+        }
+        if b == a {
+            continue; // index list is (nearly) all the same point
+        }
+        let d = space.dist(a, b);
+        if d > 0.0 {
+            dists.push(d);
+        }
+    }
+    if dists.len() < 16 {
+        return 0.0; // degenerate (all duplicates)
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // C(r) at small-distance percentiles: the short-range regime where
+    // ball growth reflects intrinsic dimension (long-range pairs are
+    // dominated by cluster placement, not the manifold).
+    let n = dists.len();
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for pct in [1, 2, 3, 5, 8, 12, 16, 20, 25, 30] {
+        let i = (pct * n / 100).min(n - 1);
+        let r = dists[i];
+        if r <= 0.0 {
+            continue;
+        }
+        let c = (i + 1) as f64 / n as f64;
+        xs.push(r.ln());
+        ys.push(c.ln());
+    }
+    if xs.len() < 3 {
+        return 0.0;
+    }
+    // Collinear duplicates (discrete metrics) are fine for OLS.
+    let (_, slope, _) = linear_fit(&xs, &ys);
+    slope.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::dense::EuclideanSpace;
+    use crate::points::VectorData;
+    use std::sync::Arc;
+
+    fn uniform_cube(n: usize, d: usize, seed: u64) -> EuclideanSpace {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.f64() as f32).collect();
+        EuclideanSpace::new(Arc::new(VectorData::new(data, d)))
+    }
+
+    #[test]
+    fn line_has_dimension_about_one() {
+        let s = uniform_cube(2000, 1, 1);
+        let pts: Vec<u32> = (0..2000).collect();
+        let d = correlation_dimension(&s, &pts, 20_000, 7);
+        assert!((0.7..1.3).contains(&d), "estimated {d}");
+    }
+
+    #[test]
+    fn plane_has_dimension_about_two() {
+        let s = uniform_cube(2000, 2, 2);
+        let pts: Vec<u32> = (0..2000).collect();
+        let d = correlation_dimension(&s, &pts, 20_000, 7);
+        assert!((1.6..2.5).contains(&d), "estimated {d}");
+    }
+
+    #[test]
+    fn higher_dim_estimates_order_correctly() {
+        let pts: Vec<u32> = (0..1500).collect();
+        let d2 = correlation_dimension(&uniform_cube(1500, 2, 3), &pts, 15_000, 7);
+        let d4 = correlation_dimension(&uniform_cube(1500, 4, 4), &pts, 15_000, 7);
+        assert!(d2 < d4, "d2={d2} d4={d4}");
+    }
+
+    #[test]
+    fn degenerate_all_same_point() {
+        let v = VectorData::from_rows(&vec![vec![1.0, 1.0]; 50]);
+        let s = EuclideanSpace::new(Arc::new(v));
+        let pts: Vec<u32> = (0..50).collect();
+        assert_eq!(correlation_dimension(&s, &pts, 1000, 7), 0.0);
+    }
+}

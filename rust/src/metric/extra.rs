@@ -1,0 +1,179 @@
+//! Additional general-metric substrates: angular (spherical) distance on
+//! dense vectors and Hamming distance over fixed-length codes — further
+//! witnesses that the constructions only ever use the `MetricSpace`
+//! contract.
+
+use crate::points::SharedVectors;
+
+use super::MetricSpace;
+
+/// Angular distance: the angle between vectors (arc length on the unit
+/// sphere). A proper metric on normalized directions; zero vectors are
+/// rejected at construction.
+pub struct AngularSpace {
+    /// unit-normalized rows
+    unit: Vec<Vec<f64>>,
+}
+
+impl AngularSpace {
+    pub fn new(data: SharedVectors) -> AngularSpace {
+        let mut unit = Vec::with_capacity(data.n());
+        for i in 0..data.n() {
+            let row = data.row(i as u32);
+            let norm: f64 = row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            assert!(norm > 1e-12, "AngularSpace: zero vector at row {i}");
+            unit.push(row.iter().map(|&x| x as f64 / norm).collect());
+        }
+        AngularSpace { unit }
+    }
+}
+
+impl MetricSpace for AngularSpace {
+    fn n_points(&self) -> usize {
+        self.unit.len()
+    }
+
+    fn dist(&self, i: u32, j: u32) -> f64 {
+        if i == j {
+            return 0.0;
+        }
+        let a = &self.unit[i as usize];
+        let b = &self.unit[j as usize];
+        let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        dot.clamp(-1.0, 1.0).acos()
+    }
+
+    fn name(&self) -> &'static str {
+        "angular"
+    }
+}
+
+/// Hamming distance over fixed-length byte codes (e.g. binary hashes,
+/// categorical feature tuples).
+pub struct HammingSpace {
+    codes: Vec<Vec<u8>>,
+}
+
+impl HammingSpace {
+    pub fn new(codes: Vec<Vec<u8>>) -> HammingSpace {
+        assert!(!codes.is_empty());
+        let len = codes[0].len();
+        assert!(codes.iter().all(|c| c.len() == len), "Hamming codes must share a length");
+        HammingSpace { codes }
+    }
+
+    pub fn code(&self, i: u32) -> &[u8] {
+        &self.codes[i as usize]
+    }
+}
+
+impl MetricSpace for HammingSpace {
+    fn n_points(&self) -> usize {
+        self.codes.len()
+    }
+
+    fn dist(&self, i: u32, j: u32) -> f64 {
+        let a = &self.codes[i as usize];
+        let b = &self.codes[j as usize];
+        a.iter().zip(b).filter(|(x, y)| x != y).count() as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "hamming"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::VectorData;
+    use std::sync::Arc;
+
+    #[test]
+    fn angular_known_values() {
+        let data = Arc::new(VectorData::from_rows(&[
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![-1.0, 0.0],
+            vec![5.0, 0.0], // same direction as row 0
+        ]));
+        let s = AngularSpace::new(data);
+        assert!((s.dist(0, 1) - std::f64::consts::FRAC_PI_2).abs() < 1e-9);
+        assert!((s.dist(0, 2) - std::f64::consts::PI).abs() < 1e-9);
+        assert!(s.dist(0, 3) < 1e-6, "scale-invariant");
+        assert_eq!(s.dist(1, 1), 0.0);
+    }
+
+    #[test]
+    fn angular_triangle_inequality() {
+        let data = Arc::new(VectorData::from_rows(&[
+            vec![1.0, 0.2, -0.3],
+            vec![0.4, 1.0, 0.0],
+            vec![-0.2, 0.5, 0.9],
+            vec![0.7, -0.7, 0.1],
+        ]));
+        let s = AngularSpace::new(data);
+        for i in 0..4u32 {
+            for j in 0..4u32 {
+                for k in 0..4u32 {
+                    assert!(s.dist(i, j) <= s.dist(i, k) + s.dist(k, j) + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "zero vector")]
+    fn angular_rejects_zero() {
+        let data = Arc::new(VectorData::from_rows(&[vec![0.0, 0.0]]));
+        let _ = AngularSpace::new(data);
+    }
+
+    #[test]
+    fn hamming_values_and_axioms() {
+        let s = HammingSpace::new(vec![b"abcd".to_vec(), b"abcf".to_vec(), b"xbcf".to_vec()]);
+        assert_eq!(s.dist(0, 1), 1.0);
+        assert_eq!(s.dist(0, 2), 2.0);
+        assert_eq!(s.dist(1, 2), 1.0);
+        assert!(s.dist(0, 2) <= s.dist(0, 1) + s.dist(1, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "share a length")]
+    fn hamming_rejects_ragged() {
+        let _ = HammingSpace::new(vec![b"ab".to_vec(), b"abc".to_vec()]);
+    }
+
+    #[test]
+    fn clustering_works_on_angular_space() {
+        // two direction bundles -> k-median k=2 recovers them
+        use crate::algorithms::local_search::{local_search, LocalSearchCfg};
+        use crate::algorithms::Instance;
+        use crate::metric::Objective;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(4);
+        let mut rows = Vec::new();
+        for base in [[1.0f64, 0.0], [0.0, 1.0]] {
+            for _ in 0..30 {
+                rows.push(vec![
+                    (base[0] + rng.gaussian() * 0.05) as f32,
+                    (base[1] + rng.gaussian() * 0.05) as f32,
+                ]);
+            }
+        }
+        let s = AngularSpace::new(Arc::new(VectorData::from_rows(&rows)));
+        let pts: Vec<u32> = (0..60).collect();
+        let w = vec![1u64; 60];
+        let sol = local_search(
+            &s,
+            Objective::Median,
+            Instance::new(&pts, &w),
+            2,
+            None,
+            &LocalSearchCfg::default(),
+        );
+        // one center per bundle
+        let buckets: Vec<usize> = sol.centers.iter().map(|&c| (c / 30) as usize).collect();
+        assert_ne!(buckets[0], buckets[1], "centers {:?}", sol.centers);
+    }
+}

@@ -1,0 +1,177 @@
+//! Metric-space substrate (paper §2).
+//!
+//! The paper works in *general metric spaces*: solutions must be subsets
+//! of the input (`S ⊆ P`). Accordingly, `MetricSpace` exposes distances
+//! between stored points by index; every algorithm, coreset construction,
+//! and baseline in this crate is generic over this trait. The dense
+//! Euclidean implementation optionally routes the bulk operations through
+//! the AOT-compiled XLA/Pallas kernels (see `runtime::XlaEngine`), while
+//! e.g. the Levenshtein space exercises the genuinely-general-metric path.
+
+pub mod counting;
+pub mod dense;
+pub mod extra;
+pub mod doubling;
+pub mod levenshtein;
+
+/// Clustering objective: k-median sums distances, k-means sums squares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Objective {
+    Median,
+    Means,
+}
+
+impl Objective {
+    /// Per-point cost contribution of a distance.
+    #[inline]
+    pub fn cost_of(self, d: f64) -> f64 {
+        match self {
+            Objective::Median => d,
+            Objective::Means => d * d,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Median => "k-median",
+            Objective::Means => "k-means",
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Result of a bulk nearest-center pass: for each queried point, the
+/// distance (plain, not squared) to — and position (within the queried
+/// center list) of — its closest center.
+#[derive(Clone, Debug, Default)]
+pub struct Assignment {
+    pub dist: Vec<f64>,
+    pub idx: Vec<u32>,
+}
+
+impl Assignment {
+    /// Weighted cost under an objective; `weights[i]` pairs with point i.
+    pub fn cost(&self, obj: Objective, weights: &[u64]) -> f64 {
+        assert_eq!(self.dist.len(), weights.len());
+        self.dist
+            .iter()
+            .zip(weights)
+            .map(|(&d, &w)| w as f64 * obj.cost_of(d))
+            .sum()
+    }
+
+    pub fn cost_unit(&self, obj: Objective) -> f64 {
+        self.dist.iter().map(|&d| obj.cost_of(d)).sum()
+    }
+}
+
+/// A metric over a fixed set of stored points, addressed by index.
+pub trait MetricSpace: Send + Sync {
+    /// Number of stored points (valid indices are `0..n_points()`).
+    fn n_points(&self) -> usize;
+
+    /// Distance between stored points `i` and `j`. Must satisfy the
+    /// metric axioms (identity, symmetry, triangle inequality).
+    fn dist(&self, i: u32, j: u32) -> f64;
+
+    fn name(&self) -> &'static str;
+
+    /// Nearest-center assignment of `pts` against `centers`.
+    /// Implementations may override with batched fast paths; the default
+    /// is the straightforward double loop.
+    fn assign(&self, pts: &[u32], centers: &[u32]) -> Assignment {
+        assert!(!centers.is_empty(), "assign: empty center set");
+        let mut dist = Vec::with_capacity(pts.len());
+        let mut idx = Vec::with_capacity(pts.len());
+        for &p in pts {
+            let mut best = f64::INFINITY;
+            let mut best_j = 0u32;
+            for (j, &c) in centers.iter().enumerate() {
+                let d = self.dist(p, c);
+                if d < best {
+                    best = d;
+                    best_j = j as u32;
+                }
+            }
+            dist.push(best);
+            idx.push(best_j);
+        }
+        Assignment { dist, idx }
+    }
+
+    /// Fold one new center into a running per-point min-distance vector:
+    /// `cur[i] = min(cur[i], d(pts[i], c))`. The greedy inner step of
+    /// CoverWithBalls, k-means++ and Gonzalez.
+    fn min_update(&self, pts: &[u32], c: u32, cur: &mut [f64]) {
+        assert_eq!(pts.len(), cur.len());
+        for (i, &p) in pts.iter().enumerate() {
+            let d = self.dist(p, c);
+            if d < cur[i] {
+                cur[i] = d;
+            }
+        }
+    }
+
+    /// Weighted clustering cost of `centers` over (`pts`, `weights`).
+    fn weighted_cost(&self, obj: Objective, pts: &[u32], weights: &[u64], centers: &[u32]) -> f64 {
+        self.assign(pts, centers).cost(obj, weights)
+    }
+}
+
+/// Convenience: unit-weight cost.
+pub fn cost_unit(space: &dyn MetricSpace, obj: Objective, pts: &[u32], centers: &[u32]) -> f64 {
+    space.assign(pts, centers).cost_unit(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::dense::EuclideanSpace;
+    use super::*;
+    use crate::points::VectorData;
+    use std::sync::Arc;
+
+    fn line_space() -> EuclideanSpace {
+        // points 0,1,2,3,4 at x = 0,1,2,3,10
+        let v = VectorData::from_rows(&[
+            vec![0.0],
+            vec![1.0],
+            vec![2.0],
+            vec![3.0],
+            vec![10.0],
+        ]);
+        EuclideanSpace::new(Arc::new(v))
+    }
+
+    #[test]
+    fn default_assign_picks_nearest() {
+        let s = line_space();
+        let a = s.assign(&[0, 1, 2, 3, 4], &[0, 3]);
+        assert_eq!(a.idx, vec![0, 0, 1, 1, 1]);
+        assert_eq!(a.dist, vec![0.0, 1.0, 1.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn objective_costs() {
+        let s = line_space();
+        let a = s.assign(&[0, 1, 4], &[0]);
+        assert_eq!(a.cost_unit(Objective::Median), 0.0 + 1.0 + 10.0);
+        assert_eq!(a.cost_unit(Objective::Means), 0.0 + 1.0 + 100.0);
+        assert_eq!(a.cost(Objective::Median, &[1, 2, 1]), 0.0 + 2.0 + 10.0);
+    }
+
+    #[test]
+    fn min_update_monotone() {
+        let s = line_space();
+        let pts = [0, 1, 2, 3, 4];
+        let mut cur = vec![f64::INFINITY; 5];
+        s.min_update(&pts, 4, &mut cur);
+        assert_eq!(cur, vec![10.0, 9.0, 8.0, 7.0, 0.0]);
+        s.min_update(&pts, 0, &mut cur);
+        assert_eq!(cur, vec![0.0, 1.0, 2.0, 3.0, 0.0]);
+    }
+}

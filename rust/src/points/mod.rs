@@ -1,0 +1,181 @@
+//! Point storage substrates.
+//!
+//! Algorithms in this crate address points by `u32` index into one
+//! immutable store; subsets (partitions, coresets, solutions) are index
+//! vectors. This makes MapReduce partitioning, weighting, and shuffles
+//! cheap and keeps the storage layout friendly to the XLA fast path
+//! (dense row-major f32 blocks gathered by index).
+
+use std::sync::Arc;
+
+/// Dense row-major f32 matrix: `n` points with `d` features each.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VectorData {
+    data: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+impl VectorData {
+    pub fn new(data: Vec<f32>, d: usize) -> VectorData {
+        assert!(d > 0, "VectorData: d must be positive");
+        assert!(data.len() % d == 0, "data len {} not divisible by d {}", data.len(), d);
+        let n = data.len() / d;
+        VectorData { data, n, d }
+    }
+
+    pub fn zeros(n: usize, d: usize) -> VectorData {
+        VectorData { data: vec![0.0; n * d], n, d }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> VectorData {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        VectorData::new(data, d)
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn row(&self, i: u32) -> &[f32] {
+        let i = i as usize;
+        debug_assert!(i < self.n);
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: u32) -> &mut [f32] {
+        let i = i as usize;
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Gather rows by index into a new dense block (XLA input staging).
+    pub fn gather(&self, idx: &[u32]) -> VectorData {
+        let mut data = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        VectorData { data, n: idx.len(), d: self.d }
+    }
+
+    /// Gather rows into `out`, padding remaining rows with `pad_value`.
+    /// `out` must hold `rows_out * d` f32s with `rows_out >= idx.len()`.
+    pub fn gather_padded(&self, idx: &[u32], out: &mut [f32], pad_value: f32) {
+        assert!(out.len() % self.d == 0);
+        let rows_out = out.len() / self.d;
+        assert!(rows_out >= idx.len(), "pad target smaller than gather set");
+        for (r, &i) in idx.iter().enumerate() {
+            out[r * self.d..(r + 1) * self.d].copy_from_slice(self.row(i));
+        }
+        out[idx.len() * self.d..].fill(pad_value);
+    }
+}
+
+/// A weighted subset of a point store (the coreset representation).
+/// Weights are positive integers per Definition 2.3 of the paper
+/// (`w(x) = |{y : tau(y) = x}|`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WeightedSet {
+    pub indices: Vec<u32>,
+    pub weights: Vec<u64>,
+}
+
+impl WeightedSet {
+    pub fn new(indices: Vec<u32>, weights: Vec<u64>) -> WeightedSet {
+        assert_eq!(indices.len(), weights.len());
+        debug_assert!(weights.iter().all(|&w| w > 0), "weights must be positive");
+        WeightedSet { indices, weights }
+    }
+
+    /// Unit-weight view of a plain index set.
+    pub fn unit(indices: Vec<u32>) -> WeightedSet {
+        let weights = vec![1u64; indices.len()];
+        WeightedSet { indices, weights }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Total represented weight (= |P| when built per Definition 2.3).
+    pub fn total_weight(&self) -> u64 {
+        self.weights.iter().sum()
+    }
+
+    /// Concatenate coresets from partitions (composability, Lemma 2.7).
+    pub fn union(parts: &[WeightedSet]) -> WeightedSet {
+        let mut out = WeightedSet::default();
+        for p in parts {
+            out.indices.extend_from_slice(&p.indices);
+            out.weights.extend_from_slice(&p.weights);
+        }
+        out
+    }
+}
+
+/// Shared handle to vector data (spaces and the XLA engine hold clones).
+pub type SharedVectors = Arc<VectorData>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_roundtrip() {
+        let v = VectorData::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(v.n(), 3);
+        assert_eq!(v.d(), 2);
+        assert_eq!(v.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rejected() {
+        VectorData::from_rows(&[vec![1.0], vec![2.0, 3.0]]);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let v = VectorData::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let g = v.gather(&[3, 1]);
+        assert_eq!(g.raw(), &[3.0, 1.0]);
+    }
+
+    #[test]
+    fn gather_padded_fills() {
+        let v = VectorData::from_rows(&[vec![1.0, 1.0], vec![2.0, 2.0]]);
+        let mut out = vec![0.0f32; 4 * 2];
+        v.gather_padded(&[1], &mut out, 9.0);
+        assert_eq!(out, vec![2.0, 2.0, 9.0, 9.0, 9.0, 9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn weighted_set_union_and_totals() {
+        let a = WeightedSet::new(vec![0, 1], vec![2, 3]);
+        let b = WeightedSet::unit(vec![5]);
+        let u = WeightedSet::union(&[a, b]);
+        assert_eq!(u.indices, vec![0, 1, 5]);
+        assert_eq!(u.total_weight(), 6);
+    }
+}

@@ -1,0 +1,151 @@
+//! Artifact manifest parsing and shape-bucket selection.
+//!
+//! `artifacts/manifest.txt` (written by python/compile/aot.py) lists one
+//! artifact per line: `kind n d k file`. The runtime picks, for a real
+//! (n, d, k) problem, the smallest bucket with n_b ≥ n, d_b ≥ d, k_b ≥ k
+//! (ties broken by padded volume); if no n-bucket is large enough the
+//! biggest one is used and the problem is chunked over n.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    AssignCost,
+    MinUpdate,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "assign_cost" => Some(ArtifactKind::AssignCost),
+            "min_update" => Some(ArtifactKind::MinUpdate),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ManifestEntry {
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {}: want 5 fields, got {}", i + 1, parts.len());
+            }
+            let Some(kind) = ArtifactKind::parse(parts[0]) else {
+                bail!("manifest line {}: unknown kind {}", i + 1, parts[0]);
+            };
+            entries.push(ManifestEntry {
+                kind,
+                n: parts[1].parse().context("n")?,
+                d: parts[2].parse().context("d")?,
+                k: parts[3].parse().context("k")?,
+                file: parts[4].to_string(),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Smallest bucket covering (n, d, k), by padded volume.
+    pub fn pick(&self, kind: ArtifactKind, n: usize, d: usize, k: usize) -> Option<ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.n >= n && e.d >= d && e.k >= k)
+            .min_by_key(|e| e.n * e.d * e.k.max(1))
+            .cloned()
+    }
+
+    /// Largest-n bucket covering (d, k) — used to chunk oversized n.
+    pub fn pick_chunked(&self, kind: ArtifactKind, d: usize, k: usize) -> Option<ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.d >= d && e.k >= k)
+            .max_by_key(|e| (e.n, std::cmp::Reverse(e.d * e.k.max(1))))
+            .cloned()
+    }
+
+    pub fn max_n(&self, kind: ArtifactKind) -> usize {
+        self.entries.iter().filter(|e| e.kind == kind).map(|e| e.n).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# kind n d k file
+assign_cost 256 4 128 assign_cost_256x4x128.hlo.txt
+assign_cost 1024 4 128 assign_cost_1024x4x128.hlo.txt
+assign_cost 1024 16 512 assign_cost_1024x16x512.hlo.txt
+min_update 256 4 1 min_update_256x4.hlo.txt
+min_update 1024 16 1 min_update_1024x16.hlo.txt
+";
+
+    #[test]
+    fn parses_and_skips_comments() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 5);
+        assert_eq!(m.entries[0].kind, ArtifactKind::AssignCost);
+        assert_eq!(m.entries[0].n, 256);
+    }
+
+    #[test]
+    fn picks_smallest_covering_bucket() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.pick(ArtifactKind::AssignCost, 200, 3, 100).unwrap();
+        assert_eq!((e.n, e.d, e.k), (256, 4, 128));
+        let e = m.pick(ArtifactKind::AssignCost, 300, 3, 100).unwrap();
+        assert_eq!((e.n, e.d, e.k), (1024, 4, 128));
+        let e = m.pick(ArtifactKind::AssignCost, 300, 10, 300).unwrap();
+        assert_eq!((e.n, e.d, e.k), (1024, 16, 512));
+    }
+
+    #[test]
+    fn none_when_not_coverable() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.pick(ArtifactKind::AssignCost, 100, 64, 10).is_none());
+        assert!(m.pick(ArtifactKind::AssignCost, 5000, 4, 10).is_none());
+    }
+
+    #[test]
+    fn chunked_pick_takes_biggest_n() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.pick_chunked(ArtifactKind::AssignCost, 4, 100).unwrap();
+        assert_eq!(e.n, 1024);
+        assert_eq!(m.max_n(ArtifactKind::AssignCost), 1024);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("assign_cost 1 2 3").is_err());
+        assert!(Manifest::parse("bogus 1 2 3 f.txt").is_err());
+        assert!(Manifest::parse("assign_cost x 2 3 f.txt").is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Criterion-less micro-benchmark harness (criterion is unavailable in
+//! the offline image). Warmup + fixed sample count, reports median and
+//! spread; used by `rust/benches/bench_main.rs` (`cargo bench`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self, items: usize) -> f64 {
+        items as f64 / self.median.as_secs_f64()
+    }
+}
+
+fn dur_from_secs(s: f64) -> Duration {
+    Duration::from_secs_f64(s.max(0.0))
+}
+
+/// Time `f` with `samples` measured runs after `warmup` unmeasured runs.
+/// `f` should return something cheap to drop; use `std::hint::black_box`
+/// inside to defeat const-folding.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |p: f64| crate::util::stats::percentile_sorted(&times, p);
+    BenchResult {
+        name: name.to_string(),
+        samples,
+        median: dur_from_secs(pick(50.0)),
+        p10: dur_from_secs(pick(10.0)),
+        p90: dur_from_secs(pick(90.0)),
+        mean: dur_from_secs(times.iter().sum::<f64>() / samples as f64),
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:40} median {:>10}  p10 {:>10}  p90 {:>10}  (n={})",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.p10),
+            fmt_duration(self.p90),
+            self.samples
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.median > Duration::ZERO);
+        assert!(r.p10 <= r.median && r.median <= r.p90);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.000 ms");
+        assert_eq!(fmt_duration(Duration::from_micros(7)), "7.0 µs");
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal CLI argument parser (clap is unavailable in the offline image).
+//!
+//! Supports `program <subcommand> --flag value --bool-flag positional...`.
+//! Typed getters parse on access and produce uniform error messages.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]). Flags may be written
+    /// `--key value` or `--key=value`; a flag with no following value (or
+    /// followed by another flag) is boolean. A bare token following a
+    /// flag is consumed as that flag's value, so positionals must precede
+    /// flags (or boolean flags must be written last / with `=`).
+    pub fn parse(raw: &[String]) -> Args {
+        let mut it = raw.iter().peekable();
+        let mut subcommand = None;
+        let mut flags = HashMap::new();
+        let mut bools = Vec::new();
+        let mut positional = Vec::new();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            flags.insert(stripped.to_string(), it.next().unwrap().clone());
+                        }
+                        _ => bools.push(stripped.to_string()),
+                    }
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+        }
+        Args { subcommand, flags, bools, positional }
+    }
+
+    pub fn from_env() -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("error: --{key} {v}: {e}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("error: --{key} {v}: {e}");
+                std::process::exit(2);
+            }),
+            None => {
+                eprintln!("error: missing required flag --{key}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        let raw: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&raw)
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = args("run data.csv --n 1000 --eps=0.25 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("n"), Some("1000"));
+        assert_eq!(a.get("eps"), Some("0.25"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["data.csv"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = args("run --n 1000");
+        assert_eq!(a.parse_or("n", 5usize), 1000);
+        assert_eq!(a.parse_or("k", 5usize), 5);
+        assert!((a.parse_or("eps", 0.5f64) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bool_flag_before_flag() {
+        let a = args("run --fast --n 10");
+        assert!(a.has("fast"));
+        assert_eq!(a.get("n"), Some("10"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = args("--n 10");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get("n"), Some("10"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = args("run --shift=-3.5");
+        assert_eq!(a.get("shift"), Some("-3.5"));
+    }
+}

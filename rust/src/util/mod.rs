@@ -1,0 +1,12 @@
+//! Offline-image substitutions for common crates (see DESIGN.md §5):
+//! PRNG (`rand`), CLI (`clap`), thread pool (`rayon`/`tokio`), bench
+//! harness (`criterion`), property testing (`proptest`), plus stats and
+//! markdown tables for the experiment harness.
+
+pub mod bench;
+pub mod cli;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

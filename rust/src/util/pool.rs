@@ -1,0 +1,99 @@
+//! Scoped data-parallel helpers on std threads (tokio/rayon unavailable
+//! offline). The MapReduce simulator runs each round's reducers through
+//! `scoped_map`; worker panics are propagated to the caller.
+
+/// Run `f(i)` for i in 0..n on up to `threads` OS threads and collect the
+/// results in order. Panics in workers are re-raised here.
+pub fn scoped_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(threads > 0);
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.min(n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slots_ptr = &slots_ptr;
+            handles.push(scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index i is claimed by exactly one worker via
+                // the atomic counter, so writes to disjoint slots never alias;
+                // the scope guarantees the buffer outlives all workers.
+                unsafe { slots_ptr.0.add(i).write(Some(v)) };
+            }));
+        }
+        for h in handles {
+            if let Err(e) = h.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker missed slot")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: raw pointer shared across scoped workers that write disjoint slots.
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Default worker count: physical parallelism, capped (the simulator's
+/// reducers are memory-metered, not latency-sensitive).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = scoped_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = scoped_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty() {
+        let out: Vec<usize> = scoped_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = scoped_map(3, 16, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn propagates_panics() {
+        scoped_map(10, 4, |i| {
+            if i == 7 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

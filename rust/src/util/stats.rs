@@ -1,0 +1,119 @@
+//! Small statistics helpers used by the experiment harness: summary
+//! statistics, percentiles, and least-squares fits for the log-log
+//! scaling experiments (E2/E6/E10).
+
+/// Summary of a sample (not streaming; experiments keep all values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub max: f64,
+}
+
+pub fn summarize(values: &[f64]) -> Summary {
+    assert!(!values.is_empty(), "summarize: empty sample");
+    let n = values.len();
+    let mean = values.iter().sum::<f64>() / n as f64;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        p50: percentile_sorted(&sorted, 50.0),
+        p90: percentile_sorted(&sorted, 90.0),
+        max: sorted[n - 1],
+    }
+}
+
+/// Percentile with linear interpolation; input must be sorted ascending.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Ordinary least squares y = a + b x. Returns (a, b, r2).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "linear_fit needs >= 2 points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let syy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let a = my - b * mx;
+    let r2 = if syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 1.0 };
+    (a, b, r2)
+}
+
+/// Fit y = C * x^e by OLS in log-log space. Returns (C, e, r2).
+/// Ignores non-positive pairs (they carry no scaling information).
+pub fn power_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    let pairs: (Vec<f64>, Vec<f64>) = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, y)| **x > 0.0 && **y > 0.0)
+        .map(|(x, y)| (x.ln(), y.ln()))
+        .unzip();
+    let (a, b, r2) = linear_fit(&pairs.0, &pairs.1);
+    (a.exp(), b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile_sorted(&v, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-10);
+        assert!((b - 2.0).abs() < 1e-10);
+        assert!((r2 - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_fit_recovers_exponent() {
+        let xs = [10.0, 100.0, 1000.0, 10000.0];
+        let ys: Vec<f64> = xs.iter().map(|x: &f64| 5.0 * x.powf(0.667)).collect();
+        let (c, e, r2) = power_fit(&xs, &ys);
+        assert!((e - 0.667).abs() < 1e-6, "e={e}");
+        assert!((c - 5.0).abs() < 1e-6, "c={c}");
+        assert!(r2 > 0.999);
+    }
+}

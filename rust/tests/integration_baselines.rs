@@ -1,0 +1,106 @@
+//! Integration: baselines vs the paper's algorithm on a shared workload
+//! — the relations E8 depends on must hold robustly.
+
+use std::sync::Arc;
+
+use mrcoreset::baselines::ene_im_moseley::{self, EimCfg};
+use mrcoreset::baselines::kmeans_parallel::{self, KmeansParCfg};
+use mrcoreset::baselines::pamae_lite::{self, PamaeCfg};
+use mrcoreset::baselines::uniform::{self, UniformCfg};
+use mrcoreset::coordinator::{solve, ClusterConfig};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::Simulator;
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::Objective;
+
+fn workload(n: usize) -> (EuclideanSpace, Vec<u32>) {
+    let (data, _) = GaussianMixtureSpec {
+        n,
+        d: 2,
+        k: 6,
+        spread: 30.0,
+        outlier_frac: 0.05,
+        seed: 11,
+        ..Default::default()
+    }
+    .generate();
+    (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+}
+
+#[test]
+fn all_baselines_produce_k_centers() {
+    let (space, pts) = workload(2500);
+    let k = 6;
+    let sim = Simulator::new();
+    let reports = vec![
+        uniform::run(&space, Objective::Median, &pts, k, &UniformCfg { size: 300, l: 5, seed: 1 }, &sim),
+        ene_im_moseley::run(
+            &space,
+            Objective::Median,
+            &pts,
+            k,
+            &EimCfg { sample_per_iter: 50, stop_below: 100, seed: 2 },
+            &sim,
+        ),
+        kmeans_parallel::run(&space, Objective::Means, &pts, k, &KmeansParCfg::new(k), &sim),
+        pamae_lite::run(&space, Objective::Median, &pts, k, &PamaeCfg::new(k), &sim),
+    ];
+    for r in &reports {
+        assert_eq!(r.solution.centers.len(), k, "{}", r.name);
+        assert!(r.full_cost.is_finite() && r.full_cost > 0.0, "{}", r.name);
+        assert!(r.summary_size > 0, "{}", r.name);
+        // centers distinct
+        let mut cs = r.solution.centers.clone();
+        cs.sort_unstable();
+        cs.dedup();
+        assert_eq!(cs.len(), k, "{}: duplicate centers", r.name);
+    }
+}
+
+#[test]
+fn ours_competitive_with_every_baseline() {
+    let (space, pts) = workload(4000);
+    let k = 6;
+    let ours = solve(&space, &pts, &ClusterConfig::new(Objective::Median, k, 0.4));
+    let sim = Simulator::new();
+    let uni = uniform::run(
+        &space,
+        Objective::Median,
+        &pts,
+        k,
+        &UniformCfg { size: ours.coreset_size, l: ours.l, seed: 3 },
+        &sim,
+    );
+    let eim = ene_im_moseley::run(
+        &space,
+        Objective::Median,
+        &pts,
+        k,
+        &EimCfg { sample_per_iter: ours.coreset_size / 6 + 1, stop_below: ours.coreset_size / 4 + 1, seed: 4 },
+        &sim,
+    );
+    // ours should never be drastically worse than any sampling baseline
+    // at the same summary size (it is usually better, E8 quantifies it)
+    for (name, cost) in [("uniform", uni.full_cost), ("eim", eim.full_cost)] {
+        assert!(
+            ours.full_cost <= cost * 1.2,
+            "ours {} vs {name} {cost}",
+            ours.full_cost
+        );
+    }
+}
+
+#[test]
+fn kmeans_parallel_beats_single_random_seed() {
+    let (space, pts) = workload(3000);
+    let k = 6;
+    let sim = Simulator::new();
+    let kp = kmeans_parallel::run(&space, Objective::Means, &pts, k, &KmeansParCfg::new(k), &sim);
+    // a solution of k uniform random points, evaluated on the full input
+    let mut rng = mrcoreset::util::rng::Rng::new(5);
+    let rand_centers: Vec<u32> =
+        rng.sample_distinct(pts.len(), k).into_iter().map(|i| pts[i]).collect();
+    let rand_cost = mrcoreset::metric::MetricSpace::assign(&space, &pts, &rand_centers)
+        .cost_unit(Objective::Means);
+    assert!(kp.full_cost < rand_cost, "kmeans|| {} vs random {rand_cost}", kp.full_cost);
+}

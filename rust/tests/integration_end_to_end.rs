@@ -1,0 +1,149 @@
+//! Integration: the full 3-round pipeline across workloads, objectives,
+//! partition strategies, and engine on/off — the composition the unit
+//! tests can't see.
+
+use std::sync::Arc;
+
+use mrcoreset::algorithms::local_search::{local_search, LocalSearchCfg};
+use mrcoreset::algorithms::Instance;
+use mrcoreset::coordinator::{solve, ClusterConfig};
+use mrcoreset::coreset::TlAlgo;
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::data::trace::TraceSpec;
+use mrcoreset::mapreduce::PartitionStrategy;
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::{MetricSpace, Objective};
+use mrcoreset::runtime::XlaEngine;
+
+fn mixture(n: usize, d: usize, k: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+    let (data, _) = GaussianMixtureSpec { n, d, k, seed, ..Default::default() }.generate();
+    (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+}
+
+#[test]
+fn both_objectives_all_strategies() {
+    let (space, pts) = mixture(3000, 2, 5, 1);
+    for obj in [Objective::Median, Objective::Means] {
+        for strategy in [
+            PartitionStrategy::RoundRobin,
+            PartitionStrategy::Contiguous,
+            PartitionStrategy::Shuffled(7),
+        ] {
+            let mut cfg = ClusterConfig::new(obj, 5, 0.5);
+            cfg.strategy = strategy;
+            let rep = solve(&space, &pts, &cfg);
+            assert_eq!(rep.rounds, 3, "{obj} {strategy:?}");
+            assert_eq!(rep.solution.centers.len(), 5);
+            assert!(rep.full_cost.is_finite() && rep.full_cost > 0.0);
+        }
+    }
+}
+
+#[test]
+fn trace_workload_contiguous_partitions() {
+    // contiguous partitions of a drifting trace are maximally
+    // heterogeneous — the composability lemma (2.7) must still hold
+    let (data, _) = TraceSpec { n: 8000, d: 4, sources: 6, ..Default::default() }.generate();
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..8000).collect();
+    let w = vec![1u64; 8000];
+    let seq = local_search(
+        &space,
+        Objective::Median,
+        Instance::new(&pts, &w),
+        6,
+        None,
+        &LocalSearchCfg::default(),
+    );
+    let mut cfg = ClusterConfig::new(Objective::Median, 6, 0.3);
+    cfg.strategy = PartitionStrategy::Contiguous;
+    let rep = solve(&space, &pts, &cfg);
+    let ratio = rep.full_cost / seq.cost;
+    assert!(ratio < 1.4, "heterogeneous partitions: ratio {ratio}");
+}
+
+#[test]
+fn all_tl_algorithms_end_to_end() {
+    let (space, pts) = mixture(2000, 2, 4, 2);
+    for tl in [TlAlgo::DppSeeding, TlAlgo::LocalSearch, TlAlgo::Gonzalez] {
+        let mut cfg = ClusterConfig::new(Objective::Median, 4, 0.5);
+        cfg.tl = tl;
+        let rep = solve(&space, &pts, &cfg);
+        assert_eq!(rep.solution.centers.len(), 4, "{tl:?}");
+    }
+}
+
+#[test]
+fn engine_and_scalar_agree_on_solution_quality() {
+    let Some(engine) = XlaEngine::load_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (data, _) =
+        GaussianMixtureSpec { n: 6000, d: 4, k: 6, seed: 3, ..Default::default() }.generate();
+    let shared = Arc::new(data);
+    let plain = EuclideanSpace::new(shared.clone());
+    let mut engine = engine;
+    engine.set_dispatch_threshold(1);
+    let fast = EuclideanSpace::with_engine(shared, Arc::new(engine));
+    let pts: Vec<u32> = (0..6000).collect();
+
+    let cfg = ClusterConfig::new(Objective::Means, 6, 0.5);
+    let rep_plain = solve(&plain, &pts, &cfg);
+    let rep_fast = solve(&fast, &pts, &cfg);
+    // engine numerics differ at f32 granularity; solutions may diverge but
+    // quality must match closely
+    let q = rep_fast.full_cost / rep_plain.full_cost;
+    assert!((0.8..1.25).contains(&q), "engine/scalar quality ratio {q}");
+    assert_eq!(rep_fast.rounds, 3);
+}
+
+#[test]
+fn eps_controls_accuracy_size_tradeoff() {
+    let (space, pts) = mixture(6000, 2, 6, 4);
+    let w = vec![1u64; pts.len()];
+    let seq = local_search(
+        &space,
+        Objective::Median,
+        Instance::new(&pts, &w),
+        6,
+        None,
+        &LocalSearchCfg::default(),
+    );
+    let mut sizes = Vec::new();
+    let mut ratios = Vec::new();
+    for eps in [0.2, 0.9] {
+        let rep = solve(&space, &pts, &ClusterConfig::new(Objective::Median, 6, eps));
+        sizes.push(rep.coreset_size);
+        ratios.push(rep.full_cost / seq.cost);
+    }
+    assert!(sizes[0] > sizes[1], "smaller eps must give bigger coreset: {sizes:?}");
+    // both must be accurate; tighter eps is not allowed to be (much) worse
+    assert!(ratios[0] < ratios[1] + 0.15, "ratios {ratios:?}");
+}
+
+#[test]
+fn weighted_instance_survives_round3() {
+    // the coreset instance has non-trivial weights; verify the final
+    // centers respect heavy points by construction: plant a dense blob
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for i in 0..3000 {
+        rows.push(vec![(i % 60) as f32 * 0.01, ((i / 60) % 50) as f32 * 0.01]);
+    }
+    // distant small blob
+    for _ in 0..30 {
+        rows.push(vec![500.0, 500.0]);
+    }
+    let n = rows.len();
+    let space =
+        EuclideanSpace::new(Arc::new(mrcoreset::points::VectorData::from_rows(&rows)));
+    let pts: Vec<u32> = (0..n as u32).collect();
+    let rep = solve(&space, &pts, &ClusterConfig::new(Objective::Means, 2, 0.4));
+    // one center must serve the far blob, else its cost explodes
+    let far_served = rep
+        .solution
+        .centers
+        .iter()
+        .any(|&c| space.dist(c, (n - 1) as u32) < 10.0);
+    assert!(far_served, "far blob unserved: centers {:?}", rep.solution.centers);
+}

@@ -1,0 +1,183 @@
+//! Property-based tests (seeded harness, DESIGN.md §5) on the paper's
+//! invariants: CoverWithBalls guarantees, weight conservation through
+//! composition, partition laws, and coordinator behaviour across random
+//! configurations.
+
+use std::sync::Arc;
+
+use mrcoreset::coordinator::{solve, ClusterConfig};
+use mrcoreset::coreset::{cover_with_balls, two_round_coreset, CoresetConfig};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::{partition, PartitionStrategy, Simulator};
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::{MetricSpace, Objective};
+use mrcoreset::points::VectorData;
+use mrcoreset::prop_assert;
+use mrcoreset::util::prop::check;
+use mrcoreset::util::rng::Rng;
+
+fn random_space(rng: &mut Rng) -> (EuclideanSpace, Vec<u32>) {
+    let n = 100 + rng.below(900);
+    let d = 1 + rng.below(4);
+    let k = 2 + rng.below(6);
+    let spread = 2.0 + rng.f64() * 40.0;
+    let (data, _) = GaussianMixtureSpec {
+        n,
+        d,
+        k,
+        spread,
+        outlier_frac: rng.f64() * 0.1,
+        seed: rng.next_u64(),
+    }
+    .generate();
+    (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+}
+
+#[test]
+fn prop_cover_guarantee_and_weights() {
+    check("cover-guarantee", 0xC0DE, 25, |rng| {
+        let (space, pts) = random_space(rng);
+        let tsize = 1 + rng.below(8);
+        let t: Vec<u32> = (0..tsize as u32).map(|i| pts[(i as usize * 97) % pts.len()]).collect();
+        let assign = space.assign(&pts, &t);
+        let r = assign.dist.iter().sum::<f64>() / pts.len() as f64;
+        let eps = 0.1 + rng.f64() * 0.85;
+        let beta = 1.0 + rng.f64() * 4.0;
+        let res = cover_with_balls(&space, &pts, &t, r, eps, beta);
+
+        // Lemma 3.1 per-point guarantee
+        let shrink = eps / (2.0 * beta);
+        for (i, &x) in pts.iter().enumerate() {
+            let rep = res.set.indices[res.tau[i] as usize];
+            let d = space.dist(x, rep);
+            let bound = shrink * res.dist_to_t[i].max(r);
+            prop_assert!(d <= bound + 1e-9, "point {i}: {d} > {bound}");
+        }
+        // Definition 2.3 weights
+        prop_assert!(
+            res.set.total_weight() == pts.len() as u64,
+            "weight {} != n {}",
+            res.set.total_weight(),
+            pts.len()
+        );
+        let mut counts = vec![0u64; res.set.len()];
+        for &t in &res.tau {
+            counts[t as usize] += 1;
+        }
+        prop_assert!(counts == res.set.weights, "weights are not preimage counts");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_two_round_weight_conservation() {
+    check("two-round-weights", 0xBEEF, 12, |rng| {
+        let (space, pts) = random_space(rng);
+        let k = 2 + rng.below(4);
+        let l = 1 + rng.below(6);
+        let obj = if rng.below(2) == 0 { Objective::Median } else { Objective::Means };
+        let eps = 0.15 + rng.f64() * 0.8;
+        let sim = Simulator::new();
+        let cfg = CoresetConfig::new(k, eps);
+        let out = two_round_coreset(
+            &space,
+            obj,
+            &pts,
+            l,
+            PartitionStrategy::RoundRobin,
+            &cfg,
+            &sim,
+        );
+        prop_assert!(
+            out.coreset.total_weight() == pts.len() as u64,
+            "{obj}: weight {} != {}",
+            out.coreset.total_weight(),
+            pts.len()
+        );
+        prop_assert!(!out.coreset.is_empty(), "empty coreset");
+        // coreset members must be actual input points (S ⊆ P)
+        for &c in &out.coreset.indices {
+            prop_assert!((c as usize) < pts.len(), "coreset index {c} out of range");
+        }
+        let stats = sim.take_stats();
+        prop_assert!(stats.num_rounds() == 2, "2 coreset rounds, got {}", stats.num_rounds());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_laws() {
+    check("partition-laws", 0xFACE, 40, |rng| {
+        let n = 1 + rng.below(500);
+        let pts: Vec<u32> = (0..n as u32).map(|i| i * 3 + 1).collect();
+        let l = 1 + rng.below(12);
+        let strategy = match rng.below(3) {
+            0 => PartitionStrategy::RoundRobin,
+            1 => PartitionStrategy::Contiguous,
+            _ => PartitionStrategy::Shuffled(rng.next_u64()),
+        };
+        let parts = partition(&pts, l, strategy);
+        // disjoint cover
+        let mut all: Vec<u32> = parts.concat();
+        all.sort_unstable();
+        let mut want = pts.clone();
+        want.sort_unstable();
+        prop_assert!(all == want, "partition is not a disjoint cover");
+        // balanced
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        prop_assert!(mx - mn <= 1, "unbalanced: {sizes:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solver_basic_contract() {
+    check("solver-contract", 0xD00D, 8, |rng| {
+        let (space, pts) = random_space(rng);
+        let k = 1 + rng.below(5);
+        let obj = if rng.below(2) == 0 { Objective::Median } else { Objective::Means };
+        let mut cfg = ClusterConfig::new(obj, k, 0.2 + rng.f64() * 0.7);
+        cfg.seed = rng.next_u64();
+        let rep = solve(&space, &pts, &cfg);
+        prop_assert!(rep.rounds == 3, "rounds {}", rep.rounds);
+        prop_assert!(rep.solution.centers.len() == k.min(pts.len()), "k mismatch");
+        // centers distinct and in range
+        let mut cs = rep.solution.centers.clone();
+        cs.sort_unstable();
+        cs.dedup();
+        prop_assert!(cs.len() == rep.solution.centers.len(), "duplicate centers");
+        // cost on full input is consistent with re-evaluation
+        let again = space.assign(&pts, &rep.solution.centers).cost_unit(obj);
+        prop_assert!(
+            (again - rep.full_cost).abs() <= 1e-9 * (1.0 + again),
+            "cost not reproducible"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_duplicate_heavy_inputs() {
+    // many duplicated points: covers must collapse, solver must not panic
+    check("duplicates", 0xD0D0, 10, |rng| {
+        let base = 1 + rng.below(5);
+        let copies = 20 + rng.below(100);
+        let mut rows = Vec::new();
+        for b in 0..base {
+            for _ in 0..copies {
+                rows.push(vec![b as f32 * 10.0, b as f32 * -5.0]);
+            }
+        }
+        let n = rows.len();
+        let space = EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows)));
+        let pts: Vec<u32> = (0..n as u32).collect();
+        let k = 1 + rng.below(base);
+        let rep = solve(&space, &pts, &ClusterConfig::new(Objective::Median, k, 0.5));
+        prop_assert!(rep.full_cost.is_finite(), "cost not finite");
+        if k >= base {
+            prop_assert!(rep.full_cost == 0.0, "k>=distinct points must cost 0");
+        }
+        Ok(())
+    });
+}

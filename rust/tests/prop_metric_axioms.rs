@@ -1,0 +1,135 @@
+//! Property tests: every `MetricSpace` implementation must satisfy the
+//! metric axioms (the paper's entire analysis rests on the triangle
+//! inequality), and the bulk operations must agree with pointwise dist.
+
+use std::sync::Arc;
+
+use mrcoreset::data::strings::StringClusterSpec;
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::metric::dense::{ChebyshevSpace, EuclideanSpace, ManhattanSpace};
+use mrcoreset::metric::levenshtein::StringSpace;
+use mrcoreset::metric::MetricSpace;
+use mrcoreset::prop_assert;
+use mrcoreset::util::prop::check;
+use mrcoreset::util::rng::Rng;
+
+fn vector_spaces(rng: &mut Rng) -> Vec<(Box<dyn MetricSpace>, usize)> {
+    let n = 20 + rng.below(60);
+    let d = 1 + rng.below(6);
+    let (data, _) = GaussianMixtureSpec {
+        n,
+        d,
+        k: 1 + rng.below(4),
+        spread: rng.f64() * 30.0,
+        outlier_frac: 0.0,
+        seed: rng.next_u64(),
+    }
+    .generate();
+    let shared = Arc::new(data);
+    vec![
+        (Box::new(EuclideanSpace::new(shared.clone())) as Box<dyn MetricSpace>, n),
+        (Box::new(ManhattanSpace::new(shared.clone())), n),
+        (Box::new(ChebyshevSpace::new(shared)), n),
+    ]
+}
+
+#[test]
+fn prop_metric_axioms_vector_spaces() {
+    check("metric-axioms", 0xAB1E, 15, |rng| {
+        for (space, n) in vector_spaces(rng) {
+            for _ in 0..40 {
+                let i = rng.below(n) as u32;
+                let j = rng.below(n) as u32;
+                let k = rng.below(n) as u32;
+                let dij = space.dist(i, j);
+                prop_assert!(dij >= 0.0, "{}: negative distance", space.name());
+                prop_assert!(
+                    (dij - space.dist(j, i)).abs() < 1e-9,
+                    "{}: asymmetric",
+                    space.name()
+                );
+                prop_assert!(space.dist(i, i) == 0.0, "{}: d(i,i) != 0", space.name());
+                let thru = space.dist(i, k) + space.dist(k, j);
+                // f32 storage: allow relative slack ~ f32 eps at magnitude
+                prop_assert!(
+                    dij <= thru + 1e-5 * (1.0 + thru),
+                    "{}: triangle violated: d({i},{j})={dij} > {thru}",
+                    space.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_levenshtein_axioms() {
+    check("levenshtein-axioms", 0x1E57, 8, |rng| {
+        let (strs, _) = StringClusterSpec {
+            n: 40,
+            clusters: 1 + rng.below(6),
+            base_len: 6 + rng.below(20),
+            max_edits: rng.below(6),
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let n = strs.len();
+        let space = StringSpace::new(strs);
+        for _ in 0..30 {
+            let i = rng.below(n) as u32;
+            let j = rng.below(n) as u32;
+            let k = rng.below(n) as u32;
+            prop_assert!(
+                (space.dist(i, j) - space.dist(j, i)).abs() < 1e-12,
+                "asymmetric edit distance"
+            );
+            prop_assert!(
+                space.dist(i, j) <= space.dist(i, k) + space.dist(k, j) + 1e-12,
+                "triangle violated"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bulk_ops_agree_with_dist() {
+    check("bulk-agree", 0xB01C, 12, |rng| {
+        for (space, n) in vector_spaces(rng) {
+            let pts: Vec<u32> = (0..n as u32).collect();
+            let m = 1 + rng.below(8.min(n));
+            let centers: Vec<u32> =
+                rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect();
+            let a = space.assign(&pts, &centers);
+            for (i, &p) in pts.iter().enumerate() {
+                let want =
+                    centers.iter().map(|&c| space.dist(p, c)).fold(f64::INFINITY, f64::min);
+                // the tiled scan runs in f32; winners may differ among
+                // centers equidistant within f32 noise
+                let tol = 1e-5 * (1.0 + want);
+                prop_assert!(
+                    (a.dist[i] - want).abs() < tol,
+                    "{}: assign dist mismatch at {i}: {} vs {want}",
+                    space.name(),
+                    a.dist[i]
+                );
+                let via_idx = space.dist(p, centers[a.idx[i] as usize]);
+                prop_assert!(
+                    (via_idx - want).abs() < tol,
+                    "{}: argmin inconsistent at {i}",
+                    space.name()
+                );
+            }
+            // min_update from infinity equals assign dist (same tolerance)
+            let mut cur = vec![f64::INFINITY; n];
+            for &c in &centers {
+                space.min_update(&pts, c, &mut cur);
+            }
+            for i in 0..n {
+                let tol = 1e-5 * (1.0 + a.dist[i]);
+                prop_assert!((cur[i] - a.dist[i]).abs() < tol, "min_update mismatch at {i}");
+            }
+        }
+        Ok(())
+    });
+}
