@@ -23,7 +23,7 @@ use mrcoreset::coordinator::{solve, ClusterConfig};
 use mrcoreset::coreset::cover_with_balls;
 use mrcoreset::data::synth::GaussianMixtureSpec;
 use mrcoreset::eval::{run_experiment, ALL_IDS};
-use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::dense::{sq_euclidean, EuclideanSpace};
 use mrcoreset::metric::{MetricSpace, Objective};
 use mrcoreset::runtime::XlaEngine;
 use mrcoreset::util::bench::bench;
@@ -58,11 +58,40 @@ fn main() {
     let pts: Vec<u32> = (0..n as u32).collect();
     let centers: Vec<u32> = (0..256u32).collect();
 
-    // bulk assignment: scalar vs engine
-    let r = bench("assign 20k x 256 (scalar)", 1, 5, || {
-        std::hint::black_box(plain.assign(&pts, &centers));
+    // bulk assignment: per-point scalar loop (what every hot path
+    // issued before the batched engine) vs the tiled nearest_batch.
+    // The baseline computes through sq_euclidean directly — not
+    // MetricSpace::dist — so the per-call work-counter charge doesn't
+    // pad the scalar side of the comparison.
+    let data = shared.clone();
+    let scalar_assign = move |pts: &[u32], centers: &[u32]| {
+        let mut dist = vec![f64::INFINITY; pts.len()];
+        let mut idx = vec![0u32; pts.len()];
+        for (i, &p) in pts.iter().enumerate() {
+            for (j, &c) in centers.iter().enumerate() {
+                let d = sq_euclidean(data.row(p), data.row(c)).sqrt();
+                if d < dist[i] {
+                    dist[i] = d;
+                    idx[i] = j as u32;
+                }
+            }
+        }
+        (dist, idx)
+    };
+    let rs = bench("assign 20k x 256 (scalar dist loop)", 1, 5, || {
+        std::hint::black_box(scalar_assign(&pts, &centers));
     });
-    println!("{r}   [{:.1} Mpairs/s]", r.throughput_per_sec(n * 256) / 1e6);
+    println!("{rs}   [{:.1} Mpairs/s]", rs.throughput_per_sec(n * 256) / 1e6);
+    let rb = bench("assign 20k x 256 (nearest_batch)", 1, 5, || {
+        std::hint::black_box(plain.nearest_batch(&pts, &centers));
+    });
+    println!("{rb}   [{:.1} Mpairs/s]", rb.throughput_per_sec(n * 256) / 1e6);
+    println!(
+        "batched/scalar speedup: {:.2}x",
+        rs.median.as_secs_f64() / rb.median.as_secs_f64().max(1e-12)
+    );
+    let (_, evals) = mrcoreset::metric::counter::counted(|| plain.nearest_batch(&pts, &centers));
+    println!("distance evals per assignment pass: {evals}\n");
     if let Some(engine) = XlaEngine::load_default() {
         let mut engine = engine;
         engine.set_dispatch_threshold(1);

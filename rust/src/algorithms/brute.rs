@@ -38,19 +38,29 @@ pub fn brute_force(space: &dyn MetricSpace, obj: Objective, inst: Instance<'_>, 
 
 /// Exact 1-median/1-mean of a weighted sub-cluster (used by PAM-style
 /// refinement): the point of `pts` minimizing the weighted cost.
+/// Distances are issued as chunked `dist_batch` bulk queries with the
+/// early cutoff applied between chunks, so hopeless candidates still
+/// skip most of their distance work (cost is monotone in the scan).
 pub fn exact_one_center(
     space: &dyn MetricSpace,
     obj: Objective,
     inst: Instance<'_>,
 ) -> (u32, f64) {
+    const CHUNK: usize = 256;
+    let n = inst.n();
+    let mut dc = vec![0.0f64; CHUNK.min(n)];
     let mut best = (inst.pts[0], f64::INFINITY);
     for &c in inst.pts {
         let mut cost = 0.0;
-        for (x, &p) in inst.pts.iter().enumerate() {
-            cost += inst.weights[x] as f64 * obj.cost_of(space.dist(p, c));
-            if cost >= best.1 {
-                break; // early cutoff
+        let mut lo = 0usize;
+        while lo < n && cost < best.1 {
+            let hi = (lo + CHUNK).min(n);
+            let buf = &mut dc[..hi - lo];
+            space.dist_batch(&inst.pts[lo..hi], c, buf);
+            for (x, d) in (lo..hi).zip(buf.iter()) {
+                cost += inst.weights[x] as f64 * obj.cost_of(*d);
             }
+            lo = hi;
         }
         if cost < best.1 {
             best = (c, cost);

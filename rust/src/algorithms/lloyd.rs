@@ -3,9 +3,38 @@
 //! are arbitrary points of R^d (centroids), not members of P. Works
 //! directly on dense vectors, outside the `MetricSpace` index world.
 
+use crate::metric::counter;
 use crate::metric::dense::sq_euclidean;
 use crate::points::VectorData;
 use crate::util::rng::Rng;
+
+/// Blocked nearest-centroid scan: centers outer, points inner, so each
+/// centroid row stays hot while it streams the point block (and the
+/// whole pass is two flat arrays, no per-point center chasing). Fills
+/// `best` (squared distance) and `bj` (centroid position). Charges the
+/// distance-evaluation counter like any other bulk query.
+fn nearest_centroids(
+    data: &VectorData,
+    pts: &[u32],
+    centers: &[Vec<f32>],
+    best: &mut [f64],
+    bj: &mut [usize],
+) {
+    counter::charge(pts.len() * centers.len());
+    best.fill(f64::INFINITY);
+    for b in bj.iter_mut() {
+        *b = 0;
+    }
+    for (j, c) in centers.iter().enumerate() {
+        for (i, &p) in pts.iter().enumerate() {
+            let dd = sq_euclidean(data.row(p), c);
+            if dd < best[i] {
+                best[i] = dd;
+                bj[i] = j;
+            }
+        }
+    }
+}
 
 /// A continuous solution: k centroids in R^d + its weighted k-means cost.
 #[derive(Clone, Debug)]
@@ -34,6 +63,7 @@ fn init_pp(data: &VectorData, pts: &[u32], weights: &[u64], k: usize, rng: &mut 
     let wprobs: Vec<f64> = weights.iter().map(|&w| w as f64).collect();
     let first = pts[rng.weighted_index(&wprobs).expect("positive weights")];
     let mut centers: Vec<Vec<f32>> = vec![data.row(first).to_vec()];
+    counter::charge(pts.len());
     let mut mind: Vec<f64> = pts.iter().map(|&p| sq_euclidean(data.row(p), &centers[0])).collect();
     let mut probs = vec![0.0; n];
     while centers.len() < k.min(n) {
@@ -45,6 +75,7 @@ fn init_pp(data: &VectorData, pts: &[u32], weights: &[u64], k: usize, rng: &mut 
             None => break, // all residuals zero
         };
         let row = data.row(next).to_vec();
+        counter::charge(pts.len());
         for (i, &p) in pts.iter().enumerate() {
             let d = sq_euclidean(data.row(p), &row);
             if d < mind[i] {
@@ -73,25 +104,18 @@ pub fn lloyd(
     let mut prev_cost = f64::INFINITY;
     #[allow(unused_assignments)]
     let mut cost = 0.0;
+    let mut best = vec![f64::INFINITY; pts.len()];
+    let mut bj = vec![0usize; pts.len()];
     for _ in 0..cfg.max_iters {
-        // assignment
+        // assignment (blocked bulk scan), then weighted accumulation
+        nearest_centroids(data, pts, &centers, &mut best, &mut bj);
         let mut sums = vec![vec![0.0f64; d]; centers.len()];
         let mut wsum = vec![0u64; centers.len()];
         cost = 0.0;
         for (i, &p) in pts.iter().enumerate() {
-            let row = data.row(p);
-            let mut best = f64::INFINITY;
-            let mut bj = 0usize;
-            for (j, c) in centers.iter().enumerate() {
-                let dd = sq_euclidean(row, c);
-                if dd < best {
-                    best = dd;
-                    bj = j;
-                }
-            }
-            cost += weights[i] as f64 * best;
-            wsum[bj] += weights[i];
-            for (s, &x) in sums[bj].iter_mut().zip(row) {
+            cost += weights[i] as f64 * best[i];
+            wsum[bj[i]] += weights[i];
+            for (s, &x) in sums[bj[i]].iter_mut().zip(data.row(p)) {
                 *s += weights[i] as f64 * x as f64;
             }
         }
@@ -112,26 +136,29 @@ pub fn lloyd(
         prev_cost = cost;
     }
     // final cost against final centroids
+    nearest_centroids(data, pts, &centers, &mut best, &mut bj);
     cost = 0.0;
-    for (i, &p) in pts.iter().enumerate() {
-        let row = data.row(p);
-        let best = centers.iter().map(|c| sq_euclidean(row, c)).fold(f64::INFINITY, f64::min);
-        cost += weights[i] as f64 * best;
+    for i in 0..pts.len() {
+        cost += weights[i] as f64 * best[i];
     }
     ContinuousSolution { centroids: VectorData::from_rows(&centers), cost }
 }
 
-/// Continuous k-means cost of arbitrary centroids over a weighted set.
+/// Continuous k-means cost of arbitrary centroids over a weighted set
+/// (blocked: centroids outer, points inner, like `nearest_centroids`).
 pub fn continuous_cost(data: &VectorData, pts: &[u32], weights: &[u64], centroids: &VectorData) -> f64 {
-    let mut cost = 0.0;
-    for (i, &p) in pts.iter().enumerate() {
-        let row = data.row(p);
-        let best = (0..centroids.n())
-            .map(|j| sq_euclidean(row, centroids.row(j as u32)))
-            .fold(f64::INFINITY, f64::min);
-        cost += weights[i] as f64 * best;
+    counter::charge(pts.len() * centroids.n());
+    let mut best = vec![f64::INFINITY; pts.len()];
+    for j in 0..centroids.n() {
+        let crow = centroids.row(j as u32);
+        for (i, &p) in pts.iter().enumerate() {
+            let dd = sq_euclidean(data.row(p), crow);
+            if dd < best[i] {
+                best[i] = dd;
+            }
+        }
     }
-    cost
+    pts.iter().enumerate().map(|(i, _)| weights[i] as f64 * best[i]).sum()
 }
 
 #[cfg(test)]

@@ -7,7 +7,10 @@
 //! Swap evaluation uses the standard nearest/second-nearest bookkeeping:
 //! with d₁/d₂ maintained per point, the cost of solution S − {out} + {in}
 //! is computable in one O(n) pass per candidate, so a full improvement
-//! scan is O(n·(k + |candidates|)) distance evaluations.
+//! scan is O(n·(k + |candidates|)) distance evaluations — all issued as
+//! `dist_batch` bulk queries (one per center / candidate), so the hot
+//! loops hit the batched distance engine instead of per-pair virtual
+//! calls.
 //!
 //! `t`-swap (multi-swap) gives α = 3+2/t (median) / 5+4/t (means); we
 //! implement t = 1 plus a sampled multi-candidate scan, which already
@@ -61,9 +64,10 @@ fn rebuild_book(space: &dyn MetricSpace, pts: &[u32], centers: &[u32]) -> Book {
     let mut d1 = vec![f64::INFINITY; n];
     let mut i1 = vec![0u32; n];
     let mut d2 = vec![f64::INFINITY; n];
+    let mut buf = vec![0.0f64; n];
     for (j, &c) in centers.iter().enumerate() {
-        for (x, &p) in pts.iter().enumerate() {
-            let d = space.dist(p, c);
+        space.dist_batch(pts, c, &mut buf);
+        for (x, &d) in buf.iter().enumerate() {
             if d < d1[x] {
                 d2[x] = d1[x];
                 d1[x] = d;
@@ -82,7 +86,8 @@ fn book_cost(book: &Book, obj: Objective, weights: &[u64]) -> f64 {
 }
 
 /// Evaluate all k swaps (out ∈ S) for one candidate `cand` in a single
-/// pass: returns (best_out_position, best_total_cost).
+/// pass: returns (best_out_position, best_total_cost). `dc` is a caller
+/// scratch buffer of length n, filled with one `dist_batch` query.
 fn eval_candidate(
     space: &dyn MetricSpace,
     obj: Objective,
@@ -90,19 +95,20 @@ fn eval_candidate(
     book: &Book,
     k: usize,
     cand: u32,
+    dc: &mut [f64],
 ) -> (usize, f64) {
     // base: cost if we only ADD cand (each point takes min(d1, d(cand)));
     // delta[q]: correction if center q is REMOVED — points whose nearest
     // is q fall back to min(d2, d(cand)) instead of min(d1, d(cand)).
+    space.dist_batch(inst.pts, cand, dc);
     let mut base = 0.0f64;
     let mut delta = vec![0.0f64; k];
-    for (x, &p) in inst.pts.iter().enumerate() {
+    for x in 0..inst.n() {
         let w = inst.weights[x] as f64;
-        let dc = space.dist(p, cand);
-        let with_add = obj.cost_of(dc.min(book.d1[x]));
+        let with_add = obj.cost_of(dc[x].min(book.d1[x]));
         base += w * with_add;
         let q = book.i1[x] as usize;
-        let fallback = obj.cost_of(dc.min(book.d2[x]));
+        let fallback = obj.cost_of(dc[x].min(book.d2[x]));
         delta[q] += w * (fallback - with_add);
     }
     let mut best_q = 0usize;
@@ -146,6 +152,7 @@ pub fn local_search(
     let mut cost = book_cost(&book, obj, inst.weights);
     let exhaustive = n <= cfg.exhaustive_below;
     let mut dry_passes = 0usize;
+    let mut dc_buf = vec![0.0f64; n];
     for _pass in 0..cfg.max_passes {
         // candidate pool: exhaustive for small instances; otherwise half
         // uniform, half cost-biased (w·cost(d1) — the D^p intuition:
@@ -175,7 +182,8 @@ pub fn local_search(
             if centers.contains(&cand) {
                 continue;
             }
-            let (q, total) = eval_candidate(space, obj, inst, &book, centers.len(), cand);
+            let (q, total) =
+                eval_candidate(space, obj, inst, &book, centers.len(), cand, &mut dc_buf);
             if total < best_cost {
                 best_cost = total;
                 best_swap = Some((q, cand));

@@ -20,21 +20,23 @@ impl Default for PamCfg {
     }
 }
 
-/// BUILD: greedily add the medoid that most decreases total cost.
+/// BUILD: greedily add the medoid that most decreases total cost. Each
+/// candidate is scored from one `dist_batch` bulk query.
 fn build(space: &dyn MetricSpace, obj: Objective, inst: Instance<'_>, k: usize) -> Vec<u32> {
     let n = inst.n();
     let mut centers: Vec<u32> = Vec::with_capacity(k);
     let mut mind = vec![f64::INFINITY; n];
+    let mut dc = vec![0.0f64; n];
     for _ in 0..k.min(n) {
         let mut best: Option<(usize, f64)> = None;
         for (ci, &c) in inst.pts.iter().enumerate() {
             if centers.contains(&c) {
                 continue;
             }
+            space.dist_batch(inst.pts, c, &mut dc);
             let mut cost = 0.0;
-            for (x, &p) in inst.pts.iter().enumerate() {
-                let d = space.dist(p, c).min(mind[x]);
-                cost += inst.weights[x] as f64 * obj.cost_of(d);
+            for x in 0..n {
+                cost += inst.weights[x] as f64 * obj.cost_of(dc[x].min(mind[x]));
             }
             if best.map_or(true, |(_, bc)| cost < bc) {
                 best = Some((ci, cost));

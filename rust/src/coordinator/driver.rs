@@ -86,6 +86,9 @@ pub struct RunReport {
     pub rounds: usize,
     pub max_local_memory: usize,
     pub aggregate_memory: usize,
+    /// Total distance evaluations charged inside the MapReduce rounds
+    /// (per-round and per-reducer breakdowns live in `stats.rounds`).
+    pub dist_evals: u64,
     pub wall: std::time::Duration,
     pub stats: JobStats,
 }
@@ -158,6 +161,7 @@ pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunRe
         rounds: stats.num_rounds(),
         max_local_memory: stats.max_local_memory(),
         aggregate_memory: stats.aggregate_memory(),
+        dist_evals: stats.total_dist_evals(),
         wall: t0.elapsed(),
         stats,
         solution,
@@ -187,6 +191,8 @@ mod tests {
             assert_eq!(rep.solution.centers.len(), 5);
             assert!(rep.full_cost.is_finite() && rep.full_cost > 0.0);
             assert!(rep.coreset_size < 2000);
+            assert!(rep.dist_evals > 0, "{obj}: distance work must be accounted");
+            assert_eq!(rep.dist_evals, rep.stats.total_dist_evals());
         }
     }
 

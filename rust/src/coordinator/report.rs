@@ -18,18 +18,20 @@ impl RunReport {
             self.coreset_size, self.cw_size, self.l, self.m
         ));
         s.push_str(&format!(
-            "mapreduce: rounds={} M_L={} pts M_A={} pts wall={:.3}s\n",
+            "mapreduce: rounds={} M_L={} pts M_A={} pts dist_evals={} wall={:.3}s\n",
             self.rounds,
             self.max_local_memory,
             self.aggregate_memory,
+            self.dist_evals,
             self.wall.as_secs_f64()
         ));
         for r in &self.stats.rounds {
             s.push_str(&format!(
-                "  round {:22} reducers={:4} peak_local={:8} wall={:.3}s\n",
+                "  round {:22} reducers={:4} peak_local={:8} dist={:12} wall={:.3}s\n",
                 r.name,
                 r.reducers,
                 r.max_local_peak,
+                r.dist_evals,
                 r.wall.as_secs_f64()
             ));
         }

@@ -16,8 +16,9 @@
 //! by index — the theory allows any order), adds it as a representative,
 //! and discards every remaining point within its shrunken radius. The
 //! hot spot is the per-iteration distance scan of remaining points
-//! against the new representative; on the Euclidean fast path this runs
-//! through the XLA `min_update` kernel in blocks.
+//! against the new representative — a single `dist_batch` bulk query,
+//! which on the Euclidean fast path runs the staged-center scan (or the
+//! XLA min_update kernel for engine-dispatched block sizes).
 
 use crate::metric::MetricSpace;
 use crate::points::WeightedSet;
@@ -113,10 +114,11 @@ pub fn cover_with_balls_weighted(
         centers.push(c);
 
         // distances of remaining points to the new representative
+        // (one bulk query per greedy iteration)
         dist_buf.clear();
-        dist_buf.resize(alive.len(), f64::INFINITY);
+        dist_buf.resize(alive.len(), 0.0);
         let alive_pts: Vec<u32> = alive.iter().map(|&pos| pts[pos as usize]).collect();
-        space.min_update(&alive_pts, c, &mut dist_buf);
+        space.dist_batch(&alive_pts, c, &mut dist_buf);
 
         // partition alive into kept / removed; removed map to this center.
         // The selected point always removes itself, independent of the

@@ -14,7 +14,8 @@ pub fn run(quick: bool) -> ExpResult {
     let n = if quick { 4000 } else { 20000 };
     let k = 8;
     let mut rounds_tab = Table::new(vec![
-        "objective", "round", "reducers", "max local peak", "aggregate peak", "wall (ms)",
+        "objective", "round", "reducers", "max local peak", "aggregate peak", "dist evals",
+        "wall (ms)",
     ]);
     let mut summary_tab = Table::new(vec!["objective", "rounds", "M_L", "M_A", "M_A/n"]);
     for obj in [Objective::Median, Objective::Means] {
@@ -28,6 +29,7 @@ pub fn run(quick: bool) -> ExpResult {
                 r.reducers.to_string(),
                 r.max_local_peak.to_string(),
                 r.aggregate_peak.to_string(),
+                r.dist_evals.to_string(),
                 fnum(r.wall.as_secs_f64() * 1e3),
             ]);
         }

@@ -8,6 +8,13 @@
 //! bounds — *measures* per-reducer peak local memory, aggregate memory,
 //! and shuffle volumes, via `MemoryMeter` charges from the drivers.
 //!
+//! Next to memory, each round also accounts **distance evaluations** —
+//! the work measure that dominates every algorithm in this family. Every
+//! reducer closure runs entirely on one thread, so `Simulator::round`
+//! brackets it with `metric::counter::thread_count()` reads and records
+//! the per-reducer deltas in `RoundStats::reducer_dist_evals` (summed in
+//! `dist_evals`); no instrumentation is needed in the drivers.
+//!
 //! Rounds are explicit (`Simulator::round`), so the round count of an
 //! algorithm is simply the number of `round` calls it makes (E7 asserts
 //! the paper's 3 rounds).
@@ -21,6 +28,7 @@ pub use partition::{default_l, partition, PartitionStrategy};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::metric::counter;
 use crate::util::pool::{default_threads, scoped_map};
 
 /// Statistics for one executed round.
@@ -32,6 +40,10 @@ pub struct RoundStats {
     pub max_local_peak: usize,
     /// sum over reducers of peak local memory (points) — the round's M_A
     pub aggregate_peak: usize,
+    /// distance evaluations charged by each reducer (input order)
+    pub reducer_dist_evals: Vec<u64>,
+    /// Σ over reducers — the round's distance-evaluation work
+    pub dist_evals: u64,
     pub wall: std::time::Duration,
     pub budget_violations: usize,
 }
@@ -59,6 +71,11 @@ impl JobStats {
 
     pub fn total_violations(&self) -> usize {
         self.rounds.iter().map(|r| r.budget_violations).sum()
+    }
+
+    /// Total distance evaluations across all rounds and reducers.
+    pub fn total_dist_evals(&self) -> u64 {
+        self.rounds.iter().map(|r| r.dist_evals).sum()
     }
 }
 
@@ -103,17 +120,25 @@ impl Simulator {
                 Some(b) => MemoryMeter::with_budget(b),
                 None => MemoryMeter::new(),
             };
+            // the reducer runs entirely on this thread, so the tally
+            // delta is exactly its distance-evaluation work
+            let evals0 = counter::thread_count();
             let out = f(i, &inputs[i], &mut meter);
-            (out, meter)
+            let evals = counter::thread_count() - evals0;
+            (out, meter, evals)
         });
         let mut outs = Vec::with_capacity(reducers);
         let mut max_peak = 0usize;
         let mut agg = 0usize;
         let mut violations = 0usize;
-        for (o, meter) in results {
+        let mut reducer_dist_evals = Vec::with_capacity(reducers);
+        let mut dist_evals = 0u64;
+        for (o, meter, evals) in results {
             max_peak = max_peak.max(meter.peak());
             agg += meter.peak();
             violations += usize::from(meter.violated());
+            reducer_dist_evals.push(evals);
+            dist_evals += evals;
             outs.push(o);
         }
         let stats = RoundStats {
@@ -121,6 +146,8 @@ impl Simulator {
             reducers,
             max_local_peak: max_peak,
             aggregate_peak: agg,
+            reducer_dist_evals,
+            dist_evals,
             wall: t0.elapsed(),
             budget_violations: violations,
         };
@@ -191,5 +218,52 @@ mod tests {
         let _ = sim.round("r", vec![()], |_, _, m| m.charge(1));
         assert_eq!(sim.take_stats().num_rounds(), 1);
         assert_eq!(sim.take_stats().num_rounds(), 0);
+    }
+
+    /// Distance accounting: per-reducer counts are attributed to the
+    /// right reducer (|part|·|centers| each for a bulk assign), sum to
+    /// the round total, and aggregate across rounds — under real
+    /// parallelism and with more reducers than threads.
+    #[test]
+    fn dist_evals_sum_across_reducers() {
+        use crate::metric::dense::EuclideanSpace;
+        use crate::metric::MetricSpace;
+        use crate::points::VectorData;
+        use std::sync::Arc;
+
+        let rows: Vec<Vec<f32>> = (0..16).map(|i| vec![i as f32]).collect();
+        let space = EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows)));
+        let parts: Vec<Vec<u32>> =
+            vec![(0..4).collect(), (4..10).collect(), (10..15).collect(), vec![15]];
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+        let centers = vec![0u32, 8];
+        for threads in [1usize, 2, 8] {
+            let sim = Simulator::new().with_threads(threads);
+            let space_ref = &space;
+            let centers_ref = &centers;
+            let _ = sim.round("assign", parts.clone(), move |_, part, meter| {
+                meter.charge(part.len());
+                space_ref.assign(part, centers_ref)
+            });
+            let stats = sim.take_stats();
+            let r = &stats.rounds[0];
+            assert_eq!(r.reducer_dist_evals.len(), 4, "threads={threads}");
+            for (e, s) in r.reducer_dist_evals.iter().zip(&sizes) {
+                assert_eq!(*e, (*s * centers.len()) as u64, "threads={threads}");
+            }
+            assert_eq!(r.dist_evals, r.reducer_dist_evals.iter().sum::<u64>());
+            assert_eq!(stats.total_dist_evals(), (16 * centers.len()) as u64);
+        }
+    }
+
+    /// Rounds with no distance work report zero; multi-round jobs sum.
+    #[test]
+    fn dist_evals_zero_without_distance_work() {
+        let sim = Simulator::new();
+        let _ = sim.round("noop", vec![(), ()], |_, _, m| m.charge(1));
+        let stats = sim.take_stats();
+        assert_eq!(stats.rounds[0].dist_evals, 0);
+        assert_eq!(stats.rounds[0].reducer_dist_evals, vec![0, 0]);
+        assert_eq!(stats.total_dist_evals(), 0);
     }
 }

@@ -1,0 +1,81 @@
+//! Distance-evaluation accounting for the batched distance engine.
+//!
+//! Distance evaluations are the work measure the MapReduce model counts
+//! alongside memory (cf. Ene–Im–Moseley and the k-center coreset line of
+//! work — every algorithm in this family is dominated by its pairwise
+//! distance passes). Every `MetricSpace` implementation charges this
+//! counter: scalar `dist` charges 1, bulk queries charge
+//! `|pts| · |centers|` up front — one unit per (point, center) pair the
+//! query covers, *independent of early-exit optimizations*, so the
+//! metric is comparable across scalar, tiled, and engine-dispatched
+//! paths.
+//!
+//! The counter is a monotone per-thread tally (thread-safe by
+//! construction: no cross-thread sharing). `Simulator::round` reads it
+//! around each reducer invocation to attribute work per reducer — every
+//! reducer closure runs entirely on one thread — and aggregates the
+//! deltas into `RoundStats`. Use [`counted`] to measure a block of work
+//! on the current thread directly.
+
+use std::cell::Cell;
+
+thread_local! {
+    static TALLY: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Charge `n` distance evaluations to the current thread's tally.
+#[inline]
+pub fn charge(n: usize) {
+    TALLY.with(|c| c.set(c.get().wrapping_add(n as u64)));
+}
+
+/// Monotone count of distance evaluations charged on this thread since
+/// it started. Take differences to measure a span of work.
+#[inline]
+pub fn thread_count() -> u64 {
+    TALLY.with(|c| c.get())
+}
+
+/// Run `f`, returning its result and the number of distance evaluations
+/// charged on this thread while it ran. Work `f` spawns onto other
+/// threads is not captured — measure those on their own threads (the
+/// simulator does exactly that per reducer).
+pub fn counted<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    let start = thread_count();
+    let out = f();
+    (out, thread_count() - start)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate_monotonically() {
+        let before = thread_count();
+        charge(3);
+        charge(0);
+        charge(7);
+        assert_eq!(thread_count() - before, 10);
+    }
+
+    #[test]
+    fn counted_measures_only_the_block() {
+        charge(5); // outside noise
+        let ((), evals) = counted(|| charge(42));
+        assert_eq!(evals, 42);
+    }
+
+    #[test]
+    fn threads_have_independent_tallies() {
+        charge(100);
+        let inner = std::thread::spawn(|| {
+            let ((), e) = counted(|| charge(9));
+            (e, thread_count())
+        })
+        .join()
+        .unwrap();
+        assert_eq!(inner.0, 9);
+        assert_eq!(inner.1, 9, "fresh thread starts at zero");
+    }
+}

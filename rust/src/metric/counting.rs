@@ -8,6 +8,10 @@ use super::{Assignment, MetricSpace};
 
 /// Wraps a space and counts `dist` evaluations (including those inside the
 /// default bulk ops; engine-dispatched bulk ops count as pts*centers).
+/// The bulk queries delegate to the inner space, so wrapping does not
+/// lose its batched fast paths. This per-instance counter predates (and
+/// complements) the crate-wide `metric::counter` tally: use this to
+/// meter one space in isolation, the tally for per-reducer accounting.
 pub struct CountingSpace<'a> {
     inner: &'a dyn MetricSpace,
     count: AtomicU64,
@@ -41,9 +45,14 @@ impl MetricSpace for CountingSpace<'_> {
         self.inner.name()
     }
 
-    fn assign(&self, pts: &[u32], centers: &[u32]) -> Assignment {
+    fn dist_batch(&self, pts: &[u32], c: u32, out: &mut [f64]) {
+        self.count.fetch_add(pts.len() as u64, Ordering::Relaxed);
+        self.inner.dist_batch(pts, c, out)
+    }
+
+    fn nearest_batch(&self, pts: &[u32], centers: &[u32]) -> Assignment {
         self.count.fetch_add((pts.len() * centers.len()) as u64, Ordering::Relaxed);
-        self.inner.assign(pts, centers)
+        self.inner.nearest_batch(pts, centers)
     }
 
     fn min_update(&self, pts: &[u32], c: u32, cur: &mut [f64]) {

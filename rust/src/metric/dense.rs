@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use crate::points::{SharedVectors, VectorData};
 
-use super::{Assignment, MetricSpace};
+use super::{counter, Assignment, MetricSpace};
 
 /// Batched distance backend contract, implemented by `runtime::XlaEngine`
 /// over the AOT HLO artifacts. Distances here are SQUARED Euclidean (that
@@ -31,9 +31,10 @@ pub trait BulkEngine: Send + Sync {
     }
 }
 
-/// Euclidean (L2) metric. `engine` optionally routes `assign`/`min_update`
-/// through the PJRT-compiled kernels for large blocks; the scalar path is
-/// always available and is the correctness reference (tests compare them).
+/// Euclidean (L2) metric. `engine` optionally routes the bulk queries
+/// (`nearest_batch`/`dist_batch`/`min_update`) through the PJRT-compiled
+/// kernels for large blocks; the scalar path is always available and is
+/// the correctness reference (tests compare them).
 pub struct EuclideanSpace {
     data: SharedVectors,
     engine: Option<Arc<dyn BulkEngine>>,
@@ -84,6 +85,7 @@ impl MetricSpace for EuclideanSpace {
 
     #[inline]
     fn dist(&self, i: u32, j: u32) -> f64 {
+        counter::charge(1);
         self.sq_dist(i, j).sqrt()
     }
 
@@ -91,8 +93,38 @@ impl MetricSpace for EuclideanSpace {
         "euclidean"
     }
 
-    fn assign(&self, pts: &[u32], centers: &[u32]) -> Assignment {
-        assert!(!centers.is_empty(), "assign: empty center set");
+    /// Bulk distances to one stored point. The CPU path is f64 all the
+    /// way and is the correctness reference the tiled scan is checked
+    /// against (the batch-equivalence property tests pin it to scalar
+    /// `dist` at 1e-12). Engine-dispatched blocks route through the
+    /// min_update kernel with an infinite running minimum and, like the
+    /// engine branch of `nearest_batch`, return f32-precision distances
+    /// — the documented engine numerics (see runtime tests' tolerances).
+    fn dist_batch(&self, pts: &[u32], c: u32, out: &mut [f64]) {
+        assert_eq!(pts.len(), out.len());
+        counter::charge(pts.len());
+        if let Some(engine) = &self.engine {
+            if pts.len() >= engine.dispatch_threshold() {
+                let x = self.data.gather(pts);
+                let cb = self.data.gather(&[c]);
+                let mut cur = vec![f32::INFINITY; pts.len()];
+                if engine.min_update_block(&x, &cb, &mut cur).is_ok() {
+                    for (o, s) in out.iter_mut().zip(&cur) {
+                        *o = (*s as f64).max(0.0).sqrt();
+                    }
+                    return;
+                }
+            }
+        }
+        let crow = self.data.row(c);
+        for (o, &p) in out.iter_mut().zip(pts) {
+            *o = sq_euclidean(self.data.row(p), crow).sqrt();
+        }
+    }
+
+    fn nearest_batch(&self, pts: &[u32], centers: &[u32]) -> Assignment {
+        assert!(!centers.is_empty(), "nearest_batch: empty center set");
+        counter::charge(pts.len() * centers.len());
         if let Some(engine) = &self.engine {
             if pts.len() * centers.len() >= engine.dispatch_threshold() {
                 let x = self.data.gather(pts);
@@ -116,6 +148,7 @@ impl MetricSpace for EuclideanSpace {
 
     fn min_update(&self, pts: &[u32], c: u32, cur: &mut [f64]) {
         assert_eq!(pts.len(), cur.len());
+        counter::charge(pts.len());
         if let Some(engine) = &self.engine {
             // a single-center pass does pts.len() distance evals; the PJRT
             // dispatch overhead only amortizes on large blocks
@@ -269,8 +302,20 @@ macro_rules! vector_space {
 
             #[inline]
             fn dist(&self, i: u32, j: u32) -> f64 {
+                counter::charge(1);
                 let f: fn(&[f32], &[f32]) -> f64 = $dist_fn;
                 f(self.data.row(i), self.data.row(j))
+            }
+
+            /// Batched: stage the center row once, stream the points.
+            fn dist_batch(&self, pts: &[u32], c: u32, out: &mut [f64]) {
+                assert_eq!(pts.len(), out.len());
+                counter::charge(pts.len());
+                let f: fn(&[f32], &[f32]) -> f64 = $dist_fn;
+                let crow = self.data.row(c);
+                for (o, &p) in out.iter_mut().zip(pts) {
+                    *o = f(self.data.row(p), crow);
+                }
             }
 
             fn name(&self) -> &'static str {

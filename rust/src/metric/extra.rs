@@ -5,7 +5,7 @@
 
 use crate::points::SharedVectors;
 
-use super::MetricSpace;
+use super::{counter, MetricSpace};
 
 /// Angular distance: the angle between vectors (arc length on the unit
 /// sphere). A proper metric on normalized directions; zero vectors are
@@ -34,6 +34,7 @@ impl MetricSpace for AngularSpace {
     }
 
     fn dist(&self, i: u32, j: u32) -> f64 {
+        counter::charge(1);
         if i == j {
             return 0.0;
         }
@@ -73,6 +74,7 @@ impl MetricSpace for HammingSpace {
     }
 
     fn dist(&self, i: u32, j: u32) -> f64 {
+        counter::charge(1);
         let a = &self.codes[i as usize];
         let b = &self.codes[j as usize];
         a.iter().zip(b).filter(|(x, y)| x != y).count() as f64

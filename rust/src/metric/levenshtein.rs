@@ -2,7 +2,7 @@
 //! genuinely-non-Euclidean space exercising the paper's "general metric
 //! spaces" claim end to end (no XLA fast path exists or is needed here).
 
-use super::MetricSpace;
+use super::{counter, MetricSpace};
 
 /// A set of byte strings with edit distance.
 pub struct StringSpace {
@@ -48,15 +48,57 @@ impl MetricSpace for StringSpace {
     }
 
     fn dist(&self, i: u32, j: u32) -> f64 {
+        counter::charge(1);
         if i == j {
             return 0.0;
         }
         levenshtein(&self.strings[i as usize], &self.strings[j as usize]) as f64
     }
 
+    /// Batched edit distances against one string: the DP rows are
+    /// allocated once per batch (not once per pair), and the virtual
+    /// dispatch happens per center instead of per pair.
+    fn dist_batch(&self, pts: &[u32], c: u32, out: &mut [f64]) {
+        assert_eq!(pts.len(), out.len());
+        counter::charge(pts.len());
+        let cs = &self.strings[c as usize];
+        let mut prev: Vec<usize> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        for (o, &p) in out.iter_mut().zip(pts) {
+            if p == c {
+                *o = 0.0;
+                continue;
+            }
+            *o = levenshtein_with(&self.strings[p as usize], cs, &mut prev, &mut cur) as f64;
+        }
+    }
+
     fn name(&self) -> &'static str {
         "levenshtein"
     }
+}
+
+/// Levenshtein DP reusing caller-provided row buffers (the batched inner
+/// loop). Same recurrence as [`levenshtein`], which remains the scalar
+/// reference.
+fn levenshtein_with(a: &[u8], b: &[u8], prev: &mut Vec<usize>, cur: &mut Vec<usize>) -> usize {
+    let (a, b) = if a.len() < b.len() { (a, b) } else { (b, a) };
+    if a.is_empty() {
+        return b.len();
+    }
+    prev.clear();
+    prev.extend(0..=a.len());
+    cur.clear();
+    cur.resize(a.len() + 1, 0);
+    for (j, &bc) in b.iter().enumerate() {
+        cur[0] = j + 1;
+        for (i, &ac) in a.iter().enumerate() {
+            let sub = prev[i] + usize::from(ac != bc);
+            cur[i + 1] = sub.min(prev[i + 1] + 1).min(cur[i] + 1);
+        }
+        std::mem::swap(prev, cur);
+    }
+    prev[a.len()]
 }
 
 #[cfg(test)]
@@ -97,5 +139,18 @@ mod tests {
         assert_eq!(s.n_points(), 2);
         assert_eq!(s.dist(0, 1), 1.0);
         assert_eq!(s.name(), "levenshtein");
+    }
+
+    #[test]
+    fn dist_batch_matches_scalar_dp() {
+        let s = StringSpace::from_strs(&["cluster", "clusters", "custard", "", "cloister"]);
+        let pts: Vec<u32> = (0..5).collect();
+        let mut out = vec![0.0f64; 5];
+        for c in 0..5u32 {
+            s.dist_batch(&pts, c, &mut out);
+            for (i, &p) in pts.iter().enumerate() {
+                assert_eq!(out[i], s.dist(p, c), "p={p} c={c}");
+            }
+        }
     }
 }

@@ -1,17 +1,45 @@
-//! Metric-space substrate (paper §2).
+//! Metric-space substrate (paper §2) and the batched distance engine.
 //!
 //! The paper works in *general metric spaces*: solutions must be subsets
 //! of the input (`S ⊆ P`). Accordingly, `MetricSpace` exposes distances
 //! between stored points by index; every algorithm, coreset construction,
-//! and baseline in this crate is generic over this trait. The dense
-//! Euclidean implementation optionally routes the bulk operations through
-//! the AOT-compiled XLA/Pallas kernels (see `runtime::XlaEngine`), while
-//! e.g. the Levenshtein space exercises the genuinely-general-metric path.
+//! and baseline in this crate is generic over this trait.
+//!
+//! # Batched distance engine
+//!
+//! All hot paths issue **bulk queries** instead of per-pair scalar calls:
+//!
+//! - [`MetricSpace::dist_batch`] — distances of a point block to one
+//!   stored point (the greedy inner step of CoverWithBalls, k-means++,
+//!   local-search candidate evaluation, PAM BUILD, ...);
+//! - [`MetricSpace::nearest_batch`] — nearest-center assignment of a
+//!   point block against a center block (the Voronoi pass every
+//!   construction and baseline performs);
+//! - [`MetricSpace::min_update`] — fold one new center into a running
+//!   min-distance vector.
+//!
+//! Default implementations reduce everything to `dist_batch` (one
+//! virtual call per center instead of per pair), and `dist_batch` itself
+//! defaults to a scalar loop, so a new metric only has to implement
+//! `dist` to work and can override the bulk ops to go fast. The dense
+//! Euclidean implementation overrides them with a cache-tiled f32 scan
+//! (and optionally routes large blocks through the AOT-compiled
+//! XLA/Pallas kernels via `runtime::XlaEngine`); the string/Levenshtein
+//! space overrides `dist_batch` to batch the DP row allocations —
+//! exercising the genuinely-general-metric path.
+//!
+//! # Distance-evaluation accounting
+//!
+//! Every implementation charges [`counter`] — 1 unit per (point, center)
+//! pair covered by a query, regardless of early-exit tricks — giving the
+//! simulator a per-reducer work metric (`RoundStats::dist_evals`) next
+//! to its memory meter. See `counter` for the threading contract.
 
+pub mod counter;
 pub mod counting;
 pub mod dense;
-pub mod extra;
 pub mod doubling;
+pub mod extra;
 pub mod levenshtein;
 
 /// Clustering objective: k-median sums distances, k-means sums squares.
@@ -71,6 +99,10 @@ impl Assignment {
 }
 
 /// A metric over a fixed set of stored points, addressed by index.
+///
+/// Implementors MUST charge `counter` for every query: `dist` charges 1
+/// and bulk overrides charge `pts.len() * centers.len()` (the defaults
+/// inherit charging from the scalar `dist` they call).
 pub trait MetricSpace: Send + Sync {
     /// Number of stored points (valid indices are `0..n_points()`).
     fn n_points(&self) -> usize;
@@ -81,27 +113,43 @@ pub trait MetricSpace: Send + Sync {
 
     fn name(&self) -> &'static str;
 
-    /// Nearest-center assignment of `pts` against `centers`.
-    /// Implementations may override with batched fast paths; the default
-    /// is the straightforward double loop.
-    fn assign(&self, pts: &[u32], centers: &[u32]) -> Assignment {
-        assert!(!centers.is_empty(), "assign: empty center set");
-        let mut dist = Vec::with_capacity(pts.len());
-        let mut idx = Vec::with_capacity(pts.len());
-        for &p in pts {
-            let mut best = f64::INFINITY;
-            let mut best_j = 0u32;
-            for (j, &c) in centers.iter().enumerate() {
-                let d = self.dist(p, c);
-                if d < best {
-                    best = d;
-                    best_j = j as u32;
+    /// Bulk distances to one stored point: `out[i] = d(pts[i], c)`.
+    /// The workhorse primitive the other bulk defaults reduce to;
+    /// override it to batch per-center work (row staging, DP buffers).
+    fn dist_batch(&self, pts: &[u32], c: u32, out: &mut [f64]) {
+        assert_eq!(pts.len(), out.len());
+        for (o, &p) in out.iter_mut().zip(pts) {
+            *o = self.dist(p, c);
+        }
+    }
+
+    /// Nearest-center assignment of `pts` against `centers` — the bulk
+    /// Voronoi query. Ties break toward the earlier center position.
+    /// The default makes one `dist_batch` pass per center; dense spaces
+    /// override with cache-tiled scans.
+    fn nearest_batch(&self, pts: &[u32], centers: &[u32]) -> Assignment {
+        assert!(!centers.is_empty(), "nearest_batch: empty center set");
+        let n = pts.len();
+        let mut dist = vec![f64::INFINITY; n];
+        let mut idx = vec![0u32; n];
+        let mut buf = vec![0.0f64; n];
+        for (j, &c) in centers.iter().enumerate() {
+            self.dist_batch(pts, c, &mut buf);
+            for i in 0..n {
+                if buf[i] < dist[i] {
+                    dist[i] = buf[i];
+                    idx[i] = j as u32;
                 }
             }
-            dist.push(best);
-            idx.push(best_j);
         }
         Assignment { dist, idx }
+    }
+
+    /// Nearest-center assignment (alias of [`Self::nearest_batch`], the
+    /// name the original call sites use). Override `nearest_batch`, not
+    /// this.
+    fn assign(&self, pts: &[u32], centers: &[u32]) -> Assignment {
+        self.nearest_batch(pts, centers)
     }
 
     /// Fold one new center into a running per-point min-distance vector:
@@ -109,23 +157,24 @@ pub trait MetricSpace: Send + Sync {
     /// CoverWithBalls, k-means++ and Gonzalez.
     fn min_update(&self, pts: &[u32], c: u32, cur: &mut [f64]) {
         assert_eq!(pts.len(), cur.len());
-        for (i, &p) in pts.iter().enumerate() {
-            let d = self.dist(p, c);
-            if d < cur[i] {
-                cur[i] = d;
+        let mut buf = vec![0.0f64; pts.len()];
+        self.dist_batch(pts, c, &mut buf);
+        for (o, d) in cur.iter_mut().zip(buf) {
+            if d < *o {
+                *o = d;
             }
         }
     }
 
     /// Weighted clustering cost of `centers` over (`pts`, `weights`).
     fn weighted_cost(&self, obj: Objective, pts: &[u32], weights: &[u64], centers: &[u32]) -> f64 {
-        self.assign(pts, centers).cost(obj, weights)
+        self.nearest_batch(pts, centers).cost(obj, weights)
     }
 }
 
 /// Convenience: unit-weight cost.
 pub fn cost_unit(space: &dyn MetricSpace, obj: Objective, pts: &[u32], centers: &[u32]) -> f64 {
-    space.assign(pts, centers).cost_unit(obj)
+    space.nearest_batch(pts, centers).cost_unit(obj)
 }
 
 #[cfg(test)]
@@ -173,5 +222,42 @@ mod tests {
         assert_eq!(cur, vec![10.0, 9.0, 8.0, 7.0, 0.0]);
         s.min_update(&pts, 0, &mut cur);
         assert_eq!(cur, vec![0.0, 1.0, 2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn dist_batch_matches_scalar_dist() {
+        let s = line_space();
+        let pts = [4u32, 2, 0, 3];
+        let mut out = vec![0.0f64; 4];
+        s.dist_batch(&pts, 1, &mut out);
+        for (o, &p) in out.iter().zip(&pts) {
+            assert_eq!(*o, s.dist(p, 1));
+        }
+    }
+
+    #[test]
+    fn nearest_batch_is_assign() {
+        let s = line_space();
+        let pts = [0u32, 1, 2, 3, 4];
+        let a = s.assign(&pts, &[1, 4]);
+        let b = s.nearest_batch(&pts, &[1, 4]);
+        assert_eq!(a.dist, b.dist);
+        assert_eq!(a.idx, b.idx);
+    }
+
+    #[test]
+    fn bulk_ops_charge_point_center_pairs() {
+        let s = line_space();
+        let pts = [0u32, 1, 2, 3, 4];
+        let (_, e) = counter::counted(|| s.nearest_batch(&pts, &[0, 3]));
+        assert_eq!(e, 10, "nearest_batch charges |pts|*|centers|");
+        let mut out = vec![0.0f64; 5];
+        let (_, e) = counter::counted(|| s.dist_batch(&pts, 2, &mut out));
+        assert_eq!(e, 5, "dist_batch charges |pts|");
+        let mut cur = vec![f64::INFINITY; 5];
+        let (_, e) = counter::counted(|| s.min_update(&pts, 2, &mut cur));
+        assert_eq!(e, 5, "min_update charges |pts|");
+        let (_, e) = counter::counted(|| s.dist(0, 4));
+        assert_eq!(e, 1, "dist charges 1");
     }
 }

@@ -1,0 +1,404 @@
+//! The real PJRT-backed engine (`pjrt` feature): parses HLO *text* with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and executes with concrete buffers (see /opt/xla-example/load_hlo/).
+//! Python never runs here: the artifacts are compiled once at build time
+//! (python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metric::dense::BulkEngine;
+use crate::points::VectorData;
+
+use super::manifest::{ArtifactKind, Manifest, ManifestEntry};
+use super::PAD_CENTER_VALUE;
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    /// Lazily compiled executables keyed by manifest entry.
+    cache: HashMap<ManifestEntry, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: PjRtClient wraps an Rc over a thread-safe C++ PJRT CPU client;
+// the Rc (and every executable handle) is only ever touched while holding
+// the XlaEngine mutex, so refcount updates and executions are serialized.
+unsafe impl Send for EngineInner {}
+
+/// The engine: manifest + lazily-compiled executable cache + PJRT client.
+pub struct XlaEngine {
+    dir: PathBuf,
+    manifest: Manifest,
+    inner: Mutex<EngineInner>,
+    /// Problems below this many distance pairs use the scalar path.
+    threshold: usize,
+}
+
+impl XlaEngine {
+    /// Load from an artifacts directory (expects `manifest.txt`).
+    pub fn load(dir: &Path) -> Result<XlaEngine> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        if manifest.entries.is_empty() {
+            bail!("manifest at {} lists no artifacts", dir.display());
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaEngine {
+            dir: dir.to_path_buf(),
+            manifest,
+            inner: Mutex::new(EngineInner { client, cache: HashMap::new() }),
+            // see BulkEngine::dispatch_threshold — CPU default is "never";
+            // override via env for accelerator backends or experiments
+            threshold: std::env::var("MRCORESET_ENGINE_THRESHOLD")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(usize::MAX),
+        })
+    }
+
+    /// Load from the conventional location (`$MRCORESET_ARTIFACTS` or
+    /// `./artifacts`), returning None (with a note) if unavailable —
+    /// callers fall back to the scalar path.
+    pub fn load_default() -> Option<XlaEngine> {
+        let dir = std::env::var("MRCORESET_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        match XlaEngine::load(Path::new(&dir)) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("note: XLA engine unavailable ({err}); using scalar distance path");
+                None
+            }
+        }
+    }
+
+    pub fn set_dispatch_threshold(&mut self, t: usize) {
+        self.threshold = t;
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.inner.lock().unwrap().cache.len()
+    }
+
+    fn execute(&self, entry: &ManifestEntry, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(entry) {
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            inner.cache.insert(entry.clone(), exe);
+        }
+        let exe = inner.cache.get(entry).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", entry.file))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e:?}", entry.file))?;
+        Ok(lit)
+    }
+
+    /// One padded assign_cost dispatch for a chunk that fits a bucket.
+    fn assign_chunk(
+        &self,
+        x: &VectorData,
+        c: &VectorData,
+        entry: &ManifestEntry,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let (nb, db, kb) = (entry.n, entry.d, entry.k);
+        let n = x.n();
+        let mut xbuf = vec![0f32; nb * db];
+        pad_rows(x, &mut xbuf, db);
+        let mut cbuf = vec![0f32; kb * db];
+        pad_rows_value(c, &mut cbuf, db, PAD_CENTER_VALUE);
+        let wbuf = vec![0f32; nb]; // weights unused by this caller; zeros keep nu/mu finite
+        let xl = literal_f32(&xbuf, &[nb, db])?;
+        let cl = literal_f32(&cbuf, &[kb, db])?;
+        let wl = literal_f32(&wbuf, &[nb])?;
+        let out = self.execute(entry, &[xl, cl, wl])?;
+        let (_nu, _mu, dmin, idx) =
+            out.to_tuple4().map_err(|e| anyhow!("assign_cost result shape: {e:?}"))?;
+        let mut dmin = dmin.to_vec::<f32>().map_err(|e| anyhow!("dmin: {e:?}"))?;
+        let mut idx = idx.to_vec::<i32>().map_err(|e| anyhow!("idx: {e:?}"))?;
+        dmin.truncate(n);
+        idx.truncate(n);
+        Ok((dmin, idx))
+    }
+
+    fn min_update_chunk(
+        &self,
+        x: &VectorData,
+        c: &VectorData,
+        cur: &mut [f32],
+        entry: &ManifestEntry,
+    ) -> Result<()> {
+        let (nb, db) = (entry.n, entry.d);
+        let n = x.n();
+        let mut xbuf = vec![0f32; nb * db];
+        pad_rows(x, &mut xbuf, db);
+        let mut cbuf = vec![0f32; db];
+        cbuf[..c.d()].copy_from_slice(c.row(0));
+        let mut curbuf = vec![f32::INFINITY; nb];
+        curbuf[..n].copy_from_slice(cur);
+        let xl = literal_f32(&xbuf, &[nb, db])?;
+        let cl = literal_f32(&cbuf, &[1, db])?;
+        let curl = literal_f32(&curbuf, &[nb])?;
+        let out = self.execute(entry, &[xl, cl, curl])?;
+        let new_min = out.to_tuple1().map_err(|e| anyhow!("min_update result: {e:?}"))?;
+        let v = new_min.to_vec::<f32>().map_err(|e| anyhow!("new_min: {e:?}"))?;
+        cur.copy_from_slice(&v[..n]);
+        Ok(())
+    }
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("literal: {e:?}"))
+}
+
+/// Copy `src` rows into a zeroed (rows_b, db) buffer (zero row/dim pad).
+fn pad_rows(src: &VectorData, dst: &mut [f32], db: usize) {
+    for i in 0..src.n() {
+        let row = src.row(i as u32);
+        dst[i * db..i * db + src.d()].copy_from_slice(row);
+    }
+}
+
+/// Pad center rows: real rows keep zero-extended features; absent rows
+/// are entirely `value` (so they are far from everything).
+fn pad_rows_value(src: &VectorData, dst: &mut [f32], db: usize, value: f32) {
+    dst.fill(value);
+    for i in 0..src.n() {
+        let row = src.row(i as u32);
+        dst[i * db..i * db + src.d()].copy_from_slice(row);
+        dst[i * db + src.d()..(i + 1) * db].fill(0.0);
+    }
+}
+
+impl BulkEngine for XlaEngine {
+    fn assign_block(&self, x: &VectorData, c: &VectorData) -> Result<(Vec<f32>, Vec<i32>)> {
+        assert_eq!(x.d(), c.d());
+        // center-chunking: if k exceeds every bucket, assign against
+        // center chunks and merge the argmins.
+        let max_k = self
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::AssignCost && e.d >= x.d())
+            .map(|e| e.k)
+            .max()
+            .ok_or_else(|| anyhow!("no assign_cost bucket for d={}", x.d()))?;
+        if c.n() > max_k {
+            let mut best_d: Vec<f32> = vec![f32::INFINITY; x.n()];
+            let mut best_i: Vec<i32> = vec![0; x.n()];
+            let mut base = 0usize;
+            while base < c.n() {
+                let hi = (base + max_k).min(c.n());
+                let ids: Vec<u32> = (base as u32..hi as u32).collect();
+                let sub = c.gather(&ids);
+                let (d, i) = self.assign_block(x, &sub)?;
+                for r in 0..x.n() {
+                    if d[r] < best_d[r] {
+                        best_d[r] = d[r];
+                        best_i[r] = i[r] + base as i32;
+                    }
+                }
+                base = hi;
+            }
+            return Ok((best_d, best_i));
+        }
+        let entry = self
+            .manifest
+            .pick(ArtifactKind::AssignCost, x.n(), x.d(), c.n())
+            .or_else(|| self.manifest.pick_chunked(ArtifactKind::AssignCost, x.d(), c.n()))
+            .ok_or_else(|| anyhow!("no assign_cost bucket for d={} k={}", x.d(), c.n()))?;
+        if x.n() <= entry.n {
+            return self.assign_chunk(x, c, &entry);
+        }
+        // chunk over n
+        let mut dmin = Vec::with_capacity(x.n());
+        let mut idx = Vec::with_capacity(x.n());
+        let chunk = entry.n;
+        let mut row = 0usize;
+        while row < x.n() {
+            let hi = (row + chunk).min(x.n());
+            let ids: Vec<u32> = (row as u32..hi as u32).collect();
+            let sub = x.gather(&ids);
+            let (d, i) = self.assign_chunk(&sub, c, &entry)?;
+            dmin.extend(d);
+            idx.extend(i);
+            row = hi;
+        }
+        Ok((dmin, idx))
+    }
+
+    fn min_update_block(&self, x: &VectorData, c: &VectorData, cur: &mut [f32]) -> Result<()> {
+        assert_eq!(x.d(), c.d());
+        assert_eq!(c.n(), 1);
+        assert_eq!(x.n(), cur.len());
+        let entry = self
+            .manifest
+            .pick(ArtifactKind::MinUpdate, x.n(), x.d(), 1)
+            .or_else(|| self.manifest.pick_chunked(ArtifactKind::MinUpdate, x.d(), 1))
+            .ok_or_else(|| anyhow!("no min_update bucket for d={}", x.d()))?;
+        if x.n() <= entry.n {
+            return self.min_update_chunk(x, c, cur, &entry);
+        }
+        let chunk = entry.n;
+        let mut row = 0usize;
+        while row < x.n() {
+            let hi = (row + chunk).min(x.n());
+            let ids: Vec<u32> = (row as u32..hi as u32).collect();
+            let sub = x.gather(&ids);
+            self.min_update_chunk(&sub, c, &mut cur[row..hi], &entry)?;
+            row = hi;
+        }
+        Ok(())
+    }
+
+    fn dispatch_threshold(&self) -> usize {
+        self.threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::dense::{sq_euclidean, EuclideanSpace};
+    use crate::metric::MetricSpace;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = std::env::var("MRCORESET_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        let p = PathBuf::from(dir);
+        if p.join("manifest.txt").exists() {
+            Some(p)
+        } else {
+            eprintln!("skipping runtime test: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+
+    fn rand_data(n: usize, d: usize, seed: u64, scale: f64) -> VectorData {
+        let mut rng = Rng::new(seed);
+        VectorData::new((0..n * d).map(|_| (rng.gaussian() * scale) as f32).collect(), d)
+    }
+
+    #[test]
+    fn assign_block_matches_scalar() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = XlaEngine::load(&dir).unwrap();
+        for (n, d, k) in [(100usize, 3usize, 7usize), (256, 4, 128), (300, 5, 9), (1500, 2, 40)] {
+            let x = rand_data(n, d, 1, 10.0);
+            let c = rand_data(k, d, 2, 10.0);
+            let (dmin, idx) = engine.assign_block(&x, &c).unwrap();
+            assert_eq!(dmin.len(), n);
+            for i in 0..n {
+                let mut best = f64::INFINITY;
+                let mut bj = 0;
+                for j in 0..k {
+                    let dd = sq_euclidean(x.row(i as u32), c.row(j as u32));
+                    if dd < best {
+                        best = dd;
+                        bj = j;
+                    }
+                }
+                assert_eq!(idx[i] as usize, bj, "n={n} d={d} k={k} row {i}");
+                let rel = ((dmin[i] as f64) - best).abs() / (1.0 + best);
+                assert!(rel < 1e-4, "row {i}: {} vs {best}", dmin[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn min_update_matches_scalar() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = XlaEngine::load(&dir).unwrap();
+        let (n, d) = (700usize, 6usize);
+        let x = rand_data(n, d, 3, 5.0);
+        let c = rand_data(1, d, 4, 5.0);
+        let mut cur: Vec<f32> = (0..n).map(|i| (i % 50) as f32).collect();
+        let want: Vec<f32> = (0..n)
+            .map(|i| {
+                let dd = sq_euclidean(x.row(i as u32), c.row(0)) as f32;
+                dd.min(cur[i])
+            })
+            .collect();
+        engine.min_update_block(&x, &c, &mut cur).unwrap();
+        for i in 0..n {
+            assert!((cur[i] - want[i]).abs() / (1.0 + want[i]) < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn chunking_large_n() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = XlaEngine::load(&dir).unwrap();
+        let max_n = engine.manifest().max_n(ArtifactKind::AssignCost);
+        let n = max_n + 123;
+        let x = rand_data(n, 2, 5, 3.0);
+        let c = rand_data(10, 2, 6, 3.0);
+        let (dmin, idx) = engine.assign_block(&x, &c).unwrap();
+        assert_eq!(dmin.len(), n);
+        assert_eq!(idx.len(), n);
+        // spot-check the tail (the chunk boundary region)
+        for i in (n - 5)..n {
+            let mut best = f64::INFINITY;
+            let mut bj = 0;
+            for j in 0..10 {
+                let dd = sq_euclidean(x.row(i as u32), c.row(j as u32));
+                if dd < best {
+                    best = dd;
+                    bj = j;
+                }
+            }
+            assert_eq!(idx[i] as usize, bj);
+        }
+    }
+
+    #[test]
+    fn euclidean_space_with_engine_agrees() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut engine = XlaEngine::load(&dir).unwrap();
+        engine.set_dispatch_threshold(1); // force the XLA path
+        let data = Arc::new(rand_data(600, 4, 7, 8.0));
+        let plain = EuclideanSpace::new(data.clone());
+        let fast = EuclideanSpace::with_engine(data, Arc::new(engine));
+        let pts: Vec<u32> = (0..600).collect();
+        let centers: Vec<u32> = (0..20).collect();
+        let a = plain.assign(&pts, &centers);
+        let b = fast.assign(&pts, &centers);
+        // The engine's ||x||²+||c||²−2xc kernel loses ~||x||²·f32eps to
+        // cancellation (≈ (8√4)²·1e-7 ≈ 3e-5 on d², i.e. ~6e-3 on a
+        // near-zero distance). Compare with that error model.
+        for i in 0..600 {
+            let d2_tol = 1e-4 * (1.0 + a.dist[i] * a.dist[i]).max(256.0 * 1e-4);
+            let diff2 = (a.dist[i] * a.dist[i] - b.dist[i] * b.dist[i]).abs();
+            assert!(diff2 <= d2_tol, "row {i}: {} vs {} (diff² {diff2})", a.dist[i], b.dist[i]);
+            if a.idx[i] != b.idx[i] {
+                // near-tie: both centers must be equidistant within tolerance
+                let da = plain.dist(pts[i], centers[a.idx[i] as usize]);
+                let db = plain.dist(pts[i], centers[b.idx[i] as usize]);
+                assert!((da - db).abs() < 0.05, "row {i}: tie break too far: {da} vs {db}");
+            }
+        }
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_error() {
+        assert!(XlaEngine::load(Path::new("/nonexistent/artifacts")).is_err());
+    }
+}

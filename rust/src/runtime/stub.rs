@@ -1,0 +1,110 @@
+//! Engine stub for builds without the `pjrt` feature (the offline image
+//! has no XLA/PJRT bindings crate). The stub keeps the full `XlaEngine`
+//! API surface so callers and the failure-injection tests are
+//! feature-agnostic: manifests really parse (corrupt/empty manifests
+//! error at `load`, like the real engine), but every kernel dispatch
+//! returns an error, which makes `EuclideanSpace` fall back to its
+//! batched CPU paths — the documented degradation mode for a broken
+//! engine.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metric::dense::BulkEngine;
+use crate::points::VectorData;
+
+use super::manifest::Manifest;
+
+const UNAVAILABLE: &str = "PJRT backend unavailable: crate built without the `pjrt` feature";
+
+/// API-compatible stand-in for the PJRT engine.
+pub struct XlaEngine {
+    manifest: Manifest,
+    /// Problems below this many distance pairs use the scalar path.
+    threshold: usize,
+}
+
+impl XlaEngine {
+    /// Load from an artifacts directory (expects `manifest.txt`). Only
+    /// the manifest is validated — kernels are "lazily compiled", i.e.
+    /// every later dispatch errors out.
+    pub fn load(dir: &Path) -> Result<XlaEngine> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        if manifest.entries.is_empty() {
+            bail!("manifest at {} lists no artifacts", dir.display());
+        }
+        Ok(XlaEngine { manifest, threshold: usize::MAX })
+    }
+
+    /// The default engine is never available without the `pjrt` feature
+    /// (artifacts may exist on disk, but there is no backend to run
+    /// them); callers fall back to the scalar/batched CPU paths.
+    pub fn load_default() -> Option<XlaEngine> {
+        eprintln!("note: XLA engine unavailable (built without `pjrt`); using CPU distance paths");
+        None
+    }
+
+    pub fn set_dispatch_threshold(&mut self, t: usize) {
+        self.threshold = t;
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Number of executables compiled so far (always 0 in the stub).
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+}
+
+impl BulkEngine for XlaEngine {
+    fn assign_block(&self, _x: &VectorData, _c: &VectorData) -> Result<(Vec<f32>, Vec<i32>)> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    fn min_update_block(&self, _x: &VectorData, _c: &VectorData, _cur: &mut [f32]) -> Result<()> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    fn dispatch_threshold(&self) -> usize {
+        self.threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mrcoreset_stub_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn valid_manifest_loads_but_dispatch_errors() {
+        let d = tmpdir("ok");
+        std::fs::write(
+            d.join("manifest.txt"),
+            "assign_cost 256 4 128 a.hlo.txt\nmin_update 256 4 1 m.hlo.txt\n",
+        )
+        .unwrap();
+        let engine = XlaEngine::load(&d).unwrap();
+        assert_eq!(engine.manifest().entries.len(), 2);
+        assert_eq!(engine.compiled_count(), 0);
+        let x = VectorData::new(vec![0.0; 8], 4);
+        let c = VectorData::new(vec![0.0; 4], 4);
+        let err = engine.assign_block(&x, &c).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn load_default_is_none_without_backend() {
+        assert!(XlaEngine::load_default().is_none());
+    }
+}

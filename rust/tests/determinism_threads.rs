@@ -1,0 +1,72 @@
+//! Regression: for a fixed `CoresetConfig::seed` the coreset pipeline is
+//! bit-identical across repeated runs AND across simulator thread counts.
+//! This holds by construction — reducer outputs are collected in input
+//! order and every reducer RNG derives from (seed, partition index)
+//! only — but was asserted nowhere, so a scheduling-dependent regression
+//! (e.g. a work-stealing reducer RNG) would have slipped through.
+
+use std::sync::Arc;
+
+use mrcoreset::coordinator::{solve, ClusterConfig};
+use mrcoreset::coreset::{two_round_coreset, CoresetConfig, PipelineOutput};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::{PartitionStrategy, Simulator};
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::Objective;
+
+fn mixture(n: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+    let (data, _) =
+        GaussianMixtureSpec { n, d: 3, k: 5, seed, ..Default::default() }.generate();
+    (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+}
+
+fn run_pipeline(space: &EuclideanSpace, pts: &[u32], obj: Objective, threads: usize) -> PipelineOutput {
+    let sim = Simulator::new().with_threads(threads);
+    let cfg = CoresetConfig { seed: 0xD1CE, ..CoresetConfig::new(5, 0.4) };
+    two_round_coreset(space, obj, pts, 6, PartitionStrategy::RoundRobin, &cfg, &sim)
+}
+
+#[test]
+fn two_round_coreset_bit_identical_across_runs_and_threads() {
+    let (space, pts) = mixture(3000, 7);
+    for obj in [Objective::Median, Objective::Means] {
+        // threads=1 twice (run-to-run) and threads=8 (scheduling)
+        let reference = run_pipeline(&space, &pts, obj, 1);
+        for threads in [1usize, 8] {
+            let out = run_pipeline(&space, &pts, obj, threads);
+            assert_eq!(
+                reference.coreset.indices, out.coreset.indices,
+                "{obj} threads={threads}: coreset members differ"
+            );
+            assert_eq!(
+                reference.coreset.weights, out.coreset.weights,
+                "{obj} threads={threads}: coreset weights differ"
+            );
+            // radii and the global tolerance are f64s computed in input
+            // order — they must be bit-identical, not merely close
+            assert_eq!(reference.radii, out.radii, "{obj} threads={threads}");
+            assert_eq!(reference.global_r, out.global_r, "{obj} threads={threads}");
+            assert_eq!(reference.part_sizes, out.part_sizes);
+        }
+    }
+}
+
+#[test]
+fn full_solve_bit_identical_across_thread_counts() {
+    let (space, pts) = mixture(2000, 9);
+    for obj in [Objective::Median, Objective::Means] {
+        let mut cfg1 = ClusterConfig::new(obj, 4, 0.5);
+        cfg1.threads = Some(1);
+        let mut cfg8 = cfg1.clone();
+        cfg8.threads = Some(8);
+        let a = solve(&space, &pts, &cfg1);
+        let b = solve(&space, &pts, &cfg8);
+        assert_eq!(a.solution.centers, b.solution.centers, "{obj}");
+        assert_eq!(a.solution.cost.to_bits(), b.solution.cost.to_bits(), "{obj}");
+        assert_eq!(a.full_cost.to_bits(), b.full_cost.to_bits(), "{obj}");
+        assert_eq!(a.coreset_size, b.coreset_size, "{obj}");
+        assert_eq!(a.cw_size, b.cw_size, "{obj}");
+        // the work metric is deterministic too: same queries either way
+        assert_eq!(a.dist_evals, b.dist_evals, "{obj}");
+    }
+}

@@ -99,6 +99,29 @@ fn engine_and_scalar_agree_on_solution_quality() {
 }
 
 #[test]
+fn distance_accounting_is_nonzero_and_partition_consistent() {
+    let (space, pts) = mixture(2000, 2, 4, 9);
+    let mut cfg = ClusterConfig::new(Objective::Median, 4, 0.5);
+    cfg.l = Some(5);
+    let rep = solve(&space, &pts, &cfg);
+    assert_eq!(rep.rounds, 3);
+    assert!(rep.dist_evals > 0, "3-round solve must report distance work");
+    // the job total is exactly the sum of the per-round counts
+    let per_round: u64 = rep.stats.rounds.iter().map(|r| r.dist_evals).sum();
+    assert_eq!(rep.dist_evals, per_round);
+    for r in &rep.stats.rounds {
+        assert_eq!(r.dist_evals, r.reducer_dist_evals.iter().sum::<u64>(), "{}", r.name);
+    }
+    // round 1 runs one reducer per partition, and every partition holds
+    // ~n/L points so every reducer must have done distance work
+    let r1 = &rep.stats.rounds[0];
+    assert_eq!(r1.reducer_dist_evals.len(), 5, "one reducer per partition");
+    assert!(r1.reducer_dist_evals.iter().all(|&e| e > 0), "{:?}", r1.reducer_dist_evals);
+    // and the human-readable report surfaces the metric
+    assert!(rep.summary().contains("dist_evals="), "{}", rep.summary());
+}
+
+#[test]
 fn eps_controls_accuracy_size_tradeoff() {
     let (space, pts) = mixture(6000, 2, 6, 4);
     let w = vec![1u64; pts.len()];

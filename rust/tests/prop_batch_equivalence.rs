@@ -1,0 +1,222 @@
+//! Property tests for the batched distance engine: on every metric
+//! space, `dist_batch` / `nearest_batch` / `min_update` must agree with
+//! scalar `dist` loops, and every bulk query must charge exactly
+//! |pts|·|centers| distance evaluations to the work counter.
+//!
+//! Agreement tolerances: `dist_batch` is the f64 reference path on every
+//! space, so it must match scalar `dist` to 1e-12 (it is in fact the
+//! same arithmetic). `nearest_batch` is exact too except on the dense
+//! Euclidean space, whose cache-tiled scan compares distances in f32 and
+//! may resolve near-ties differently — there the distances must agree to
+//! f32 precision and the reported winner must be self-consistent to
+//! 1e-12 (the winner's distance is recomputed in f64 by contract).
+
+use std::sync::Arc;
+
+use mrcoreset::data::strings::StringClusterSpec;
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::metric::counter;
+use mrcoreset::metric::counting::CountingSpace;
+use mrcoreset::metric::dense::{ChebyshevSpace, EuclideanSpace, ManhattanSpace};
+use mrcoreset::metric::extra::HammingSpace;
+use mrcoreset::metric::levenshtein::StringSpace;
+use mrcoreset::metric::MetricSpace;
+use mrcoreset::prop_assert;
+use mrcoreset::util::prop::check;
+use mrcoreset::util::rng::Rng;
+
+/// A space under test plus whether its nearest_batch path is exact
+/// (f64 end-to-end) or f32-tiled (Euclidean).
+struct Case {
+    space: Box<dyn MetricSpace>,
+    exact_nearest: bool,
+}
+
+fn cases(rng: &mut Rng) -> Vec<Case> {
+    let n = 30 + rng.below(120);
+    let d = 1 + rng.below(6);
+    let (data, _) = GaussianMixtureSpec {
+        n,
+        d,
+        k: 1 + rng.below(4),
+        spread: 1.0 + rng.f64() * 30.0,
+        outlier_frac: 0.0,
+        seed: rng.next_u64(),
+    }
+    .generate();
+    let shared = Arc::new(data);
+    let (strs, _) = StringClusterSpec {
+        n,
+        clusters: 1 + rng.below(5),
+        base_len: 6 + rng.below(14),
+        max_edits: rng.below(5),
+        seed: rng.next_u64(),
+    }
+    .generate();
+    let codes: Vec<Vec<u8>> =
+        (0..n).map(|i| (0..8).map(|b| ((i >> b) & 1) as u8 + rng.below(2) as u8).collect()).collect();
+    vec![
+        Case { space: Box::new(EuclideanSpace::new(shared.clone())), exact_nearest: false },
+        Case { space: Box::new(ManhattanSpace::new(shared.clone())), exact_nearest: true },
+        Case { space: Box::new(ChebyshevSpace::new(shared)), exact_nearest: true },
+        Case { space: Box::new(StringSpace::new(strs)), exact_nearest: true },
+        Case { space: Box::new(HammingSpace::new(codes)), exact_nearest: true },
+    ]
+}
+
+fn pick_queries(rng: &mut Rng, n: usize) -> (Vec<u32>, Vec<u32>) {
+    let np = 1 + rng.below(n);
+    let pts: Vec<u32> = (0..np).map(|_| rng.below(n) as u32).collect();
+    let k = 1 + rng.below(8.min(n));
+    let centers: Vec<u32> = rng.sample_distinct(n, k).into_iter().map(|i| i as u32).collect();
+    (pts, centers)
+}
+
+#[test]
+fn prop_dist_batch_equals_scalar_dist() {
+    check("dist-batch-equivalence", 0xBA7C, 20, |rng| {
+        for case in cases(rng) {
+            let space = case.space.as_ref();
+            let n = space.n_points();
+            let (pts, centers) = pick_queries(rng, n);
+            let mut out = vec![0.0f64; pts.len()];
+            for &c in &centers {
+                space.dist_batch(&pts, c, &mut out);
+                for (i, &p) in pts.iter().enumerate() {
+                    let want = space.dist(p, c);
+                    prop_assert!(
+                        (out[i] - want).abs() <= 1e-12,
+                        "{}: dist_batch[{i}] = {} vs dist = {want}",
+                        space.name(),
+                        out[i]
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nearest_batch_equals_scalar_loop() {
+    check("nearest-batch-equivalence", 0x4EA2, 20, |rng| {
+        for case in cases(rng) {
+            let space = case.space.as_ref();
+            let n = space.n_points();
+            let (pts, centers) = pick_queries(rng, n);
+            let a = space.nearest_batch(&pts, &centers);
+            for (i, &p) in pts.iter().enumerate() {
+                let want =
+                    centers.iter().map(|&c| space.dist(p, c)).fold(f64::INFINITY, f64::min);
+                let tol = if case.exact_nearest { 1e-12 } else { 1e-6 * (1.0 + want) };
+                prop_assert!(
+                    (a.dist[i] - want).abs() <= tol,
+                    "{}: nearest_batch dist[{i}] = {} vs scalar min {want}",
+                    space.name(),
+                    a.dist[i]
+                );
+                // winner self-consistency is exact on every space
+                let via_idx = space.dist(p, centers[a.idx[i] as usize]);
+                prop_assert!(
+                    (a.dist[i] - via_idx).abs() <= 1e-12,
+                    "{}: dist[{i}] inconsistent with reported winner",
+                    space.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_min_update_equals_scalar_fold() {
+    check("min-update-equivalence", 0x31FD, 20, |rng| {
+        for case in cases(rng) {
+            let space = case.space.as_ref();
+            let n = space.n_points();
+            let (pts, centers) = pick_queries(rng, n);
+            let mut cur = vec![f64::INFINITY; pts.len()];
+            let mut want = vec![f64::INFINITY; pts.len()];
+            for &c in &centers {
+                space.min_update(&pts, c, &mut cur);
+                for (i, &p) in pts.iter().enumerate() {
+                    let d = space.dist(p, c);
+                    if d < want[i] {
+                        want[i] = d;
+                    }
+                }
+            }
+            let tol = if case.exact_nearest { 1e-12 } else { 1e-6 };
+            for i in 0..pts.len() {
+                prop_assert!(
+                    (cur[i] - want[i]).abs() <= tol * (1.0 + want[i]),
+                    "{}: min_update[{i}] = {} vs {}",
+                    space.name(),
+                    cur[i],
+                    want[i]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bulk_queries_charge_point_center_pairs() {
+    check("dist-eval-accounting", 0xACC7, 20, |rng| {
+        for case in cases(rng) {
+            let space = case.space.as_ref();
+            let n = space.n_points();
+            let (pts, centers) = pick_queries(rng, n);
+            let (_, e) = counter::counted(|| space.nearest_batch(&pts, &centers));
+            prop_assert!(
+                e == (pts.len() * centers.len()) as u64,
+                "{}: nearest_batch charged {e}, want {}",
+                space.name(),
+                pts.len() * centers.len()
+            );
+            let mut out = vec![0.0f64; pts.len()];
+            let (_, e) = counter::counted(|| space.dist_batch(&pts, centers[0], &mut out));
+            prop_assert!(
+                e == pts.len() as u64,
+                "{}: dist_batch charged {e}, want {}",
+                space.name(),
+                pts.len()
+            );
+            let mut cur = vec![f64::INFINITY; pts.len()];
+            let (_, e) = counter::counted(|| space.min_update(&pts, centers[0], &mut cur));
+            prop_assert!(
+                e == pts.len() as u64,
+                "{}: min_update charged {e}, want {}",
+                space.name(),
+                pts.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The counting wrapper must delegate bulk queries (keeping the inner
+/// space's fast paths) while metering them as pts×centers.
+#[test]
+fn counting_space_delegates_and_meters_bulk_queries() {
+    let (strs, _) = StringClusterSpec { n: 40, ..Default::default() }.generate();
+    let inner = StringSpace::new(strs);
+    let counting = CountingSpace::new(&inner);
+    let pts: Vec<u32> = (0..40).collect();
+    let centers = vec![3u32, 17, 31];
+
+    let a = counting.nearest_batch(&pts, &centers);
+    assert_eq!(counting.evals(), (40 * 3) as u64);
+    let b = inner.nearest_batch(&pts, &centers);
+    assert_eq!(a.dist, b.dist);
+    assert_eq!(a.idx, b.idx);
+
+    counting.reset();
+    let mut out = vec![0.0f64; 40];
+    counting.dist_batch(&pts, 7, &mut out);
+    assert_eq!(counting.evals(), 40);
+    for (i, &p) in pts.iter().enumerate() {
+        assert_eq!(out[i], inner.dist(p, 7));
+    }
+}

@@ -1,0 +1,122 @@
+//! Offline shim for the `anyhow` crate (the real crate is unavailable in
+//! the offline image). Implements the small surface this workspace uses:
+//! `Error`, `Result`, `anyhow!`, `bail!`, and the `Context` extension for
+//! `Result`/`Option`. Errors carry only a formatted message — sufficient
+//! for the crate's diagnostics, which always stringify errors.
+
+use std::fmt;
+
+/// Message-carrying error type. Like the real `anyhow::Error`, it
+/// deliberately does NOT implement `std::error::Error`, which is what
+/// lets the blanket `From` impl below coexist with coherence rules.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// `?`-conversion from any std error (io, parse, ...).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error or a missing `Option` value.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("not a number")?;
+        if v < 0 {
+            bail!("negative: {v}");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn ok_path() {
+        assert_eq!(parse("41").unwrap(), 41);
+    }
+
+    #[test]
+    fn context_and_bail() {
+        let e = parse("x").unwrap_err().to_string();
+        assert!(e.starts_with("not a number:"), "{e}");
+        assert_eq!(parse("-2").unwrap_err().to_string(), "negative: -2");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/here")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+    }
+}
