@@ -2,12 +2,14 @@
 //! custom `harness = false` bench binary driven by `util::bench`).
 //!
 //! Two layers of output:
-//!   1. Experiment tables E1..E10 — the "tables & figures" of the paper
+//!   1. Experiment tables E1..E12 — the "tables & figures" of the paper
 //!      reproduction (quick mode by default; `-- --full` for the sizes
 //!      recorded in EXPERIMENTS.md).
 //!   2. Micro/throughput benchmarks of the hot paths: CoverWithBalls,
-//!      bulk assignment (scalar vs XLA engine), local search, and the
-//!      end-to-end 3-round solve.
+//!      bulk assignment (scalar vs XLA engine), local search, the
+//!      end-to-end 3-round solve, and the outlier-robust pipeline —
+//!      persisted as BENCH_micro.json / BENCH_outliers.json for
+//!      cross-PR perf tracking.
 //!
 //! Usage:
 //!   cargo bench                    # everything, quick experiments
@@ -21,12 +23,22 @@ use mrcoreset::algorithms::local_search::{local_search, LocalSearchCfg};
 use mrcoreset::algorithms::Instance;
 use mrcoreset::coordinator::{solve, ClusterConfig};
 use mrcoreset::coreset::cover_with_balls;
-use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::data::synth::{GaussianMixtureSpec, NoiseSpec};
 use mrcoreset::eval::{run_experiment, ALL_IDS};
 use mrcoreset::metric::dense::{sq_euclidean, EuclideanSpace};
 use mrcoreset::metric::{MetricSpace, Objective};
+use mrcoreset::outliers::{local_search_outliers, robust_cost};
 use mrcoreset::runtime::XlaEngine;
-use mrcoreset::util::bench::bench;
+use mrcoreset::util::bench::{bench, to_json, BenchResult};
+
+/// Persist results as machine-readable JSON next to the bench output so
+/// the perf trajectory is tracked across PRs, not just printed.
+fn write_bench_json(path: &str, results: &[BenchResult]) {
+    match std::fs::write(path, to_json(results)) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -78,14 +90,17 @@ fn main() {
         }
         (dist, idx)
     };
+    let mut micro_results: Vec<BenchResult> = Vec::new();
     let rs = bench("assign 20k x 256 (scalar dist loop)", 1, 5, || {
         std::hint::black_box(scalar_assign(&pts, &centers));
     });
     println!("{rs}   [{:.1} Mpairs/s]", rs.throughput_per_sec(n * 256) / 1e6);
+    micro_results.push(rs.clone());
     let rb = bench("assign 20k x 256 (nearest_batch)", 1, 5, || {
         std::hint::black_box(plain.nearest_batch(&pts, &centers));
     });
     println!("{rb}   [{:.1} Mpairs/s]", rb.throughput_per_sec(n * 256) / 1e6);
+    micro_results.push(rb.clone());
     println!(
         "batched/scalar speedup: {:.2}x",
         rs.median.as_secs_f64() / rb.median.as_secs_f64().max(1e-12)
@@ -100,6 +115,7 @@ fn main() {
             std::hint::black_box(fast.assign(&pts, &centers));
         });
         println!("{r}   [{:.1} Mpairs/s]", r.throughput_per_sec(n * 256) / 1e6);
+        micro_results.push(r);
     }
 
     // CoverWithBalls throughput
@@ -110,6 +126,7 @@ fn main() {
         std::hint::black_box(cover_with_balls(&plain, &pts, &t, radius, 0.5, 2.0));
     });
     println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(n) / 1e3);
+    micro_results.push(r);
 
     // weighted local search on a coreset-sized instance
     let sub: Vec<u32> = (0..2000u32).map(|i| i * 10).collect();
@@ -126,6 +143,7 @@ fn main() {
         ));
     });
     println!("{r}");
+    micro_results.push(r);
 
     // end-to-end 3-round solve
     for obj in [Objective::Median, Objective::Means] {
@@ -134,5 +152,60 @@ fn main() {
             std::hint::black_box(solve(&plain, &pts, &cfg));
         });
         println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(n) / 1e3);
+        micro_results.push(r);
     }
+    write_bench_json("BENCH_micro.json", &micro_results);
+
+    // ---- outliers micro benches ---------------------------------------
+    println!("\n## outliers benchmarks\n");
+    let noise = 200usize;
+    let nspec =
+        GaussianMixtureSpec { n: 10_000, d: 2, k, spread: 30.0, seed: 2, ..Default::default() };
+    let (ndata, _) = nspec.generate_with_noise(&NoiseSpec {
+        count: noise,
+        expanse: 10.0,
+        offset: 40.0,
+        seed: 3,
+    });
+    let ntotal = ndata.n();
+    let nspace = EuclideanSpace::new(Arc::new(ndata));
+    let npts: Vec<u32> = (0..ntotal as u32).collect();
+    let mut outlier_results: Vec<BenchResult> = Vec::new();
+
+    let unit = vec![1u64; npts.len()];
+    let inst = Instance::new(&npts, &unit);
+    let cs: Vec<u32> = (0..8u32).map(|i| i * 1000).collect();
+    let r = bench("robust_cost 10k z=200", 1, 5, || {
+        std::hint::black_box(robust_cost(&nspace, Objective::Median, inst, &cs, noise as u64));
+    });
+    println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(ntotal) / 1e3);
+    outlier_results.push(r);
+
+    let sub: Vec<u32> = (0..2000u32).map(|i| i * 5).collect();
+    let w = vec![5u64; sub.len()];
+    let r = bench("local_search_outliers 2k weighted k=8 z=100", 1, 3, || {
+        let cfg = LocalSearchCfg::default();
+        std::hint::black_box(local_search_outliers(
+            &nspace,
+            Objective::Median,
+            Instance::new(&sub, &w),
+            k,
+            100,
+            None,
+            &cfg,
+        ));
+    });
+    println!("{r}");
+    outlier_results.push(r);
+
+    for obj in [Objective::Median, Objective::Means] {
+        let r = bench(&format!("solve 3-round robust {obj} 10k z=200"), 1, 3, || {
+            let mut cfg = ClusterConfig::new(obj, k, 0.5);
+            cfg.outliers = noise;
+            std::hint::black_box(solve(&nspace, &npts, &cfg));
+        });
+        println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(ntotal) / 1e3);
+        outlier_results.push(r);
+    }
+    write_bench_json("BENCH_outliers.json", &outlier_results);
 }

@@ -6,7 +6,12 @@ use super::{Instance, Solution};
 
 /// Exact optimum over all k-subsets of the instance's points. Cost is
 /// exponential in k; guarded to tiny instances (C(n, k) ≤ ~2e6).
-pub fn brute_force(space: &dyn MetricSpace, obj: Objective, inst: Instance<'_>, k: usize) -> Solution {
+pub fn brute_force(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+) -> Solution {
     let n = inst.n();
     let k = k.min(n);
     assert!(binomial(n, k) <= 2_000_000, "brute_force: instance too large (n={n}, k={k})");
@@ -69,7 +74,9 @@ pub fn exact_one_center(
     best
 }
 
-fn binomial(n: usize, k: usize) -> u128 {
+/// C(n, k) with saturation above 2^60 (shared with the outlier brute
+/// reference's instance-size guard).
+pub(crate) fn binomial(n: usize, k: usize) -> u128 {
     let k = k.min(n - k);
     let mut acc: u128 = 1;
     for i in 0..k {

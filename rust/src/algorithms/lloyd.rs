@@ -58,7 +58,13 @@ impl Default for LloydCfg {
 }
 
 /// Weighted k-means++ initialization over dense rows.
-fn init_pp(data: &VectorData, pts: &[u32], weights: &[u64], k: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+fn init_pp(
+    data: &VectorData,
+    pts: &[u32],
+    weights: &[u64],
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<f32>> {
     let n = pts.len();
     let wprobs: Vec<f64> = weights.iter().map(|&w| w as f64).collect();
     let first = pts[rng.weighted_index(&wprobs).expect("positive weights")];
@@ -146,7 +152,12 @@ pub fn lloyd(
 
 /// Continuous k-means cost of arbitrary centroids over a weighted set
 /// (blocked: centroids outer, points inner, like `nearest_centroids`).
-pub fn continuous_cost(data: &VectorData, pts: &[u32], weights: &[u64], centroids: &VectorData) -> f64 {
+pub fn continuous_cost(
+    data: &VectorData,
+    pts: &[u32],
+    weights: &[u64],
+    centroids: &VectorData,
+) -> f64 {
     counter::charge(pts.len() * centroids.n());
     let mut best = vec![f64::INFINITY; pts.len()];
     for j in 0..centroids.n() {

@@ -52,14 +52,16 @@ impl Default for LocalSearchCfg {
     }
 }
 
-/// Nearest + second-nearest center bookkeeping for each point.
-struct Book {
-    d1: Vec<f64>,
-    i1: Vec<u32>, // position within `centers`
-    d2: Vec<f64>,
+/// Nearest + second-nearest center bookkeeping for each point (shared
+/// with the outlier-robust finisher, which runs the same single-swap
+/// scheme over the z-excluded objective).
+pub(crate) struct Book {
+    pub(crate) d1: Vec<f64>,
+    pub(crate) i1: Vec<u32>, // position within `centers`
+    pub(crate) d2: Vec<f64>,
 }
 
-fn rebuild_book(space: &dyn MetricSpace, pts: &[u32], centers: &[u32]) -> Book {
+pub(crate) fn rebuild_book(space: &dyn MetricSpace, pts: &[u32], centers: &[u32]) -> Book {
     let n = pts.len();
     let mut d1 = vec![f64::INFINITY; n];
     let mut i1 = vec![0u32; n];
@@ -83,6 +85,30 @@ fn rebuild_book(space: &dyn MetricSpace, pts: &[u32], centers: &[u32]) -> Book {
 /// Cost of the current solution from the book.
 fn book_cost(book: &Book, obj: Objective, weights: &[u64]) -> f64 {
     book.d1.iter().zip(weights).map(|(&d, &w)| w as f64 * obj.cost_of(d)).sum()
+}
+
+/// Sampled swap-in candidate pool (shared with the outlier-robust
+/// finisher): half uniform, half drawn from `probs` — the cost-biased
+/// D^p intuition that badly-served heavy points are the promising
+/// swap-ins — deduplicated and in ascending order. The RNG consumption
+/// order (distinct sample first, then the weighted draws) is part of
+/// the determinism contract.
+pub(crate) fn sampled_candidate_pool(
+    n: usize,
+    probs: &[f64],
+    sample_candidates: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let m = sample_candidates.min(n);
+    let mut pool = rng.sample_distinct(n, m / 2);
+    for _ in 0..(m - m / 2) {
+        if let Some(i) = rng.weighted_index(probs) {
+            pool.push(i);
+        }
+    }
+    pool.sort_unstable();
+    pool.dedup();
+    pool
 }
 
 /// Evaluate all k swaps (out ∈ S) for one candidate `cand` in a single
@@ -161,19 +187,10 @@ pub fn local_search(
         let cand_idx: Vec<usize> = if exhaustive {
             (0..n).collect()
         } else {
-            let m = cfg.sample_candidates.min(n);
-            let mut pool = rng.sample_distinct(n, m / 2);
             let probs: Vec<f64> = (0..n)
                 .map(|i| inst.weights[i] as f64 * obj.cost_of(book.d1[i]))
                 .collect();
-            for _ in 0..(m - m / 2) {
-                if let Some(i) = rng.weighted_index(&probs) {
-                    pool.push(i);
-                }
-            }
-            pool.sort_unstable();
-            pool.dedup();
-            pool
+            sampled_candidate_pool(n, &probs, cfg.sample_candidates, &mut rng)
         };
         let mut best_cost = cost;
         let mut best_swap: Option<(usize, u32)> = None;

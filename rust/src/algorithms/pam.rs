@@ -51,7 +51,13 @@ fn build(space: &dyn MetricSpace, obj: Objective, inst: Instance<'_>, k: usize) 
 }
 
 /// Full PAM: BUILD then first-improvement SWAP passes until local optimum.
-pub fn pam(space: &dyn MetricSpace, obj: Objective, inst: Instance<'_>, k: usize, cfg: &PamCfg) -> Solution {
+pub fn pam(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+    cfg: &PamCfg,
+) -> Solution {
     assert!(
         inst.n() <= cfg.max_n,
         "pam: n={} exceeds cfg.max_n={} (use local_search for large instances)",

@@ -128,8 +128,15 @@ mod tests {
 
     #[test]
     fn finds_reasonable_centers() {
-        let (data, _) = GaussianMixtureSpec { n: 2000, d: 2, k: 5, spread: 50.0, seed: 1, ..Default::default() }
-            .generate();
+        let spec = GaussianMixtureSpec {
+            n: 2000,
+            d: 2,
+            k: 5,
+            spread: 50.0,
+            seed: 1,
+            ..Default::default()
+        };
+        let (data, _) = spec.generate();
         let space = EuclideanSpace::new(Arc::new(data));
         let pts: Vec<u32> = (0..2000).collect();
         let sim = Simulator::new();

@@ -113,8 +113,15 @@ mod tests {
 
     #[test]
     fn solves_separated_mixture_well() {
-        let (data, _) = GaussianMixtureSpec { n: 1500, d: 2, k: 4, spread: 60.0, seed: 1, ..Default::default() }
-            .generate();
+        let spec = GaussianMixtureSpec {
+            n: 1500,
+            d: 2,
+            k: 4,
+            spread: 60.0,
+            seed: 1,
+            ..Default::default()
+        };
+        let (data, _) = spec.generate();
         let space = EuclideanSpace::new(Arc::new(data));
         let pts: Vec<u32> = (0..1500).collect();
         let sim = Simulator::new();

@@ -16,9 +16,12 @@ use crate::algorithms::local_search::{local_search, LocalSearchCfg};
 use crate::algorithms::pam::{pam, PamCfg};
 use crate::algorithms::{Instance, Solution};
 use crate::coreset::pipeline::{one_round_coreset, two_round_coreset, CoresetConfig};
+use crate::coreset::TlAlgo;
 use crate::mapreduce::{default_l, JobStats, PartitionStrategy, Simulator};
 use crate::metric::{MetricSpace, Objective};
-use crate::coreset::TlAlgo;
+use crate::outliers::{
+    local_search_outliers, outlier_coreset, robust_cost_of_dists, OutlierCoresetConfig,
+};
 
 /// Final-round sequential solver choice.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,6 +30,10 @@ pub enum FinalAlgo {
     LocalSearch,
     /// PAM (exhaustive swaps; small coresets only).
     Pam,
+    /// Outlier-robust local search over the (k, z) objective (selected
+    /// automatically when `ClusterConfig::outliers > 0`; with z = 0 it
+    /// degenerates to the plain robust objective).
+    RobustLocalSearch,
 }
 
 /// Full configuration of a 3-round run.
@@ -44,6 +51,11 @@ pub struct ClusterConfig {
     pub beta: f64,
     pub tl: TlAlgo,
     pub final_algo: FinalAlgo,
+    /// Number of outliers z the solver may write off (0 = plain
+    /// clustering). When positive, rounds 1–2 run the outlier-aware
+    /// coreset construction (`outliers::pipeline`) and round 3 solves the
+    /// weighted (k, z) instance (`outliers::finisher`).
+    pub outliers: usize,
     pub strategy: PartitionStrategy,
     /// Use the 1-round construction of §3.1 instead of the 2-round one
     /// (ablation: costs a factor ~2 in the approximation).
@@ -64,6 +76,7 @@ impl ClusterConfig {
             beta: 2.0,
             tl: TlAlgo::DppSeeding,
             final_algo: FinalAlgo::LocalSearch,
+            outliers: 0,
             strategy: PartitionStrategy::RoundRobin,
             one_round: false,
             seed: 0xD15C0,
@@ -79,6 +92,14 @@ pub struct RunReport {
     pub solution: Solution,
     /// Solution cost evaluated on the FULL input (not just the coreset).
     pub full_cost: f64,
+    /// Number of outliers z the solver was allowed to write off.
+    pub outliers: usize,
+    /// Full-input cost with the z most expensive points excluded
+    /// (== `full_cost` when `outliers == 0`).
+    pub robust_full_cost: f64,
+    /// Global indices of the z excluded input points, most expensive
+    /// first (empty when `outliers == 0`).
+    pub excluded: Vec<u32>,
     pub coreset_size: usize,
     pub cw_size: usize,
     pub l: usize,
@@ -106,12 +127,27 @@ pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunRe
         sim = sim.with_threads(t);
     }
     let ccfg = CoresetConfig { eps: cfg.eps, beta: cfg.beta, m, tl: cfg.tl, seed: cfg.seed };
+    let use_robust = cfg.outliers > 0 || cfg.final_algo == FinalAlgo::RobustLocalSearch;
 
-    // Rounds 1–2: coreset construction.
-    let pipe = if cfg.one_round {
-        one_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &sim)
+    // Rounds 1–2: coreset construction. Robust runs use the outlier
+    // pipeline's own center count k + z′ (cfg.m and cfg.one_round do not
+    // apply there); `m_used` is what actually ran, for the report.
+    let (pipe, m_used) = if use_robust {
+        let ocfg = OutlierCoresetConfig {
+            eps: cfg.eps,
+            beta: cfg.beta,
+            k: cfg.k,
+            z: cfg.outliers,
+            oversample: 2,
+            tl: cfg.tl,
+            seed: cfg.seed,
+        };
+        let m_local = ocfg.m_local(l.min(n));
+        (outlier_coreset(space, cfg.objective, pts, l, cfg.strategy, &ocfg, &sim), m_local)
+    } else if cfg.one_round {
+        (one_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &sim), m)
     } else {
-        two_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &sim)
+        (two_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &sim), m)
     };
     let coreset = pipe.coreset;
 
@@ -120,6 +156,21 @@ pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunRe
     let solutions = sim.round("final-solve", vec![coreset.clone()], |_, cs, meter| {
         meter.charge(cs.len());
         let inst = Instance::new(&cs.indices, &cs.weights);
+        if use_robust {
+            // Weighted (k, z) local search; the finisher seeds with the
+            // robust-better of D^p-seeding and farthest-first itself.
+            let ls = LocalSearchCfg { seed: cfg.seed ^ 0xF1A1, ..Default::default() };
+            let rs = local_search_outliers(
+                space,
+                cfg.objective,
+                inst,
+                cfg.k,
+                cfg.outliers as u64,
+                None,
+                &ls,
+            );
+            return Solution { centers: rs.centers, cost: rs.cost };
+        }
         match cfg.final_algo {
             FinalAlgo::LocalSearch => {
                 // init = better of D^p-seeding and farthest-first: the
@@ -144,20 +195,34 @@ pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunRe
                 let pc = PamCfg { max_n: cs.len().max(1), ..Default::default() };
                 pam(space, cfg.objective, inst, cfg.k, &pc)
             }
+            FinalAlgo::RobustLocalSearch => unreachable!("handled by the robust branch above"),
         }
     });
     let solution = solutions.into_iter().next().expect("one reducer");
 
-    // Evaluation (outside the MR job): cost on the full input.
-    let full_cost = space.assign(pts, &solution.centers).cost_unit(cfg.objective);
+    // Evaluation (outside the MR job): cost on the full input, plus the
+    // robust (z-excluded) cost when outliers are enabled.
+    let assign = space.assign(pts, &solution.centers);
+    let full_cost = assign.cost_unit(cfg.objective);
+    let (robust_full_cost, excluded) = if cfg.outliers > 0 {
+        let unit = vec![1u64; pts.len()];
+        let rc = robust_cost_of_dists(cfg.objective, &assign.dist, &unit, cfg.outliers as u64);
+        let excluded: Vec<u32> = rc.excluded.iter().map(|&p| pts[p as usize]).collect();
+        (rc.cost, excluded)
+    } else {
+        (full_cost, Vec::new())
+    };
 
     let stats = sim.take_stats();
     RunReport {
         full_cost,
+        outliers: cfg.outliers,
+        robust_full_cost,
+        excluded,
         coreset_size: coreset.len(),
         cw_size: pipe.cw_size,
         l,
-        m,
+        m: m_used,
         rounds: stats.num_rounds(),
         max_local_memory: stats.max_local_memory(),
         aggregate_memory: stats.aggregate_memory(),
@@ -260,6 +325,82 @@ mod tests {
         let b = solve(&space, &pts, &cfg);
         assert_eq!(a.solution.centers, b.solution.centers);
         assert_eq!(a.coreset_size, b.coreset_size);
+    }
+
+    /// Clusters in a small box plus a far uniform noise blob — the
+    /// regime where a plain solver provably distorts: dedicating a
+    /// center to the blob saves far more than abandoning a cluster
+    /// costs, so the z = 0 solution sacrifices real structure.
+    fn noisy(n: usize, noise: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+        use crate::data::synth::NoiseSpec;
+        let spec = GaussianMixtureSpec { n, d: 2, k: 4, spread: 30.0, seed, ..Default::default() };
+        let (data, _) = spec.generate_with_noise(&NoiseSpec {
+            count: noise,
+            expanse: 10.0,
+            offset: 40.0,
+            seed: seed ^ 0x77,
+        });
+        let total = data.n() as u32;
+        (EuclideanSpace::new(Arc::new(data)), (0..total).collect())
+    }
+
+    #[test]
+    fn outlier_solve_three_rounds_and_exclusions() {
+        let (space, pts) = noisy(1200, 30, 11);
+        let mut cfg = ClusterConfig::new(Objective::Median, 4, 0.5);
+        cfg.outliers = 30;
+        let rep = solve(&space, &pts, &cfg);
+        assert_eq!(rep.rounds, 3, "outlier pipeline keeps the 3-round shape");
+        assert_eq!(rep.solution.centers.len(), 4);
+        assert_eq!(rep.outliers, 30);
+        assert_eq!(rep.excluded.len(), 30, "unit weights: exactly z excluded points");
+        assert!(rep.robust_full_cost < rep.full_cost);
+        assert!(rep.robust_full_cost.is_finite() && rep.robust_full_cost > 0.0);
+        assert!(rep.dist_evals > 0);
+    }
+
+    /// The subsystem's reason to exist: with z = 50 on a noisy mixture
+    /// the inlier (z-excluded) objective is strictly better than what
+    /// the plain z = 0 solver achieves on the same instance.
+    #[test]
+    fn robust_solver_beats_plain_on_inlier_objective() {
+        let (space, pts) = noisy(1200, 50, 13);
+        let mut rcfg = ClusterConfig::new(Objective::Median, 4, 0.5);
+        rcfg.outliers = 50;
+        let robust = solve(&space, &pts, &rcfg);
+        let plain = solve(&space, &pts, &ClusterConfig::new(Objective::Median, 4, 0.5));
+        // evaluate the plain solution under the same z-excluded objective
+        let assign = space.assign(&pts, &plain.solution.centers);
+        let unit = vec![1u64; pts.len()];
+        let plain_robust = crate::outliers::robust_cost_of_dists(
+            Objective::Median,
+            &assign.dist,
+            &unit,
+            50,
+        );
+        assert!(
+            robust.robust_full_cost < plain_robust.cost,
+            "robust {} vs plain-evaluated-robust {}",
+            robust.robust_full_cost,
+            plain_robust.cost
+        );
+        // the excluded set is (essentially) the injected noise: noise
+        // indices sit at the end of the store
+        let noise_start = pts.len() as u32 - 50;
+        let recall = robust.excluded.iter().filter(|&&i| i >= noise_start).count() as f64 / 50.0;
+        assert!(recall >= 0.9, "outlier recall {recall}");
+    }
+
+    #[test]
+    fn robust_final_algo_with_z_zero_matches_plain_shape() {
+        let (space, pts) = mixture(800, 4, 17);
+        let mut cfg = ClusterConfig::new(Objective::Means, 4, 0.5);
+        cfg.final_algo = FinalAlgo::RobustLocalSearch;
+        let rep = solve(&space, &pts, &cfg);
+        assert_eq!(rep.rounds, 3);
+        assert_eq!(rep.solution.centers.len(), 4);
+        assert!(rep.excluded.is_empty());
+        assert_eq!(rep.robust_full_cost.to_bits(), rep.full_cost.to_bits());
     }
 
     #[test]

@@ -13,6 +13,14 @@ impl RunReport {
             self.solution.centers.len(),
             fnum(self.full_cost)
         ));
+        if self.outliers > 0 {
+            s.push_str(&format!(
+                "robust:   z={} cost(inliers)={} excluded={} pts\n",
+                self.outliers,
+                fnum(self.robust_full_cost),
+                self.excluded.len()
+            ));
+        }
         s.push_str(&format!(
             "coreset:  |E_w|={} (|C_w|={}), L={}, m={}\n",
             self.coreset_size, self.cw_size, self.l, self.m
@@ -74,7 +82,22 @@ mod tests {
         let s = rep.summary();
         assert!(s.contains("rounds=3"));
         assert!(s.contains("coreset:"));
+        assert!(!s.contains("robust:"), "z=0 runs must not print a robust line");
         let row = rep.table_row(0.5);
         assert_eq!(row.len(), 6);
+    }
+
+    #[test]
+    fn summary_reports_robust_line_when_outliers_enabled() {
+        let (data, _) =
+            GaussianMixtureSpec { n: 500, d: 2, k: 3, seed: 2, ..Default::default() }.generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..500).collect();
+        let mut cfg = ClusterConfig::new(Objective::Median, 3, 0.5);
+        cfg.outliers = 10;
+        let rep = solve(&space, &pts, &cfg);
+        let s = rep.summary();
+        assert!(s.contains("robust:   z=10"), "summary:\n{s}");
+        assert!(s.contains("excluded=10 pts"), "summary:\n{s}");
     }
 }

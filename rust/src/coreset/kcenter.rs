@@ -93,7 +93,12 @@ mod tests {
         let sim = Simulator::new();
         let tight = solve_kcenter(&space, &pts, 8, 32, 8, &sim);
         let loose = solve_kcenter(&space, &pts, 8, 8, 8, &sim);
-        assert!(tight.radius <= loose.radius * 1.2, "tight {} loose {}", tight.radius, loose.radius);
+        assert!(
+            tight.radius <= loose.radius * 1.2,
+            "tight {} loose {}",
+            tight.radius,
+            loose.radius
+        );
         assert!(tight.summary_size > loose.summary_size);
     }
 

@@ -120,8 +120,8 @@ mod tests {
         let mut rng = Rng::new(7);
         let eps = 0.4;
         let beta = 4.0;
-        let out =
-            local_coreset(&space, Objective::Median, &pts, 10, eps, beta, TlAlgo::DppSeeding, &mut rng);
+        let tl = TlAlgo::DppSeeding;
+        let out = local_coreset(&space, Objective::Median, &pts, 10, eps, beta, tl, &mut rng);
         let prox = out.cover.proximity_sum(&space, &pts);
         let bound = eps / beta * out.t_cost; // = ε/(2β)·(R·n + ν(T)) with R·n = ν(T)
         assert!(prox <= bound + 1e-6, "prox {prox} > bound {bound}");
@@ -133,8 +133,8 @@ mod tests {
         let mut rng = Rng::new(8);
         let eps = 0.3;
         let beta = 4.0;
-        let out =
-            local_coreset(&space, Objective::Means, &pts, 10, eps, beta, TlAlgo::DppSeeding, &mut rng);
+        let tl = TlAlgo::DppSeeding;
+        let out = local_coreset(&space, Objective::Means, &pts, 10, eps, beta, tl, &mut rng);
         // Lemma 3.10: Σ d(x,τ(x))² ≤ (2ε²/2β)(R²n + μ(T)) = 2ε²·μ(T)/β... with
         // cover params (√2ε, √β): shrink² = 2ε²/(4β) = ε²/(2β); bound:
         // shrink²·Σ(max(R, d)²) ≤ shrink²·(R²·n + μ(T)) = ε²/(2β)·2μ(T) = ε²μ(T)/β
@@ -172,8 +172,8 @@ mod tests {
         let space = EuclideanSpace::new(Arc::new(data));
         let pts: Vec<u32> = (0..2000).collect();
         let mut rng = Rng::new(10);
-        let out =
-            local_coreset(&space, Objective::Median, &pts, 10, 0.8, 2.0, TlAlgo::DppSeeding, &mut rng);
+        let tl = TlAlgo::DppSeeding;
+        let out = local_coreset(&space, Objective::Median, &pts, 10, 0.8, 2.0, tl, &mut rng);
         assert!(
             out.cover.set.len() < pts.len() / 2,
             "coreset {} not much smaller than n {}",

@@ -63,6 +63,29 @@ pub struct PipelineOutput {
     pub global_r: Option<f64>,
 }
 
+/// Round 1 of every pipeline (shared with `outliers::pipeline`, which
+/// passes its own round name, seed salt, and oversampled m through
+/// `cfg`): per-partition local coresets, memory-metered.
+pub(crate) fn run_round1_named(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    parts: &[Vec<u32>],
+    cfg: &CoresetConfig,
+    sim: &Simulator,
+    name: &str,
+    seed_salt: u64,
+) -> Vec<LocalCoresetOut> {
+    let inputs: Vec<(usize, Vec<u32>)> = parts.iter().cloned().enumerate().collect();
+    sim.round(name, inputs, |_, (ell, pts), meter| {
+        meter.charge(pts.len()); // resident partition
+        let mut rng = Rng::new(cfg.seed ^ (seed_salt + *ell as u64));
+        let out = local_coreset(space, obj, pts, cfg.m, cfg.eps, cfg.beta, cfg.tl, &mut rng);
+        meter.charge(out.t.len() + out.cover.set.len()); // T_ℓ + C_{w,ℓ}
+        meter.release(pts.len() + out.t.len());
+        out
+    })
+}
+
 fn run_round1(
     space: &dyn MetricSpace,
     obj: Objective,
@@ -70,15 +93,31 @@ fn run_round1(
     cfg: &CoresetConfig,
     sim: &Simulator,
 ) -> Vec<LocalCoresetOut> {
-    let inputs: Vec<(usize, Vec<u32>)> = parts.iter().cloned().enumerate().collect();
-    sim.round("coreset-r1-local", inputs, |_, (ell, pts), meter| {
-        meter.charge(pts.len()); // resident partition
-        let mut rng = Rng::new(cfg.seed ^ (0xA5A5_0000 + *ell as u64));
-        let out = local_coreset(space, obj, pts, cfg.m, cfg.eps, cfg.beta, cfg.tl, &mut rng);
-        meter.charge(out.t.len() + out.cover.set.len()); // T_ℓ + C_{w,ℓ}
-        meter.release(pts.len() + out.t.len());
-        out
-    })
+    run_round1_named(space, obj, parts, cfg, sim, "coreset-r1-local", 0xA5A5_0000)
+}
+
+/// Global tolerance radius R from the per-partition radii (step 1 of
+/// round 2): |P_ℓ|-weighted mean for k-median, weighted quadratic mean
+/// for k-means. Shared with the outliers pipeline.
+pub(crate) fn global_radius(obj: Objective, radii: &[f64], part_sizes: &[usize]) -> f64 {
+    let n_total: usize = part_sizes.iter().sum();
+    match obj {
+        Objective::Median => {
+            radii
+                .iter()
+                .zip(part_sizes)
+                .map(|(&r, &s)| r * s as f64)
+                .sum::<f64>()
+                / n_total as f64
+        }
+        Objective::Means => (radii
+            .iter()
+            .zip(part_sizes)
+            .map(|(&r, &s)| r * r * s as f64)
+            .sum::<f64>()
+            / n_total as f64)
+            .sqrt(),
+    }
 }
 
 /// §3.1: 1-round construction, returns C_w.
@@ -93,7 +132,8 @@ pub fn one_round_coreset(
 ) -> PipelineOutput {
     let parts = partition(pts, l, strategy);
     let locals = run_round1(space, obj, &parts, cfg, sim);
-    let coreset = WeightedSet::union(&locals.iter().map(|o| o.cover.set.clone()).collect::<Vec<_>>());
+    let coreset =
+        WeightedSet::union(&locals.iter().map(|o| o.cover.set.clone()).collect::<Vec<_>>());
     let cw_size = coreset.len();
     PipelineOutput {
         coreset,
@@ -119,21 +159,9 @@ pub fn two_round_coreset(
     let radii: Vec<f64> = locals.iter().map(|o| o.r).collect();
     let part_sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
     let cw = WeightedSet::union(&locals.iter().map(|o| o.cover.set.clone()).collect::<Vec<_>>());
-    let n_total: usize = part_sizes.iter().sum();
 
     // Global tolerance radius R (step 1 of round 2).
-    let global_r = match obj {
-        Objective::Median => {
-            radii.iter().zip(&part_sizes).map(|(&r, &s)| r * s as f64).sum::<f64>() / n_total as f64
-        }
-        Objective::Means => (radii
-            .iter()
-            .zip(&part_sizes)
-            .map(|(&r, &s)| r * r * s as f64)
-            .sum::<f64>()
-            / n_total as f64)
-            .sqrt(),
-    };
+    let global_r = global_radius(obj, &radii, &part_sizes);
 
     // Round 2: every reducer receives its partition + broadcast C_w + R.
     let (ce, cb) = cover_params(obj, cfg.eps, cfg.beta);

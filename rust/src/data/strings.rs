@@ -78,7 +78,8 @@ mod tests {
 
     #[test]
     fn members_close_to_cluster_seed() {
-        let spec = StringClusterSpec { n: 200, clusters: 4, max_edits: 3, seed: 5, ..Default::default() };
+        let spec =
+            StringClusterSpec { n: 200, clusters: 4, max_edits: 3, seed: 5, ..Default::default() };
         let (strs, labels) = spec.generate();
         // same-cluster pairs within 2*max_edits; the random 24-char seeds
         // themselves are pairwise far apart with overwhelming probability

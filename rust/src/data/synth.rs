@@ -61,6 +61,52 @@ impl GaussianMixtureSpec {
     }
 }
 
+/// Uniform background noise injected into a mixture workload (the
+/// outliers subsystem's E12 workload). Unlike `outlier_frac` — which
+/// *replaces* a random fraction of mixture points — a `NoiseSpec`
+/// appends an exact, deterministic number of noise points after the
+/// mixture, so experiments know both the true outlier count (the z to
+/// solve with) and their indices (`n..n+count`, labelled `u32::MAX`).
+#[derive(Clone, Debug)]
+pub struct NoiseSpec {
+    /// Number of uniform noise points appended after the mixture.
+    pub count: usize,
+    /// Noise box half-width, as a multiple of the mixture's `spread`.
+    pub expanse: f64,
+    /// Noise box center along every axis, as a multiple of `spread`
+    /// (0 centers the noise on the data; large values give a far-flung
+    /// blob — the adversarial regime for non-robust solvers).
+    pub offset: f64,
+    pub seed: u64,
+}
+
+impl Default for NoiseSpec {
+    fn default() -> Self {
+        NoiseSpec { count: 0, expanse: 10.0, offset: 0.0, seed: 0xBAD }
+    }
+}
+
+impl GaussianMixtureSpec {
+    /// Generate the mixture, then append `noise.count` uniform points
+    /// drawn from the box `offset·spread ± expanse·spread` per axis.
+    /// Noise points get label `u32::MAX` and occupy indices
+    /// `self.n..self.n + noise.count`.
+    pub fn generate_with_noise(&self, noise: &NoiseSpec) -> (VectorData, Vec<u32>) {
+        let (base, mut labels) = self.generate();
+        let mut rng = Rng::new(noise.seed);
+        let center = self.spread * noise.offset;
+        let half = self.spread * noise.expanse;
+        let mut data = base.raw().to_vec();
+        for _ in 0..noise.count {
+            for _ in 0..self.d {
+                data.push(rng.range_f64(center - half, center + half) as f32);
+            }
+            labels.push(u32::MAX);
+        }
+        (VectorData::new(data, self.d), labels)
+    }
+}
+
 /// Low-intrinsic-dimension manifold embedded in a higher ambient space.
 #[derive(Clone, Debug)]
 pub struct ManifoldSpec {
@@ -186,8 +232,50 @@ mod tests {
     }
 
     #[test]
+    fn noise_spec_appends_exact_count_with_markers() {
+        let spec =
+            GaussianMixtureSpec { n: 500, d: 3, k: 4, spread: 20.0, seed: 7, ..Default::default() };
+        let noise = NoiseSpec { count: 25, expanse: 10.0, offset: 0.0, seed: 9 };
+        let (data, labels) = spec.generate_with_noise(&noise);
+        assert_eq!(data.n(), 525);
+        assert_eq!(labels.len(), 525);
+        assert!(labels[..500].iter().all(|&l| l < 4));
+        assert!(labels[500..].iter().all(|&l| l == u32::MAX));
+        // noise coordinates live in the declared box
+        for i in 500..525u32 {
+            for &x in data.row(i) {
+                assert!(x.abs() <= 200.0 + 1e-3, "noise coord {x} outside box");
+            }
+        }
+        // base mixture is bit-identical to generating without noise
+        let (plain, _) = spec.generate();
+        assert_eq!(&data.raw()[..500 * 3], plain.raw());
+    }
+
+    #[test]
+    fn noise_spec_offset_shifts_the_box() {
+        let spec =
+            GaussianMixtureSpec { n: 100, d: 2, k: 2, spread: 10.0, seed: 8, ..Default::default() };
+        let noise = NoiseSpec { count: 40, expanse: 2.0, offset: 50.0, seed: 10 };
+        let (data, _) = spec.generate_with_noise(&noise);
+        // box: 500 ± 20 per axis
+        for i in 100..140u32 {
+            for &x in data.row(i) {
+                assert!((480.0..=520.0).contains(&(x as f64)), "noise coord {x}");
+            }
+        }
+    }
+
+    #[test]
     fn clusters_are_separated_when_spread_large() {
-        let spec = GaussianMixtureSpec { n: 500, d: 4, k: 3, spread: 100.0, seed: 5, ..Default::default() };
+        let spec = GaussianMixtureSpec {
+            n: 500,
+            d: 4,
+            k: 3,
+            spread: 100.0,
+            seed: 5,
+            ..Default::default()
+        };
         let (data, labels) = spec.generate();
         let s = EuclideanSpace::new(Arc::new(data));
         // same-cluster distances are far below cross-cluster ones

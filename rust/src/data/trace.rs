@@ -106,7 +106,8 @@ mod tests {
 
     #[test]
     fn has_noise_and_all_sources() {
-        let spec = TraceSpec { n: 20_000, sources: 6, noise_frac: 0.05, seed: 2, ..Default::default() };
+        let spec =
+            TraceSpec { n: 20_000, sources: 6, noise_frac: 0.05, seed: 2, ..Default::default() };
         let (_, labels) = spec.generate();
         let noise = labels.iter().filter(|&&l| l == u32::MAX).count();
         assert!(noise > 500, "noise count {noise}");
@@ -119,7 +120,15 @@ mod tests {
     fn drift_moves_sources() {
         // first and last thousand points of one source should have
         // different means when drift is large
-        let spec = TraceSpec { n: 30_000, d: 2, sources: 1, drift: 0.2, noise_frac: 0.0, seed: 3, ..Default::default() };
+        let spec = TraceSpec {
+            n: 30_000,
+            d: 2,
+            sources: 1,
+            drift: 0.2,
+            noise_frac: 0.0,
+            seed: 3,
+            ..Default::default()
+        };
         let (data, _) = spec.generate();
         let mean = |lo: usize, hi: usize| -> Vec<f64> {
             let mut m = vec![0.0; 2];

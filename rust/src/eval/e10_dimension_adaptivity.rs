@@ -39,7 +39,9 @@ pub fn run(quick: bool) -> ExpResult {
         title: "Coreset size tracks intrinsic (not ambient) dimension (§1.2)",
         tables: vec![("ambient sweep at intrinsic D=2".to_string(), table)],
         notes: vec![
-            "|E_w| and M_L stay ~flat as the ambient dimension grows 16x: the construction is oblivious to D and adapts to the manifold.".to_string(),
+            "|E_w| and M_L stay ~flat as the ambient dimension grows 16x: the construction \
+             is oblivious to D and adapts to the manifold."
+                .to_string(),
         ],
     }
 }

@@ -90,7 +90,10 @@ pub fn run(quick: bool) -> ExpResult {
             ("(d) partitions L".to_string(), t_l),
         ],
         notes: vec![
-            "All variants stay within O(ε) of the reference: the construction is robust to its knobs; they trade coreset size (memory) against constant factors, as §3.4 discusses.".to_string(),
+            "All variants stay within O(ε) of the reference: the construction is robust to \
+             its knobs; they trade coreset size (memory) against constant factors, as §3.4 \
+             discusses."
+                .to_string(),
         ],
     }
 }

@@ -34,7 +34,8 @@ pub fn run(quick: bool) -> ExpResult {
             ..Default::default()
         }
         .generate();
-        cases.push(("manhattan", Box::new(ManhattanSpace::new(Arc::new(data))), (0..n as u32).collect()));
+        let pts: Vec<u32> = (0..n as u32).collect();
+        cases.push(("manhattan", Box::new(ManhattanSpace::new(Arc::new(data))), pts));
     }
     {
         let (strs, _) = StringClusterSpec {
@@ -48,7 +49,8 @@ pub fn run(quick: bool) -> ExpResult {
     }
 
     for (name, space, pts) in &cases {
-        let t: Vec<u32> = (0..6u32).map(|i| pts[(i as usize * pts.len() / 6).min(pts.len() - 1)]).collect();
+        let t: Vec<u32> =
+            (0..6u32).map(|i| pts[(i as usize * pts.len() / 6).min(pts.len() - 1)]).collect();
         let assign = space.assign(pts, &t);
         let r = assign.dist.iter().sum::<f64>() / pts.len() as f64;
         for (eps, beta) in [(0.25, 2.0), (0.5, 2.0), (0.5, 1.0)] {
@@ -81,7 +83,7 @@ pub fn run(quick: bool) -> ExpResult {
         title: "CoverWithBalls per-point guarantee (Lemma 3.1)",
         tables: vec![("guarantee".to_string(), table)],
         notes: vec![
-            "`ok` must be true everywhere: the observed worst-case shrink ratio never exceeds ε/(2β)."
+            "`ok` must be true everywhere: the observed worst shrink ratio never exceeds ε/(2β)."
                 .to_string(),
         ],
     }

@@ -93,8 +93,13 @@ pub fn run(quick: bool) -> ExpResult {
             ("size vs n at eps=0.5, D=2".to_string(), n_tab),
         ],
         notes: vec![
-            "The 1/ε exponent should increase with intrinsic D (theory: ≈ 2D for the 2-round set in the worst case; benign data sits lower).".to_string(),
-            format!("n-scaling exponent: |E_w| ~ n^{} (r²={}) — strongly sublinear as the log²|P| bound predicts.", fnum(e_n), fnum(r2_n)),
+            "The 1/ε exponent should increase with intrinsic D (≈ 2D worst case; less when benign)."
+                .to_string(),
+            format!(
+                "n-scaling exponent: |E_w| ~ n^{} (r²={}) — sublinear, as the bound predicts.",
+                fnum(e_n),
+                fnum(r2_n)
+            ),
         ],
     }
 }

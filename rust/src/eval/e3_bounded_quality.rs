@@ -77,7 +77,10 @@ pub fn run(quick: bool) -> ExpResult {
         title: "ε-bounded coreset property (Lemmas 3.5/3.10 + 2.7)",
         tables: vec![("proximity vs bound".to_string(), table)],
         notes: vec![
-            "opt~ (strong local search) upper-bounds the true opt cost, so the measured ratio slightly underestimates the true one; the ratio/bound column sitting well below 1 (not merely at 1) is what certifies the lemma with margin.".to_string(),
+            "opt~ (strong local search) upper-bounds the true opt cost, so the measured ratio \
+             slightly underestimates the true one; the ratio/bound column sitting well below \
+             1 (not merely at 1) is what certifies the lemma with margin."
+                .to_string(),
         ],
     }
 }

@@ -69,7 +69,9 @@ pub(super) fn run_for(
         ]);
     }
     notes.push(
-        "ratio → 1+O(ε) as ε ↓ (2-round); the 1-round ablation may trail (§3.1's factor-2 analysis) though on benign data both sit close to 1.".to_string(),
+        "ratio → 1+O(ε) as ε ↓ (2-round); the 1-round ablation may trail (§3.1's factor 2) \
+         though on benign data both sit close to 1."
+            .to_string(),
     );
     ExpResult { id, title, tables: vec![("accuracy vs eps".to_string(), table)], notes }
 }

@@ -50,8 +50,14 @@ pub fn run(quick: bool) -> ExpResult {
         title: "Local memory sublinear in n (Thm 3.14)",
         tables: vec![("memory vs n".to_string(), table)],
         notes: vec![
-            format!("fit: M_L ≈ {} · n^{} (r²={}); the theory predicts exponent ≈ 2/3 (+o(1)).", fnum(c), fnum(e), fnum(r2)),
-            "M_L/n must shrink monotonically — the defining signature of sublinear local memory.".to_string(),
+            format!(
+                "fit: M_L ≈ {} · n^{} (r²={}); the theory predicts exponent ≈ 2/3 (+o(1)).",
+                fnum(c),
+                fnum(e),
+                fnum(r2)
+            ),
+            "M_L/n must shrink monotonically — the defining signature of sublinear local memory."
+                .to_string(),
         ],
     }
 }

@@ -113,8 +113,13 @@ pub fn run(quick: bool) -> ExpResult {
             ("needle workload (k-median, rare far clusters)".to_string(), needle_tab),
         ],
         notes: vec![
-            "Noisy mixture: all methods are competitive (benign case); the separation appears on the needle workload.".to_string(),
-            "Needle workload: uniform/EIM drop needles from their summaries and pay the transport cost; the paper's per-point CoverWithBalls guarantee keeps every needle representable, so its ratio stays ≈ 1.".to_string(),
+            "Noisy mixture: all methods are competitive (benign case); the separation \
+             appears on the needle workload."
+                .to_string(),
+            "Needle workload: uniform/EIM drop needles from their summaries and pay the \
+             transport cost; the per-point CoverWithBalls guarantee keeps every needle \
+             representable, so its ratio stays ≈ 1."
+                .to_string(),
         ],
     }
 }
@@ -130,8 +135,9 @@ fn needle_comparison(quick: bool) -> Table {
     let mut rng = Rng::new(0x4EED);
     let mut rows: Vec<Vec<f32>> = Vec::new();
     // base mass: 8 clusters near the origin region
-    let (base, _) = GaussianMixtureSpec { n: n_base, d: 2, k: 8, spread: 30.0, seed: 72, ..Default::default() }
-        .generate();
+    let base_spec =
+        GaussianMixtureSpec { n: n_base, d: 2, k: 8, spread: 30.0, seed: 72, ..Default::default() };
+    let (base, _) = base_spec.generate();
     for i in 0..base.n() {
         rows.push(base.row(i as u32).to_vec());
     }

@@ -44,7 +44,8 @@ pub fn run(quick: bool) -> ExpResult {
     let full = lloyd_best(&data, &pts, &unit, k);
 
     let space = EuclideanSpace::new(Arc::new(data.clone()));
-    let mut table = Table::new(vec!["eps", "|C_w|", "cost(Lloyd on C_w)", "cost(Lloyd full)", "ratio"]);
+    let mut table =
+        Table::new(vec!["eps", "|C_w|", "cost(Lloyd on C_w)", "cost(Lloyd full)", "ratio"]);
     for eps in [0.25, 0.5, 0.9] {
         let sim = Simulator::new();
         let cfg = CoresetConfig::new(k, eps);
@@ -83,8 +84,11 @@ pub fn run(quick: bool) -> ExpResult {
             ("discrete vs continuous".to_string(), gap),
         ],
         notes: vec![
-            "ratio → 1 as ε ↓ : the 1-round C_w suffices in the continuous case (α+O(ε), no factor 2).".to_string(),
-            "continuous cost ≤ discrete cost (centroids are unconstrained); the gap is the price of S ⊆ P.".to_string(),
+            "ratio → 1 as ε ↓ : the 1-round C_w suffices in the continuous case (no factor 2)."
+                .to_string(),
+            "continuous cost ≤ discrete cost (centroids unconstrained); the gap is the price \
+             of S ⊆ P."
+                .to_string(),
         ],
     }
 }

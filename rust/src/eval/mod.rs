@@ -1,8 +1,8 @@
 //! Experiment harness: every quantitative claim in the paper becomes an
 //! experiment (the paper has no empirical section of its own — see
-//! DESIGN.md §3 for the full index E1..E10). `cargo bench` and
-//! `mrcoreset exp <id>` both route here; results are recorded in
-//! EXPERIMENTS.md.
+//! DESIGN.md §3 for the index E1..E10; E11 ablations and E12 outliers
+//! extend it). `cargo bench` and `mrcoreset exp <id>` both route here;
+//! results are recorded in EXPERIMENTS.md.
 
 pub mod common;
 mod e1_cover_guarantee;
@@ -16,6 +16,7 @@ mod e8_baselines;
 mod e9_continuous;
 mod e10_dimension_adaptivity;
 mod e11_ablation;
+mod e12_outliers;
 
 use crate::util::table::Table;
 
@@ -40,7 +41,8 @@ impl ExpResult {
     }
 }
 
-pub const ALL_IDS: &[&str] = &["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11"];
+pub const ALL_IDS: &[&str] =
+    &["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12"];
 
 /// Run an experiment by id. `quick` shrinks workloads for CI.
 pub fn run_experiment(id: &str, quick: bool) -> Option<ExpResult> {
@@ -56,8 +58,45 @@ pub fn run_experiment(id: &str, quick: bool) -> Option<ExpResult> {
         "e9" => Some(e9_continuous::run(quick)),
         "e10" => Some(e10_dimension_adaptivity::run(quick)),
         "e11" => Some(e11_ablation::run(quick)),
+        "e12" => Some(e12_outliers::run(quick)),
         _ => None,
     }
+}
+
+/// Error for an experiment id `run_experiment` does not know.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownExperiment {
+    pub id: String,
+}
+
+impl std::fmt::Display for UnknownExperiment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown experiment `{}` (known: {})", self.id, ALL_IDS.join(", "))
+    }
+}
+
+impl std::error::Error for UnknownExperiment {}
+
+/// Check a batch of ids against the registry without running anything,
+/// so callers can fail fast before any (expensive) experiment starts.
+pub fn validate_ids(ids: &[&str]) -> Result<(), UnknownExperiment> {
+    for id in ids {
+        if !ALL_IDS.contains(id) {
+            return Err(UnknownExperiment { id: (*id).to_string() });
+        }
+    }
+    Ok(())
+}
+
+/// Run a batch of experiments by id, collecting every result before
+/// returning; fails with a proper error — not a panic — on an unknown
+/// id, validated up front so a typo costs nothing. This is the
+/// collect-all library entry; the CLI instead pairs [`validate_ids`]
+/// with per-id [`run_experiment`] calls so tables stream as each
+/// experiment completes.
+pub fn run_all(ids: &[&str], quick: bool) -> Result<Vec<ExpResult>, UnknownExperiment> {
+    validate_ids(ids)?;
+    Ok(ids.iter().map(|id| run_experiment(id, quick).expect("validated id")).collect())
 }
 
 #[cfg(test)]
@@ -82,5 +121,28 @@ mod tests {
     #[test]
     fn unknown_id_is_none() {
         assert!(run_experiment("e99", true).is_none());
+    }
+
+    #[test]
+    fn run_all_surfaces_unknown_ids_as_errors() {
+        let err = run_all(&["e1", "e99"], true).unwrap_err();
+        assert_eq!(err.id, "e99");
+        let msg = err.to_string();
+        assert!(msg.contains("e99") && msg.contains("e12"), "message: {msg}");
+    }
+
+    #[test]
+    fn validate_ids_accepts_registry_and_rejects_unknown() {
+        assert!(validate_ids(ALL_IDS).is_ok());
+        assert!(validate_ids(&[]).is_ok());
+        assert_eq!(validate_ids(&["e12", "nope"]).unwrap_err().id, "nope");
+    }
+
+    #[test]
+    fn run_all_returns_results_in_order() {
+        let res = run_all(&["e7", "e1"], true).unwrap();
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].id, "e7");
+        assert_eq!(res[1].id, "e1");
     }
 }

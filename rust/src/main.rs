@@ -2,13 +2,15 @@
 //! k-median/k-means solver and its experiment suite.
 //!
 //! Subcommands:
-//!   run     solve a clustering instance (synthetic or CSV)
-//!   exp     run experiments e1..e10 (or `all`) and print their tables
+//!   run     solve a clustering instance (synthetic or CSV); `--z Z`
+//!           switches to the outlier-robust (k, z) pipeline
+//!   exp     run experiments e1..e12 (or `all`) and print their tables
 //!   gen     generate a synthetic dataset to CSV
 //!   info    report engine/artifact status
 //!
 //! Examples:
 //!   mrcoreset run --alg kmedian --n 20000 --d 2 --k 8 --eps 0.4
+//!   mrcoreset run --alg kmedian --k 8 --noise 200 --z 200
 //!   mrcoreset run data.csv --alg kmeans --k 10 --eps 0.25
 //!   mrcoreset exp e4 --full
 //!   mrcoreset gen --n 10000 --d 4 --k 8 --out points.csv
@@ -19,8 +21,8 @@ use std::sync::Arc;
 use mrcoreset::coordinator::{solve, ClusterConfig, FinalAlgo};
 use mrcoreset::coreset::TlAlgo;
 use mrcoreset::data::csv;
-use mrcoreset::data::synth::GaussianMixtureSpec;
-use mrcoreset::eval::{run_experiment, ALL_IDS};
+use mrcoreset::data::synth::{GaussianMixtureSpec, NoiseSpec};
+use mrcoreset::eval::{run_experiment, validate_ids, ALL_IDS};
 use mrcoreset::mapreduce::PartitionStrategy;
 use mrcoreset::metric::dense::EuclideanSpace;
 use mrcoreset::metric::Objective;
@@ -28,12 +30,18 @@ use mrcoreset::runtime::XlaEngine;
 use mrcoreset::util::cli::Args;
 
 const USAGE: &str = "usage: mrcoreset <run|exp|gen|info> [flags]
-  run  [file.csv] --alg kmedian|kmeans --k K --eps E [--n N --d D] [--l L] [--m M]
-       [--beta B] [--tl dpp|local-search|gonzalez] [--final local-search|pam]
-       [--one-round] [--strategy rr|contig|shuffle] [--seed S] [--no-engine]
-  exp  <e1..e10|all> [--full]
-  gen  --n N --d D --k K --out FILE [--spread S] [--outliers F] [--seed S]
-  info";
+  run  [file.csv] --alg kmedian|kmeans --k K --eps E [--z Z] [--n N --d D]
+       [--noise N] [--l L] [--m M] [--beta B] [--tl dpp|local-search|gonzalez]
+       [--final local-search|pam|robust] [--one-round]
+       [--strategy rr|contig|shuffle] [--seed S] [--no-engine]
+  exp  <e1..e12|all> [--full]
+  gen  --n N --d D --k K --out FILE [--spread S] [--outliers F] [--noise N]
+       [--seed S]
+  info
+
+  --z Z      solve the (k, z) objective: write off the Z most expensive
+             points as outliers (outlier-robust pipeline + finisher)
+  --noise N  append N uniform noise points to the synthetic input";
 
 fn main() {
     let args = Args::from_env();
@@ -67,6 +75,9 @@ fn cmd_run(args: &Args) {
 
     // data: CSV positional, or synthetic with --n/--d
     let data = if let Some(file) = args.positional.first() {
+        if args.has("noise") {
+            eprintln!("note: --noise only applies to synthetic inputs; {file} is used as-is");
+        }
         match csv::load_csv(Path::new(file)) {
             Ok(d) => d,
             Err(e) => {
@@ -78,7 +89,14 @@ fn cmd_run(args: &Args) {
         let n: usize = args.parse_or("n", 10_000);
         let d: usize = args.parse_or("d", 2);
         let seed: u64 = args.parse_or("data-seed", 1);
-        GaussianMixtureSpec { n, d, k: k.max(2), seed, ..Default::default() }.generate().0
+        let noise: usize = args.parse_or("noise", 0);
+        let spec = GaussianMixtureSpec { n, d, k: k.max(2), seed, ..Default::default() };
+        if noise > 0 {
+            let nspec = NoiseSpec { count: noise, seed: seed ^ 0xBAD, ..Default::default() };
+            spec.generate_with_noise(&nspec).0
+        } else {
+            spec.generate().0
+        }
     };
     let n = data.n();
     println!("input: n={} d={} objective={}", n, data.d(), obj);
@@ -105,6 +123,7 @@ fn cmd_run(args: &Args) {
     }
     cfg.beta = args.parse_or("beta", cfg.beta);
     cfg.seed = args.parse_or("seed", cfg.seed);
+    cfg.outliers = args.parse_or("z", 0);
     cfg.one_round = args.has("one-round");
     cfg.tl = match args.str_or("tl", "dpp") {
         "dpp" => TlAlgo::DppSeeding,
@@ -118,6 +137,7 @@ fn cmd_run(args: &Args) {
     cfg.final_algo = match args.str_or("final", "local-search") {
         "local-search" => FinalAlgo::LocalSearch,
         "pam" => FinalAlgo::Pam,
+        "robust" | "robust-local-search" => FinalAlgo::RobustLocalSearch,
         other => {
             eprintln!("error: unknown --final {other}");
             std::process::exit(2);
@@ -133,6 +153,26 @@ fn cmd_run(args: &Args) {
         }
     };
 
+    // the robust pipeline (--z, or --final robust on its own) has its
+    // own round structure and center counts — tell the user which
+    // knobs it overrides
+    let robust_run = cfg.outliers > 0 || cfg.final_algo == FinalAlgo::RobustLocalSearch;
+    if robust_run {
+        if cfg.outliers > 0 && args.has("final") && cfg.final_algo != FinalAlgo::RobustLocalSearch
+        {
+            eprintln!("note: --z overrides --final (robust local search is used)");
+        }
+        if cfg.one_round {
+            eprintln!("note: the robust pipeline ignores --one-round (it is 2-round)");
+        }
+        if args.has("m") {
+            eprintln!(
+                "note: the robust pipeline sets per-partition centers to k + ceil(z/L)*2; \
+                 --m is ignored"
+            );
+        }
+    }
+
     let pts: Vec<u32> = (0..n as u32).collect();
     let rep = solve(&space, &pts, &cfg);
     print!("{}", rep.summary());
@@ -145,13 +185,15 @@ fn cmd_exp(args: &Args) {
         Some("all") | None => ALL_IDS.to_vec(),
         Some(id) => vec![id],
     };
+    // Validate up front (a typo costs nothing), then stream each
+    // experiment's tables as soon as it completes.
+    if let Err(e) = validate_ids(&ids) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
     for id in ids {
-        match run_experiment(id, quick) {
-            Some(res) => println!("{}", res.render()),
-            None => {
-                eprintln!("error: unknown experiment {id} (known: {})", ALL_IDS.join(", "));
-                std::process::exit(2);
-            }
+        if let Some(res) = run_experiment(id, quick) {
+            println!("{}", res.render());
         }
     }
 }
@@ -166,7 +208,16 @@ fn cmd_gen(args: &Args) {
         seed: args.parse_or("seed", 1),
     };
     let out = args.str_or("out", "points.csv");
-    let (data, _) = spec.generate();
+    let noise: usize = args.parse_or("noise", 0);
+    let (data, _) = if noise > 0 {
+        spec.generate_with_noise(&NoiseSpec {
+            count: noise,
+            seed: spec.seed ^ 0xBAD,
+            ..Default::default()
+        })
+    } else {
+        spec.generate()
+    };
     if let Err(e) = csv::save_csv(Path::new(out), &data) {
         eprintln!("error: {e:#}");
         std::process::exit(1);

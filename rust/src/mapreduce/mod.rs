@@ -77,6 +77,14 @@ impl JobStats {
     pub fn total_dist_evals(&self) -> u64 {
         self.rounds.iter().map(|r| r.dist_evals).sum()
     }
+
+    /// Distance evaluations attributed to rounds with the given name
+    /// (summed over repeats; 0 if no such round ran). Lets experiments
+    /// break a job's work down by stage — e.g. E12 attributes the
+    /// outlier pipeline's oversampling overhead per round.
+    pub fn dist_evals_for(&self, name: &str) -> u64 {
+        self.rounds.iter().filter(|r| r.name == name).map(|r| r.dist_evals).sum()
+    }
 }
 
 /// The simulator: runs rounds, accumulates stats.
@@ -91,7 +99,11 @@ pub struct Simulator {
 
 impl Simulator {
     pub fn new() -> Simulator {
-        Simulator { threads: default_threads(), local_budget: None, stats: Mutex::new(JobStats::default()) }
+        Simulator {
+            threads: default_threads(),
+            local_budget: None,
+            stats: Mutex::new(JobStats::default()),
+        }
     }
 
     pub fn with_threads(mut self, threads: usize) -> Simulator {
@@ -254,6 +266,32 @@ mod tests {
             assert_eq!(r.dist_evals, r.reducer_dist_evals.iter().sum::<u64>());
             assert_eq!(stats.total_dist_evals(), (16 * centers.len()) as u64);
         }
+    }
+
+    /// Per-name attribution: repeated names sum, absent names are 0.
+    #[test]
+    fn dist_evals_for_filters_by_round_name() {
+        use crate::metric::dense::EuclideanSpace;
+        use crate::metric::MetricSpace;
+        use crate::points::VectorData;
+        use std::sync::Arc;
+
+        let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32]).collect();
+        let space = EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows)));
+        let sim = Simulator::new();
+        let pts: Vec<u32> = (0..8).collect();
+        for _ in 0..2 {
+            let _ = sim.round("assign", vec![pts.clone()], |_, part, m| {
+                m.charge(part.len());
+                space.assign(part, &[0])
+            });
+        }
+        let _ = sim.round("noop", vec![()], |_, _, m| m.charge(1));
+        let stats = sim.take_stats();
+        assert_eq!(stats.dist_evals_for("assign"), 16);
+        assert_eq!(stats.dist_evals_for("noop"), 0);
+        assert_eq!(stats.dist_evals_for("missing"), 0);
+        assert_eq!(stats.total_dist_evals(), 16);
     }
 
     /// Rounds with no distance work report zero; multi-round jobs sum.

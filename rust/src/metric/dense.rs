@@ -16,7 +16,8 @@ pub trait BulkEngine: Send + Sync {
     fn assign_block(&self, x: &VectorData, c: &VectorData) -> anyhow::Result<(Vec<f32>, Vec<i32>)>;
 
     /// Fold a single center (1, d) into `cur` (squared distances).
-    fn min_update_block(&self, x: &VectorData, c: &VectorData, cur: &mut [f32]) -> anyhow::Result<()>;
+    fn min_update_block(&self, x: &VectorData, c: &VectorData, cur: &mut [f32])
+        -> anyhow::Result<()>;
 
     /// Smallest problem (pts.len() * centers.len()) worth dispatching.
     /// Perf pass measurement (EXPERIMENTS.md §Perf): on this CPU testbed
@@ -221,7 +222,9 @@ fn scalar_assign(data: &VectorData, pts: &[u32], centers: &[u32]) -> Assignment 
     let dist64: Vec<f64> = pts
         .iter()
         .zip(&idx)
-        .map(|(&p, &j)| sq_euclidean(data.row(p), &craw[j as usize * d..(j as usize + 1) * d]).sqrt())
+        .map(|(&p, &j)| {
+            sq_euclidean(data.row(p), &craw[j as usize * d..(j as usize + 1) * d]).sqrt()
+        })
         .collect();
     Assignment { dist: dist64, idx }
 }

@@ -1,0 +1,486 @@
+//! Sequential finishers for the weighted (k, z) instance (round 3 of the
+//! outlier-robust pipeline).
+//!
+//! The robust objective on a weighted instance (E_w, k, z) charges every
+//! point its weighted distance cost EXCEPT for the z heaviest-cost weight
+//! units, which are written off as outliers (the Lagrangian view of
+//! Charikar et al.'s k-median-with-outliers, adapted to the composable
+//! coreset recipe of Ceccarello et al. / Dandolo et al.): a coreset point
+//! of weight w may be excluded partially, because it stands for w input
+//! points of which only some are noise.
+//!
+//! Two solvers:
+//! - [`local_search_outliers`]: single-swap local search over the robust
+//!   objective (the production path — scales to coreset-sized instances);
+//! - [`brute_force_outliers`]: exact optimum by enumeration (tiny
+//!   instances only; the test oracle).
+
+use crate::algorithms::brute::binomial;
+use crate::algorithms::local_search::{rebuild_book, sampled_candidate_pool, LocalSearchCfg};
+use crate::algorithms::seeding::{dpp_seeding, gonzalez};
+use crate::algorithms::Instance;
+use crate::metric::{MetricSpace, Objective};
+use crate::util::rng::Rng;
+
+/// A robust cost evaluation: the kept cost plus which points were
+/// (fully or partially) written off.
+#[derive(Clone, Debug)]
+pub struct RobustCost {
+    /// Weighted cost with z weight units excluded.
+    pub cost: f64,
+    /// Positions (into the evaluated point list) holding at least one
+    /// excluded weight unit, most expensive first; the last entry may be
+    /// only partially excluded when weights exceed the remaining budget.
+    pub excluded: Vec<u32>,
+}
+
+/// A solution of the (k, z) instance.
+#[derive(Clone, Debug)]
+pub struct RobustSolution {
+    /// Selected centers (global point indices, S ⊆ coreset).
+    pub centers: Vec<u32>,
+    /// Robust (z-excluded) weighted cost on the solved instance.
+    pub cost: f64,
+    /// Positions (into the instance's point list) of the excluded points,
+    /// most expensive first (see [`RobustCost::excluded`]).
+    pub excluded: Vec<u32>,
+}
+
+/// Robust cost of a per-point distance vector: exclude the z heaviest-cost
+/// weight units (ties broken toward the earlier position, so the result
+/// is deterministic), charge the rest. Weights must be positive (the
+/// `WeightedSet` invariant): a zero-weight entry would occupy a top-z
+/// slot while absorbing no exclusion budget.
+pub fn robust_cost_of_dists(
+    obj: Objective,
+    dists: &[f64],
+    weights: &[u64],
+    z: u64,
+) -> RobustCost {
+    assert_eq!(dists.len(), weights.len());
+    // hard check at the public entry (the hot internal path keeps a
+    // debug_assert): a zero weight breaks the top-z selection invariant
+    assert!(
+        weights.iter().all(|&w| w > 0),
+        "robust_cost_of_dists requires positive weights (the WeightedSet invariant)"
+    );
+    if z == 0 {
+        let cost = dists
+            .iter()
+            .zip(weights)
+            .map(|(&d, &w)| w as f64 * obj.cost_of(d))
+            .sum();
+        return RobustCost { cost, excluded: Vec::new() };
+    }
+    let mut scratch = Vec::new();
+    let (cost, excluded) = robust_core(obj, dists, weights, z, &mut scratch, true);
+    RobustCost { cost, excluded }
+}
+
+/// Cost-only robust evaluation with a reusable scratch buffer — the swap
+/// loop's hot path (no allocation per evaluation).
+fn robust_cost_value(
+    obj: Objective,
+    dists: &[f64],
+    weights: &[u64],
+    z: u64,
+    scratch: &mut Vec<u32>,
+) -> f64 {
+    if z == 0 {
+        return dists.iter().zip(weights).map(|(&d, &w)| w as f64 * obj.cost_of(d)).sum();
+    }
+    robust_core(obj, dists, weights, z, scratch, false).0
+}
+
+/// Shared core of the robust evaluations. The excluded set always lies
+/// within the z most-distant points (every excluded point absorbs at
+/// least one weight unit), so a select-nth partition plus an O(z log z)
+/// sort of that region replaces a full O(n log n) sort; the remainder is
+/// charged in a single unordered pass.
+fn robust_core(
+    obj: Objective,
+    dists: &[f64],
+    weights: &[u64],
+    z: u64,
+    scratch: &mut Vec<u32>,
+    want_excluded: bool,
+) -> (f64, Vec<u32>) {
+    let n = dists.len();
+    debug_assert!(
+        weights.iter().all(|&w| w > 0),
+        "robust cost requires positive weights (the WeightedSet invariant): a zero-weight \
+         entry would occupy a top-z slot without absorbing exclusion budget"
+    );
+    scratch.clear();
+    scratch.extend(0..n as u32);
+    let zi = z.min(n as u64) as usize;
+    let cmp =
+        |a: &u32, b: &u32| dists[*b as usize].total_cmp(&dists[*a as usize]).then(a.cmp(b));
+    if zi < n {
+        scratch.select_nth_unstable_by(zi, cmp);
+    }
+    scratch[..zi].sort_unstable_by(cmp);
+    let mut remaining = z;
+    let mut cost = 0.0f64;
+    let mut excluded = Vec::new();
+    for &pos in &scratch[..zi] {
+        let w = weights[pos as usize];
+        let cut = w.min(remaining);
+        if cut > 0 {
+            remaining -= cut;
+            if want_excluded {
+                excluded.push(pos);
+            }
+        }
+        cost += (w - cut) as f64 * obj.cost_of(dists[pos as usize]);
+    }
+    for &pos in &scratch[zi..] {
+        cost += weights[pos as usize] as f64 * obj.cost_of(dists[pos as usize]);
+    }
+    (cost, excluded)
+}
+
+/// Robust cost of a center set on a weighted instance: one bulk Voronoi
+/// pass, then z-unit exclusion.
+pub fn robust_cost(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    centers: &[u32],
+    z: u64,
+) -> RobustCost {
+    let assign = space.nearest_batch(inst.pts, centers);
+    robust_cost_of_dists(obj, &assign.dist, inst.weights, z)
+}
+
+/// Single-swap local search over the robust objective. `init = None`
+/// seeds with the better (under the robust cost) of D^p-seeding and
+/// farthest-first — the latter chases outliers, so it must compete on the
+/// robust objective rather than be trusted outright.
+///
+/// Swap evaluation: for a candidate `c` one `dist_batch` gives d(x, c);
+/// removing center q sends each point to `min(d(x,c), d1|d2)`, and the
+/// robust cost of that distance vector re-selects the excluded set — the
+/// exclusion is NOT frozen across swaps, which is what makes the search
+/// outlier-aware rather than merely outlier-tolerant.
+pub fn local_search_outliers(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+    z: u64,
+    init: Option<Vec<u32>>,
+    cfg: &LocalSearchCfg,
+) -> RobustSolution {
+    let n = inst.n();
+    let k = k.min(n);
+    let mut rng = Rng::new(cfg.seed);
+    let mut centers = match init {
+        Some(c) => {
+            assert!(!c.is_empty());
+            c
+        }
+        None => {
+            let dpp = dpp_seeding(space, obj, inst, k, &mut rng).centers;
+            let gon = gonzalez(space, inst, k, 0);
+            let dpp_cost = robust_cost(space, obj, inst, &dpp, z).cost;
+            let gon_cost = robust_cost(space, obj, inst, &gon, z).cost;
+            if gon_cost < dpp_cost {
+                gon
+            } else {
+                dpp
+            }
+        }
+    };
+    if centers.len() >= n {
+        let rc = robust_cost(space, obj, inst, &centers, z);
+        return RobustSolution { centers, cost: rc.cost, excluded: rc.excluded };
+    }
+    let mut book = rebuild_book(space, inst.pts, &centers);
+    let mut current = robust_cost_of_dists(obj, &book.d1, inst.weights, z);
+    let exhaustive = n <= cfg.exhaustive_below;
+    let mut dry_passes = 0usize;
+    let mut dc_buf = vec![0.0f64; n];
+    let mut nd_buf = vec![0.0f64; n];
+    let mut scratch: Vec<u32> = Vec::with_capacity(n);
+    for _pass in 0..cfg.max_passes {
+        // Candidate pool: exhaustive for small instances; otherwise half
+        // uniform, half biased by the robust residual. Excluded points
+        // keep only their still-charged residual weight in the bias: a
+        // fully written-off point cannot improve the robust objective,
+        // but a partially-excluded heavy representative (the last entry
+        // of the greedy exclusion) still pays (w−cut)·cost(d1) — often
+        // the dominant term — and must stay a promising swap-in.
+        let cand_idx: Vec<usize> = if exhaustive {
+            (0..n).collect()
+        } else {
+            let mut probs: Vec<f64> = (0..n)
+                .map(|i| inst.weights[i] as f64 * obj.cost_of(book.d1[i]))
+                .collect();
+            let mut remaining = z;
+            for &pos in &current.excluded {
+                let w = inst.weights[pos as usize];
+                let cut = w.min(remaining);
+                remaining -= cut;
+                probs[pos as usize] = (w - cut) as f64 * obj.cost_of(book.d1[pos as usize]);
+            }
+            sampled_candidate_pool(n, &probs, cfg.sample_candidates, &mut rng)
+        };
+        let mut best_cost = current.cost;
+        let mut best_swap: Option<(usize, u32)> = None;
+        for ci in cand_idx {
+            let cand = inst.pts[ci];
+            if centers.contains(&cand) {
+                continue;
+            }
+            space.dist_batch(inst.pts, cand, &mut dc_buf);
+            for q in 0..centers.len() {
+                for x in 0..n {
+                    let kept = if book.i1[x] as usize == q { book.d2[x] } else { book.d1[x] };
+                    nd_buf[x] = dc_buf[x].min(kept);
+                }
+                let total = robust_cost_value(obj, &nd_buf, inst.weights, z, &mut scratch);
+                if total < best_cost {
+                    best_cost = total;
+                    best_swap = Some((q, cand));
+                }
+            }
+        }
+        match best_swap {
+            Some((q, cand)) if best_cost <= current.cost * (1.0 - cfg.min_rel_improvement) => {
+                centers[q] = cand;
+                book = rebuild_book(space, inst.pts, &centers);
+                current = robust_cost_of_dists(obj, &book.d1, inst.weights, z);
+                dry_passes = 0;
+            }
+            _ if exhaustive => break, // true local optimum of the robust objective
+            _ => {
+                dry_passes += 1;
+                if dry_passes >= cfg.patience {
+                    break;
+                }
+            }
+        }
+    }
+    RobustSolution { centers, cost: current.cost, excluded: current.excluded }
+}
+
+/// Exact (k, z) optimum over all k-subsets — the weighted brute-force
+/// reference for tiny instances.
+pub fn brute_force_outliers(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+    z: u64,
+) -> RobustSolution {
+    let n = inst.n();
+    let k = k.min(n);
+    assert!(
+        binomial(n, k) <= 2_000_000,
+        "brute_force_outliers: instance too large (n={n}, k={k})"
+    );
+    let mut comb: Vec<usize> = (0..k).collect();
+    let mut best: Option<RobustSolution> = None;
+    loop {
+        let centers: Vec<u32> = comb.iter().map(|&i| inst.pts[i]).collect();
+        let rc = robust_cost(space, obj, inst, &centers, z);
+        let better = match &best {
+            Some(b) => rc.cost < b.cost,
+            None => true,
+        };
+        if better {
+            best = Some(RobustSolution { centers, cost: rc.cost, excluded: rc.excluded });
+        }
+        // next combination (lexicographic)
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return best.expect("at least one combination evaluated");
+            }
+            i -= 1;
+            if comb[i] != i + n - k {
+                break;
+            }
+        }
+        comb[i] += 1;
+        for j in i + 1..k {
+            comb[j] = comb[j - 1] + 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::brute::brute_force;
+    use crate::metric::dense::EuclideanSpace;
+    use crate::points::VectorData;
+    use std::sync::Arc;
+
+    /// Three 1-d clusters around 0/100/200 (5 points each, offsets
+    /// −2..2) plus two far noise points at 10 000 and 20 000.
+    fn noisy_line() -> (EuclideanSpace, Vec<u32>) {
+        let mut rows = Vec::new();
+        for c in [0.0f32, 100.0, 200.0] {
+            for off in [-2.0f32, -1.0, 0.0, 1.0, 2.0] {
+                rows.push(vec![c + off]);
+            }
+        }
+        rows.push(vec![10_000.0]);
+        rows.push(vec![20_000.0]);
+        let n = rows.len() as u32;
+        (EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows))), (0..n).collect())
+    }
+
+    #[test]
+    fn robust_cost_excludes_heaviest_units() {
+        let dists = [5.0, 1.0, 2.0];
+        let weights = [1u64, 2, 1];
+        // z=1: drop the d=5 point entirely
+        let rc = robust_cost_of_dists(Objective::Median, &dists, &weights, 1);
+        assert_eq!(rc.excluded, vec![0]);
+        assert!((rc.cost - (2.0 * 1.0 + 1.0 * 2.0)).abs() < 1e-12);
+        // z=2: drop d=5, then d=2
+        let rc = robust_cost_of_dists(Objective::Median, &dists, &weights, 2);
+        assert_eq!(rc.excluded, vec![0, 2]);
+        assert!((rc.cost - 2.0).abs() < 1e-12);
+        // z=0: plain weighted cost, nothing excluded
+        let rc = robust_cost_of_dists(Objective::Median, &dists, &weights, 0);
+        assert!(rc.excluded.is_empty());
+        assert!((rc.cost - (5.0 + 2.0 + 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn robust_cost_partial_exclusion() {
+        // weight 3 at d=5, budget 2: one unit of the point stays charged
+        let dists = [5.0, 1.0];
+        let weights = [3u64, 2];
+        let rc = robust_cost_of_dists(Objective::Median, &dists, &weights, 2);
+        assert_eq!(rc.excluded, vec![0]);
+        assert!((rc.cost - (1.0 * 5.0 + 2.0 * 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_only_path_matches_full_evaluation() {
+        let dists = [3.0, 7.0, 1.0, 7.0, 0.5];
+        let weights = [2u64, 1, 5, 3, 1];
+        let mut scratch = Vec::new();
+        for z in 0..13u64 {
+            let full = robust_cost_of_dists(Objective::Means, &dists, &weights, z);
+            let fast = robust_cost_value(Objective::Means, &dists, &weights, z, &mut scratch);
+            assert_eq!(full.cost.to_bits(), fast.to_bits(), "z={z}");
+        }
+    }
+
+    #[test]
+    fn robust_cost_budget_exceeding_total_weight_zeroes_cost() {
+        let dists = [5.0, 1.0];
+        let weights = [1u64, 1];
+        let rc = robust_cost_of_dists(Objective::Means, &dists, &weights, 10);
+        assert_eq!(rc.cost, 0.0);
+        assert_eq!(rc.excluded, vec![0, 1]);
+    }
+
+    #[test]
+    fn local_search_excludes_noise_and_finds_clusters() {
+        let (space, pts) = noisy_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        for obj in [Objective::Median, Objective::Means] {
+            let sol =
+                local_search_outliers(&space, obj, inst, 3, 2, None, &LocalSearchCfg::default());
+            let mut buckets = [0usize; 3];
+            for &c in &sol.centers {
+                assert!(c < 15, "{obj}: center {c} sits on a noise point");
+                buckets[(c / 5) as usize] += 1;
+            }
+            assert_eq!(buckets, [1, 1, 1], "{obj}: centers {:?}", sol.centers);
+            let mut excl = sol.excluded.clone();
+            excl.sort_unstable();
+            assert_eq!(excl, vec![15, 16], "{obj}: excluded {:?}", sol.excluded);
+        }
+    }
+
+    #[test]
+    fn z_zero_degenerates_to_plain_objective() {
+        let (space, pts) = noisy_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        let sol = local_search_outliers(
+            &space,
+            Objective::Median,
+            inst,
+            3,
+            0,
+            None,
+            &LocalSearchCfg::default(),
+        );
+        assert!(sol.excluded.is_empty());
+        let check = robust_cost(&space, Objective::Median, inst, &sol.centers, 0);
+        assert_eq!(sol.cost.to_bits(), check.cost.to_bits());
+    }
+
+    #[test]
+    fn brute_reference_on_tiny_instance() {
+        let (space, pts) = noisy_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        // optimum: midpoints 2/7/12, noise excluded; per cluster cost 6
+        let opt = brute_force_outliers(&space, Objective::Median, inst, 3, 2);
+        assert_eq!(opt.cost, 18.0);
+        let mut c = opt.centers.clone();
+        c.sort_unstable();
+        assert_eq!(c, vec![2, 7, 12]);
+        let mut excl = opt.excluded.clone();
+        excl.sort_unstable();
+        assert_eq!(excl, vec![15, 16]);
+        // local search reaches the same ballpark
+        let ls = local_search_outliers(
+            &space,
+            Objective::Median,
+            inst,
+            3,
+            2,
+            None,
+            &LocalSearchCfg::default(),
+        );
+        assert!(ls.cost <= opt.cost * 1.7 + 1e-9, "ls {} vs opt {}", ls.cost, opt.cost);
+    }
+
+    #[test]
+    fn brute_z_zero_matches_plain_brute_force() {
+        use crate::algorithms::testutil::three_cluster_line;
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        for obj in [Objective::Median, Objective::Means] {
+            let plain = brute_force(&space, obj, inst, 2);
+            let robust = brute_force_outliers(&space, obj, inst, 2, 0);
+            assert_eq!(plain.cost.to_bits(), robust.cost.to_bits(), "{obj}");
+            assert_eq!(plain.centers, robust.centers, "{obj}");
+        }
+    }
+
+    #[test]
+    fn weighted_exclusion_prefers_far_light_points() {
+        // heavy near cluster + one light far point: z=1 must write off
+        // the far point, not a unit of the heavy one
+        let rows = vec![vec![0.0f32], vec![1.0], vec![500.0]];
+        let space = EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows)));
+        let pts = vec![0u32, 1, 2];
+        let w = vec![100u64, 100, 1];
+        let inst = Instance::new(&pts, &w);
+        let sol = local_search_outliers(
+            &space,
+            Objective::Median,
+            inst,
+            1,
+            1,
+            None,
+            &LocalSearchCfg::default(),
+        );
+        assert_eq!(sol.excluded, vec![2]);
+        assert!(sol.centers[0] < 2, "center {:?} chased the outlier", sol.centers);
+    }
+}

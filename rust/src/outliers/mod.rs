@@ -1,0 +1,29 @@
+//! Outlier-robust clustering subsystem: distributed (k, z)-median and
+//! (k, z)-means in general metric spaces on top of the coreset pipeline.
+//!
+//! Real workloads are never noise-free; a handful of corrupt points can
+//! drag every center of a plain k-median/k-means solution. The classical
+//! fix is the (k, z) objective — cluster with k centers but write off the
+//! z most expensive points — and the coreset machinery of the base paper
+//! extends to it with two changes:
+//!
+//! - **construction** ([`pipeline`]): oversample each partition's rough
+//!   solution by z′ = ⌈z/L⌉·oversample extra centers so outlier
+//!   candidates keep accurate representatives, then compress the weighted
+//!   union through `cover_with_balls_weighted`;
+//! - **finisher** ([`finisher`]): solve the weighted (k, z) instance on
+//!   the union coreset by excluding the z heaviest-cost weight units
+//!   (local search over the robust objective, plus an exact brute-force
+//!   reference for tiny instances).
+//!
+//! End-to-end entry point: `coordinator::solve` with
+//! `ClusterConfig::outliers > 0` (CLI: `mrcoreset run --z Z`).
+
+pub mod finisher;
+pub mod pipeline;
+
+pub use finisher::{
+    brute_force_outliers, local_search_outliers, robust_cost, robust_cost_of_dists, RobustCost,
+    RobustSolution,
+};
+pub use pipeline::{outlier_coreset, OutlierCoresetConfig};

@@ -1,0 +1,230 @@
+//! Outlier-aware MapReduce coreset construction.
+//!
+//! The composable-coreset recipe extends to z outliers by oversampling
+//! local centers (Ceccarello et al., arXiv:1802.09205; Dandolo et al.,
+//! arXiv:2202.08173): a partition cannot know which of its points are
+//! globally noise, so each reducer's rough solution T_ℓ gets
+//! z′ = ⌈z/L⌉·oversample extra centers beyond k. Far-flung points then
+//! capture their own T_ℓ center, keeping the local tolerance radius R_ℓ
+//! small and guaranteeing every outlier candidate survives into the
+//! coreset with an accurate representative — so the final (k, z) solver
+//! can still choose which z weight units to write off.
+//!
+//! Rounds (mirroring §3.2/§3.3 of the base paper):
+//! 1. `outliers-r1-local`: per partition, T_ℓ with k + z′ centers, then
+//!    CoverWithBalls(P_ℓ, T_ℓ, R_ℓ, ·, ·) → weighted C_{w,ℓ}.
+//! 2. `outliers-r2-compress`: one reducer takes the weighted union C_w,
+//!    seeds a global rough solution T with k + z centers on the weighted
+//!    instance, and runs `cover_with_balls_weighted`(C_w, w, T, R, ·, ·)
+//!    — carrying the round-1 weights through — to produce E_w.
+//!
+//! Both rounds charge the simulator's memory meter and (implicitly, via
+//! the metric counter) the per-reducer distance-evaluation accounting,
+//! so `RoundStats` attributes the oversampling overhead per round.
+
+use crate::algorithms::seeding::dpp_seeding;
+use crate::algorithms::Instance;
+use crate::coreset::cover::cover_with_balls_weighted;
+use crate::coreset::local::cover_params;
+use crate::coreset::pipeline::{global_radius, run_round1_named, CoresetConfig, PipelineOutput};
+use crate::coreset::TlAlgo;
+use crate::mapreduce::{partition, PartitionStrategy, Simulator};
+use crate::metric::{MetricSpace, Objective};
+use crate::points::WeightedSet;
+use crate::util::rng::Rng;
+
+/// Configuration of the outlier-aware coreset construction.
+#[derive(Clone, Debug)]
+pub struct OutlierCoresetConfig {
+    /// Precision parameter ε ∈ (0,1).
+    pub eps: f64,
+    /// Assumed approximation factor β of the T_ℓ algorithm.
+    pub beta: f64,
+    pub k: usize,
+    /// Number of outliers z the final solver may write off.
+    pub z: usize,
+    /// Multiplier on ⌈z/L⌉ for the per-partition extra centers z′.
+    pub oversample: usize,
+    pub tl: TlAlgo,
+    pub seed: u64,
+}
+
+impl OutlierCoresetConfig {
+    pub fn new(k: usize, z: usize, eps: f64) -> OutlierCoresetConfig {
+        OutlierCoresetConfig {
+            eps,
+            beta: 2.0,
+            k,
+            z,
+            oversample: 2,
+            tl: TlAlgo::DppSeeding,
+            seed: 0x5EED,
+        }
+    }
+
+    /// Per-partition center count k + z′ with z′ = ⌈z/L⌉·oversample.
+    pub fn m_local(&self, l: usize) -> usize {
+        let l = l.max(1);
+        let z_ceil = self.z / l + usize::from(self.z % l != 0);
+        self.k + z_ceil * self.oversample
+    }
+}
+
+/// 2-round outlier-aware coreset construction; returns E_w (weights sum
+/// to |P| — exclusion happens in the finisher, not here).
+pub fn outlier_coreset(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    l: usize,
+    strategy: PartitionStrategy,
+    cfg: &OutlierCoresetConfig,
+    sim: &Simulator,
+) -> PipelineOutput {
+    let parts = partition(pts, l, strategy);
+
+    // Round 1: the shared per-partition local-coreset round, with the
+    // oversampled center count k + z′ and an outliers-specific seed salt.
+    let r1cfg = CoresetConfig {
+        eps: cfg.eps,
+        beta: cfg.beta,
+        m: cfg.m_local(parts.len()),
+        tl: cfg.tl,
+        seed: cfg.seed,
+    };
+    let locals =
+        run_round1_named(space, obj, &parts, &r1cfg, sim, "outliers-r1-local", 0x0071_0000);
+    let radii: Vec<f64> = locals.iter().map(|o| o.r).collect();
+    let part_sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+    let cw =
+        WeightedSet::union(&locals.iter().map(|o| o.cover.set.clone()).collect::<Vec<_>>());
+    let cw_size = cw.len();
+
+    // Global tolerance radius R (same aggregation as the base pipeline).
+    let global_r = global_radius(obj, &radii, &part_sizes);
+
+    // Round 2: compress the weighted union with a weighted cover against
+    // a global (k + z)-center rough solution.
+    let (ce, cb) = cover_params(obj, cfg.eps, cfg.beta);
+    let e_parts = sim.round("outliers-r2-compress", vec![cw], move |_, cs, meter| {
+        meter.charge(cs.len()); // resident weighted union C_w
+        let mut rng = Rng::new(cfg.seed ^ 0x0171_CAFE);
+        let m_global = (cfg.k + cfg.z).min(cs.len());
+        let inst = Instance::new(&cs.indices, &cs.weights);
+        let t = dpp_seeding(space, obj, inst, m_global, &mut rng).centers;
+        meter.charge(t.len());
+        let res =
+            cover_with_balls_weighted(space, &cs.indices, Some(&cs.weights), &t, global_r, ce, cb);
+        meter.charge(res.set.len()); // E_w
+        meter.release(cs.len() + t.len());
+        res.set
+    });
+    let coreset = e_parts.into_iter().next().expect("one compress reducer");
+
+    PipelineOutput { coreset, radii, part_sizes, cw_size, global_r: Some(global_r) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{GaussianMixtureSpec, NoiseSpec};
+    use crate::metric::dense::EuclideanSpace;
+    use std::sync::Arc;
+
+    fn noisy_mixture(n: usize, noise: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+        let spec = GaussianMixtureSpec { n, d: 2, k: 4, spread: 50.0, seed, ..Default::default() };
+        let (data, _) = spec.generate_with_noise(&NoiseSpec {
+            count: noise,
+            expanse: 20.0,
+            offset: 0.0,
+            seed: seed ^ 0x9,
+        });
+        let total = data.n() as u32;
+        (EuclideanSpace::new(Arc::new(data)), (0..total).collect())
+    }
+
+    #[test]
+    fn two_rounds_and_weight_conservation() {
+        let (space, pts) = noisy_mixture(1500, 30, 1);
+        let sim = Simulator::new();
+        let cfg = OutlierCoresetConfig::new(4, 30, 0.5);
+        for obj in [Objective::Median, Objective::Means] {
+            let out = outlier_coreset(
+                &space,
+                obj,
+                &pts,
+                5,
+                PartitionStrategy::RoundRobin,
+                &cfg,
+                &sim,
+            );
+            assert_eq!(out.coreset.total_weight(), pts.len() as u64, "{obj}");
+            assert!(out.coreset.len() <= pts.len(), "{obj}");
+            assert!(out.global_r.unwrap() > 0.0, "{obj}");
+            assert_eq!(out.radii.len(), 5, "{obj}");
+            let stats = sim.take_stats();
+            assert_eq!(stats.num_rounds(), 2, "{obj}");
+            assert_eq!(stats.rounds[0].name, "outliers-r1-local");
+            assert_eq!(stats.rounds[1].name, "outliers-r2-compress");
+            assert!(stats.rounds[0].dist_evals > 0, "{obj}: round-1 work unattributed");
+            assert!(stats.rounds[1].dist_evals > 0, "{obj}: round-2 work unattributed");
+        }
+    }
+
+    #[test]
+    fn m_local_oversamples_by_partition_share() {
+        let cfg = OutlierCoresetConfig::new(8, 50, 0.5);
+        // ⌈50/10⌉·2 = 10 extra centers
+        assert_eq!(cfg.m_local(10), 8 + 10);
+        // ⌈50/7⌉·2 = 16
+        assert_eq!(cfg.m_local(7), 8 + 16);
+        // z = 0 degenerates to k
+        assert_eq!(OutlierCoresetConfig::new(8, 0, 0.5).m_local(10), 8);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (space, pts) = noisy_mixture(800, 20, 2);
+        let cfg = OutlierCoresetConfig::new(4, 20, 0.5);
+        let sim = Simulator::new();
+        let a = outlier_coreset(
+            &space,
+            Objective::Median,
+            &pts,
+            4,
+            PartitionStrategy::RoundRobin,
+            &cfg,
+            &sim,
+        );
+        let b = outlier_coreset(
+            &space,
+            Objective::Median,
+            &pts,
+            4,
+            PartitionStrategy::RoundRobin,
+            &cfg,
+            &sim,
+        );
+        assert_eq!(a.coreset, b.coreset);
+        assert_eq!(a.radii, b.radii);
+        assert_eq!(a.global_r, b.global_r);
+    }
+
+    #[test]
+    fn single_partition_degenerates_gracefully() {
+        let (space, pts) = noisy_mixture(400, 10, 3);
+        let sim = Simulator::new();
+        let cfg = OutlierCoresetConfig::new(3, 10, 0.6);
+        let out = outlier_coreset(
+            &space,
+            Objective::Means,
+            &pts,
+            1,
+            PartitionStrategy::Contiguous,
+            &cfg,
+            &sim,
+        );
+        assert_eq!(out.part_sizes, vec![410]);
+        assert_eq!(out.coreset.total_weight(), 410);
+    }
+}

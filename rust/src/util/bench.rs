@@ -50,6 +50,44 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
     }
 }
 
+/// Serialize bench results to a minimal JSON document (no serde in the
+/// offline image): `{"benchmarks":[{name, samples, median_s, p10_s,
+/// p90_s, mean_s}, ...]}`. Written next to the bench output (e.g.
+/// `BENCH_micro.json`, `BENCH_outliers.json`) so the perf trajectory is
+/// machine-readable across PRs, not just printed.
+pub fn to_json(results: &[BenchResult]) -> String {
+    let mut out = String::from("{\"benchmarks\":[");
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"samples\":{},\"median_s\":{:.9},\"p10_s\":{:.9},\"p90_s\":{:.9},\"mean_s\":{:.9}}}",
+            json_escape(&r.name),
+            r.samples,
+            r.median.as_secs_f64(),
+            r.p10.as_secs_f64(),
+            r.p90.as_secs_f64(),
+            r.mean.as_secs_f64(),
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
     if s >= 1.0 {
@@ -97,5 +135,33 @@ mod tests {
         assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
         assert_eq!(fmt_duration(Duration::from_millis(5)), "5.000 ms");
         assert_eq!(fmt_duration(Duration::from_micros(7)), "7.0 µs");
+    }
+
+    #[test]
+    fn json_serialization_is_well_formed() {
+        let r = BenchResult {
+            name: "assign \"fast\" path".to_string(),
+            samples: 3,
+            median: Duration::from_millis(2),
+            p10: Duration::from_millis(1),
+            p90: Duration::from_millis(4),
+            mean: Duration::from_millis(2),
+        };
+        let s = to_json(&[r.clone(), r]);
+        assert!(s.starts_with("{\"benchmarks\":["));
+        assert!(s.ends_with("]}"));
+        assert!(s.contains("\\\"fast\\\""), "quotes must be escaped: {s}");
+        assert!(s.contains("\"median_s\":0.002000000"));
+        assert_eq!(s.matches("\"name\"").count(), 2);
+        // balanced braces/brackets (cheap well-formedness check)
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn json_escape_handles_control_chars() {
+        assert_eq!(json_escape("a\nb"), "a\\u000ab");
+        assert_eq!(json_escape("back\\slash"), "back\\\\slash");
+        assert_eq!(json_escape("plain"), "plain");
     }
 }

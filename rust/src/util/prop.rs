@@ -13,7 +13,12 @@ pub type CaseResult = Result<(), String>;
 
 /// Run `prop` over `cases` seeded cases derived from `base_seed`.
 /// Panics with the failing seed + message on the first failure.
-pub fn check<F: FnMut(&mut Rng) -> CaseResult>(name: &str, base_seed: u64, cases: usize, mut prop: F) {
+pub fn check<F: FnMut(&mut Rng) -> CaseResult>(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    mut prop: F,
+) {
     for case in 0..cases {
         let seed = derive_seed(base_seed, case as u64);
         let mut rng = Rng::new(seed);

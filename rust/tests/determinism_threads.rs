@@ -20,7 +20,12 @@ fn mixture(n: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
     (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
 }
 
-fn run_pipeline(space: &EuclideanSpace, pts: &[u32], obj: Objective, threads: usize) -> PipelineOutput {
+fn run_pipeline(
+    space: &EuclideanSpace,
+    pts: &[u32],
+    obj: Objective,
+    threads: usize,
+) -> PipelineOutput {
     let sim = Simulator::new().with_threads(threads);
     let cfg = CoresetConfig { seed: 0xD1CE, ..CoresetConfig::new(5, 0.4) };
     two_round_coreset(space, obj, pts, 6, PartitionStrategy::RoundRobin, &cfg, &sim)
@@ -48,6 +53,41 @@ fn two_round_coreset_bit_identical_across_runs_and_threads() {
             assert_eq!(reference.global_r, out.global_r, "{obj} threads={threads}");
             assert_eq!(reference.part_sizes, out.part_sizes);
         }
+    }
+}
+
+/// The outlier pipeline inherits the same contract: reducer outputs in
+/// input order, RNGs derived from (seed, partition index) only — so the
+/// whole (k, z) solve must be bit-identical at 1 vs 8 threads.
+#[test]
+fn outlier_solve_bit_identical_across_thread_counts() {
+    use mrcoreset::data::synth::NoiseSpec;
+    let spec =
+        GaussianMixtureSpec { n: 1500, d: 2, k: 4, spread: 30.0, seed: 21, ..Default::default() };
+    let (data, _) = spec.generate_with_noise(&NoiseSpec {
+        count: 30,
+        expanse: 10.0,
+        offset: 40.0,
+        seed: 22,
+    });
+    let total = data.n() as u32;
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..total).collect();
+    for obj in [Objective::Median, Objective::Means] {
+        let mut cfg1 = ClusterConfig::new(obj, 4, 0.5);
+        cfg1.outliers = 30;
+        cfg1.threads = Some(1);
+        let mut cfg8 = cfg1.clone();
+        cfg8.threads = Some(8);
+        let a = solve(&space, &pts, &cfg1);
+        let b = solve(&space, &pts, &cfg8);
+        assert_eq!(a.solution.centers, b.solution.centers, "{obj}");
+        assert_eq!(a.solution.cost.to_bits(), b.solution.cost.to_bits(), "{obj}");
+        assert_eq!(a.full_cost.to_bits(), b.full_cost.to_bits(), "{obj}");
+        assert_eq!(a.robust_full_cost.to_bits(), b.robust_full_cost.to_bits(), "{obj}");
+        assert_eq!(a.excluded, b.excluded, "{obj}: excluded sets differ");
+        assert_eq!(a.coreset_size, b.coreset_size, "{obj}");
+        assert_eq!(a.dist_evals, b.dist_evals, "{obj}");
     }
 }
 

@@ -33,7 +33,14 @@ fn all_baselines_produce_k_centers() {
     let k = 6;
     let sim = Simulator::new();
     let reports = vec![
-        uniform::run(&space, Objective::Median, &pts, k, &UniformCfg { size: 300, l: 5, seed: 1 }, &sim),
+        uniform::run(
+            &space,
+            Objective::Median,
+            &pts,
+            k,
+            &UniformCfg { size: 300, l: 5, seed: 1 },
+            &sim,
+        ),
         ene_im_moseley::run(
             &space,
             Objective::Median,
@@ -76,7 +83,11 @@ fn ours_competitive_with_every_baseline() {
         Objective::Median,
         &pts,
         k,
-        &EimCfg { sample_per_iter: ours.coreset_size / 6 + 1, stop_below: ours.coreset_size / 4 + 1, seed: 4 },
+        &EimCfg {
+            sample_per_iter: ours.coreset_size / 6 + 1,
+            stop_below: ours.coreset_size / 4 + 1,
+            seed: 4,
+        },
         &sim,
     );
     // ours should never be drastically worse than any sampling baseline

@@ -53,8 +53,9 @@ fn cases(rng: &mut Rng) -> Vec<Case> {
         seed: rng.next_u64(),
     }
     .generate();
-    let codes: Vec<Vec<u8>> =
-        (0..n).map(|i| (0..8).map(|b| ((i >> b) & 1) as u8 + rng.below(2) as u8).collect()).collect();
+    let codes: Vec<Vec<u8>> = (0..n)
+        .map(|i| (0..8).map(|b| ((i >> b) & 1) as u8 + rng.below(2) as u8).collect())
+        .collect();
     vec![
         Case { space: Box::new(EuclideanSpace::new(shared.clone())), exact_nearest: false },
         Case { space: Box::new(ManhattanSpace::new(shared.clone())), exact_nearest: true },

@@ -1,0 +1,147 @@
+//! Property tests for `cover_with_balls_weighted` (the weighted-instance
+//! CoverWithBalls the outlier pipeline's compress round rides on):
+//!
+//! 1. unit input weights reproduce the unweighted `cover_with_balls`
+//!    output **bit-for-bit** (same representatives, same weights, same
+//!    τ, same d(·,T) — the weighted path must be a strict generalization,
+//!    not a near-miss);
+//! 2. total weight is conserved under arbitrary positive input weights
+//!    (Definition 2.3 generalized: w(c) = Σ_{y: τ(y)=c} w_in(y));
+//! 3. τ stays total and every representative keeps a positive weight.
+
+use std::sync::Arc;
+
+use mrcoreset::coreset::{cover_with_balls, cover_with_balls_weighted};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::metric::dense::{EuclideanSpace, ManhattanSpace};
+use mrcoreset::metric::MetricSpace;
+use mrcoreset::prop_assert;
+use mrcoreset::util::prop::check;
+use mrcoreset::util::rng::Rng;
+
+/// One randomized cover instance: spaces under test plus the cover
+/// parameters.
+struct CoverCase {
+    spaces: Vec<Box<dyn MetricSpace>>,
+    pts: Vec<u32>,
+    t: Vec<u32>,
+    r: f64,
+    eps: f64,
+    beta: f64,
+}
+
+/// Random mixture spaces (Euclidean + Manhattan, so both the tiled fast
+/// path and the generic scalar path are covered) with random cover
+/// parameters.
+fn random_case(rng: &mut Rng) -> CoverCase {
+    let n = 40 + rng.below(160);
+    let d = 1 + rng.below(4);
+    let (data, _) = GaussianMixtureSpec {
+        n,
+        d,
+        k: 1 + rng.below(4),
+        spread: 1.0 + rng.f64() * 30.0,
+        outlier_frac: 0.0,
+        seed: rng.next_u64(),
+    }
+    .generate();
+    let shared = Arc::new(data);
+    let spaces: Vec<Box<dyn MetricSpace>> = vec![
+        Box::new(EuclideanSpace::new(shared.clone())),
+        Box::new(ManhattanSpace::new(shared)),
+    ];
+    let pts: Vec<u32> = (0..n as u32).collect();
+    let t_size = 1 + rng.below(6);
+    let t: Vec<u32> = (0..t_size).map(|_| rng.below(n) as u32).collect();
+    CoverCase {
+        spaces,
+        pts,
+        t,
+        r: rng.f64() * 5.0,
+        eps: 0.1 + rng.f64() * 0.8,
+        beta: 1.0 + rng.f64() * 3.0,
+    }
+}
+
+#[test]
+fn unit_weights_reproduce_unweighted_cover_bit_for_bit() {
+    check("unit-weights-equal-unweighted", 0xC0DE, 40, |rng| {
+        let CoverCase { spaces, pts, t, r, eps, beta } = random_case(rng);
+        for space in &spaces {
+            let unit = vec![1u64; pts.len()];
+            let a = cover_with_balls(space.as_ref(), &pts, &t, r, eps, beta);
+            let b =
+                cover_with_balls_weighted(space.as_ref(), &pts, Some(&unit), &t, r, eps, beta);
+            prop_assert!(
+                a.set.indices == b.set.indices,
+                "{}: representatives differ: {:?} vs {:?}",
+                space.name(),
+                a.set.indices,
+                b.set.indices
+            );
+            prop_assert!(
+                a.set.weights == b.set.weights,
+                "{}: weights differ: {:?} vs {:?}",
+                space.name(),
+                a.set.weights,
+                b.set.weights
+            );
+            prop_assert!(a.tau == b.tau, "{}: tau differs", space.name());
+            let bits_equal = a
+                .dist_to_t
+                .iter()
+                .zip(&b.dist_to_t)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            prop_assert!(bits_equal, "{}: dist_to_t not bit-identical", space.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arbitrary_weights_conserve_total_weight() {
+    check("weighted-cover-weight-conservation", 0xFEED, 40, |rng| {
+        let CoverCase { spaces, pts, t, r, eps, beta } = random_case(rng);
+        let weights: Vec<u64> = pts.iter().map(|_| 1 + rng.below(1000) as u64).collect();
+        let total: u64 = weights.iter().sum();
+        for space in &spaces {
+            let res = cover_with_balls_weighted(
+                space.as_ref(),
+                &pts,
+                Some(&weights),
+                &t,
+                r,
+                eps,
+                beta,
+            );
+            prop_assert!(
+                res.set.total_weight() == total,
+                "{}: total weight {} != input {}",
+                space.name(),
+                res.set.total_weight(),
+                total
+            );
+            prop_assert!(
+                res.tau.iter().all(|&ti| (ti as usize) < res.set.len()),
+                "{}: tau not total",
+                space.name()
+            );
+            prop_assert!(
+                res.set.weights.iter().all(|&w| w > 0),
+                "{}: zero-weight representative",
+                space.name()
+            );
+            // weights are exactly the τ-preimage weight sums
+            let mut sums = vec![0u64; res.set.len()];
+            for (i, &ti) in res.tau.iter().enumerate() {
+                sums[ti as usize] += weights[i];
+            }
+            prop_assert!(
+                sums == res.set.weights,
+                "{}: weights are not preimage sums",
+                space.name()
+            );
+        }
+        Ok(())
+    });
+}
