@@ -7,42 +7,67 @@
 //!      recorded in EXPERIMENTS.md).
 //!   2. Micro/throughput benchmarks of the hot paths: CoverWithBalls,
 //!      bulk assignment (scalar vs XLA engine), local search, the
-//!      end-to-end 3-round solve, and the outlier-robust pipeline —
-//!      persisted as BENCH_micro.json / BENCH_outliers.json for
-//!      cross-PR perf tracking.
+//!      end-to-end 3-round solve, the outlier-robust pipeline, and the
+//!      geometry-pruning comparison (pruned vs unpruned cover,
+//!      incremental vs rebuild swap scan) — persisted as
+//!      BENCH_micro.json / BENCH_outliers.json / BENCH_pruning.json for
+//!      cross-PR perf tracking (CI runs the smoke configuration and
+//!      uploads the JSON artifacts per PR).
 //!
-//! Usage:
+//! Usage (lib/bins/tests set `bench = false`, so trailing args reach
+//! only this harness):
 //!   cargo bench                    # everything, quick experiments
 //!   cargo bench -- e4              # one experiment
 //!   cargo bench -- micro           # only the micro benches
+//!   cargo bench -- pruning         # only the pruning comparison
+//!   cargo bench -- micro --smoke   # CI smoke sizes
 //!   cargo bench -- --full          # full-size experiment tables
 
 use std::sync::Arc;
 
-use mrcoreset::algorithms::local_search::{local_search, LocalSearchCfg};
+use mrcoreset::algorithms::local_search::{local_search, local_search_reference, LocalSearchCfg};
 use mrcoreset::algorithms::Instance;
 use mrcoreset::coordinator::{solve, ClusterConfig};
-use mrcoreset::coreset::cover_with_balls;
+use mrcoreset::coreset::{
+    cover_with_balls, cover_with_balls_weighted, cover_with_balls_weighted_unpruned,
+};
 use mrcoreset::data::synth::{GaussianMixtureSpec, NoiseSpec};
 use mrcoreset::eval::{run_experiment, ALL_IDS};
+use mrcoreset::metric::counter;
 use mrcoreset::metric::dense::{sq_euclidean, EuclideanSpace};
 use mrcoreset::metric::{MetricSpace, Objective};
 use mrcoreset::outliers::{local_search_outliers, robust_cost};
 use mrcoreset::runtime::XlaEngine;
-use mrcoreset::util::bench::{bench, to_json, BenchResult};
+use mrcoreset::util::bench::{bench, to_json, to_json_with_metrics, BenchResult};
 
 /// Persist results as machine-readable JSON next to the bench output so
 /// the perf trajectory is tracked across PRs, not just printed.
 fn write_bench_json(path: &str, results: &[BenchResult]) {
-    match std::fs::write(path, to_json(results)) {
+    write_json_doc(path, to_json(results));
+}
+
+fn write_json_doc(path: &str, doc: String) {
+    match std::fs::write(path, doc) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
+
+/// Bench names are the keys of the cross-PR JSON series: full-size runs
+/// must keep their historical "20k"-style labels, and smoke sizes print
+/// the same way.
+fn fmt_k(n: usize) -> String {
+    if n % 1000 == 0 {
+        format!("{}k", n / 1000)
+    } else {
+        n.to_string()
     }
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let full = args.iter().any(|a| a == "--full");
+    let smoke = args.iter().any(|a| a == "--smoke");
     let filters: Vec<&String> =
         args.iter().filter(|a| !a.starts_with("--") && !a.contains("bench")).collect();
     let want = |name: &str| {
@@ -57,18 +82,29 @@ fn main() {
         }
     }
 
-    // ---- micro benches ------------------------------------------------
-    if !want("micro") && !filters.is_empty() {
-        return;
+    // `micro` implies the pruning comparison; `pruning` runs it alone.
+    let run_micro = filters.is_empty() || want("micro");
+    let run_pruning = run_micro || want("pruning");
+    if run_micro {
+        micro_benches(smoke);
+        outlier_benches(smoke);
     }
+    if run_pruning {
+        pruning_benches(smoke);
+    }
+}
+
+fn micro_benches(smoke: bool) {
     println!("## micro benchmarks\n");
-    let n = 20_000usize;
+    let n = if smoke { 4_000usize } else { 20_000 };
+    let samples = if smoke { 2 } else { 5 };
     let k = 8usize;
     let (data, _) = GaussianMixtureSpec { n, d: 4, k, seed: 1, ..Default::default() }.generate();
     let shared = Arc::new(data);
     let plain = EuclideanSpace::new(shared.clone());
     let pts: Vec<u32> = (0..n as u32).collect();
     let centers: Vec<u32> = (0..256u32).collect();
+    let nk = fmt_k(n);
 
     // bulk assignment: per-point scalar loop (what every hot path
     // issued before the batched engine) vs the tiled nearest_batch.
@@ -91,12 +127,12 @@ fn main() {
         (dist, idx)
     };
     let mut micro_results: Vec<BenchResult> = Vec::new();
-    let rs = bench("assign 20k x 256 (scalar dist loop)", 1, 5, || {
+    let rs = bench(&format!("assign {nk} x 256 (scalar dist loop)"), 1, samples, || {
         std::hint::black_box(scalar_assign(&pts, &centers));
     });
     println!("{rs}   [{:.1} Mpairs/s]", rs.throughput_per_sec(n * 256) / 1e6);
     micro_results.push(rs.clone());
-    let rb = bench("assign 20k x 256 (nearest_batch)", 1, 5, || {
+    let rb = bench(&format!("assign {nk} x 256 (nearest_batch)"), 1, samples, || {
         std::hint::black_box(plain.nearest_batch(&pts, &centers));
     });
     println!("{rb}   [{:.1} Mpairs/s]", rb.throughput_per_sec(n * 256) / 1e6);
@@ -105,33 +141,37 @@ fn main() {
         "batched/scalar speedup: {:.2}x",
         rs.median.as_secs_f64() / rb.median.as_secs_f64().max(1e-12)
     );
-    let (_, evals) = mrcoreset::metric::counter::counted(|| plain.nearest_batch(&pts, &centers));
+    let (_, evals) = counter::counted(|| plain.nearest_batch(&pts, &centers));
     println!("distance evals per assignment pass: {evals}\n");
     if let Some(engine) = XlaEngine::load_default() {
         let mut engine = engine;
         engine.set_dispatch_threshold(1);
         let fast = EuclideanSpace::with_engine(shared.clone(), Arc::new(engine));
-        let r = bench("assign 20k x 256 (xla engine)", 1, 5, || {
+        let r = bench(&format!("assign {nk} x 256 (xla engine)"), 1, samples, || {
             std::hint::black_box(fast.assign(&pts, &centers));
         });
         println!("{r}   [{:.1} Mpairs/s]", r.throughput_per_sec(n * 256) / 1e6);
         micro_results.push(r);
     }
 
-    // CoverWithBalls throughput
-    let t: Vec<u32> = (0..16u32).map(|i| i * 1000).collect();
+    // CoverWithBalls throughput (production pruned path). The full-size
+    // center grid keeps its historical i*1000 placement so the
+    // BENCH_micro.json series stays comparable across PRs; smoke scales.
+    let t_step = if smoke { n as u32 / 16 } else { 1_000 };
+    let t: Vec<u32> = (0..16u32).map(|i| i * t_step).collect();
     let a = plain.assign(&pts, &t);
     let radius = a.dist.iter().sum::<f64>() / n as f64;
-    let r = bench("cover_with_balls 20k (eps=.5 b=2)", 1, 5, || {
+    let r = bench(&format!("cover_with_balls {nk} (eps=.5 b=2)"), 1, samples, || {
         std::hint::black_box(cover_with_balls(&plain, &pts, &t, radius, 0.5, 2.0));
     });
     println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(n) / 1e3);
     micro_results.push(r);
 
     // weighted local search on a coreset-sized instance
-    let sub: Vec<u32> = (0..2000u32).map(|i| i * 10).collect();
+    let sub: Vec<u32> = (0..(n as u32 / 10)).map(|i| i * 10).collect();
     let w = vec![10u64; sub.len()];
-    let r = bench("local_search 2k weighted k=8", 1, 3, || {
+    let ls_name = format!("local_search {} weighted k=8", fmt_k(sub.len()));
+    let r = bench(&ls_name, 1, samples.min(3), || {
         let cfg = LocalSearchCfg::default();
         std::hint::black_box(local_search(
             &plain,
@@ -147,7 +187,7 @@ fn main() {
 
     // end-to-end 3-round solve
     for obj in [Objective::Median, Objective::Means] {
-        let r = bench(&format!("solve 3-round {obj} 20k eps=.5"), 1, 3, || {
+        let r = bench(&format!("solve 3-round {obj} {nk} eps=.5"), 1, samples.min(3), || {
             let cfg = ClusterConfig::new(obj, k, 0.5);
             std::hint::black_box(solve(&plain, &pts, &cfg));
         });
@@ -155,12 +195,16 @@ fn main() {
         micro_results.push(r);
     }
     write_bench_json("BENCH_micro.json", &micro_results);
+}
 
-    // ---- outliers micro benches ---------------------------------------
+fn outlier_benches(smoke: bool) {
     println!("\n## outliers benchmarks\n");
-    let noise = 200usize;
+    let n = if smoke { 2_500usize } else { 10_000 };
+    let samples = if smoke { 2 } else { 5 };
+    let k = 8usize;
+    let noise = if smoke { 50usize } else { 200 };
     let nspec =
-        GaussianMixtureSpec { n: 10_000, d: 2, k, spread: 30.0, seed: 2, ..Default::default() };
+        GaussianMixtureSpec { n, d: 2, k, spread: 30.0, seed: 2, ..Default::default() };
     let (ndata, _) = nspec.generate_with_noise(&NoiseSpec {
         count: noise,
         expanse: 10.0,
@@ -170,42 +214,159 @@ fn main() {
     let ntotal = ndata.n();
     let nspace = EuclideanSpace::new(Arc::new(ndata));
     let npts: Vec<u32> = (0..ntotal as u32).collect();
+    let nk = fmt_k(n);
     let mut outlier_results: Vec<BenchResult> = Vec::new();
 
     let unit = vec![1u64; npts.len()];
     let inst = Instance::new(&npts, &unit);
-    let cs: Vec<u32> = (0..8u32).map(|i| i * 1000).collect();
-    let r = bench("robust_cost 10k z=200", 1, 5, || {
+    let cs_step = if smoke { n as u32 / 8 } else { 1_000 }; // historical grid at full size
+    let cs: Vec<u32> = (0..8u32).map(|i| i * cs_step).collect();
+    let r = bench(&format!("robust_cost {nk} z={noise}"), 1, samples, || {
         std::hint::black_box(robust_cost(&nspace, Objective::Median, inst, &cs, noise as u64));
     });
     println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(ntotal) / 1e3);
     outlier_results.push(r);
 
-    let sub: Vec<u32> = (0..2000u32).map(|i| i * 5).collect();
+    let sub: Vec<u32> = (0..(n as u32 / 5)).map(|i| i * 5).collect();
     let w = vec![5u64; sub.len()];
-    let r = bench("local_search_outliers 2k weighted k=8 z=100", 1, 3, || {
-        let cfg = LocalSearchCfg::default();
-        std::hint::black_box(local_search_outliers(
-            &nspace,
-            Objective::Median,
-            Instance::new(&sub, &w),
-            k,
-            100,
-            None,
-            &cfg,
-        ));
-    });
+    let r = bench(
+        &format!("local_search_outliers {} weighted k=8 z={}", fmt_k(sub.len()), noise / 2),
+        1,
+        samples.min(3),
+        || {
+            let cfg = LocalSearchCfg::default();
+            std::hint::black_box(local_search_outliers(
+                &nspace,
+                Objective::Median,
+                Instance::new(&sub, &w),
+                k,
+                (noise / 2) as u64,
+                None,
+                &cfg,
+            ));
+        },
+    );
     println!("{r}");
     outlier_results.push(r);
 
     for obj in [Objective::Median, Objective::Means] {
-        let r = bench(&format!("solve 3-round robust {obj} 10k z=200"), 1, 3, || {
-            let mut cfg = ClusterConfig::new(obj, k, 0.5);
-            cfg.outliers = noise;
-            std::hint::black_box(solve(&nspace, &npts, &cfg));
-        });
+        let r = bench(
+            &format!("solve 3-round robust {obj} {nk} z={noise}"),
+            1,
+            samples.min(3),
+            || {
+                let mut cfg = ClusterConfig::new(obj, k, 0.5);
+                cfg.outliers = noise;
+                std::hint::black_box(solve(&nspace, &npts, &cfg));
+            },
+        );
         println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(ntotal) / 1e3);
         outlier_results.push(r);
     }
     write_bench_json("BENCH_outliers.json", &outlier_results);
+}
+
+/// Geometry-pruning comparison: the quantities that matter here are
+/// distance evaluations (the paper-model work metric), measured via
+/// `metric::counter` and emitted alongside the timings into
+/// BENCH_pruning.json — the acceptance bar is a ≥3x dist_evals
+/// reduction for CoverWithBalls on the e2-style mixture workload.
+fn pruning_benches(smoke: bool) {
+    println!("\n## pruning benchmarks\n");
+    let n = if smoke { 4_000usize } else { 20_000 };
+    let samples = if smoke { 2 } else { 5 };
+    let (data, _) =
+        GaussianMixtureSpec { n, d: 4, k: 8, seed: 11, ..Default::default() }.generate();
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..n as u32).collect();
+    let nk = fmt_k(n);
+    let t: Vec<u32> = (0..16u32).map(|i| i * (n as u32 / 16)).collect();
+    let a = space.assign(&pts, &t);
+    let radius = a.dist.iter().sum::<f64>() / n as f64;
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // --- CoverWithBalls: pruned vs unpruned ---------------------------
+    let (cover_u, evals_unpruned) = counter::counted(|| {
+        cover_with_balls_weighted_unpruned(&space, &pts, None, &t, radius, 0.5, 2.0)
+    });
+    let (cover_p, evals_pruned) = counter::counted(|| {
+        cover_with_balls_weighted(&space, &pts, None, &t, radius, 0.5, 2.0)
+    });
+    assert_eq!(cover_u.set.indices, cover_p.set.indices, "pruned cover drifted");
+    assert_eq!(cover_u.set.weights, cover_p.set.weights, "pruned cover weights drifted");
+    let cover_ratio = evals_unpruned as f64 / evals_pruned.max(1) as f64;
+
+    let ru = bench(&format!("cover {nk} unpruned (eps=.5 b=2)"), 1, samples, || {
+        std::hint::black_box(cover_with_balls_weighted_unpruned(
+            &space, &pts, None, &t, radius, 0.5, 2.0,
+        ));
+    });
+    println!("{ru}   [{:.1} Mpairs/s]", evals_unpruned as f64 / ru.median.as_secs_f64() / 1e6);
+    results.push(ru.clone());
+    let rp = bench(&format!("cover {nk} pruned (eps=.5 b=2)"), 1, samples, || {
+        std::hint::black_box(cover_with_balls_weighted(&space, &pts, None, &t, radius, 0.5, 2.0));
+    });
+    println!("{rp}   [{:.1} Mpairs/s]", evals_pruned as f64 / rp.median.as_secs_f64() / 1e6);
+    results.push(rp.clone());
+    println!(
+        "cover dist_evals: unpruned={evals_unpruned} pruned={evals_pruned} \
+         saved={:.2}x   wall speedup {:.2}x",
+        cover_ratio,
+        ru.median.as_secs_f64() / rp.median.as_secs_f64().max(1e-12)
+    );
+
+    // --- local-search swap scan: incremental vs rebuild book ----------
+    let sub: Vec<u32> = (0..(n as u32 / 10)).map(|i| i * 10).collect();
+    let w = vec![10u64; sub.len()];
+    let inst = Instance::new(&sub, &w);
+    let cfg = LocalSearchCfg::default();
+    let (sol_r, evals_rebuild) = counter::counted(|| {
+        local_search_reference(&space, Objective::Median, inst, 8, None, &cfg)
+    });
+    let (sol_i, evals_incremental) =
+        counter::counted(|| local_search(&space, Objective::Median, inst, 8, None, &cfg));
+    assert_eq!(sol_r.centers, sol_i.centers, "incremental local search drifted");
+    assert_eq!(sol_r.cost.to_bits(), sol_i.cost.to_bits(), "incremental cost drifted");
+    let ls_ratio = evals_rebuild as f64 / evals_incremental.max(1) as f64;
+
+    let rr_name = format!("local_search {} rebuild-book", fmt_k(sub.len()));
+    let rr = bench(&rr_name, 1, samples.min(3), || {
+        std::hint::black_box(local_search_reference(
+            &space,
+            Objective::Median,
+            inst,
+            8,
+            None,
+            &cfg,
+        ));
+    });
+    println!("{rr}   [{:.1} Mpairs/s]", evals_rebuild as f64 / rr.median.as_secs_f64() / 1e6);
+    results.push(rr.clone());
+    let ri_name = format!("local_search {} incremental-book", fmt_k(sub.len()));
+    let ri = bench(&ri_name, 1, samples.min(3), || {
+        std::hint::black_box(local_search(&space, Objective::Median, inst, 8, None, &cfg));
+    });
+    println!("{ri}   [{:.1} Mpairs/s]", evals_incremental as f64 / ri.median.as_secs_f64() / 1e6);
+    results.push(ri.clone());
+    println!(
+        "swap-scan dist_evals: rebuild={evals_rebuild} incremental={evals_incremental} \
+         saved={:.2}x   wall speedup {:.2}x",
+        ls_ratio,
+        rr.median.as_secs_f64() / ri.median.as_secs_f64().max(1e-12)
+    );
+    if cover_ratio < 3.0 {
+        eprintln!(
+            "warning: cover pruning ratio {cover_ratio:.2}x below the 3x acceptance bar"
+        );
+    }
+
+    let metrics: Vec<(&str, f64)> = vec![
+        ("cover_dist_evals_unpruned", evals_unpruned as f64),
+        ("cover_dist_evals_pruned", evals_pruned as f64),
+        ("cover_evals_saved_ratio", cover_ratio),
+        ("ls_dist_evals_rebuild", evals_rebuild as f64),
+        ("ls_dist_evals_incremental", evals_incremental as f64),
+        ("ls_evals_saved_ratio", ls_ratio),
+    ];
+    write_json_doc("BENCH_pruning.json", to_json_with_metrics(&results, &metrics));
 }

@@ -12,11 +12,33 @@
 //! loops hit the batched distance engine instead of per-pair virtual
 //! calls.
 //!
+//! # Incremental bookkeeping
+//!
+//! Historically every *accepted* swap paid a full O(nk) book rebuild.
+//! The production path now updates the book incrementally: the winning
+//! candidate's distance row — already computed during the swap scan, so
+//! no fresh query — folds into each point's (d₁, i₁, d₂, i₂) with
+//! exactly `rebuild_book`'s comparison and tie-break semantics (strict
+//! `<` over ascending center positions, equal distances resolve to the
+//! smaller position); only points whose nearest or second-nearest
+//! center was the evicted one are re-scanned against all centers. The
+//! result is bit-identical to a full rebuild — pinned against
+//! [`local_search_reference`] by
+//! `tests/prop_pruned_equivalence.rs` — assuming `dist_batch` is
+//! element-wise deterministic, which holds for every in-tree space (the
+//! optional XLA engine path documents its own f32 numerics and is
+//! off by default). Candidate membership tests use a bitset
+//! (`util::bitset`) instead of an O(k) `contains` scan, and the
+//! per-candidate delta scratch is allocated once per search, not once
+//! per candidate. `cargo bench -- micro` compares the incremental and
+//! rebuild paths and records dist_evals saved in `BENCH_pruning.json`.
+//!
 //! `t`-swap (multi-swap) gives α = 3+2/t (median) / 5+4/t (means); we
 //! implement t = 1 plus a sampled multi-candidate scan, which already
 //! sits far below the worst-case bound on non-adversarial instances.
 
 use crate::metric::{MetricSpace, Objective};
+use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 
 use super::{seeding, Instance, Solution};
@@ -54,11 +76,14 @@ impl Default for LocalSearchCfg {
 
 /// Nearest + second-nearest center bookkeeping for each point (shared
 /// with the outlier-robust finisher, which runs the same single-swap
-/// scheme over the z-excluded objective).
+/// scheme over the z-excluded objective). Positions refer into the
+/// current `centers` slice; `i2` exists so an accepted swap can detect
+/// which points lost their second-nearest entry and must be re-scanned.
 pub(crate) struct Book {
     pub(crate) d1: Vec<f64>,
     pub(crate) i1: Vec<u32>, // position within `centers`
     pub(crate) d2: Vec<f64>,
+    pub(crate) i2: Vec<u32>, // position of the second-nearest center
 }
 
 pub(crate) fn rebuild_book(space: &dyn MetricSpace, pts: &[u32], centers: &[u32]) -> Book {
@@ -66,20 +91,133 @@ pub(crate) fn rebuild_book(space: &dyn MetricSpace, pts: &[u32], centers: &[u32]
     let mut d1 = vec![f64::INFINITY; n];
     let mut i1 = vec![0u32; n];
     let mut d2 = vec![f64::INFINITY; n];
+    let mut i2 = vec![0u32; n];
     let mut buf = vec![0.0f64; n];
     for (j, &c) in centers.iter().enumerate() {
         space.dist_batch(pts, c, &mut buf);
         for (x, &d) in buf.iter().enumerate() {
             if d < d1[x] {
                 d2[x] = d1[x];
+                i2[x] = i1[x];
                 d1[x] = d;
                 i1[x] = j as u32;
             } else if d < d2[x] {
                 d2[x] = d;
+                i2[x] = j as u32;
             }
         }
     }
-    Book { d1, i1, d2 }
+    Book { d1, i1, d2, i2 }
+}
+
+/// Restore `book` to exactly what `rebuild_book(space, pts, centers)`
+/// would produce after the swap that replaced position `q` (the incoming
+/// center already written to `centers[q]`), given the incoming center's
+/// distance row `dnew[x] = d(pts[x], centers[q])` — which the swap scan
+/// already computed, so the common case costs zero fresh evaluations.
+///
+/// Points whose nearest or second-nearest center was the evicted one
+/// lost bookkeeping the O(1) fold cannot restore; they are re-scanned
+/// against the full center list (reusing `dnew` for position `q`, so the
+/// re-scan costs |affected|·(k−1) evaluations). Every other point folds
+/// the incoming center in with rebuild's exact comparison and tie-break
+/// semantics: strict `<` over centers in ascending position order, so on
+/// equal distances the smaller position wins.
+pub(crate) fn update_book_after_swap(
+    space: &dyn MetricSpace,
+    pts: &[u32],
+    centers: &[u32],
+    q: usize,
+    dnew: &[f64],
+    book: &mut Book,
+) {
+    let n = pts.len();
+    debug_assert_eq!(dnew.len(), n);
+    let qq = q as u32;
+    let mut affected: Vec<u32> = Vec::new();
+    for x in 0..n {
+        if book.i1[x] == qq || book.i2[x] == qq {
+            affected.push(x as u32);
+            continue;
+        }
+        // The old top-2 entries both survive the eviction, so the new
+        // top-2 is the old pair merged with (dnew, q).
+        let dn = dnew[x];
+        if dn < book.d1[x] || (dn == book.d1[x] && qq < book.i1[x]) {
+            book.d2[x] = book.d1[x];
+            book.i2[x] = book.i1[x];
+            book.d1[x] = dn;
+            book.i1[x] = qq;
+        } else if dn < book.d2[x] || (dn == book.d2[x] && qq < book.i2[x]) {
+            book.d2[x] = dn;
+            book.i2[x] = qq;
+        }
+    }
+    if affected.is_empty() {
+        return;
+    }
+    let aff_pts: Vec<u32> = affected.iter().map(|&x| pts[x as usize]).collect();
+    for &x in &affected {
+        let x = x as usize;
+        book.d1[x] = f64::INFINITY;
+        book.i1[x] = 0;
+        book.d2[x] = f64::INFINITY;
+        book.i2[x] = 0;
+    }
+    let mut buf = vec![0.0f64; affected.len()];
+    for (j, &c) in centers.iter().enumerate() {
+        if j == q {
+            for (i, &x) in affected.iter().enumerate() {
+                buf[i] = dnew[x as usize];
+            }
+        } else {
+            space.dist_batch(&aff_pts, c, &mut buf);
+        }
+        for (i, &x) in affected.iter().enumerate() {
+            let x = x as usize;
+            let d = buf[i];
+            if d < book.d1[x] {
+                book.d2[x] = book.d1[x];
+                book.i2[x] = book.i1[x];
+                book.d1[x] = d;
+                book.i1[x] = j as u32;
+            } else if d < book.d2[x] {
+                book.d2[x] = d;
+                book.i2[x] = j as u32;
+            }
+        }
+    }
+}
+
+/// Apply an accepted swap — shared by the plain and outlier-robust
+/// searches: replace `centers[q]`, maintain the membership bitset
+/// (duplicate-aware: an init with duplicate centers keeps its bit until
+/// the last copy is swapped out), and restore the book — incrementally
+/// from the candidate's distance row already computed during the scan
+/// (no re-query), or by full rebuild for the reference paths.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn apply_swap(
+    space: &dyn MetricSpace,
+    pts: &[u32],
+    centers: &mut [u32],
+    in_centers: &mut Bitset,
+    q: usize,
+    cand: u32,
+    cand_dists: &[f64],
+    book: &mut Book,
+    incremental: bool,
+) {
+    let evicted = centers[q];
+    centers[q] = cand;
+    if !centers.contains(&evicted) {
+        in_centers.remove(evicted);
+    }
+    in_centers.insert(cand);
+    if incremental {
+        update_book_after_swap(space, pts, centers, q, cand_dists, book);
+    } else {
+        *book = rebuild_book(space, pts, centers);
+    }
 }
 
 /// Cost of the current solution from the book.
@@ -112,8 +250,11 @@ pub(crate) fn sampled_candidate_pool(
 }
 
 /// Evaluate all k swaps (out ∈ S) for one candidate `cand` in a single
-/// pass: returns (best_out_position, best_total_cost). `dc` is a caller
-/// scratch buffer of length n, filled with one `dist_batch` query.
+/// pass: returns (best_out_position, best_total_cost). `dc` and `delta`
+/// are caller scratch buffers (length n resp. k, reused across the whole
+/// candidate scan instead of reallocated per candidate); `dc` is filled
+/// with one `dist_batch` query.
+#[allow(clippy::too_many_arguments)]
 fn eval_candidate(
     space: &dyn MetricSpace,
     obj: Objective,
@@ -122,13 +263,15 @@ fn eval_candidate(
     k: usize,
     cand: u32,
     dc: &mut [f64],
+    delta: &mut Vec<f64>,
 ) -> (usize, f64) {
     // base: cost if we only ADD cand (each point takes min(d1, d(cand)));
     // delta[q]: correction if center q is REMOVED — points whose nearest
     // is q fall back to min(d2, d(cand)) instead of min(d1, d(cand)).
     space.dist_batch(inst.pts, cand, dc);
     let mut base = 0.0f64;
-    let mut delta = vec![0.0f64; k];
+    delta.clear();
+    delta.resize(k, 0.0);
     for x in 0..inst.n() {
         let w = inst.weights[x] as f64;
         let with_add = obj.cost_of(dc[x].min(book.d1[x]));
@@ -150,7 +293,8 @@ fn eval_candidate(
 }
 
 /// Run local search from an initial solution (seeded with D^p sampling if
-/// `init` is None). Returns the locally-optimal solution.
+/// `init` is None). Returns the locally-optimal solution. Uses the
+/// incremental book update after accepted swaps (see the module docs).
 pub fn local_search(
     space: &dyn MetricSpace,
     obj: Objective,
@@ -159,6 +303,38 @@ pub fn local_search(
     init: Option<Vec<u32>>,
     cfg: &LocalSearchCfg,
 ) -> Solution {
+    local_search_impl(space, obj, inst, k, init, cfg, true)
+}
+
+/// Reference implementation paying a full O(nk) `rebuild_book` after
+/// every accepted swap — the bit-exact oracle the incremental path is
+/// pinned to (`tests/prop_pruned_equivalence.rs`) and the baseline side
+/// of the `BENCH_pruning.json` swap-scan comparison.
+pub fn local_search_reference(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+    init: Option<Vec<u32>>,
+    cfg: &LocalSearchCfg,
+) -> Solution {
+    local_search_impl(space, obj, inst, k, init, cfg, false)
+}
+
+fn local_search_impl(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+    init: Option<Vec<u32>>,
+    cfg: &LocalSearchCfg,
+    incremental: bool,
+) -> Solution {
+    // The incremental book reuses distance rows across differently-sized
+    // bulk queries; a space with block-size-dependent precision (the
+    // engine-attached Euclidean path) would drift from the rebuild
+    // reference, so it keeps the historical full-rebuild behavior.
+    let incremental = incremental && space.uniform_precision();
     let n = inst.n();
     let k = k.min(n);
     let mut rng = Rng::new(cfg.seed);
@@ -179,6 +355,9 @@ pub fn local_search(
     let exhaustive = n <= cfg.exhaustive_below;
     let mut dry_passes = 0usize;
     let mut dc_buf = vec![0.0f64; n];
+    let mut best_dc = vec![0.0f64; n];
+    let mut delta_buf: Vec<f64> = Vec::with_capacity(centers.len());
+    let mut in_centers = Bitset::from_members(space.n_points(), &centers);
     for _pass in 0..cfg.max_passes {
         // candidate pool: exhaustive for small instances; otherwise half
         // uniform, half cost-biased (w·cost(d1) — the D^p intuition:
@@ -196,20 +375,40 @@ pub fn local_search(
         let mut best_swap: Option<(usize, u32)> = None;
         for ci in cand_idx {
             let cand = inst.pts[ci];
-            if centers.contains(&cand) {
+            if in_centers.contains(cand) {
                 continue;
             }
-            let (q, total) =
-                eval_candidate(space, obj, inst, &book, centers.len(), cand, &mut dc_buf);
+            let (q, total) = eval_candidate(
+                space,
+                obj,
+                inst,
+                &book,
+                centers.len(),
+                cand,
+                &mut dc_buf,
+                &mut delta_buf,
+            );
             if total < best_cost {
                 best_cost = total;
                 best_swap = Some((q, cand));
+                // keep the winner's distance row: the accepted swap folds
+                // it into the book without re-querying the metric
+                best_dc.copy_from_slice(&dc_buf);
             }
         }
         match best_swap {
             Some((q, cand)) if best_cost <= cost * (1.0 - cfg.min_rel_improvement) => {
-                centers[q] = cand;
-                book = rebuild_book(space, inst.pts, &centers);
+                apply_swap(
+                    space,
+                    inst.pts,
+                    &mut centers,
+                    &mut in_centers,
+                    q,
+                    cand,
+                    &best_dc,
+                    &mut book,
+                    incremental,
+                );
                 cost = book_cost(&book, obj, inst.weights);
                 dry_passes = 0;
             }
@@ -289,6 +488,45 @@ mod tests {
         let inst = Instance::new(&pts, &w);
         let sol = local_search(&space, Objective::Means, inst, 1, None, &LocalSearchCfg::default());
         assert_eq!(sol.centers, vec![pts[12]]);
+    }
+
+    /// The incremental update must reproduce `rebuild_book` exactly —
+    /// including on the tie-heavy symmetric line (points at ±1, ±2 of
+    /// each cluster center produce equal distances that exercise the
+    /// smaller-position tie-break).
+    #[test]
+    fn incremental_book_update_matches_rebuild() {
+        let (space, pts) = three_cluster_line();
+        let mut centers = vec![pts[0], pts[7], pts[12]];
+        let mut book = rebuild_book(&space, &pts, &centers);
+        let mut dnew = vec![0.0f64; pts.len()];
+        for (q, cand) in [(1usize, pts[3]), (0, pts[8]), (2, pts[1]), (0, pts[2])] {
+            centers[q] = cand;
+            space.dist_batch(&pts, cand, &mut dnew);
+            update_book_after_swap(&space, &pts, &centers, q, &dnew, &mut book);
+            let reference = rebuild_book(&space, &pts, &centers);
+            for x in 0..pts.len() {
+                assert_eq!(book.d1[x].to_bits(), reference.d1[x].to_bits(), "d1 x={x}");
+                assert_eq!(book.i1[x], reference.i1[x], "i1 x={x}");
+                assert_eq!(book.d2[x].to_bits(), reference.d2[x].to_bits(), "d2 x={x}");
+                assert_eq!(book.i2[x], reference.i2[x], "i2 x={x}");
+            }
+        }
+    }
+
+    /// Incremental and reference searches agree end to end on the tiny
+    /// instance (the property test covers randomized instances).
+    #[test]
+    fn incremental_search_matches_reference_end_to_end() {
+        let (space, pts) = three_cluster_line();
+        let w = vec![1u64; pts.len()];
+        let inst = Instance::new(&pts, &w);
+        for obj in [Objective::Median, Objective::Means] {
+            let a = local_search(&space, obj, inst, 3, None, &LocalSearchCfg::default());
+            let b = local_search_reference(&space, obj, inst, 3, None, &LocalSearchCfg::default());
+            assert_eq!(a.centers, b.centers, "{obj}");
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{obj}");
+        }
     }
 
     #[test]

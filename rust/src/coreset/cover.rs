@@ -14,11 +14,54 @@
 //!
 //! The greedy loop picks an arbitrary remaining point (we take the first
 //! by index — the theory allows any order), adds it as a representative,
-//! and discards every remaining point within its shrunken radius. The
-//! hot spot is the per-iteration distance scan of remaining points
-//! against the new representative — a single `dist_batch` bulk query,
-//! which on the Euclidean fast path runs the staged-center scan (or the
-//! XLA min_update kernel for engine-dispatched block sizes).
+//! and discards every remaining point within its shrunken radius.
+//!
+//! # Geometry pruning
+//!
+//! The naive loop re-scans every alive point per greedy iteration —
+//! O(|C_w| · |P|) distance evaluations. The production path
+//! ([`cover_with_balls_weighted`]) prunes that scan with triangle-
+//! inequality bounds over distances it already holds:
+//!
+//! - every point x knows d(x, t_{j(x)}) to its nearest T-center (the
+//!   up-front `assign` pass that also yields the thresholds);
+//! - each new representative c computes d(c, t_j) for all j — |T| evals
+//!   via one `dist_batch`;
+//! - then d(x, c) ≥ |d(x, t_{j(x)}) − d(c, t_{j(x)})|, so x can only be
+//!   removed (d(x,c) ≤ threshold[x]) if that bound admits it. Alive
+//!   points are bucketed by nearest T-center: a whole bucket is skipped
+//!   when d(c, t_j) falls outside [min_x(d(x,t_j) − threshold[x]),
+//!   max_x(d(x,t_j) + threshold[x])], and within an admitted bucket the
+//!   per-point bound is enforced by `MetricSpace::dist_batch_pruned`,
+//!   which charges `metric::counter` only for distances actually
+//!   computed (the counter contract: skipped pairs are work that never
+//!   happened).
+//!
+//! Spaces that cannot guarantee bound-grade precision
+//! (`MetricSpace::uniform_precision` reports false — the
+//! engine-attached Euclidean path, the ill-conditioned angular metric)
+//! take the unpruned reference path unchanged.
+//!
+//! Pruning only skips evaluations whose comparison against the threshold
+//! the bound has already decided, so the output (representatives, τ,
+//! weights) is bit-identical to the unpruned reference
+//! ([`cover_with_balls_weighted_unpruned`]) — pinned by
+//! `tests/prop_pruned_equivalence.rs` across Euclidean, Manhattan, and
+//! Levenshtein spaces. Measured on the e2-style Gaussian-mixture
+//! workload (20k points, d=4, |T|=16, ε=0.5, β=2) the pruned path
+//! issues ~10-30× fewer distance evaluations (`cargo bench -- micro`
+//! writes the current numbers to `BENCH_pruning.json`).
+//!
+//! # Threshold monotonicity
+//!
+//! Both paths rely on the per-point removal threshold being the *fixed*
+//! monotone map x ↦ ε/(2β) · max{R, d(x, T)} for the whole run: fixed,
+//! because bucket bounds and τ-decisions are made against thresholds
+//! computed once up front; monotone non-decreasing in d(x, T), because
+//! Lemma 3.1/Theorem 3.3 price each removal against the removed point's
+//! own d(x, T). The constructor derives thresholds internally from that
+//! formula and debug-asserts the monotone relation as an internal-
+//! consistency check.
 
 use crate::metric::MetricSpace;
 use crate::points::WeightedSet;
@@ -86,25 +129,210 @@ pub fn cover_with_balls_weighted(
     eps: f64,
     beta: f64,
 ) -> CoverResult {
-    assert!(!pts.is_empty(), "CoverWithBalls: empty P");
-    assert!(!t.is_empty(), "CoverWithBalls: empty T");
-    assert!(eps > 0.0 && beta > 0.0 && r >= 0.0);
-    let n = pts.len();
-    if let Some(w) = in_weights {
-        assert_eq!(w.len(), n, "weights/pts arity mismatch");
+    if !space.uniform_precision() {
+        // Bulk distances not precise enough to back the pruning bounds
+        // (engine-attached Euclidean mixes f32/f64 by block size; the
+        // angular metric is ill-conditioned near 0). The reference loop
+        // preserves the historical behavior — including the engine's
+        // large-block dispatch — exactly.
+        return cover_with_balls_weighted_unpruned(space, pts, in_weights, t, r, eps, beta);
     }
-    let shrink = eps / (2.0 * beta);
-
-    // d(x, T) once, up front (bulk path).
-    let dist_to_t = space.assign(pts, t).dist;
-    // per-point removal threshold: shrink * max(R, d(x, T))
-    let threshold: Vec<f64> = dist_to_t.iter().map(|&d| shrink * d.max(r)).collect();
-
-    let mut alive: Vec<u32> = (0..n as u32).collect(); // positions into pts
+    let setup = CoverSetup::new(space, pts, in_weights, t, r, eps, beta);
+    let n = pts.len();
     let mut tau = vec![u32::MAX; n];
     let mut centers: Vec<u32> = Vec::new();
     let mut weights: Vec<u64> = Vec::new();
-    let mut dist_buf: Vec<f64> = Vec::new();
+
+    // Alive points bucketed by nearest T-center. Each bucket keeps its
+    // positions (into `pts`) in ascending order; `head` marks consumed
+    // representatives, survivors are `pos[head..]`. `lo`/`hi` bound
+    // d(x, t_j) ∓ threshold[x] over the bucket's alive points — stale
+    // (too-wide) bounds after a head pop are conservative and get
+    // tightened at the next compaction.
+    struct Bucket {
+        pos: Vec<u32>,
+        head: usize,
+        lo: f64,
+        hi: f64,
+    }
+    let mut buckets: Vec<Bucket> = (0..t.len())
+        .map(|_| Bucket { pos: Vec::new(), head: 0, lo: f64::INFINITY, hi: f64::NEG_INFINITY })
+        .collect();
+    for (pos, &j) in setup.nearest_t.iter().enumerate() {
+        let b = &mut buckets[j as usize];
+        b.pos.push(pos as u32);
+        b.lo = b.lo.min(setup.dist_to_t[pos] - setup.threshold[pos]);
+        b.hi = b.hi.max(setup.dist_to_t[pos] + setup.threshold[pos]);
+    }
+    let mut alive_count = n;
+
+    // Rounding margin: the triangle inequality holds for the true
+    // metric, but the bound is assembled from floating-point distances,
+    // so shave a relative hair off it before letting it veto an
+    // evaluation. 1e-12 dwarfs the ~1e-15 accumulation error of every
+    // in-tree metric that reports uniform precision, while only
+    // admitting a negligible number of extra evaluations at
+    // exact-threshold boundaries — pruning stays exact, never
+    // clairvoyant. Spaces that cannot honor this error budget
+    // report `uniform_precision() == false` and took the reference path
+    // above.
+    const LB_MARGIN: f64 = 1e-12;
+
+    // Adaptive escape hatch: on data where the bounds decide nothing
+    // (tightly overlapping clusters, or a metric whose default
+    // `dist_batch_pruned` computes whole admitted buckets), the cached
+    // d(c, T) rows would otherwise accumulate into a real regression
+    // over the unpruned loop. Track what the unpruned reference would
+    // have paid; once the pruned ledger falls behind by more than a
+    // startup slack, stop consulting bounds — every later iteration
+    // then computes exactly the alive scan the reference would, keeping
+    // the total overhead bounded by the slack. The switch depends only
+    // on deterministic counts, and both modes make identical removal
+    // comparisons, so outputs are unaffected.
+    let mut pruned_evals: u64 = 0;
+    let mut baseline_evals: u64 = 0;
+    let mut bounds_paying = true;
+    let give_up_slack = 16 * t.len() as u64 + n as u64;
+
+    // Reused scratch for the per-bucket pruned batch.
+    let mut dct = vec![0.0f64; t.len()]; // d(c, t_j) for the current rep
+    let mut scr_pts: Vec<u32> = Vec::new();
+    let mut scr_lower: Vec<f64> = Vec::new();
+    let mut scr_cut: Vec<f64> = Vec::new();
+    let mut scr_out: Vec<f64> = Vec::new();
+
+    while alive_count > 0 {
+        // Same selection rule as the reference: the smallest remaining
+        // position overall (= the minimum over bucket heads).
+        let mut cpos = u32::MAX;
+        let mut jc = usize::MAX;
+        for (j, b) in buckets.iter().enumerate() {
+            if b.head < b.pos.len() && b.pos[b.head] < cpos {
+                cpos = b.pos[b.head];
+                jc = j;
+            }
+        }
+        let cpos = cpos as usize;
+        let c = pts[cpos];
+        let cidx = centers.len() as u32;
+        centers.push(c);
+        // what the unpruned reference pays this iteration: one full scan
+        // of the alive list (representative included)
+        baseline_evals += alive_count as u64;
+        // The representative removes itself unconditionally (the engine's
+        // norm-expansion kernel can report d(c,c) ≈ 1e-2 instead of 0,
+        // which must not leave c alive).
+        tau[cpos] = cidx;
+        let mut w: u64 = setup.weight_of(cpos);
+        buckets[jc].head += 1;
+        alive_count -= 1;
+
+        // Cache d(c, t_j) once per representative: |T| evaluations buy
+        // a lower bound on d(x, c) for every alive point. When |T| has
+        // caught up with the alive count (late iterations, or round 2's
+        // cover against a large C_w), the cache costs more than the scan
+        // it prunes — fall back to computing every alive distance, which
+        // bounds the pruned path's per-iteration evals by the unpruned
+        // path's. Either branch makes the identical removal comparisons.
+        let use_bounds = bounds_paying && t.len() < alive_count;
+        if use_bounds {
+            space.dist_batch(t, c, &mut dct);
+            pruned_evals += t.len() as u64;
+        }
+
+        for (j, b) in buckets.iter_mut().enumerate() {
+            if b.head >= b.pos.len() {
+                continue;
+            }
+            let dcj = dct[j];
+            if use_bounds {
+                // Bucket-level bound: no x in this bucket can satisfy
+                // d(x,c) ≤ threshold[x] unless d(c,t_j) lies within the
+                // bucket's [lo, hi] interval (widened by the margin).
+                let slack = LB_MARGIN * (dcj + b.hi);
+                if dcj < b.lo - slack || dcj > b.hi + slack {
+                    continue;
+                }
+            }
+            scr_pts.clear();
+            scr_lower.clear();
+            scr_cut.clear();
+            for &pos in &b.pos[b.head..] {
+                let pos = pos as usize;
+                scr_pts.push(pts[pos]);
+                let lb = if use_bounds {
+                    let a = setup.dist_to_t[pos];
+                    ((a - dcj).abs() - LB_MARGIN * (a + dcj)).max(0.0)
+                } else {
+                    0.0
+                };
+                scr_lower.push(lb);
+                scr_cut.push(setup.threshold[pos]);
+            }
+            scr_out.clear();
+            scr_out.resize(scr_pts.len(), 0.0);
+            let computed = space.dist_batch_pruned(&scr_pts, c, &scr_lower, &scr_cut, &mut scr_out);
+            pruned_evals += computed as u64;
+
+            // Compact survivors in place (no per-iteration reallocation)
+            // and tighten the bucket bounds while we are at it. The read
+            // cursor `b.head + i` never trails the write cursor, so plain
+            // forward indexing is aliasing-safe.
+            let mut write = b.head;
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for i in 0..scr_pts.len() {
+                let pos = b.pos[b.head + i];
+                let posu = pos as usize;
+                if scr_out[i] <= setup.threshold[posu] {
+                    tau[posu] = cidx;
+                    w += setup.weight_of(posu);
+                    alive_count -= 1;
+                } else {
+                    b.pos[write] = pos;
+                    write += 1;
+                    lo = lo.min(setup.dist_to_t[posu] - setup.threshold[posu]);
+                    hi = hi.max(setup.dist_to_t[posu] + setup.threshold[posu]);
+                }
+            }
+            b.pos.truncate(write);
+            b.lo = lo;
+            b.hi = hi;
+        }
+        debug_assert!(w >= 1, "the new representative must remove itself");
+        weights.push(w);
+        if bounds_paying && pruned_evals > baseline_evals + give_up_slack {
+            bounds_paying = false;
+        }
+    }
+
+    CoverResult { set: WeightedSet::new(centers, weights), tau, dist_to_t: setup.dist_to_t }
+}
+
+/// Unpruned reference implementation of the weighted CoverWithBalls
+/// greedy loop: one full `dist_batch` over the alive list per iteration,
+/// with in-place compaction of the parallel alive/point arrays (the
+/// historical per-iteration re-gather of `alive_pts` made the fallback
+/// silently quadratic in allocations as well as evaluations). Kept
+/// public as the bit-exact oracle the pruned path is pinned to and as
+/// the baseline side of the `BENCH_pruning.json` comparison.
+pub fn cover_with_balls_weighted_unpruned(
+    space: &dyn MetricSpace,
+    pts: &[u32],
+    in_weights: Option<&[u64]>,
+    t: &[u32],
+    r: f64,
+    eps: f64,
+    beta: f64,
+) -> CoverResult {
+    let setup = CoverSetup::new(space, pts, in_weights, t, r, eps, beta);
+    let n = pts.len();
+    let mut tau = vec![u32::MAX; n];
+    let mut centers: Vec<u32> = Vec::new();
+    let mut weights: Vec<u64> = Vec::new();
+
+    let mut alive: Vec<u32> = (0..n as u32).collect(); // positions into pts
+    let mut alive_pts: Vec<u32> = pts.to_vec(); // pts[alive[i]], compacted in step
+    let mut dist_buf = vec![0.0f64; n];
 
     while !alive.is_empty() {
         // arbitrary remaining point: smallest position (deterministic)
@@ -115,31 +343,87 @@ pub fn cover_with_balls_weighted(
 
         // distances of remaining points to the new representative
         // (one bulk query per greedy iteration)
-        dist_buf.clear();
-        dist_buf.resize(alive.len(), 0.0);
-        let alive_pts: Vec<u32> = alive.iter().map(|&pos| pts[pos as usize]).collect();
-        space.dist_batch(&alive_pts, c, &mut dist_buf);
+        let m = alive.len();
+        space.dist_batch(&alive_pts[..m], c, &mut dist_buf[..m]);
 
         // partition alive into kept / removed; removed map to this center.
         // The selected point always removes itself, independent of the
-        // computed distance: the engine's norm-expansion kernel can report
-        // d(c,c) ≈ 1e-2 instead of 0, which must not leave c alive.
-        let mut kept: Vec<u32> = Vec::with_capacity(alive.len());
+        // computed distance (see the pruned path).
         let mut w: u64 = 0;
-        for (ai, &pos) in alive.iter().enumerate() {
-            if pos as usize == cpos || dist_buf[ai] <= threshold[pos as usize] {
-                tau[pos as usize] = cidx;
-                w += in_weights.map_or(1, |ws| ws[pos as usize]);
+        let mut write = 0usize;
+        for ai in 0..m {
+            let pos = alive[ai] as usize;
+            if pos == cpos || dist_buf[ai] <= setup.threshold[pos] {
+                tau[pos] = cidx;
+                w += setup.weight_of(pos);
             } else {
-                kept.push(pos);
+                alive[write] = alive[ai];
+                alive_pts[write] = alive_pts[ai];
+                write += 1;
             }
         }
+        alive.truncate(write);
+        alive_pts.truncate(write);
         debug_assert!(w >= 1, "the new representative must remove itself");
         weights.push(w);
-        alive = kept;
     }
 
-    CoverResult { set: WeightedSet::new(centers, weights), tau, dist_to_t }
+    CoverResult { set: WeightedSet::new(centers, weights), tau, dist_to_t: setup.dist_to_t }
+}
+
+/// Shared input validation + up-front geometry of both cover paths:
+/// the bulk d(x, T) pass, the nearest-T assignment (the pruned path's
+/// bucketing key), and the fixed per-point removal thresholds.
+struct CoverSetup<'a> {
+    in_weights: Option<&'a [u64]>,
+    dist_to_t: Vec<f64>,
+    nearest_t: Vec<u32>,
+    threshold: Vec<f64>,
+}
+
+impl<'a> CoverSetup<'a> {
+    fn new(
+        space: &dyn MetricSpace,
+        pts: &[u32],
+        in_weights: Option<&'a [u64]>,
+        t: &[u32],
+        r: f64,
+        eps: f64,
+        beta: f64,
+    ) -> CoverSetup<'a> {
+        assert!(!pts.is_empty(), "CoverWithBalls: empty P");
+        assert!(!t.is_empty(), "CoverWithBalls: empty T");
+        assert!(eps > 0.0 && beta > 0.0 && r >= 0.0);
+        let n = pts.len();
+        if let Some(w) = in_weights {
+            assert_eq!(w.len(), n, "weights/pts arity mismatch");
+        }
+        let shrink = eps / (2.0 * beta);
+
+        // d(x, T) once, up front (bulk path).
+        let assign = space.assign(pts, t);
+        // per-point removal threshold: shrink * max(R, d(x, T)) — fixed
+        // for the whole run and monotone in d(x, T) (see module docs).
+        let threshold: Vec<f64> = assign.dist.iter().map(|&d| shrink * d.max(r)).collect();
+        debug_assert!(
+            thresholds_monotone(&assign.dist, &threshold),
+            "removal thresholds must be a monotone non-decreasing function of d(x, T)"
+        );
+        CoverSetup { in_weights, dist_to_t: assign.dist, nearest_t: assign.idx, threshold }
+    }
+
+    #[inline]
+    fn weight_of(&self, pos: usize) -> u64 {
+        self.in_weights.map_or(1, |ws| ws[pos])
+    }
+}
+
+/// Debug-only check of the threshold monotonicity assumption: sorting by
+/// d(x, T) must sort the thresholds too.
+fn thresholds_monotone(dist_to_t: &[f64], threshold: &[f64]) -> bool {
+    let mut order: Vec<u32> = (0..dist_to_t.len() as u32).collect();
+    order.sort_unstable_by(|&a, &b| dist_to_t[a as usize].total_cmp(&dist_to_t[b as usize]));
+    order.windows(2).all(|w| threshold[w[0] as usize] <= threshold[w[1] as usize])
 }
 
 #[cfg(test)]

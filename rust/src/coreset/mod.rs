@@ -11,7 +11,9 @@ pub mod kcenter;
 pub mod local;
 pub mod pipeline;
 
-pub use cover::{cover_with_balls, cover_with_balls_weighted, CoverResult};
+pub use cover::{
+    cover_with_balls, cover_with_balls_weighted, cover_with_balls_weighted_unpruned, CoverResult,
+};
 pub use kcenter::{solve_kcenter, KCenterReport};
 pub use local::{local_coreset, LocalCoresetOut, TlAlgo};
 pub use pipeline::{one_round_coreset, two_round_coreset, CoresetConfig, PipelineOutput};

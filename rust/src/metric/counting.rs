@@ -45,9 +45,28 @@ impl MetricSpace for CountingSpace<'_> {
         self.inner.name()
     }
 
+    fn uniform_precision(&self) -> bool {
+        self.inner.uniform_precision()
+    }
+
     fn dist_batch(&self, pts: &[u32], c: u32, out: &mut [f64]) {
         self.count.fetch_add(pts.len() as u64, Ordering::Relaxed);
         self.inner.dist_batch(pts, c, out)
+    }
+
+    /// Forwarded so wrapping keeps the inner space's pruning override;
+    /// mirrors the counter contract by counting only computed distances.
+    fn dist_batch_pruned(
+        &self,
+        pts: &[u32],
+        c: u32,
+        lower: &[f64],
+        cutoff: &[f64],
+        out: &mut [f64],
+    ) -> usize {
+        let computed = self.inner.dist_batch_pruned(pts, c, lower, cutoff, out);
+        self.count.fetch_add(computed as u64, Ordering::Relaxed);
+        computed
     }
 
     fn nearest_batch(&self, pts: &[u32], centers: &[u32]) -> Assignment {
@@ -83,5 +102,19 @@ mod tests {
         assert_eq!(c.evals(), 1 + 6 + 3);
         c.reset();
         assert_eq!(c.evals(), 0);
+    }
+
+    #[test]
+    fn counts_only_computed_pruned_distances() {
+        let v = Arc::new(VectorData::from_rows(&[vec![0.0], vec![1.0], vec![10.0]]));
+        let e = EuclideanSpace::new(v);
+        let c = CountingSpace::new(&e);
+        // distances to 0 are 0,1,10; lower bounds are exact, cutoff 2.0:
+        // the 10.0 entry is prunable by the inner Euclidean override
+        let mut out = vec![0.0f64; 3];
+        let computed =
+            c.dist_batch_pruned(&[0, 1, 2], 0, &[0.0, 1.0, 10.0], &[2.0; 3], &mut out);
+        assert_eq!(computed, 2);
+        assert_eq!(c.evals(), 2, "pruned pairs must not be counted");
     }
 }

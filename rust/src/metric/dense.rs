@@ -123,6 +123,46 @@ impl MetricSpace for EuclideanSpace {
         }
     }
 
+    /// With an engine attached, bulk queries may return f32-precision
+    /// distances for large blocks while small blocks stay f64 — bounds
+    /// built from such mixed output are unsound, so pruned callers must
+    /// not trust them (they fall back to computing every comparison).
+    fn uniform_precision(&self) -> bool {
+        self.engine.is_none()
+    }
+
+    /// Geometry-pruned bulk distances: pairs whose caller-supplied lower
+    /// bound exceeds the cutoff are skipped entirely (no coordinates
+    /// touched, no counter charge); computed entries go through the same
+    /// f64 `sq_euclidean(..).sqrt()` expression as the scalar `dist_batch`
+    /// path, so they are bit-identical to it. This path never dispatches
+    /// to the engine: the pruned survivor set is sparse and irregular,
+    /// which is exactly where kernel dispatch overhead loses.
+    fn dist_batch_pruned(
+        &self,
+        pts: &[u32],
+        c: u32,
+        lower: &[f64],
+        cutoff: &[f64],
+        out: &mut [f64],
+    ) -> usize {
+        assert_eq!(pts.len(), lower.len());
+        assert_eq!(pts.len(), cutoff.len());
+        assert_eq!(pts.len(), out.len());
+        let crow = self.data.row(c);
+        let mut computed = 0usize;
+        for i in 0..pts.len() {
+            if lower[i] > cutoff[i] {
+                out[i] = f64::INFINITY;
+            } else {
+                out[i] = sq_euclidean(self.data.row(pts[i]), crow).sqrt();
+                computed += 1;
+            }
+        }
+        counter::charge(computed);
+        computed
+    }
+
     fn nearest_batch(&self, pts: &[u32], centers: &[u32]) -> Assignment {
         assert!(!centers.is_empty(), "nearest_batch: empty center set");
         counter::charge(pts.len() * centers.len());
@@ -321,6 +361,35 @@ macro_rules! vector_space {
                 }
             }
 
+            /// Geometry-pruned batch: skip (and do not charge) pairs the
+            /// caller's lower bound already decides; computed entries use
+            /// the same distance expression as `dist_batch`.
+            fn dist_batch_pruned(
+                &self,
+                pts: &[u32],
+                c: u32,
+                lower: &[f64],
+                cutoff: &[f64],
+                out: &mut [f64],
+            ) -> usize {
+                assert_eq!(pts.len(), lower.len());
+                assert_eq!(pts.len(), cutoff.len());
+                assert_eq!(pts.len(), out.len());
+                let f: fn(&[f32], &[f32]) -> f64 = $dist_fn;
+                let crow = self.data.row(c);
+                let mut computed = 0usize;
+                for i in 0..pts.len() {
+                    if lower[i] > cutoff[i] {
+                        out[i] = f64::INFINITY;
+                    } else {
+                        out[i] = f(self.data.row(pts[i]), crow);
+                        computed += 1;
+                    }
+                }
+                counter::charge(computed);
+                computed
+            }
+
             fn name(&self) -> &'static str {
                 $metric_name
             }
@@ -388,6 +457,48 @@ mod tests {
         let c = ChebyshevSpace::new(data());
         assert!((m.dist(0, 1) - 7.0).abs() < 1e-9);
         assert!((c.dist(0, 1) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pruned_batch_exact_and_honestly_charged_all_spaces() {
+        use super::super::counter;
+        let d = data();
+        let pts: Vec<u32> = (0..4).collect();
+        for s in [
+            &EuclideanSpace::new(d.clone()) as &dyn MetricSpace,
+            &ManhattanSpace::new(d.clone()),
+            &ChebyshevSpace::new(d.clone()),
+        ] {
+            for c in 0..4u32 {
+                // triangle-inequality lower bounds via reference point 0:
+                // d(p, c) >= |d(p, 0) - d(c, 0)|
+                let lower: Vec<f64> =
+                    pts.iter().map(|&p| (s.dist(p, 0) - s.dist(c, 0)).abs()).collect();
+                let mut reference = vec![0.0f64; 4];
+                s.dist_batch(&pts, c, &mut reference);
+                for cut in [0.0f64, 1.0, 2.5, 100.0] {
+                    let cutoff = vec![cut; 4];
+                    let mut out = vec![0.0f64; 4];
+                    let (computed, evals) = counter::counted(|| {
+                        s.dist_batch_pruned(&pts, c, &lower, &cutoff, &mut out)
+                    });
+                    assert_eq!(computed as u64, evals, "{} c={c}", s.name());
+                    for i in 0..4 {
+                        if lower[i] > cut {
+                            // pruned: must decide `<= cut` the same way
+                            assert!(out[i] > cut && reference[i] > cut);
+                        } else {
+                            assert_eq!(
+                                out[i].to_bits(),
+                                reference[i].to_bits(),
+                                "{} c={c} i={i}",
+                                s.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

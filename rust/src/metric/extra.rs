@@ -47,6 +47,15 @@ impl MetricSpace for AngularSpace {
     fn name(&self) -> &'static str {
         "angular"
     }
+
+    /// `acos` is ill-conditioned near dot ≈ ±1: for nearly-parallel
+    /// vectors the absolute error can reach ~1e-16/θ, orders beyond the
+    /// relative margin pruned callers budget for. Triangle-inequality
+    /// bounds assembled from these distances are therefore not reliable
+    /// — report so, and pruned callers compute every comparison.
+    fn uniform_precision(&self) -> bool {
+        false
+    }
 }
 
 /// Hamming distance over fixed-length byte codes (e.g. binary hashes,

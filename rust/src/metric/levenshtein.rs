@@ -73,6 +73,42 @@ impl MetricSpace for StringSpace {
         }
     }
 
+    /// Geometry-pruned batch: each skipped pair saves an entire
+    /// O(|a|·|b|) DP table — the most expensive distance in the tree —
+    /// and only computed pairs charge the counter. Computed entries go
+    /// through the same DP (and the same `p == c` shortcut) as
+    /// `dist_batch`, so they are bit-identical to it.
+    fn dist_batch_pruned(
+        &self,
+        pts: &[u32],
+        c: u32,
+        lower: &[f64],
+        cutoff: &[f64],
+        out: &mut [f64],
+    ) -> usize {
+        assert_eq!(pts.len(), lower.len());
+        assert_eq!(pts.len(), cutoff.len());
+        assert_eq!(pts.len(), out.len());
+        let cs = &self.strings[c as usize];
+        let mut prev: Vec<usize> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut computed = 0usize;
+        for i in 0..pts.len() {
+            if lower[i] > cutoff[i] {
+                out[i] = f64::INFINITY;
+            } else if pts[i] == c {
+                out[i] = 0.0;
+                computed += 1;
+            } else {
+                let s = &self.strings[pts[i] as usize];
+                out[i] = levenshtein_with(s, cs, &mut prev, &mut cur) as f64;
+                computed += 1;
+            }
+        }
+        counter::charge(computed);
+        computed
+    }
+
     fn name(&self) -> &'static str {
         "levenshtein"
     }

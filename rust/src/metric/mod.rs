@@ -28,12 +28,30 @@
 //! space overrides `dist_batch` to batch the DP row allocations —
 //! exercising the genuinely-general-metric path.
 //!
+//! # Geometry-pruned queries
+//!
+//! [`MetricSpace::dist_batch_pruned`] is the bounds-aware variant of
+//! `dist_batch`: the caller supplies a per-point *lower bound* on the
+//! distance (derived from the triangle inequality over distances it
+//! already holds) plus a per-point cutoff, and the implementation may
+//! skip any pair whose bound already exceeds the cutoff. Skipping is
+//! exact, not approximate — a skipped pair is one whose comparison
+//! against the cutoff was already decided — so pruned callers
+//! (CoverWithBalls, the incremental local-search book) stay bit-identical
+//! to their unpruned references.
+//!
 //! # Distance-evaluation accounting
 //!
 //! Every implementation charges [`counter`] — 1 unit per (point, center)
 //! pair covered by a query, regardless of early-exit tricks — giving the
 //! simulator a per-reducer work metric (`RoundStats::dist_evals`) next
 //! to its memory meter. See `counter` for the threading contract.
+//!
+//! The one deliberate exception is `dist_batch_pruned`: a pruned pair is
+//! work that genuinely never happened (no coordinates are touched), so
+//! the primitive charges only the distances it actually computes. That
+//! keeps the work metric honest — `RoundStats::dist_evals` reports real
+//! evaluations, and pruning PRs show up as measurable reductions.
 
 pub mod counter;
 pub mod counting;
@@ -121,6 +139,59 @@ pub trait MetricSpace: Send + Sync {
         for (o, &p) in out.iter_mut().zip(pts) {
             *o = self.dist(p, c);
         }
+    }
+
+    /// Bounds-aware bulk distances — the geometry-pruned variant of
+    /// [`Self::dist_batch`]. `lower[i]` must be a valid lower bound on
+    /// `d(pts[i], c)` (callers derive it from the triangle inequality
+    /// over distances they already hold, e.g. `|d(x,t) − d(c,t)|` for a
+    /// shared reference point `t`). For every `i` with
+    /// `lower[i] > cutoff[i]` the implementation may skip the
+    /// evaluation and store `f64::INFINITY` in `out[i]`; every other
+    /// entry holds the exact distance, bit-identical to what
+    /// `dist_batch` would produce. Callers must therefore only consume
+    /// `out[i]` through comparisons of the form `out[i] <= cutoff[i]` —
+    /// exactly the comparisons the bound has already decided — which is
+    /// what keeps pruned algorithms bit-identical to their unpruned
+    /// references. Returns the number of distances actually computed.
+    ///
+    /// Counter contract: unlike the other bulk queries (which charge
+    /// `|pts| · |centers|` regardless of early-exit tricks), this
+    /// primitive charges [`counter`] only for the evaluations it
+    /// performs — a pruned pair touches no coordinates, so reporting it
+    /// as work would make `dist_evals` lie about savings.
+    ///
+    /// The default ignores the bounds and falls back to `dist_batch`
+    /// (computing — and charging — everything), so implementations stay
+    /// correct with no override; the dense vector spaces override it to
+    /// actually skip.
+    fn dist_batch_pruned(
+        &self,
+        pts: &[u32],
+        c: u32,
+        lower: &[f64],
+        cutoff: &[f64],
+        out: &mut [f64],
+    ) -> usize {
+        debug_assert_eq!(pts.len(), lower.len());
+        debug_assert_eq!(pts.len(), cutoff.len());
+        self.dist_batch(pts, c, out);
+        pts.len()
+    }
+
+    /// Whether this space's bulk queries return distances precise enough
+    /// (uniform precision across block sizes, relative error well below
+    /// 1e-12) for callers to assemble triangle-inequality pruning bounds
+    /// from previously returned values — the contract
+    /// [`Self::dist_batch_pruned`] callers rely on. Default true. Report
+    /// false when that fails and pruned callers fall back to their exact
+    /// unpruned code paths: the Euclidean space does so while an
+    /// accelerator engine is attached (engine blocks are f32 while small
+    /// blocks are f64), and the angular space always (`acos` is
+    /// ill-conditioned near 0, with absolute error far above the
+    /// margin).
+    fn uniform_precision(&self) -> bool {
+        true
     }
 
     /// Nearest-center assignment of `pts` against `centers` — the bulk
@@ -243,6 +314,50 @@ mod tests {
         let b = s.nearest_batch(&pts, &[1, 4]);
         assert_eq!(a.dist, b.dist);
         assert_eq!(a.idx, b.idx);
+    }
+
+    #[test]
+    fn pruned_batch_skips_only_decided_pairs() {
+        let s = line_space();
+        let pts = [0u32, 1, 2, 3, 4];
+        // distances to center 0 are 0,1,2,3,10; give exact lower bounds
+        // and a cutoff of 2.5: pairs with lower > cutoff may be skipped.
+        let lower = [0.0, 1.0, 2.0, 3.0, 10.0];
+        let cutoff = [2.5; 5];
+        let mut out = vec![0.0f64; 5];
+        let (computed, evals) =
+            counter::counted(|| s.dist_batch_pruned(&pts, 0, &lower, &cutoff, &mut out));
+        assert_eq!(computed as u64, evals, "charge == computed count");
+        assert!(computed <= 5);
+        let mut reference = vec![0.0f64; 5];
+        s.dist_batch(&pts, 0, &mut reference);
+        for i in 0..5 {
+            if lower[i] > cutoff[i] {
+                // skipped entries must still decide the comparison the
+                // same way the exact distance would
+                assert!(out[i] > cutoff[i], "i={i}");
+                assert!(reference[i] > cutoff[i], "i={i}");
+            } else {
+                assert_eq!(out[i].to_bits(), reference[i].to_bits(), "i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_batch_with_slack_bounds_computes_everything_it_must() {
+        let s = line_space();
+        let pts = [0u32, 1, 2, 3, 4];
+        // all-zero lower bounds: nothing may be pruned
+        let lower = [0.0; 5];
+        let cutoff = [0.5; 5];
+        let mut out = vec![0.0f64; 5];
+        let computed = s.dist_batch_pruned(&pts, 2, &lower, &cutoff, &mut out);
+        assert_eq!(computed, 5);
+        let mut reference = vec![0.0f64; 5];
+        s.dist_batch(&pts, 2, &mut reference);
+        for i in 0..5 {
+            assert_eq!(out[i].to_bits(), reference[i].to_bits(), "i={i}");
+        }
     }
 
     #[test]

@@ -16,10 +16,13 @@
 //!   instances only; the test oracle).
 
 use crate::algorithms::brute::binomial;
-use crate::algorithms::local_search::{rebuild_book, sampled_candidate_pool, LocalSearchCfg};
+use crate::algorithms::local_search::{
+    apply_swap, rebuild_book, sampled_candidate_pool, LocalSearchCfg,
+};
 use crate::algorithms::seeding::{dpp_seeding, gonzalez};
 use crate::algorithms::Instance;
 use crate::metric::{MetricSpace, Objective};
+use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 
 /// A robust cost evaluation: the kept cost plus which points were
@@ -163,6 +166,12 @@ pub fn robust_cost(
 /// robust cost of that distance vector re-selects the excluded set — the
 /// exclusion is NOT frozen across swaps, which is what makes the search
 /// outlier-aware rather than merely outlier-tolerant.
+///
+/// Accepted swaps update the nearest/second-nearest book incrementally
+/// (see `algorithms::local_search`): the winning candidate's distance
+/// row kept from the scan plus a re-scan of the points whose book
+/// entries named the evicted center, instead of a full O(nk) rebuild.
+/// Bit-identical to [`local_search_outliers_reference`].
 pub fn local_search_outliers(
     space: &dyn MetricSpace,
     obj: Objective,
@@ -172,6 +181,37 @@ pub fn local_search_outliers(
     init: Option<Vec<u32>>,
     cfg: &LocalSearchCfg,
 ) -> RobustSolution {
+    local_search_outliers_impl(space, obj, inst, k, z, init, cfg, true)
+}
+
+/// Reference implementation with full `rebuild_book` after each accepted
+/// swap — the bit-exact oracle for the incremental path.
+pub fn local_search_outliers_reference(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+    z: u64,
+    init: Option<Vec<u32>>,
+    cfg: &LocalSearchCfg,
+) -> RobustSolution {
+    local_search_outliers_impl(space, obj, inst, k, z, init, cfg, false)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn local_search_outliers_impl(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+    k: usize,
+    z: u64,
+    init: Option<Vec<u32>>,
+    cfg: &LocalSearchCfg,
+    incremental: bool,
+) -> RobustSolution {
+    // see local_search_impl: block-size-dependent precision forbids
+    // reusing distance rows across queries
+    let incremental = incremental && space.uniform_precision();
     let n = inst.n();
     let k = k.min(n);
     let mut rng = Rng::new(cfg.seed);
@@ -201,8 +241,10 @@ pub fn local_search_outliers(
     let exhaustive = n <= cfg.exhaustive_below;
     let mut dry_passes = 0usize;
     let mut dc_buf = vec![0.0f64; n];
+    let mut best_dc = vec![0.0f64; n];
     let mut nd_buf = vec![0.0f64; n];
     let mut scratch: Vec<u32> = Vec::with_capacity(n);
+    let mut in_centers = Bitset::from_members(space.n_points(), &centers);
     for _pass in 0..cfg.max_passes {
         // Candidate pool: exhaustive for small instances; otherwise half
         // uniform, half biased by the robust residual. Excluded points
@@ -230,10 +272,11 @@ pub fn local_search_outliers(
         let mut best_swap: Option<(usize, u32)> = None;
         for ci in cand_idx {
             let cand = inst.pts[ci];
-            if centers.contains(&cand) {
+            if in_centers.contains(cand) {
                 continue;
             }
             space.dist_batch(inst.pts, cand, &mut dc_buf);
+            let mut improved = false;
             for q in 0..centers.len() {
                 for x in 0..n {
                     let kept = if book.i1[x] as usize == q { book.d2[x] } else { book.d1[x] };
@@ -243,13 +286,28 @@ pub fn local_search_outliers(
                 if total < best_cost {
                     best_cost = total;
                     best_swap = Some((q, cand));
+                    improved = true;
                 }
+            }
+            if improved {
+                // keep the winner's distance row for the book update
+                // (one copy per improving candidate, not per q)
+                best_dc.copy_from_slice(&dc_buf);
             }
         }
         match best_swap {
             Some((q, cand)) if best_cost <= current.cost * (1.0 - cfg.min_rel_improvement) => {
-                centers[q] = cand;
-                book = rebuild_book(space, inst.pts, &centers);
+                apply_swap(
+                    space,
+                    inst.pts,
+                    &mut centers,
+                    &mut in_centers,
+                    q,
+                    cand,
+                    &best_dc,
+                    &mut book,
+                    incremental,
+                );
                 current = robust_cost_of_dists(obj, &book.d1, inst.weights, z);
                 dry_passes = 0;
             }

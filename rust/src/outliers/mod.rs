@@ -23,7 +23,7 @@ pub mod finisher;
 pub mod pipeline;
 
 pub use finisher::{
-    brute_force_outliers, local_search_outliers, robust_cost, robust_cost_of_dists, RobustCost,
-    RobustSolution,
+    brute_force_outliers, local_search_outliers, local_search_outliers_reference, robust_cost,
+    robust_cost_of_dists, RobustCost, RobustSolution,
 };
 pub use pipeline::{outlier_coreset, OutlierCoresetConfig};

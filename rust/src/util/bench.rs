@@ -75,6 +75,29 @@ pub fn to_json(results: &[BenchResult]) -> String {
     out
 }
 
+/// [`to_json`] plus a flat `"metrics"` object of named scalars (work
+/// counts, savings ratios — the quantities a timing-only schema cannot
+/// carry). Used by the pruning benches for `BENCH_pruning.json`, where
+/// the headline number is distance evaluations saved, not seconds.
+pub fn to_json_with_metrics(results: &[BenchResult], metrics: &[(&str, f64)]) -> String {
+    let mut out = to_json(results);
+    // hard asserts: this only ever runs in the bench profile, where
+    // debug_assert! would be compiled out and corrupt JSON would ship
+    // into the cross-PR artifact series silently
+    assert!(out.ends_with("]}"), "to_json output format changed");
+    out.truncate(out.len() - 1); // reopen the top-level object
+    out.push_str(",\"metrics\":{");
+    for (i, (k, v)) in metrics.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        assert!(v.is_finite(), "metric {k} must be finite for JSON");
+        out.push_str(&format!("\"{}\":{}", json_escape(k), v));
+    }
+    out.push_str("}}");
+    out
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -154,6 +177,24 @@ mod tests {
         assert!(s.contains("\"median_s\":0.002000000"));
         assert_eq!(s.matches("\"name\"").count(), 2);
         // balanced braces/brackets (cheap well-formedness check)
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn json_with_metrics_is_well_formed() {
+        let r = BenchResult {
+            name: "cover pruned".to_string(),
+            samples: 2,
+            median: Duration::from_millis(3),
+            p10: Duration::from_millis(3),
+            p90: Duration::from_millis(3),
+            mean: Duration::from_millis(3),
+        };
+        let s = to_json_with_metrics(&[r], &[("evals_saved_ratio", 16.5), ("evals", 42.0)]);
+        assert!(s.contains("\"metrics\":{\"evals_saved_ratio\":16.5,\"evals\":42}"), "{s}");
+        assert!(s.starts_with("{\"benchmarks\":["));
+        assert!(s.ends_with("}}"));
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

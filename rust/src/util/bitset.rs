@@ -1,0 +1,89 @@
+//! Fixed-capacity membership bitset over `u32` ids.
+//!
+//! The local-search pass loops (plain and outlier-robust) test every
+//! swap-in candidate against the current center set; a `Vec::contains`
+//! there is an O(k) scan per candidate. Centers are global point indices
+//! `< n_points`, so a word-packed bitset gives O(1) membership with one
+//! bit per point.
+
+/// A set of `u32` ids below a fixed capacity, packed 64 per word.
+#[derive(Clone, Debug)]
+pub struct Bitset {
+    words: Vec<u64>,
+}
+
+impl Bitset {
+    /// Empty set able to hold ids in `0..capacity`.
+    pub fn new(capacity: usize) -> Bitset {
+        Bitset { words: vec![0u64; capacity.div_ceil(64)] }
+    }
+
+    /// Build directly from a slice of member ids.
+    pub fn from_members(capacity: usize, members: &[u32]) -> Bitset {
+        let mut s = Bitset::new(capacity);
+        for &m in members {
+            s.insert(m);
+        }
+        s
+    }
+
+    #[inline]
+    pub fn insert(&mut self, id: u32) {
+        self.words[id as usize / 64] |= 1u64 << (id % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, id: u32) {
+        self.words[id as usize / 64] &= !(1u64 << (id % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        self.words[id as usize / 64] >> (id % 64) & 1 != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_contains() {
+        let mut s = Bitset::new(200);
+        assert!(!s.contains(0));
+        assert!(!s.contains(199));
+        s.insert(0);
+        s.insert(63);
+        s.insert(64);
+        s.insert(199);
+        for id in [0u32, 63, 64, 199] {
+            assert!(s.contains(id), "{id}");
+        }
+        assert!(!s.contains(1));
+        assert!(!s.contains(128));
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert!(s.contains(63) && s.contains(199));
+        // removing an absent id is a no-op
+        s.remove(100);
+        assert!(s.contains(0));
+    }
+
+    #[test]
+    fn from_members_matches_linear_scan() {
+        let members = [3u32, 17, 64, 65, 127];
+        let s = Bitset::from_members(128, &members);
+        for id in 0..128u32 {
+            assert_eq!(s.contains(id), members.contains(&id), "{id}");
+        }
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_word() {
+        let mut s = Bitset::new(1);
+        s.insert(0);
+        assert!(s.contains(0));
+        let s0 = Bitset::new(0);
+        assert_eq!(s0.words.len(), 0);
+    }
+}

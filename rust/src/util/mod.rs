@@ -4,6 +4,7 @@
 //! markdown tables for the experiment harness.
 
 pub mod bench;
+pub mod bitset;
 pub mod cli;
 pub mod pool;
 pub mod prop;

@@ -1,0 +1,302 @@
+//! Property tests pinning the geometry-pruned hot paths **bit-for-bit**
+//! to their unpruned references:
+//!
+//! 1. `cover_with_balls_weighted` (bucketed, bounds-pruned greedy) vs
+//!    `cover_with_balls_weighted_unpruned` — Euclidean, Manhattan, and
+//!    Levenshtein spaces, weighted and unweighted, random parameters;
+//! 2. `local_search` / `local_search_outliers` (incremental book after
+//!    accepted swaps) vs their full-rebuild `*_reference` twins;
+//! 3. the pruned pipeline stays bit-identical across simulator thread
+//!    counts (1 vs 8), so pruning introduces no scheduling sensitivity.
+//!
+//! Pruning must only skip evaluations whose comparison was already
+//! decided by a bound — any drift in representatives, τ, weights,
+//! centers, or cost bits is a bug, not a tolerance question.
+
+use std::sync::Arc;
+
+use mrcoreset::algorithms::local_search::{local_search, local_search_reference, LocalSearchCfg};
+use mrcoreset::algorithms::Instance;
+use mrcoreset::coreset::{
+    cover_with_balls_weighted, cover_with_balls_weighted_unpruned, two_round_coreset,
+    CoresetConfig, CoverResult,
+};
+use mrcoreset::data::strings::StringClusterSpec;
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::{PartitionStrategy, Simulator};
+use mrcoreset::metric::dense::{EuclideanSpace, ManhattanSpace};
+use mrcoreset::metric::levenshtein::StringSpace;
+use mrcoreset::metric::{MetricSpace, Objective};
+use mrcoreset::outliers::{local_search_outliers, local_search_outliers_reference};
+use mrcoreset::prop_assert;
+use mrcoreset::util::prop::check;
+use mrcoreset::util::rng::Rng;
+
+fn covers_bit_identical(a: &CoverResult, b: &CoverResult) -> Result<(), String> {
+    if a.set.indices != b.set.indices {
+        return Err(format!("representatives differ: {:?} vs {:?}", a.set.indices, b.set.indices));
+    }
+    if a.set.weights != b.set.weights {
+        return Err(format!("weights differ: {:?} vs {:?}", a.set.weights, b.set.weights));
+    }
+    if a.tau != b.tau {
+        return Err("tau differs".to_string());
+    }
+    let bits = a.dist_to_t.iter().zip(&b.dist_to_t).all(|(x, y)| x.to_bits() == y.to_bits());
+    if !bits {
+        return Err("dist_to_t not bit-identical".to_string());
+    }
+    Ok(())
+}
+
+/// Random vector spaces: Euclidean exercises the overridden pruned
+/// batch; Manhattan exercises the macro override on the generic path.
+fn random_vector_spaces(rng: &mut Rng) -> (Vec<Box<dyn MetricSpace>>, usize) {
+    let n = 40 + rng.below(200);
+    let (data, _) = GaussianMixtureSpec {
+        n,
+        d: 1 + rng.below(4),
+        k: 1 + rng.below(5),
+        spread: 1.0 + rng.f64() * 30.0,
+        outlier_frac: 0.0,
+        seed: rng.next_u64(),
+    }
+    .generate();
+    let shared = Arc::new(data);
+    let spaces: Vec<Box<dyn MetricSpace>> = vec![
+        Box::new(EuclideanSpace::new(shared.clone())),
+        Box::new(ManhattanSpace::new(shared)),
+    ];
+    (spaces, n)
+}
+
+fn random_weights(rng: &mut Rng, n: usize) -> Option<Vec<u64>> {
+    if rng.below(2) == 0 {
+        None
+    } else {
+        Some((0..n).map(|_| 1 + rng.below(9) as u64).collect())
+    }
+}
+
+#[test]
+fn pruned_cover_matches_unpruned_on_vector_spaces() {
+    check("pruned-cover-vector", 0x9E0_C0DE, 40, |rng| {
+        let (spaces, n) = random_vector_spaces(rng);
+        let pts: Vec<u32> = (0..n as u32).collect();
+        let t_size = 1 + rng.below(8);
+        let t: Vec<u32> = (0..t_size).map(|_| rng.below(n) as u32).collect();
+        let r = rng.f64() * 5.0;
+        let eps = 0.1 + rng.f64() * 0.8;
+        let beta = 1.0 + rng.f64() * 3.0;
+        let weights = random_weights(rng, n);
+        for space in &spaces {
+            let pruned = cover_with_balls_weighted(
+                space.as_ref(),
+                &pts,
+                weights.as_deref(),
+                &t,
+                r,
+                eps,
+                beta,
+            );
+            let reference = cover_with_balls_weighted_unpruned(
+                space.as_ref(),
+                &pts,
+                weights.as_deref(),
+                &t,
+                r,
+                eps,
+                beta,
+            );
+            covers_bit_identical(&pruned, &reference)
+                .map_err(|e| format!("{}: {e}", space.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pruned_cover_matches_unpruned_on_levenshtein() {
+    check("pruned-cover-levenshtein", 0x1EE7_C0DE, 15, |rng| {
+        let n = 40 + rng.below(120);
+        let (strings, _) = StringClusterSpec {
+            n,
+            clusters: 1 + rng.below(6),
+            base_len: 8 + rng.below(16),
+            max_edits: 3,
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let space = StringSpace::new(strings);
+        let pts: Vec<u32> = (0..n as u32).collect();
+        let t_size = 1 + rng.below(6);
+        let t: Vec<u32> = (0..t_size).map(|_| rng.below(n) as u32).collect();
+        // edit distances are integers: exercise thresholds at and around
+        // integer boundaries
+        let r = rng.below(6) as f64;
+        let eps = 0.1 + rng.f64() * 0.8;
+        let beta = 1.0 + rng.f64() * 3.0;
+        let weights = random_weights(rng, n);
+        let pruned = cover_with_balls_weighted(&space, &pts, weights.as_deref(), &t, r, eps, beta);
+        let reference = cover_with_balls_weighted_unpruned(
+            &space,
+            &pts,
+            weights.as_deref(),
+            &t,
+            r,
+            eps,
+            beta,
+        );
+        covers_bit_identical(&pruned, &reference)
+    });
+}
+
+/// Shared body: incremental-book local search must equal the
+/// full-rebuild reference on every space, bit for bit.
+fn assert_local_search_equivalent(
+    space: &dyn MetricSpace,
+    rng: &mut Rng,
+    n: usize,
+) -> Result<(), String> {
+    let pts: Vec<u32> = (0..n as u32).collect();
+    let weights: Vec<u64> = random_weights(rng, n).unwrap_or_else(|| vec![1u64; n]);
+    let inst = Instance::new(&pts, &weights);
+    let k = 1 + rng.below(6);
+    // force both the exhaustive (small n) and sampled pool branches
+    let cfg = LocalSearchCfg {
+        exhaustive_below: if rng.below(2) == 0 { 0 } else { 256 },
+        sample_candidates: 24,
+        max_passes: 12,
+        seed: rng.next_u64(),
+        ..LocalSearchCfg::default()
+    };
+    for obj in [Objective::Median, Objective::Means] {
+        let inc = local_search(space, obj, inst, k, None, &cfg);
+        let reference = local_search_reference(space, obj, inst, k, None, &cfg);
+        prop_assert!(
+            inc.centers == reference.centers,
+            "{} {obj}: centers {:?} vs {:?}",
+            space.name(),
+            inc.centers,
+            reference.centers
+        );
+        prop_assert!(
+            inc.cost.to_bits() == reference.cost.to_bits(),
+            "{} {obj}: cost {} vs {}",
+            space.name(),
+            inc.cost,
+            reference.cost
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn incremental_local_search_matches_reference_on_vector_spaces() {
+    check("incremental-ls-vector", 0xB00C, 25, |rng| {
+        let (spaces, n) = random_vector_spaces(rng);
+        for space in &spaces {
+            assert_local_search_equivalent(space.as_ref(), rng, n)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn incremental_local_search_matches_reference_on_levenshtein() {
+    check("incremental-ls-levenshtein", 0xB00D, 10, |rng| {
+        let n = 30 + rng.below(80);
+        let (strings, _) = StringClusterSpec {
+            n,
+            clusters: 1 + rng.below(5),
+            base_len: 10 + rng.below(10),
+            max_edits: 3,
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let space = StringSpace::new(strings);
+        assert_local_search_equivalent(&space, rng, n)
+    });
+}
+
+#[test]
+fn incremental_outlier_search_matches_reference() {
+    check("incremental-ls-outliers", 0xB00E, 15, |rng| {
+        let (spaces, n) = random_vector_spaces(rng);
+        let pts: Vec<u32> = (0..n as u32).collect();
+        let weights: Vec<u64> = random_weights(rng, n).unwrap_or_else(|| vec![1u64; n]);
+        let inst = Instance::new(&pts, &weights);
+        let k = 1 + rng.below(5);
+        let z = rng.below(1 + n / 10) as u64;
+        let cfg = LocalSearchCfg {
+            exhaustive_below: if rng.below(2) == 0 { 0 } else { 256 },
+            sample_candidates: 24,
+            max_passes: 8,
+            seed: rng.next_u64(),
+            ..LocalSearchCfg::default()
+        };
+        for space in &spaces {
+            for obj in [Objective::Median, Objective::Means] {
+                let inc = local_search_outliers(space.as_ref(), obj, inst, k, z, None, &cfg);
+                let reference = local_search_outliers_reference(
+                    space.as_ref(),
+                    obj,
+                    inst,
+                    k,
+                    z,
+                    None,
+                    &cfg,
+                );
+                prop_assert!(
+                    inc.centers == reference.centers,
+                    "{} {obj} z={z}: centers {:?} vs {:?}",
+                    space.name(),
+                    inc.centers,
+                    reference.centers
+                );
+                prop_assert!(
+                    inc.cost.to_bits() == reference.cost.to_bits(),
+                    "{} {obj} z={z}: cost {} vs {}",
+                    space.name(),
+                    inc.cost,
+                    reference.cost
+                );
+                prop_assert!(
+                    inc.excluded == reference.excluded,
+                    "{} {obj} z={z}: excluded {:?} vs {:?}",
+                    space.name(),
+                    inc.excluded,
+                    reference.excluded
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The pruned cover runs inside every round-1/round-2 reducer; the whole
+/// pipeline must stay bit-identical across simulator thread counts.
+#[test]
+fn pruned_pipeline_bit_identical_across_thread_counts() {
+    let (data, _) =
+        GaussianMixtureSpec { n: 2500, d: 3, k: 5, seed: 31, ..Default::default() }.generate();
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..2500).collect();
+    let cfg = CoresetConfig { seed: 0xBEEF, ..CoresetConfig::new(5, 0.4) };
+    for obj in [Objective::Median, Objective::Means] {
+        let sim1 = Simulator::new().with_threads(1);
+        let a =
+            two_round_coreset(&space, obj, &pts, 6, PartitionStrategy::RoundRobin, &cfg, &sim1);
+        let sim8 = Simulator::new().with_threads(8);
+        let b =
+            two_round_coreset(&space, obj, &pts, 6, PartitionStrategy::RoundRobin, &cfg, &sim8);
+        assert_eq!(a.coreset.indices, b.coreset.indices, "{obj}");
+        assert_eq!(a.coreset.weights, b.coreset.weights, "{obj}");
+        assert_eq!(a.radii, b.radii, "{obj}");
+        assert_eq!(a.global_r, b.global_r, "{obj}");
+        // the honest work metric is scheduling-independent too
+        let e1 = sim1.take_stats().total_dist_evals();
+        let e8 = sim8.take_stats().total_dist_evals();
+        assert_eq!(e1, e8, "{obj}: dist_evals drift across thread counts");
+    }
+}
