@@ -25,14 +25,19 @@
 
 use std::sync::Arc;
 
+use mrcoreset::algorithms::lloyd::{lloyd, lloyd_reference, LloydCfg};
 use mrcoreset::algorithms::local_search::{local_search, local_search_reference, LocalSearchCfg};
 use mrcoreset::algorithms::Instance;
+use mrcoreset::baselines::ene_im_moseley::{self, EimCfg};
+use mrcoreset::baselines::kmeans_parallel::{self, KmeansParCfg};
+use mrcoreset::baselines::pamae_lite::{self, PamaeCfg};
 use mrcoreset::coordinator::{solve, ClusterConfig};
 use mrcoreset::coreset::{
     cover_with_balls, cover_with_balls_weighted, cover_with_balls_weighted_unpruned,
 };
 use mrcoreset::data::synth::{GaussianMixtureSpec, NoiseSpec};
 use mrcoreset::eval::{run_experiment, ALL_IDS};
+use mrcoreset::mapreduce::Simulator;
 use mrcoreset::metric::counter;
 use mrcoreset::metric::dense::{sq_euclidean, EuclideanSpace};
 use mrcoreset::metric::{MetricSpace, Objective};
@@ -277,7 +282,8 @@ fn pruning_benches(smoke: bool) {
     let samples = if smoke { 2 } else { 5 };
     let (data, _) =
         GaussianMixtureSpec { n, d: 4, k: 8, seed: 11, ..Default::default() }.generate();
-    let space = EuclideanSpace::new(Arc::new(data));
+    let shared = Arc::new(data);
+    let space = EuclideanSpace::new(shared.clone());
     let pts: Vec<u32> = (0..n as u32).collect();
     let nk = fmt_k(n);
     let t: Vec<u32> = (0..16u32).map(|i| i * (n as u32 / 16)).collect();
@@ -360,6 +366,164 @@ fn pruning_benches(smoke: bool) {
         );
     }
 
+    // --- baselines: pruned vs unpruned assignment paths ---------------
+    // Each twin runs under a 1-thread simulator inside `counter::counted`
+    // (so leader-side folds are captured too); the solver rounds shared
+    // byte-for-byte by both twins ("kmeans||-reduce", "pamae-pam",
+    // "eim-solve") are subtracted via the simulator's per-round
+    // attribution, isolating the assignment paths the pruning touches.
+    // Lloyd has no simulator rounds; its twins are counted whole.
+    let k = 8usize;
+
+    let kp_cfg = KmeansParCfg::new(k);
+    let count_kp = |pruned: bool| {
+        let sim = Simulator::new().with_threads(1);
+        let (_, total) = counter::counted(|| {
+            if pruned {
+                kmeans_parallel::run(&space, Objective::Means, &pts, k, &kp_cfg, &sim)
+            } else {
+                kmeans_parallel::run_unpruned(&space, Objective::Means, &pts, k, &kp_cfg, &sim)
+            }
+        });
+        total - sim.take_stats().dist_evals_for("kmeans||-reduce")
+    };
+    let kp_unpruned = count_kp(false);
+    let kp_pruned = count_kp(true);
+    let kp_ratio = kp_unpruned as f64 / kp_pruned.max(1) as f64;
+    let r = bench(&format!("kmeans|| {nk} unpruned assign"), 1, samples.min(3), || {
+        let sim = Simulator::new();
+        std::hint::black_box(kmeans_parallel::run_unpruned(
+            &space, Objective::Means, &pts, k, &kp_cfg, &sim,
+        ));
+    });
+    println!("{r}");
+    results.push(r);
+    let r = bench(&format!("kmeans|| {nk} pruned assign"), 1, samples.min(3), || {
+        let sim = Simulator::new();
+        std::hint::black_box(kmeans_parallel::run(
+            &space, Objective::Means, &pts, k, &kp_cfg, &sim,
+        ));
+    });
+    println!("{r}");
+    results.push(r);
+    println!(
+        "kmeans|| assign dist_evals: unpruned={kp_unpruned} pruned={kp_pruned} \
+         saved={kp_ratio:.2}x"
+    );
+
+    // PAMAE-lite: reduced sampling config so the unpruned twin's PAM
+    // share stays a small fraction of the bench runtime.
+    let pm_cfg = PamaeCfg { num_samples: 3, sample_size: 160, refine_size: 200, seed: 0x9A3 };
+    let count_pm = |pruned: bool| {
+        let sim = Simulator::new().with_threads(1);
+        let (_, total) = counter::counted(|| {
+            if pruned {
+                pamae_lite::run(&space, Objective::Median, &pts, k, &pm_cfg, &sim)
+            } else {
+                pamae_lite::run_unpruned(&space, Objective::Median, &pts, k, &pm_cfg, &sim)
+            }
+        });
+        total - sim.take_stats().dist_evals_for("pamae-pam")
+    };
+    let pm_unpruned = count_pm(false);
+    let pm_pruned = count_pm(true);
+    let pm_ratio = pm_unpruned as f64 / pm_pruned.max(1) as f64;
+    let r = bench(&format!("pamae-lite {nk} unpruned assign"), 1, samples.min(3), || {
+        let sim = Simulator::new();
+        std::hint::black_box(pamae_lite::run_unpruned(
+            &space, Objective::Median, &pts, k, &pm_cfg, &sim,
+        ));
+    });
+    println!("{r}");
+    results.push(r);
+    let r = bench(&format!("pamae-lite {nk} pruned assign"), 1, samples.min(3), || {
+        let sim = Simulator::new();
+        std::hint::black_box(pamae_lite::run(&space, Objective::Median, &pts, k, &pm_cfg, &sim));
+    });
+    println!("{r}");
+    results.push(r);
+    println!(
+        "pamae-lite assign dist_evals: unpruned={pm_unpruned} pruned={pm_pruned} \
+         saved={pm_ratio:.2}x"
+    );
+
+    let eim_cfg = EimCfg {
+        sample_per_iter: (n / 60).max(k),
+        stop_below: (n / 20).max(2 * k),
+        seed: 6,
+    };
+    let count_eim = |pruned: bool| {
+        let sim = Simulator::new().with_threads(1);
+        let (_, total) = counter::counted(|| {
+            if pruned {
+                ene_im_moseley::run(&space, Objective::Median, &pts, k, &eim_cfg, &sim)
+            } else {
+                ene_im_moseley::run_unpruned(&space, Objective::Median, &pts, k, &eim_cfg, &sim)
+            }
+        });
+        total - sim.take_stats().dist_evals_for("eim-solve")
+    };
+    let eim_unpruned = count_eim(false);
+    let eim_pruned = count_eim(true);
+    let eim_ratio = eim_unpruned as f64 / eim_pruned.max(1) as f64;
+    let r = bench(&format!("ene-im-moseley {nk} unpruned filter"), 1, samples.min(3), || {
+        let sim = Simulator::new();
+        std::hint::black_box(ene_im_moseley::run_unpruned(
+            &space, Objective::Median, &pts, k, &eim_cfg, &sim,
+        ));
+    });
+    println!("{r}");
+    results.push(r);
+    let r = bench(&format!("ene-im-moseley {nk} pruned filter"), 1, samples.min(3), || {
+        let sim = Simulator::new();
+        std::hint::black_box(ene_im_moseley::run(
+            &space, Objective::Median, &pts, k, &eim_cfg, &sim,
+        ));
+    });
+    println!("{r}");
+    results.push(r);
+    println!(
+        "ene-im-moseley filter dist_evals: unpruned={eim_unpruned} pruned={eim_pruned} \
+         saved={eim_ratio:.2}x"
+    );
+
+    let ll_cfg = LloydCfg::default();
+    let unit = vec![1u64; pts.len()];
+    let (sol_ref, ll_ref) = counter::counted(|| lloyd_reference(&shared, &pts, &unit, k, &ll_cfg));
+    let (sol_bnd, ll_bounded) = counter::counted(|| lloyd(&shared, &pts, &unit, k, &ll_cfg));
+    assert_eq!(
+        sol_ref.cost.to_bits(),
+        sol_bnd.cost.to_bits(),
+        "bounded lloyd drifted from the reference"
+    );
+    let ll_ratio = ll_ref as f64 / ll_bounded.max(1) as f64;
+    let r = bench(&format!("lloyd {nk} full-rescan"), 1, samples.min(3), || {
+        std::hint::black_box(lloyd_reference(&shared, &pts, &unit, k, &ll_cfg));
+    });
+    println!("{r}");
+    results.push(r);
+    let r = bench(&format!("lloyd {nk} bounded"), 1, samples.min(3), || {
+        std::hint::black_box(lloyd(&shared, &pts, &unit, k, &ll_cfg));
+    });
+    println!("{r}");
+    results.push(r);
+    println!(
+        "lloyd dist_evals: full-rescan={ll_ref} bounded={ll_bounded} saved={ll_ratio:.2}x"
+    );
+
+    for (name, ratio, bar) in [
+        ("kmeans|| assign", kp_ratio, 3.0),
+        ("pamae-lite assign", pm_ratio, 3.0),
+        ("ene-im-moseley filter", eim_ratio, 3.0),
+        ("lloyd", ll_ratio, 2.0),
+    ] {
+        if ratio < bar {
+            eprintln!(
+                "warning: {name} pruning ratio {ratio:.2}x below the {bar}x acceptance bar"
+            );
+        }
+    }
+
     let metrics: Vec<(&str, f64)> = vec![
         ("cover_dist_evals_unpruned", evals_unpruned as f64),
         ("cover_dist_evals_pruned", evals_pruned as f64),
@@ -367,6 +531,18 @@ fn pruning_benches(smoke: bool) {
         ("ls_dist_evals_rebuild", evals_rebuild as f64),
         ("ls_dist_evals_incremental", evals_incremental as f64),
         ("ls_evals_saved_ratio", ls_ratio),
+        ("kmeanspar_assign_evals_unpruned", kp_unpruned as f64),
+        ("kmeanspar_assign_evals_pruned", kp_pruned as f64),
+        ("kmeanspar_assign_evals_saved_ratio", kp_ratio),
+        ("pamae_assign_evals_unpruned", pm_unpruned as f64),
+        ("pamae_assign_evals_pruned", pm_pruned as f64),
+        ("pamae_assign_evals_saved_ratio", pm_ratio),
+        ("eim_filter_evals_unpruned", eim_unpruned as f64),
+        ("eim_filter_evals_pruned", eim_pruned as f64),
+        ("eim_filter_evals_saved_ratio", eim_ratio),
+        ("lloyd_evals_full_rescan", ll_ref as f64),
+        ("lloyd_evals_bounded", ll_bounded as f64),
+        ("lloyd_evals_saved_ratio", ll_ratio),
     ];
     write_json_doc("BENCH_pruning.json", to_json_with_metrics(&results, &metrics));
 }

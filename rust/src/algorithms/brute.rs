@@ -74,6 +74,69 @@ pub fn exact_one_center(
     best
 }
 
+/// Bounds-pruned twin of [`exact_one_center`], bit-identical to it.
+///
+/// The first candidate's full distance row is kept; for every later
+/// candidate `c`, one evaluation `d(c, c0)` yields per-point lower
+/// bounds `|d(x, c0) - d(c, c0)|` whose (deflated, term-wise) cost sum
+/// lower-bounds the candidate's true cost in the reference's own
+/// accumulation order — if even that bound reaches the incumbent, the
+/// whole candidate is skipped without touching its row. Term-wise
+/// smaller non-negative values produce a smaller (or equal) float sum,
+/// so a skipped candidate could never have won the reference's strict
+/// `cost < best` comparison. Requires `uniform_precision`; otherwise
+/// delegates to the reference.
+pub fn exact_one_center_pruned(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    inst: Instance<'_>,
+) -> (u32, f64) {
+    if !space.uniform_precision() {
+        return exact_one_center(space, obj, inst);
+    }
+    const CHUNK: usize = 256;
+    const LB_MARGIN: f64 = 1e-12;
+    let n = inst.n();
+    let mut dc = vec![0.0f64; CHUNK.min(n)];
+    // full row for the anchor candidate (the reference computes it in
+    // full too: the incumbent starts at infinity)
+    let c0 = inst.pts[0];
+    let mut row0 = vec![0.0f64; n];
+    space.dist_batch(inst.pts, c0, &mut row0);
+    let mut cost0 = 0.0;
+    for (x, &d) in row0.iter().enumerate() {
+        cost0 += inst.weights[x] as f64 * obj.cost_of(d);
+    }
+    let mut best = (c0, cost0);
+    for &c in &inst.pts[1..] {
+        let dc0 = space.dist(c, c0);
+        // lower-bound the candidate's cost from the anchor row alone
+        let mut lb_cost = 0.0;
+        for (x, &a) in row0.iter().enumerate() {
+            let lb = ((a - dc0).abs() - LB_MARGIN * (a + dc0)).max(0.0);
+            lb_cost += inst.weights[x] as f64 * obj.cost_of(lb);
+        }
+        if lb_cost >= best.1 {
+            continue;
+        }
+        let mut cost = 0.0;
+        let mut lo = 0usize;
+        while lo < n && cost < best.1 {
+            let hi = (lo + CHUNK).min(n);
+            let buf = &mut dc[..hi - lo];
+            space.dist_batch(&inst.pts[lo..hi], c, buf);
+            for (x, d) in (lo..hi).zip(buf.iter()) {
+                cost += inst.weights[x] as f64 * obj.cost_of(*d);
+            }
+            lo = hi;
+        }
+        if cost < best.1 {
+            best = (c, cost);
+        }
+    }
+    best
+}
+
 /// C(n, k) with saturation above 2^60 (shared with the outlier brute
 /// reference's instance-size guard).
 pub(crate) fn binomial(n: usize, k: usize) -> u128 {
@@ -116,6 +179,34 @@ mod tests {
             let (c, cost) = exact_one_center(&space, obj, inst);
             assert_eq!(b.centers, vec![c]);
             assert!((b.cost - cost).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pruned_one_center_bit_identical_and_cheaper() {
+        use crate::data::synth::GaussianMixtureSpec;
+        use crate::metric::counter;
+        use crate::metric::dense::EuclideanSpace;
+        use std::sync::Arc;
+        let (data, _) = GaussianMixtureSpec {
+            n: 500,
+            d: 3,
+            k: 4,
+            spread: 15.0,
+            seed: 21,
+            ..Default::default()
+        }
+        .generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        let pts: Vec<u32> = (0..500).collect();
+        let w: Vec<u64> = (0..500u64).map(|i| 1 + i % 7).collect();
+        let inst = Instance::new(&pts, &w);
+        for obj in [Objective::Median, Objective::Means] {
+            let (reference, eref) = counter::counted(|| exact_one_center(&space, obj, inst));
+            let (pruned, epr) = counter::counted(|| exact_one_center_pruned(&space, obj, inst));
+            assert_eq!(pruned.0, reference.0, "{obj}");
+            assert_eq!(pruned.1.to_bits(), reference.1.to_bits(), "{obj}");
+            assert!(epr < eref, "{obj}: pruned {epr} >= reference {eref}");
         }
     }
 

@@ -2,11 +2,30 @@
 //! "Application to the continuous case", §3.3 closing remark): centers
 //! are arbitrary points of R^d (centroids), not members of P. Works
 //! directly on dense vectors, outside the `MetricSpace` index world.
+//!
+//! [`lloyd`] carries Hamerly-style per-point bounds across iterations:
+//! an upper bound on the distance to the assigned centroid and a lower
+//! bound on the distance to every other one, maintained under centroid
+//! movement. A point whose (margined) upper bound stays strictly below
+//! its lower bound provably keeps its assignment and costs one distance
+//! evaluation instead of k. Every distance here is the same scalar f64
+//! `sq_euclidean` expression regardless of batch shape, so the
+//! `uniform_precision` requirement for trusting carried bounds holds by
+//! construction (no engine dispatch on this path). [`lloyd_reference`]
+//! is the historical exact full-scan twin — bit-identical results, the
+//! property suite pins it.
 
 use crate::metric::counter;
 use crate::metric::dense::sq_euclidean;
 use crate::points::VectorData;
 use crate::util::rng::Rng;
+
+/// Margins for the Hamerly skip test `ub·INFL < lb·DEFL`: the bounds
+/// accumulate one add/sub plus a sqrt of float error per iteration
+/// (~1e-16 relative each, ≤ 50 iterations), so a 1e-12 relative guard
+/// band dwarfs the drift; comparisons inside the band rescan exactly.
+const BOUND_INFL: f64 = 1.0 + 1e-12;
+const BOUND_DEFL: f64 = 1.0 - 1e-12;
 
 /// Blocked nearest-centroid scan: centers outer, points inner, so each
 /// centroid row stays hot while it streams the point block (and the
@@ -31,6 +50,38 @@ fn nearest_centroids(
             if dd < best[i] {
                 best[i] = dd;
                 bj[i] = j;
+            }
+        }
+    }
+}
+
+/// [`nearest_centroids`] fused with the second-nearest squared distance
+/// (seed for the Hamerly lower bound). Identical `best`/`bj` results:
+/// per point the comparisons run in the same centroid order with the
+/// same strict `<`.
+fn nearest_two_centroids(
+    data: &VectorData,
+    pts: &[u32],
+    centers: &[Vec<f32>],
+    best: &mut [f64],
+    bj: &mut [usize],
+    second: &mut [f64],
+) {
+    counter::charge(pts.len() * centers.len());
+    best.fill(f64::INFINITY);
+    second.fill(f64::INFINITY);
+    for b in bj.iter_mut() {
+        *b = 0;
+    }
+    for (j, c) in centers.iter().enumerate() {
+        for (i, &p) in pts.iter().enumerate() {
+            let dd = sq_euclidean(data.row(p), c);
+            if dd < best[i] {
+                second[i] = best[i];
+                best[i] = dd;
+                bj[i] = j;
+            } else if dd < second[i] {
+                second[i] = dd;
             }
         }
     }
@@ -93,8 +144,150 @@ fn init_pp(
     centers
 }
 
-/// Weighted Lloyd on (pts ⊆ data, weights). Returns centroids + cost
-/// (sum of w·d² to nearest centroid).
+/// Positions of the `count` heaviest-cost points (max `w·d²` under the
+/// current assignment), distinct, ties to the lowest position — the
+/// deterministic reseed targets for empty clusters.
+fn reseed_targets(weights: &[u64], best: &[f64], count: usize) -> Vec<usize> {
+    let mut picks = Vec::with_capacity(count);
+    let mut taken = vec![false; weights.len()];
+    for _ in 0..count {
+        let mut arg = 0usize;
+        let mut top = f64::NEG_INFINITY;
+        for i in 0..weights.len() {
+            if taken[i] {
+                continue;
+            }
+            let contrib = weights[i] as f64 * best[i];
+            if contrib.total_cmp(&top) == std::cmp::Ordering::Greater {
+                top = contrib;
+                arg = i;
+            }
+        }
+        taken[arg] = true;
+        picks.push(arg);
+    }
+    picks
+}
+
+/// Weighted accumulation + centroid update for one Lloyd iteration.
+/// Empty clusters are re-seeded from the heaviest-cost points
+/// ([`reseed_targets`] — deterministic given `bj`/`best`, no RNG draw).
+/// Returns the iteration's cost; fills `moved` (plain distance each
+/// centroid traveled) when given, charging one evaluation per centroid.
+fn update_step(
+    data: &VectorData,
+    pts: &[u32],
+    weights: &[u64],
+    best: &[f64],
+    bj: &[usize],
+    centers: &mut [Vec<f32>],
+    mut moved: Option<&mut [f64]>,
+) -> f64 {
+    let d = data.d();
+    let kk = centers.len();
+    let mut sums = vec![vec![0.0f64; d]; kk];
+    let mut wsum = vec![0u64; kk];
+    let mut cost = 0.0;
+    for (i, &p) in pts.iter().enumerate() {
+        cost += weights[i] as f64 * best[i];
+        wsum[bj[i]] += weights[i];
+        for (s, &x) in sums[bj[i]].iter_mut().zip(data.row(p)) {
+            *s += weights[i] as f64 * x as f64;
+        }
+    }
+    let empties = wsum.iter().filter(|&&w| w == 0).count();
+    let picks = reseed_targets(weights, best, empties);
+    let mut next_pick = 0usize;
+    for (j, c) in centers.iter_mut().enumerate() {
+        let old = moved.is_some().then(|| c.clone());
+        if wsum[j] > 0 {
+            for (x, s) in c.iter_mut().zip(&sums[j]) {
+                *x = (*s / wsum[j] as f64) as f32;
+            }
+        } else {
+            let far = pts[picks[next_pick]];
+            next_pick += 1;
+            *c = data.row(far).to_vec();
+        }
+        if let Some(mv) = moved.as_deref_mut() {
+            mv[j] = sq_euclidean(&old.unwrap(), c).sqrt();
+        }
+    }
+    if moved.is_some() {
+        counter::charge(kk);
+    }
+    cost
+}
+
+/// One assignment pass: exact full scan (reference mode), or the
+/// Hamerly-bounded scan (bounded mode) which skips a point's centroid
+/// loop entirely when its bounds prove the assignment unchanged.
+#[allow(clippy::too_many_arguments)]
+fn assign_pass(
+    data: &VectorData,
+    pts: &[u32],
+    centers: &[Vec<f32>],
+    bounded: bool,
+    first: &mut bool,
+    best: &mut [f64],
+    bj: &mut [usize],
+    ub: &mut [f64],
+    lb: &mut [f64],
+) {
+    if !bounded {
+        nearest_centroids(data, pts, centers, best, bj);
+        return;
+    }
+    if *first {
+        let mut second = vec![f64::INFINITY; pts.len()];
+        nearest_two_centroids(data, pts, centers, best, bj, &mut second);
+        for i in 0..pts.len() {
+            ub[i] = best[i].sqrt();
+            lb[i] = second[i].sqrt();
+        }
+        *first = false;
+        return;
+    }
+    let kk = centers.len();
+    let mut charged = 0usize;
+    for (i, &p) in pts.iter().enumerate() {
+        if ub[i] * BOUND_INFL < lb[i] * BOUND_DEFL {
+            // strictly-unique nearest centroid (a tie would violate the
+            // strict margined inequality): assignment unchanged, one
+            // evaluation refreshes the exact distance and tightens ub
+            charged += 1;
+            let dd = sq_euclidean(data.row(p), &centers[bj[i]]);
+            best[i] = dd;
+            ub[i] = dd.sqrt();
+        } else {
+            // full rescan for this point, refreshing both bounds
+            charged += kk;
+            let row = data.row(p);
+            let mut b = f64::INFINITY;
+            let mut sec = f64::INFINITY;
+            let mut a = 0usize;
+            for (j, c) in centers.iter().enumerate() {
+                let dd = sq_euclidean(row, c);
+                if dd < b {
+                    sec = b;
+                    b = dd;
+                    a = j;
+                } else if dd < sec {
+                    sec = dd;
+                }
+            }
+            best[i] = b;
+            bj[i] = a;
+            ub[i] = b.sqrt();
+            lb[i] = sec.sqrt();
+        }
+    }
+    counter::charge(charged);
+}
+
+/// Weighted Lloyd on (pts ⊆ data, weights), Hamerly-bounded. Returns
+/// centroids + cost (sum of w·d² to nearest centroid). Bit-identical to
+/// [`lloyd_reference`].
 pub fn lloyd(
     data: &VectorData,
     pts: &[u32],
@@ -102,38 +295,64 @@ pub fn lloyd(
     k: usize,
     cfg: &LloydCfg,
 ) -> ContinuousSolution {
+    lloyd_impl(data, pts, weights, k, cfg, true)
+}
+
+/// Reference twin: the historical exact full scan every iteration.
+pub fn lloyd_reference(
+    data: &VectorData,
+    pts: &[u32],
+    weights: &[u64],
+    k: usize,
+    cfg: &LloydCfg,
+) -> ContinuousSolution {
+    lloyd_impl(data, pts, weights, k, cfg, false)
+}
+
+fn lloyd_impl(
+    data: &VectorData,
+    pts: &[u32],
+    weights: &[u64],
+    k: usize,
+    cfg: &LloydCfg,
+    bounded: bool,
+) -> ContinuousSolution {
     assert_eq!(pts.len(), weights.len());
     assert!(!pts.is_empty());
-    let d = data.d();
+    let n = pts.len();
     let mut rng = Rng::new(cfg.seed);
     let mut centers = init_pp(data, pts, weights, k, &mut rng);
+    let kk = centers.len();
     let mut prev_cost = f64::INFINITY;
-    #[allow(unused_assignments)]
-    let mut cost = 0.0;
-    let mut best = vec![f64::INFINITY; pts.len()];
-    let mut bj = vec![0usize; pts.len()];
+    let mut best = vec![f64::INFINITY; n];
+    let mut bj = vec![0usize; n];
+    // Hamerly state (bounded mode): ub upper-bounds the distance to the
+    // assigned centroid, lb lower-bounds the distance to all others —
+    // plain distances, not squared
+    let mut ub = vec![0.0f64; n];
+    let mut lb = vec![0.0f64; n];
+    let mut moved = vec![0.0f64; kk];
+    let mut first = true;
     for _ in 0..cfg.max_iters {
-        // assignment (blocked bulk scan), then weighted accumulation
-        nearest_centroids(data, pts, &centers, &mut best, &mut bj);
-        let mut sums = vec![vec![0.0f64; d]; centers.len()];
-        let mut wsum = vec![0u64; centers.len()];
-        cost = 0.0;
-        for (i, &p) in pts.iter().enumerate() {
-            cost += weights[i] as f64 * best[i];
-            wsum[bj[i]] += weights[i];
-            for (s, &x) in sums[bj[i]].iter_mut().zip(data.row(p)) {
-                *s += weights[i] as f64 * x as f64;
-            }
-        }
-        // update (empty clusters re-seeded from the heaviest-cost point)
-        for (j, c) in centers.iter_mut().enumerate() {
-            if wsum[j] > 0 {
-                for (x, s) in c.iter_mut().zip(&sums[j]) {
-                    *x = (*s / wsum[j] as f64) as f32;
-                }
-            } else {
-                let far = pts[rng.below(pts.len())];
-                *c = data.row(far).to_vec();
+        assign_pass(data, pts, &centers, bounded, &mut first, &mut best, &mut bj, &mut ub, &mut lb);
+        let cost = update_step(
+            data,
+            pts,
+            weights,
+            &best,
+            &bj,
+            &mut centers,
+            bounded.then_some(&mut moved[..]),
+        );
+        if bounded {
+            // centroid motion loosens the bounds: the assigned centroid
+            // may have come `moved[bj]` closer is irrelevant (ub grows by
+            // its motion), every other centroid came at most `delta_max`
+            // closer
+            let delta_max = moved.iter().copied().fold(0.0, f64::max);
+            for i in 0..n {
+                ub[i] += moved[bj[i]];
+                lb[i] -= delta_max;
             }
         }
         if prev_cost.is_finite() && (prev_cost - cost).abs() <= cfg.tol * prev_cost {
@@ -142,9 +361,9 @@ pub fn lloyd(
         prev_cost = cost;
     }
     // final cost against final centroids
-    nearest_centroids(data, pts, &centers, &mut best, &mut bj);
-    cost = 0.0;
-    for i in 0..pts.len() {
+    assign_pass(data, pts, &centers, bounded, &mut first, &mut best, &mut bj, &mut ub, &mut lb);
+    let mut cost = 0.0;
+    for i in 0..n {
         cost += weights[i] as f64 * best[i];
     }
     ContinuousSolution { centroids: VectorData::from_rows(&centers), cost }
@@ -182,6 +401,17 @@ mod tests {
         for c in [-50.0f64, 50.0] {
             for _ in 0..100 {
                 rows.push(vec![(c + rng.gaussian()) as f32, (c + rng.gaussian()) as f32]);
+            }
+        }
+        VectorData::from_rows(&rows)
+    }
+
+    fn five_blobs() -> VectorData {
+        let mut rows = Vec::new();
+        let mut rng = Rng::new(17);
+        for c in [-80.0f64, -40.0, 0.0, 40.0, 80.0] {
+            for _ in 0..120 {
+                rows.push(vec![(c + rng.gaussian()) as f32, (c / 2.0 + rng.gaussian()) as f32]);
             }
         }
         VectorData::from_rows(&rows)
@@ -229,5 +459,50 @@ mod tests {
         let sol = lloyd(&data, &pts, &w, 2, &LloydCfg::default());
         let c = continuous_cost(&data, &pts, &w, &sol.centroids);
         assert!((c - sol.cost).abs() < 1e-6 * (1.0 + c.abs()));
+    }
+
+    #[test]
+    fn bounded_matches_reference_bit_for_bit_and_saves_evals() {
+        let data = five_blobs();
+        let pts: Vec<u32> = (0..600).collect();
+        for w in [vec![1u64; 600], (0..600u64).map(|i| 1 + i % 5).collect()] {
+            let cfg = LloydCfg::default();
+            let (reference, eref) = counter::counted(|| lloyd_reference(&data, &pts, &w, 5, &cfg));
+            let (bounded, ebnd) = counter::counted(|| lloyd(&data, &pts, &w, 5, &cfg));
+            assert_eq!(bounded.cost.to_bits(), reference.cost.to_bits());
+            assert_eq!(bounded.centroids.n(), reference.centroids.n());
+            for j in 0..reference.centroids.n() as u32 {
+                let (a, b) = (bounded.centroids.row(j), reference.centroids.row(j));
+                assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()), "centroid {j}");
+            }
+            assert!(ebnd < eref, "bounded {ebnd} >= reference {eref}");
+        }
+    }
+
+    /// Regression (reseed contradiction): the doc always promised empty
+    /// clusters re-seed from the heaviest-cost point, but the code drew
+    /// a uniformly random one. Force the empty path directly through the
+    /// update step and check the documented behavior.
+    #[test]
+    fn empty_cluster_reseeds_from_heaviest_cost_point() {
+        let data = VectorData::from_rows(&[vec![0.0], vec![4.0], vec![9.0]]);
+        let pts = vec![0u32, 1, 2];
+        let weights = vec![1u64, 5, 1];
+        // all points assigned to cluster 0 → cluster 1 is empty;
+        // contributions w·d²: 16, 20, 81 → heaviest is point 2
+        let best = vec![16.0, 4.0, 81.0];
+        let bj = vec![0usize, 0, 0];
+        let mut centers = vec![vec![1.0f32], vec![7.0f32]];
+        update_step(&data, &pts, &weights, &best, &bj, &mut centers, None);
+        assert_eq!(centers[1], vec![9.0f32], "reseed must pick the max w·d² point");
+    }
+
+    #[test]
+    fn reseed_targets_orders_by_contribution_then_position() {
+        let weights = [1u64, 5, 1, 2, 3];
+        let best = [4.0, 1.0, 9.0, 9.0, 3.0];
+        // contributions: 4, 5, 9, 18, 9 → top3 = positions 3, 2 (tie with
+        // 4 broken by position), 4
+        assert_eq!(reseed_targets(&weights, &best, 3), vec![3, 2, 4]);
     }
 }

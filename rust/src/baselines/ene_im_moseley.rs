@@ -14,10 +14,20 @@
 //! MapReduce shape: the sampling iterations are driven from the leader
 //! over the simulator in O(log(n / (k·n^δ))) implicit rounds; we count
 //! one round per sampling iteration plus one weighting round.
+//!
+//! Pruning: surviving points carry their nearest-pivot state across
+//! iterations, so each filtering round only folds the *new* pivots —
+//! and those folds go through [`NearestTracker`] against center-to-
+//! center rows the leader broadcasts once per iteration. The state
+//! carry requires `uniform_precision` (distances must not depend on
+//! batch composition); otherwise the pruned entry point transparently
+//! runs the reference full recompute. [`run_unpruned`] is the public
+//! reference twin, bit-identical by construction.
 
 use crate::algorithms::local_search::{local_search, LocalSearchCfg};
 use crate::algorithms::Instance;
-use crate::mapreduce::Simulator;
+use crate::mapreduce::{partition, PartitionStrategy, Simulator};
+use crate::metric::pruned::{assign_pruned, assign_reference, center_rows, NearestTracker};
 use crate::metric::{MetricSpace, Objective};
 use crate::points::WeightedSet;
 use crate::util::rng::Rng;
@@ -32,6 +42,15 @@ pub struct EimCfg {
     pub seed: u64,
 }
 
+/// NaN-safe total-order sort by (distance, point id): the kept half is
+/// well-defined regardless of the gather order of the reducer outputs
+/// (distance ties broken by id), and a hostile metric emitting NaN
+/// sorts last instead of panicking the comparator.
+fn sort_by_distance(flat: &mut [(u32, f64, u32)]) {
+    flat.sort_unstable_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+}
+
+/// Bounds-pruned Ene–Im–Moseley (bit-identical to [`run_unpruned`]).
 pub fn run(
     space: &dyn MetricSpace,
     obj: Objective,
@@ -40,8 +59,40 @@ pub fn run(
     cfg: &EimCfg,
     sim: &Simulator,
 ) -> BaselineReport {
+    run_impl(space, obj, pts, k, cfg, sim, true)
+}
+
+/// Reference twin: identical structure and RNG stream, every filtering
+/// and weighting round recomputed in full.
+pub fn run_unpruned(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &EimCfg,
+    sim: &Simulator,
+) -> BaselineReport {
+    run_impl(space, obj, pts, k, cfg, sim, false)
+}
+
+fn run_impl(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &EimCfg,
+    sim: &Simulator,
+    pruned: bool,
+) -> BaselineReport {
+    // carrying per-point state across iterations assumes a distance is
+    // the same scalar regardless of the batch it was computed in
+    let carry = pruned && space.uniform_precision();
     let mut rng = Rng::new(cfg.seed);
     let mut remaining: Vec<u32> = pts.to_vec();
+    // nearest-pivot state aligned with `remaining` (carry mode): exact
+    // distance and pivot index over the pivot prefix folded so far
+    let mut rdist: Vec<f64> = vec![f64::INFINITY; remaining.len()];
+    let mut ridx: Vec<u32> = vec![u32::MAX; remaining.len()];
     let mut pivots: Vec<u32> = Vec::new();
     let mut rounds = 0usize;
 
@@ -50,45 +101,116 @@ pub fn run(
         let s = cfg.sample_per_iter.min(remaining.len());
         let sample: Vec<u32> =
             rng.sample_distinct(remaining.len(), s).into_iter().map(|i| remaining[i]).collect();
+        let old_len = pivots.len();
         pivots.extend_from_slice(&sample);
 
-        // one MR round: distance of each remaining point to the pivots
-        let parts = crate::mapreduce::partition(
-            &remaining,
-            8,
-            crate::mapreduce::PartitionStrategy::RoundRobin,
-        );
+        // leader broadcast: rows d(new pivot, all earlier pivots), shared
+        // by every reducer's triangle bounds
+        let rows: Vec<Vec<f64>> = if carry {
+            (old_len..pivots.len())
+                .map(|j| {
+                    let mut row = vec![0.0; j];
+                    if j > 0 {
+                        space.dist_batch(&pivots[..j], pivots[j], &mut row);
+                    }
+                    row
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        // one MR round: distance of each remaining point to the pivots;
+        // each part ships its slice of the carried state
+        let positions: Vec<u32> = (0..remaining.len() as u32).collect();
+        let pos_parts = partition(&positions, 8, PartitionStrategy::RoundRobin);
+        let parts: Vec<(Vec<u32>, Vec<f64>, Vec<u32>)> = pos_parts
+            .into_iter()
+            .map(|ps| {
+                let ids: Vec<u32> = ps.iter().map(|&i| remaining[i as usize]).collect();
+                if carry {
+                    let d: Vec<f64> = ps.iter().map(|&i| rdist[i as usize]).collect();
+                    let x: Vec<u32> = ps.iter().map(|&i| ridx[i as usize]).collect();
+                    (ids, d, x)
+                } else {
+                    (ids, Vec::new(), Vec::new())
+                }
+            })
+            .collect();
         let pivots_ref = &pivots;
-        let dist_parts = sim.round("eim-sample-filter", parts, move |_, part, meter| {
-            meter.charge(part.len() + pivots_ref.len());
-            let a = space.assign(part, pivots_ref);
-            meter.release(part.len() + pivots_ref.len());
-            (part.clone(), a.dist)
-        });
+        let rows_ref = &rows;
+        let state_parts =
+            sim.round("eim-sample-filter", parts, move |_, (ids, d0, x0), meter| {
+                meter.charge(ids.len() + pivots_ref.len());
+                let (dist, idx) = if carry {
+                    let mut tr = if old_len == 0 {
+                        NearestTracker::new(space, ids, true)
+                    } else {
+                        NearestTracker::with_state(
+                            space,
+                            ids,
+                            pivots_ref[..old_len].to_vec(),
+                            d0.clone(),
+                            x0.clone(),
+                            true,
+                        )
+                    };
+                    for (jn, &c) in pivots_ref[old_len..].iter().enumerate() {
+                        tr.push_with_row(c, &rows_ref[jn]);
+                    }
+                    tr.into_state()
+                } else {
+                    let a = assign_reference(space, ids, pivots_ref);
+                    (a.dist, a.idx)
+                };
+                meter.release(ids.len() + pivots_ref.len());
+                (ids.clone(), dist, idx)
+            });
         rounds += 1;
 
         // discard the closest half (well-served points)
-        let mut flat: Vec<(u32, f64)> = dist_parts
-            .into_iter()
-            .flat_map(|(part, dist)| part.into_iter().zip(dist))
-            .collect();
-        flat.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let mut flat: Vec<(u32, f64, u32)> = Vec::with_capacity(remaining.len());
+        for (ids, dist, idx) in state_parts {
+            for ((p, d), j) in ids.into_iter().zip(dist).zip(idx) {
+                flat.push((p, d, j));
+            }
+        }
+        sort_by_distance(&mut flat);
         let keep_from = flat.len() / 2;
-        remaining = flat[keep_from..].iter().map(|&(p, _)| p).collect();
+        remaining.clear();
+        rdist.clear();
+        ridx.clear();
+        for &(p, d, j) in &flat[keep_from..] {
+            remaining.push(p);
+            rdist.push(d);
+            ridx.push(j);
+        }
     }
     pivots.extend_from_slice(&remaining);
     pivots.sort_unstable();
     pivots.dedup();
 
-    // weighting round: Voronoi counts of pivots over the full input
-    let parts =
-        crate::mapreduce::partition(pts, 8, crate::mapreduce::PartitionStrategy::RoundRobin);
+    // weighting round: Voronoi counts of pivots over the full input; the
+    // leader broadcasts the full pivot-to-pivot rows once, each reducer
+    // folds them through a tracker
+    let rows: Vec<Vec<f64>> = if carry { center_rows(space, &pivots) } else { Vec::new() };
+    let parts = partition(pts, 8, PartitionStrategy::RoundRobin);
     let pivots_ref = &pivots;
+    let rows_ref = &rows;
     let counts = sim.round("eim-weight", parts, move |_, part, meter| {
         meter.charge(part.len() + pivots_ref.len());
-        let a = space.assign(part, pivots_ref);
+        let idx = if carry {
+            let mut tr = NearestTracker::new(space, part, true);
+            for (j, &c) in pivots_ref.iter().enumerate() {
+                tr.push_with_row(c, &rows_ref[j]);
+            }
+            let (_, idx) = tr.into_state();
+            idx
+        } else {
+            assign_reference(space, part, pivots_ref).idx
+        };
         let mut w = vec![0u64; pivots_ref.len()];
-        for &j in &a.idx {
+        for &j in &idx {
             w[j as usize] += 1;
         }
         meter.release(part.len() + pivots_ref.len());
@@ -116,11 +238,17 @@ pub fn run(
     let sols = sim.round("eim-solve", vec![coreset.clone()], |_, cs, meter| {
         meter.charge(cs.len());
         let ls = LocalSearchCfg { seed: cfg.seed ^ 0xE1E, ..Default::default() };
-        local_search(space, obj, Instance::new(&cs.indices, &cs.weights), k, None, &ls)
+        let sol = local_search(space, obj, Instance::new(&cs.indices, &cs.weights), k, None, &ls);
+        meter.release(cs.len());
+        sol
     });
     rounds += 1;
     let solution = sols.into_iter().next().unwrap();
-    let full_cost = space.assign(pts, &solution.centers).cost_unit(obj);
+    let full_cost = if pruned {
+        assign_pruned(space, pts, &solution.centers).cost_unit(obj)
+    } else {
+        assign_reference(space, pts, &solution.centers).cost_unit(obj)
+    };
     BaselineReport {
         name: "ene-im-moseley",
         solution,
@@ -166,5 +294,29 @@ mod tests {
         let rep = run(&space, Objective::Means, &pts, 3, &cfg, &sim);
         assert!(rep.summary_size < 1000);
         assert!(rep.full_cost > 0.0);
+    }
+
+    /// Regression (filter sort): the old comparator was
+    /// `partial_cmp().unwrap()` — it panicked on NaN and broke distance
+    /// ties by gather order, leaving the kept half dependent on the
+    /// partition layout.
+    #[test]
+    fn filter_sort_nan_safe_and_tie_stable() {
+        let mut a = vec![
+            (5u32, 1.0f64, 0u32),
+            (3, f64::NAN, 1),
+            (9, 0.5, 0),
+            (1, 1.0, 2),
+            (7, 1.0, 1),
+        ];
+        // same multiset, different gather order
+        let mut b = vec![a[3], a[1], a[4], a[0], a[2]];
+        sort_by_distance(&mut a);
+        sort_by_distance(&mut b);
+        let ka: Vec<u32> = a.iter().map(|t| t.0).collect();
+        let kb: Vec<u32> = b.iter().map(|t| t.0).collect();
+        assert_eq!(ka, kb, "kept half must not depend on gather order");
+        // ties (d=1.0) ordered by id; NaN sorts last
+        assert_eq!(ka, vec![9, 1, 5, 7, 3]);
     }
 }

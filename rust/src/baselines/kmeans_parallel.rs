@@ -7,12 +7,21 @@
 //! Voronoi counts and reduced to k centers with a weighted sequential
 //! algorithm. The candidate set is the "coreset" analogue (size ≈ ℓ ×
 //! rounds), and the guarantee is O(α) — weaker than the paper's α+O(ε).
+//!
+//! The incremental cost tracking (fold each accepted candidate into the
+//! running min) goes through [`NearestTracker`], so on uniform-precision
+//! spaces most folds are vetoed by triangle-inequality bounds; the final
+//! Voronoi weighting falls out of the same tracked state for free.
+//! [`run_unpruned`] is the reference twin paying the historical full
+//! folds — both produce bit-identical reports.
 
 use crate::algorithms::local_search::{local_search, LocalSearchCfg};
 use crate::algorithms::Instance;
 use crate::mapreduce::{partition, PartitionStrategy, Simulator};
+use crate::metric::pruned::{assign_pruned, assign_reference, NearestTracker};
 use crate::metric::{MetricSpace, Objective};
 use crate::points::WeightedSet;
+use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 
 use super::BaselineReport;
@@ -32,6 +41,20 @@ impl KmeansParCfg {
     }
 }
 
+/// O(1) membership-checked candidate append; returns whether `p` was new.
+/// Replaces the old `Vec::contains` scan (O(|C|) per insert) without
+/// changing which ids are appended or in what order.
+#[inline]
+fn dedup_push(member: &mut Bitset, candidates: &mut Vec<u32>, p: u32) -> bool {
+    if member.contains(p) {
+        return false;
+    }
+    member.insert(p);
+    candidates.push(p);
+    true
+}
+
+/// Bounds-pruned k-means‖ (bit-identical to [`run_unpruned`]).
 pub fn run(
     space: &dyn MetricSpace,
     obj: Objective,
@@ -40,32 +63,63 @@ pub fn run(
     cfg: &KmeansParCfg,
     sim: &Simulator,
 ) -> BaselineReport {
+    run_impl(space, obj, pts, k, cfg, sim, true)
+}
+
+/// Reference twin: identical structure and RNG stream, every candidate
+/// fold and the final Voronoi pass computed in full.
+pub fn run_unpruned(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &KmeansParCfg,
+    sim: &Simulator,
+) -> BaselineReport {
+    run_impl(space, obj, pts, k, cfg, sim, false)
+}
+
+fn run_impl(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &KmeansParCfg,
+    sim: &Simulator,
+    pruned: bool,
+) -> BaselineReport {
     let mut rng = Rng::new(cfg.seed);
-    let mut candidates: Vec<u32> = vec![pts[rng.below(pts.len())]];
+    let first = pts[rng.below(pts.len())];
     // running min cost(x, C): plain distances; objective decides the power
-    let mut mind = vec![f64::INFINITY; pts.len()];
-    space.min_update(pts, candidates[0], &mut mind);
+    let mut tracker = NearestTracker::new(space, pts, pruned);
+    tracker.push(first);
+    let mut candidates: Vec<u32> = Vec::new();
+    let mut member = Bitset::new(space.n_points());
+    dedup_push(&mut member, &mut candidates, first);
     let mut mr_rounds = 0usize;
+    // the samplers read per-point residuals, which live in `pts` order —
+    // partition positions, not ids, so subset/permuted inputs index the
+    // right residual
+    let positions: Vec<u32> = (0..pts.len() as u32).collect();
 
     for round in 0..cfg.rounds {
-        let total: f64 = mind.iter().map(|&d| obj.cost_of(d)).sum();
+        let total: f64 = tracker.dist().iter().map(|&d| obj.cost_of(d)).sum();
         if total <= 0.0 {
             break; // all points are candidates already
         }
         // one MR round: each partition samples independently
-        let parts = partition(pts, 8, PartitionStrategy::RoundRobin);
-        let mind_ref = &mind;
+        let parts = partition(&positions, 8, PartitionStrategy::RoundRobin);
+        let mind_ref = tracker.dist();
         let round_seed = cfg.seed ^ ((round as u64 + 1) << 32);
         let new_parts = sim.round("kmeans||-sample", parts, move |ell_idx, part, meter| {
             meter.charge(part.len());
             let mut prng = Rng::new(round_seed ^ ell_idx as u64);
             let mut picked = Vec::new();
-            for &p in part {
-                // mind is indexed by position in pts == point id here
-                let c = obj.cost_of(mind_ref[p as usize]);
+            for &pos in part {
+                let c = obj.cost_of(mind_ref[pos as usize]);
                 let prob = (cfg.ell * c / total).min(1.0);
                 if prng.f64() < prob {
-                    picked.push(p);
+                    picked.push(pts[pos as usize]);
                 }
             }
             meter.release(part.len());
@@ -75,9 +129,8 @@ pub fn run(
         let mut added = false;
         for np in new_parts {
             for p in np {
-                if !candidates.contains(&p) {
-                    candidates.push(p);
-                    space.min_update(pts, p, &mut mind);
+                if dedup_push(&mut member, &mut candidates, p) {
+                    tracker.push(p);
                     added = true;
                 }
             }
@@ -87,10 +140,16 @@ pub fn run(
         }
     }
 
-    // weight candidates by Voronoi counts and reduce to k
-    let assign = space.assign(pts, &candidates);
+    // weight candidates by Voronoi counts and reduce to k; the pruned
+    // path already holds the full-candidate assignment in the tracker,
+    // the reference twin pays the historical full Voronoi pass
+    let idx: Vec<u32> = if pruned {
+        tracker.idx().to_vec()
+    } else {
+        assign_reference(space, pts, &candidates).idx
+    };
     let mut w = vec![0u64; candidates.len()];
-    for &j in &assign.idx {
+    for &j in &idx {
         w[j as usize] += 1;
     }
     let mut idxs = Vec::new();
@@ -105,11 +164,17 @@ pub fn run(
     let sols = sim.round("kmeans||-reduce", vec![cand.clone()], |_, cs, meter| {
         meter.charge(cs.len());
         let ls = LocalSearchCfg { seed: cfg.seed ^ 0x88, ..Default::default() };
-        local_search(space, obj, Instance::new(&cs.indices, &cs.weights), k, None, &ls)
+        let sol = local_search(space, obj, Instance::new(&cs.indices, &cs.weights), k, None, &ls);
+        meter.release(cs.len());
+        sol
     });
     mr_rounds += 1;
     let solution = sols.into_iter().next().unwrap();
-    let full_cost = space.assign(pts, &solution.centers).cost_unit(obj);
+    let full_cost = if pruned {
+        assign_pruned(space, pts, &solution.centers).cost_unit(obj)
+    } else {
+        assign_reference(space, pts, &solution.centers).cost_unit(obj)
+    };
     BaselineReport {
         name: "kmeans||",
         solution,
@@ -173,5 +238,52 @@ mod tests {
             &sim,
         );
         assert!(big.summary_size > small.summary_size);
+    }
+
+    /// Regression (wrong-index read): the samplers used to index the
+    /// residual vector with the point *id*, silently assuming `pts` is
+    /// the identity `0..n`. A shuffled strict subset of ids made them
+    /// read the wrong residual or run off the end of the vector.
+    #[test]
+    fn runs_on_shuffled_strict_subset_of_ids() {
+        let (data, _) = GaussianMixtureSpec {
+            n: 2000,
+            d: 2,
+            k: 5,
+            spread: 40.0,
+            seed: 8,
+            ..Default::default()
+        }
+        .generate();
+        let space = EuclideanSpace::new(Arc::new(data));
+        // ids 1200..2000, shuffled: every id exceeds the residual length
+        let mut pts: Vec<u32> = (1200..2000).collect();
+        crate::util::rng::Rng::new(99).shuffle(&mut pts);
+        let sim = Simulator::new();
+        let rep = run(&space, Objective::Means, &pts, 4, &KmeansParCfg::new(4), &sim);
+        assert_eq!(rep.solution.centers.len(), 4);
+        assert!(rep.solution.centers.iter().all(|c| pts.contains(c)));
+        assert!(rep.full_cost.is_finite() && rep.full_cost > 0.0);
+    }
+
+    /// Regression (dedup rewrite): bitset membership must accept exactly
+    /// the ids `Vec::contains` accepted, in the same order, or seeded
+    /// runs would drift.
+    #[test]
+    fn bitset_dedup_matches_contains_dedup_order() {
+        let mut rng = crate::util::rng::Rng::new(0xDED0);
+        for _ in 0..20 {
+            let stream: Vec<u32> = (0..300).map(|_| rng.below(64) as u32).collect();
+            let mut member = Bitset::new(64);
+            let mut fast: Vec<u32> = Vec::new();
+            let mut slow: Vec<u32> = Vec::new();
+            for &p in &stream {
+                dedup_push(&mut member, &mut fast, p);
+                if !slow.contains(&p) {
+                    slow.push(p);
+                }
+            }
+            assert_eq!(fast, slow);
+        }
     }
 }

@@ -8,12 +8,18 @@
 //! cluster's medoid by exact 1-median over a per-cluster sample (third
 //! round). As the paper notes, PAMAE has strong practice but no tight
 //! approximation analysis — E8 shows where it lands.
+//!
+//! Candidate evaluation, the phase-2 assignment, and the per-cluster
+//! refinement all run bounds-pruned ([`assign_pruned`] /
+//! [`exact_one_center_pruned`]); [`run_unpruned`] is the reference twin
+//! paying the historical full scans, bit-identical by construction.
 
-use crate::algorithms::brute::exact_one_center;
+use crate::algorithms::brute::{exact_one_center, exact_one_center_pruned};
 use crate::algorithms::pam::{pam, PamCfg};
 use crate::algorithms::{Instance, Solution};
 use crate::mapreduce::Simulator;
-use crate::metric::{MetricSpace, Objective};
+use crate::metric::pruned::{assign_pruned, assign_reference};
+use crate::metric::{Assignment, MetricSpace, Objective};
 use crate::util::rng::Rng;
 
 use super::BaselineReport;
@@ -34,6 +40,7 @@ impl PamaeCfg {
     }
 }
 
+/// Bounds-pruned PAMAE-lite (bit-identical to [`run_unpruned`]).
 pub fn run(
     space: &dyn MetricSpace,
     obj: Objective,
@@ -41,6 +48,43 @@ pub fn run(
     k: usize,
     cfg: &PamaeCfg,
     sim: &Simulator,
+) -> BaselineReport {
+    run_impl(space, obj, pts, k, cfg, sim, true)
+}
+
+/// Reference twin: identical structure and RNG stream, full scans.
+pub fn run_unpruned(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &PamaeCfg,
+    sim: &Simulator,
+) -> BaselineReport {
+    run_impl(space, obj, pts, k, cfg, sim, false)
+}
+
+fn assign_full(
+    space: &dyn MetricSpace,
+    pts: &[u32],
+    centers: &[u32],
+    pruned: bool,
+) -> Assignment {
+    if pruned {
+        assign_pruned(space, pts, centers)
+    } else {
+        assign_reference(space, pts, centers)
+    }
+}
+
+fn run_impl(
+    space: &dyn MetricSpace,
+    obj: Objective,
+    pts: &[u32],
+    k: usize,
+    cfg: &PamaeCfg,
+    sim: &Simulator,
+    pruned: bool,
 ) -> BaselineReport {
     let mut rng = Rng::new(cfg.seed);
     let s = cfg.sample_size.min(pts.len());
@@ -53,7 +97,9 @@ pub fn run(
         meter.charge(sample.len());
         let w = vec![1u64; sample.len()];
         let pc = PamCfg { max_n: sample.len().max(1), max_iters: 20 };
-        pam(space, obj, Instance::new(sample, &w), k, &pc)
+        let sol = pam(space, obj, Instance::new(sample, &w), k, &pc);
+        meter.release(sample.len());
+        sol
     });
 
     // Phase 1b: global evaluation of every candidate (one round,
@@ -61,15 +107,16 @@ pub fn run(
     let best = sim
         .round("pamae-eval", candidates, |_, cand, meter| {
             meter.charge(pts.len() / 8); // per-partition share in a real run
-            let cost = space.assign(pts, &cand.centers).cost_unit(obj);
+            let cost = assign_full(space, pts, &cand.centers, pruned).cost_unit(obj);
+            meter.release(pts.len() / 8);
             (cand.centers.clone(), cost)
         })
         .into_iter()
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .expect("at least one candidate");
 
     // Phase 2: per-cluster exact medoid over a refinement sample
-    let assign = space.assign(pts, &best.0);
+    let assign = assign_full(space, pts, &best.0, pruned);
     let kk = best.0.len();
     let mut clusters: Vec<Vec<u32>> = vec![Vec::new(); kk];
     for (i, &p) in pts.iter().enumerate() {
@@ -85,13 +132,19 @@ pub fn run(
             crng.sample_distinct(cluster.len(), take).into_iter().map(|i| cluster[i]).collect();
         meter.charge(sample.len());
         let w = vec![1u64; sample.len()];
-        let (c, _) = exact_one_center(space, obj, Instance::new(&sample, &w));
+        let inst = Instance::new(&sample, &w);
+        let (c, _) = if pruned {
+            exact_one_center_pruned(space, obj, inst)
+        } else {
+            exact_one_center(space, obj, inst)
+        };
+        meter.release(sample.len());
         c
     });
 
     // keep the better of (refined, phase-1 best) — refinement on a sample
     // can regress on adversarial weights
-    let refined_cost = space.assign(pts, &refined).cost_unit(obj);
+    let refined_cost = assign_full(space, pts, &refined, pruned).cost_unit(obj);
     let (centers, full_cost) =
         if refined_cost <= best.1 { (refined, refined_cost) } else { (best.0, best.1) };
 

@@ -56,7 +56,7 @@ pub fn run(
             }
         }
         meter.charge(idxs.len());
-        meter.release(part.len());
+        meter.release(part.len() + idxs.len());
         WeightedSet::new(idxs, wts)
     });
     let coreset = WeightedSet::union(&locals);
@@ -64,7 +64,9 @@ pub fn run(
     let sols = sim.round("uniform-solve", vec![coreset.clone()], |_, cs, meter| {
         meter.charge(cs.len());
         let ls = LocalSearchCfg { seed: cfg.seed ^ 0xBEE, ..Default::default() };
-        local_search(space, obj, Instance::new(&cs.indices, &cs.weights), k, None, &ls)
+        let sol = local_search(space, obj, Instance::new(&cs.indices, &cs.weights), k, None, &ls);
+        meter.release(cs.len());
+        sol
     });
     let solution = sols.into_iter().next().unwrap();
     let full_cost = space.assign(pts, &solution.centers).cost_unit(obj);

@@ -169,9 +169,10 @@ pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunRe
                 None,
                 &ls,
             );
+            meter.release(cs.len());
             return Solution { centers: rs.centers, cost: rs.cost };
         }
-        match cfg.final_algo {
+        let sol = match cfg.final_algo {
             FinalAlgo::LocalSearch => {
                 // init = better of D^p-seeding and farthest-first: the
                 // former nails dense structure, the latter provably covers
@@ -196,7 +197,9 @@ pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunRe
                 pam(space, cfg.objective, inst, cfg.k, &pc)
             }
             FinalAlgo::RobustLocalSearch => unreachable!("handled by the robust branch above"),
-        }
+        };
+        meter.release(cs.len());
+        sol
     });
     let solution = solutions.into_iter().next().expect("one reducer");
 

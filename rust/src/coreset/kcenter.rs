@@ -39,7 +39,7 @@ pub fn solve_kcenter(
         let w = vec![1u64; part.len()];
         let centers = gonzalez(space, Instance::new(part, &w), m, 0);
         meter.charge(centers.len());
-        meter.release(part.len());
+        meter.release(part.len() + centers.len());
         centers
     });
     let union: Vec<u32> = locals.concat();
@@ -48,7 +48,9 @@ pub fn solve_kcenter(
         .round("kcenter-r2-final", vec![union], |_, u, meter| {
             meter.charge(u.len());
             let w = vec![1u64; u.len()];
-            gonzalez(space, Instance::new(u, &w), k, 0)
+            let centers = gonzalez(space, Instance::new(u, &w), k, 0);
+            meter.release(u.len());
+            centers
         })
         .into_iter()
         .next()

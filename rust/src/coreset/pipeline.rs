@@ -81,7 +81,7 @@ pub(crate) fn run_round1_named(
         let mut rng = Rng::new(cfg.seed ^ (seed_salt + *ell as u64));
         let out = local_coreset(space, obj, pts, cfg.m, cfg.eps, cfg.beta, cfg.tl, &mut rng);
         meter.charge(out.t.len() + out.cover.set.len()); // T_ℓ + C_{w,ℓ}
-        meter.release(pts.len() + out.t.len());
+        meter.release(pts.len() + out.t.len() + out.cover.set.len());
         out
     })
 }
@@ -171,7 +171,7 @@ pub fn two_round_coreset(
         meter.charge(pts_l.len() + cw_ref.len()); // partition + broadcast C_w
         let res = super::cover::cover_with_balls(space, pts_l, &cw_ref.indices, global_r, ce, cb);
         meter.charge(res.set.len()); // E_{w,ℓ}
-        meter.release(pts_l.len() + cw_ref.len());
+        meter.release(pts_l.len() + cw_ref.len() + res.set.len());
         res.set
     });
     let coreset = WeightedSet::union(&e_parts);

@@ -122,6 +122,29 @@ pub fn run(quick: bool) -> ExpResult {
                 robust.stats.dist_evals_for(round).to_string(),
             ]);
         }
+
+        // geometry pruning in the kmeans|| baseline on the same noisy
+        // workload: assignment-path evals of the pruned vs unpruned twin
+        // (the shared "kmeans||-reduce" solve subtracted on both sides)
+        if obj == Objective::Means {
+            use crate::metric::counter;
+            let cfg = KmeansParCfg::new(k);
+            for (label, pruned) in [
+                ("kmeans|| assign path (pruned)", true),
+                ("kmeans|| assign path (unpruned)", false),
+            ] {
+                let sim = Simulator::new().with_threads(1);
+                let (_, total) = counter::counted(|| {
+                    if pruned {
+                        kmeans_parallel::run(&space, obj, &pts, k, &cfg, &sim)
+                    } else {
+                        kmeans_parallel::run_unpruned(&space, obj, &pts, k, &cfg, &sim)
+                    }
+                });
+                let evals = total - sim.take_stats().dist_evals_for("kmeans||-reduce");
+                work.row(vec![obj.name().to_string(), label.to_string(), evals.to_string()]);
+            }
+        }
     }
 
     ExpResult {

@@ -35,7 +35,8 @@ pub fn run(quick: bool) -> ExpResult {
         seed: 71,
     }
     .generate();
-    let space = EuclideanSpace::new(Arc::new(data));
+    let shared = Arc::new(data);
+    let space = EuclideanSpace::new(shared.clone());
     let pts: Vec<u32> = (0..n as u32).collect();
 
     let mut table = Table::new(vec![
@@ -97,6 +98,9 @@ pub fn run(quick: bool) -> ExpResult {
         }
     }
 
+    // --- geometry pruning inside the baselines: evals saved ---
+    let pruning_tab = baseline_pruning_comparison(&space, &shared, &pts, k);
+
     // --- needle workload: where the per-point guarantee separates ---
     // Base mass + many tiny far-away "needle" clusters. With k large
     // enough that the optimum puts a center on every needle, a summary
@@ -110,11 +114,16 @@ pub fn run(quick: bool) -> ExpResult {
         title: "Accuracy vs literature baselines at matched summary sizes",
         tables: vec![
             ("comparison (noisy mixture)".to_string(), table),
+            ("baseline pruning: assignment-path evals saved".to_string(), pruning_tab),
             ("needle workload (k-median, rare far clusters)".to_string(), needle_tab),
         ],
         notes: vec![
             "Noisy mixture: all methods are competitive (benign case); the separation \
              appears on the needle workload."
+                .to_string(),
+            "Pruning table: assignment-path work only — the rounds shared verbatim by \
+             both twins (the PAM/local-search solves) are attributed by the simulator \
+             and subtracted from each side; outputs are bit-identical by construction."
                 .to_string(),
             "Needle workload: uniform/EIM drop needles from their summaries and pay the \
              transport cost; the per-point CoverWithBalls guarantee keeps every needle \
@@ -122,6 +131,96 @@ pub fn run(quick: bool) -> ExpResult {
                 .to_string(),
         ],
     }
+}
+
+/// Assignment-path distance evaluations of each baseline's pruned vs
+/// unpruned twin. Each run executes under a 1-thread simulator inside
+/// `counter::counted` (so leader-side folds are captured too); the
+/// solver rounds that are byte-for-byte shared by both twins
+/// ("kmeans||-reduce", "pamae-pam", "eim-solve") are subtracted via the
+/// simulator's per-round attribution, isolating the assignment paths
+/// the pruning PR touches. Lloyd has no simulator rounds; its twins are
+/// counted whole.
+fn baseline_pruning_comparison(
+    space: &EuclideanSpace,
+    data: &crate::points::VectorData,
+    pts: &[u32],
+    k: usize,
+) -> Table {
+    use crate::algorithms::lloyd::{lloyd, lloyd_reference, LloydCfg};
+    use crate::metric::counter;
+
+    let mut table =
+        Table::new(vec!["method", "unpruned evals", "pruned evals", "saved (x)"]);
+    let mut push = |name: &str, eref: u64, epr: u64| {
+        table.row(vec![
+            name.to_string(),
+            eref.to_string(),
+            epr.to_string(),
+            fnum(eref as f64 / epr.max(1) as f64),
+        ]);
+    };
+
+    // kmeans|| (Means): candidate folds + final Voronoi weighting
+    let kp_cfg = KmeansParCfg::new(k);
+    let (epr, eref) = {
+        let sim = Simulator::new().with_threads(1);
+        let (_, total) = counter::counted(|| {
+            kmeans_parallel::run(space, Objective::Means, pts, k, &kp_cfg, &sim)
+        });
+        let epr = total - sim.take_stats().dist_evals_for("kmeans||-reduce");
+        let sim = Simulator::new().with_threads(1);
+        let (_, total) = counter::counted(|| {
+            kmeans_parallel::run_unpruned(space, Objective::Means, pts, k, &kp_cfg, &sim)
+        });
+        (epr, total - sim.take_stats().dist_evals_for("kmeans||-reduce"))
+    };
+    push("kmeans|| assignment path", eref, epr);
+
+    // PAMAE-lite (Median): candidate eval + phase-2 assign + refinement
+    let pm_cfg = PamaeCfg::new(k);
+    let (epr, eref) = {
+        let sim = Simulator::new().with_threads(1);
+        let (_, total) = counter::counted(|| {
+            pamae_lite::run(space, Objective::Median, pts, k, &pm_cfg, &sim)
+        });
+        let epr = total - sim.take_stats().dist_evals_for("pamae-pam");
+        let sim = Simulator::new().with_threads(1);
+        let (_, total) = counter::counted(|| {
+            pamae_lite::run_unpruned(space, Objective::Median, pts, k, &pm_cfg, &sim)
+        });
+        (epr, total - sim.take_stats().dist_evals_for("pamae-pam"))
+    };
+    push("pamae-lite assignment path", eref, epr);
+
+    // Ene-Im-Moseley (Median): carried filter folds + weighting round
+    let eim_cfg = EimCfg {
+        sample_per_iter: (pts.len() / 60).max(k),
+        stop_below: (pts.len() / 20).max(2 * k),
+        seed: 6,
+    };
+    let (epr, eref) = {
+        let sim = Simulator::new().with_threads(1);
+        let (_, total) = counter::counted(|| {
+            ene_im_moseley::run(space, Objective::Median, pts, k, &eim_cfg, &sim)
+        });
+        let epr = total - sim.take_stats().dist_evals_for("eim-solve");
+        let sim = Simulator::new().with_threads(1);
+        let (_, total) = counter::counted(|| {
+            ene_im_moseley::run_unpruned(space, Objective::Median, pts, k, &eim_cfg, &sim)
+        });
+        (epr, total - sim.take_stats().dist_evals_for("eim-solve"))
+    };
+    push("ene-im-moseley assignment path", eref, epr);
+
+    // Lloyd (continuous k-means): Hamerly bounds across iterations
+    let ll_cfg = LloydCfg::default();
+    let w = vec![1u64; pts.len()];
+    let (_, epr) = counter::counted(|| lloyd(data, pts, &w, k, &ll_cfg));
+    let (_, eref) = counter::counted(|| lloyd_reference(data, pts, &w, k, &ll_cfg));
+    push("lloyd iterations", eref, epr);
+
+    table
 }
 
 /// Build the needle workload and compare methods on it.

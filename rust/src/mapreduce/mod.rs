@@ -136,6 +136,14 @@ impl Simulator {
             // delta is exactly its distance-evaluation work
             let evals0 = counter::thread_count();
             let out = f(i, &inputs[i], &mut meter);
+            // every charge must be released by the time the reducer
+            // returns — a leak here inflates cross-round peaks and turns
+            // the M_L scaling stats into nonsense
+            debug_assert_eq!(
+                meter.current(),
+                0,
+                "reducer {i} of round '{name}' returned with unreleased memory charges"
+            );
             let evals = counter::thread_count() - evals0;
             (out, meter, evals)
         });
@@ -207,6 +215,7 @@ mod tests {
         let parts: Vec<Vec<u32>> = vec![vec![1], vec![2, 3, 4]];
         let _ = sim.round("r", parts, |_, part, meter| {
             meter.charge(part.len());
+            meter.release(part.len());
             part.len()
         });
         let stats = sim.take_stats();
@@ -217,7 +226,10 @@ mod tests {
     fn multi_round_job_stats() {
         let sim = Simulator::new();
         for r in 0..3 {
-            let _ = sim.round(&format!("r{r}"), vec![()], |_, _, meter| meter.charge(r + 1));
+            let _ = sim.round(&format!("r{r}"), vec![()], |_, _, meter| {
+                meter.charge(r + 1);
+                meter.release(r + 1);
+            });
         }
         let stats = sim.take_stats();
         assert_eq!(stats.num_rounds(), 3);
@@ -227,9 +239,23 @@ mod tests {
     #[test]
     fn take_stats_resets() {
         let sim = Simulator::new();
-        let _ = sim.round("r", vec![()], |_, _, m| m.charge(1));
+        let _ = sim.round("r", vec![()], |_, _, m| {
+            m.charge(1);
+            m.release(1);
+        });
         assert_eq!(sim.take_stats().num_rounds(), 1);
         assert_eq!(sim.take_stats().num_rounds(), 0);
+    }
+
+    /// Regression (meter leaks): reducers that charge without releasing
+    /// used to leak `current()` silently across rounds; the round now
+    /// debug-asserts a balanced meter on return.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "unreleased memory charges")]
+    fn unbalanced_reducer_is_rejected() {
+        let sim = Simulator::new().with_threads(1);
+        let _ = sim.round("leaky", vec![()], |_, _, m| m.charge(3));
     }
 
     /// Distance accounting: per-reducer counts are attributed to the
@@ -255,7 +281,9 @@ mod tests {
             let centers_ref = &centers;
             let _ = sim.round("assign", parts.clone(), move |_, part, meter| {
                 meter.charge(part.len());
-                space_ref.assign(part, centers_ref)
+                let a = space_ref.assign(part, centers_ref);
+                meter.release(part.len());
+                a
             });
             let stats = sim.take_stats();
             let r = &stats.rounds[0];
@@ -283,10 +311,15 @@ mod tests {
         for _ in 0..2 {
             let _ = sim.round("assign", vec![pts.clone()], |_, part, m| {
                 m.charge(part.len());
-                space.assign(part, &[0])
+                let a = space.assign(part, &[0]);
+                m.release(part.len());
+                a
             });
         }
-        let _ = sim.round("noop", vec![()], |_, _, m| m.charge(1));
+        let _ = sim.round("noop", vec![()], |_, _, m| {
+            m.charge(1);
+            m.release(1);
+        });
         let stats = sim.take_stats();
         assert_eq!(stats.dist_evals_for("assign"), 16);
         assert_eq!(stats.dist_evals_for("noop"), 0);
@@ -298,7 +331,10 @@ mod tests {
     #[test]
     fn dist_evals_zero_without_distance_work() {
         let sim = Simulator::new();
-        let _ = sim.round("noop", vec![(), ()], |_, _, m| m.charge(1));
+        let _ = sim.round("noop", vec![(), ()], |_, _, m| {
+            m.charge(1);
+            m.release(1);
+        });
         let stats = sim.take_stats();
         assert_eq!(stats.rounds[0].dist_evals, 0);
         assert_eq!(stats.rounds[0].reducer_dist_evals, vec![0, 0]);

@@ -59,6 +59,7 @@ pub mod dense;
 pub mod doubling;
 pub mod extra;
 pub mod levenshtein;
+pub mod pruned;
 
 /// Clustering objective: k-median sums distances, k-means sums squares.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

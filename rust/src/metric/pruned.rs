@@ -1,0 +1,466 @@
+//! Incremental nearest-center tracking with triangle-inequality pruning.
+//!
+//! Every sampling baseline (kmeans‖, PAMAE-lite, Ene–Im–Moseley) folds a
+//! growing center set over a fixed point set: "for each point, keep the
+//! distance and index of the nearest center seen so far". The reference
+//! fold pays `|pts|` distance evaluations per new center. With the current
+//! nearest distance `a = d(x, C)` in hand and one cached center-to-center
+//! row, the triangle inequality gives `d(x, c_new) >= |d(c_new, c_x) - a|`
+//! where `c_x` is x's current nearest center — so any point with
+//! `|d(c_new, c_x) - a| > a` cannot switch to `c_new` and its evaluation
+//! is skipped outright via [`MetricSpace::dist_batch_pruned`].
+//!
+//! [`NearestTracker`] maintains exactly that state, bucketing points by
+//! their current nearest center as `coreset/cover.rs` does so whole
+//! buckets are eliminated with a single comparison against the bucket's
+//! distance ceiling. Guarantee: **bit-identical** results to the
+//! reference fold ([`assign_reference`]) — skipped pairs are only those
+//! whose strict `d < current` comparison a deflated lower bound already
+//! decided negatively, so the surviving updates (and ties, which always
+//! keep the earliest center) are untouched.
+//!
+//! Bounds are only trusted when [`MetricSpace::uniform_precision`] holds;
+//! otherwise the tracker silently degrades to the reference fold (every
+//! pair computed, identical charges), so callers need no second code
+//! path for engine-attached spaces.
+
+use super::{Assignment, MetricSpace};
+
+/// Relative slack applied to every lower bound before it may veto a
+/// distance evaluation (same contract as `coreset/cover.rs`): distances
+/// are f64 results of a metric's own arithmetic, so bounds derived from
+/// them are deflated by ~1e-12 relative before use. Pruning then only
+/// skips comparisons decided by a margin far above accumulated f64
+/// round-off; everything inside the margin is computed exactly.
+const LB_MARGIN: f64 = 1e-12;
+
+/// Incremental nearest-center state over a fixed `pts` slice.
+pub struct NearestTracker<'a> {
+    space: &'a dyn MetricSpace,
+    pts: &'a [u32],
+    centers: Vec<u32>,
+    /// Exact distance to the current nearest center (never a bound).
+    dist: Vec<f64>,
+    /// Index into `centers` of the current nearest center.
+    idx: Vec<u32>,
+    /// Bounds usable at all (requested && uniform precision)?
+    use_bounds: bool,
+    /// Bounds currently paying for themselves? (give-up latch)
+    bounds_paying: bool,
+    /// Per-center buckets of positions into `pts`, plus each bucket's
+    /// distance ceiling (max `dist` over members; stale-high is safe).
+    buckets: Vec<Vec<u32>>,
+    bucket_hi: Vec<f64>,
+    /// Give-up ledger: evaluations spent by the pruned path vs what the
+    /// reference fold would have spent.
+    pruned_evals: u64,
+    baseline_evals: u64,
+    // scratch buffers reused across pushes
+    sel: Vec<u32>,
+    lower: Vec<f64>,
+    cutoff: Vec<f64>,
+    out: Vec<f64>,
+}
+
+impl<'a> NearestTracker<'a> {
+    /// Empty tracker (no centers yet). `bounds` requests pruning; it is
+    /// honoured only when the space reports uniform precision.
+    pub fn new(space: &'a dyn MetricSpace, pts: &'a [u32], bounds: bool) -> Self {
+        let n = pts.len();
+        NearestTracker {
+            space,
+            pts,
+            centers: Vec::new(),
+            dist: vec![f64::INFINITY; n],
+            idx: vec![u32::MAX; n],
+            use_bounds: bounds && space.uniform_precision(),
+            bounds_paying: true,
+            buckets: Vec::new(),
+            bucket_hi: Vec::new(),
+            pruned_evals: 0,
+            baseline_evals: 0,
+            sel: Vec::new(),
+            lower: Vec::new(),
+            cutoff: Vec::new(),
+            out: Vec::new(),
+        }
+    }
+
+    /// Resume from previously-tracked state: `dist[i]`/`idx[i]` must be
+    /// the exact nearest distance/index of `pts[i]` over `centers`.
+    pub fn with_state(
+        space: &'a dyn MetricSpace,
+        pts: &'a [u32],
+        centers: Vec<u32>,
+        dist: Vec<f64>,
+        idx: Vec<u32>,
+        bounds: bool,
+    ) -> Self {
+        assert_eq!(pts.len(), dist.len());
+        assert_eq!(pts.len(), idx.len());
+        let mut t = NearestTracker {
+            space,
+            pts,
+            centers,
+            dist,
+            idx,
+            use_bounds: bounds && space.uniform_precision(),
+            bounds_paying: true,
+            buckets: Vec::new(),
+            bucket_hi: Vec::new(),
+            pruned_evals: 0,
+            baseline_evals: 0,
+            sel: Vec::new(),
+            lower: Vec::new(),
+            cutoff: Vec::new(),
+            out: Vec::new(),
+        };
+        if t.use_bounds && !t.centers.is_empty() {
+            t.buckets = vec![Vec::new(); t.centers.len()];
+            t.bucket_hi = vec![0.0; t.centers.len()];
+            for (pos, &j) in t.idx.iter().enumerate() {
+                let j = j as usize;
+                assert!(j < t.centers.len(), "with_state: idx out of range");
+                t.buckets[j].push(pos as u32);
+                if t.dist[pos] > t.bucket_hi[j] {
+                    t.bucket_hi[j] = t.dist[pos];
+                }
+            }
+        }
+        t
+    }
+
+    pub fn centers(&self) -> &[u32] {
+        &self.centers
+    }
+
+    pub fn dist(&self) -> &[f64] {
+        &self.dist
+    }
+
+    pub fn idx(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// Consume the tracker, returning the `(dist, idx)` assignment state.
+    pub fn into_state(self) -> (Vec<f64>, Vec<u32>) {
+        (self.dist, self.idx)
+    }
+
+    pub fn assignment(&self) -> Assignment {
+        Assignment { dist: self.dist.clone(), idx: self.idx.clone() }
+    }
+
+    /// Fold one new center into the tracked state. Computes the cached
+    /// center-to-center row itself when bounds are active.
+    pub fn push(&mut self, c: u32) {
+        if self.bounds_active() {
+            let mut row = vec![0.0; self.centers.len()];
+            self.space.dist_batch(&self.centers, c, &mut row);
+            self.pruned_evals += row.len() as u64;
+            self.push_bounded(c, &row);
+        } else {
+            self.push_full(c);
+        }
+    }
+
+    /// Fold one new center using a caller-supplied center-to-center row
+    /// (`row[j] = d(centers[j], c)`, already computed and charged — e.g.
+    /// broadcast once by a coordinator and shared across reducers). The
+    /// row is ignored when bounds are inactive.
+    pub fn push_with_row(&mut self, c: u32, row: &[f64]) {
+        if self.bounds_active() {
+            assert_eq!(row.len(), self.centers.len(), "push_with_row: row length");
+            self.push_bounded(c, row);
+        } else {
+            self.push_full(c);
+        }
+    }
+
+    fn bounds_active(&self) -> bool {
+        // a center row costs |C| evals; once |C| catches up with |pts|
+        // the row alone outweighs the reference fold
+        self.use_bounds
+            && self.bounds_paying
+            && !self.centers.is_empty()
+            && self.centers.len() < self.pts.len()
+    }
+
+    /// Reference fold: every pair computed (identical to the historical
+    /// per-center `dist_batch` loop, strict `<` keeps the earliest
+    /// center on ties).
+    fn push_full(&mut self, c: u32) {
+        let j = self.centers.len() as u32;
+        self.out.resize(self.pts.len(), 0.0);
+        self.space.dist_batch(self.pts, c, &mut self.out);
+        for (i, &d) in self.out.iter().enumerate() {
+            if d < self.dist[i] {
+                self.dist[i] = d;
+                self.idx[i] = j;
+            }
+        }
+        self.centers.push(c);
+        self.pruned_evals += self.pts.len() as u64;
+        self.baseline_evals += self.pts.len() as u64;
+        if self.use_bounds && self.bounds_paying {
+            // seed / refresh buckets so a later push can prune
+            self.rebuild_buckets();
+        }
+    }
+
+    fn rebuild_buckets(&mut self) {
+        self.buckets = vec![Vec::new(); self.centers.len()];
+        self.bucket_hi = vec![0.0; self.centers.len()];
+        for (pos, &j) in self.idx.iter().enumerate() {
+            let j = j as usize;
+            self.buckets[j].push(pos as u32);
+            if self.dist[pos] > self.bucket_hi[j] {
+                self.bucket_hi[j] = self.dist[pos];
+            }
+        }
+    }
+
+    /// Bounds-pruned fold of one new center, given the row of distances
+    /// from `c` to every existing center.
+    fn push_bounded(&mut self, c: u32, row: &[f64]) {
+        let jn = self.centers.len() as u32;
+        let n = self.pts.len();
+        self.baseline_evals += n as u64;
+        let mut moved: Vec<u32> = Vec::new();
+        let mut moved_hi = 0.0f64;
+        let mut computed_total = 0usize;
+        for b in 0..self.buckets.len() {
+            if self.buckets[b].is_empty() {
+                continue;
+            }
+            let dcb = row[b];
+            let hi = self.bucket_hi[b];
+            // bucket-level veto: for every member `a <= hi`, the member
+            // bound `dcb - a - LB_MARGIN*(dcb + a)` already exceeds its
+            // cutoff `a` whenever `dcb - LB_MARGIN*(dcb + hi) > 2*hi`
+            if dcb - LB_MARGIN * (dcb + hi) > 2.0 * hi {
+                continue;
+            }
+            // assemble the bucket's survivors for the pruned batch
+            self.sel.clear();
+            self.lower.clear();
+            self.cutoff.clear();
+            for &pos in &self.buckets[b] {
+                let a = self.dist[pos as usize];
+                let lb = ((dcb - a).abs() - LB_MARGIN * (dcb + a)).max(0.0);
+                self.sel.push(self.pts[pos as usize]);
+                self.lower.push(lb);
+                self.cutoff.push(a);
+            }
+            self.out.resize(self.sel.len(), 0.0);
+            let computed = self.space.dist_batch_pruned(
+                &self.sel,
+                c,
+                &self.lower,
+                &self.cutoff,
+                &mut self.out,
+            );
+            computed_total += computed;
+            // apply updates and compact the bucket in place, moving
+            // switchers to the new center's bucket
+            let mut write = 0usize;
+            let mut hi_new = 0.0f64;
+            for s in 0..self.buckets[b].len() {
+                let pos = self.buckets[b][s];
+                let d = self.out[s];
+                if d < self.dist[pos as usize] {
+                    self.dist[pos as usize] = d;
+                    self.idx[pos as usize] = jn;
+                    moved.push(pos);
+                    if d > moved_hi {
+                        moved_hi = d;
+                    }
+                } else {
+                    self.buckets[b][write] = pos;
+                    write += 1;
+                    if self.dist[pos as usize] > hi_new {
+                        hi_new = self.dist[pos as usize];
+                    }
+                }
+            }
+            self.buckets[b].truncate(write);
+            self.bucket_hi[b] = hi_new;
+        }
+        self.buckets.push(moved);
+        self.bucket_hi.push(moved_hi);
+        self.centers.push(c);
+        // give-up ledger: if pruning persistently spends more than the
+        // reference fold would (rows + surviving evals), latch it off —
+        // the state stays exact, later pushes just fold everything.
+        self.pruned_evals += computed_total as u64;
+        let slack = self.pts.len() as u64 + 64;
+        if self.pruned_evals > self.baseline_evals + slack {
+            self.bounds_paying = false;
+            self.buckets.clear();
+            self.bucket_hi.clear();
+        }
+    }
+}
+
+/// One-shot pruned assignment: fold `centers` in order through a
+/// [`NearestTracker`]. Bit-identical to [`assign_reference`].
+pub fn assign_pruned(space: &dyn MetricSpace, pts: &[u32], centers: &[u32]) -> Assignment {
+    assert!(!centers.is_empty(), "assign_pruned: empty center set");
+    let mut t = NearestTracker::new(space, pts, true);
+    for &c in centers {
+        t.push(c);
+    }
+    let (dist, idx) = t.into_state();
+    Assignment { dist, idx }
+}
+
+/// Reference assignment: the plain per-center `dist_batch` fold with
+/// strict `<` updates (the `MetricSpace::nearest_batch` trait default),
+/// spelled out so spaces that override `nearest_batch` with approximate
+/// kernels (engine-attached Euclidean) still produce the exact fold the
+/// pruned twin is pinned against.
+pub fn assign_reference(space: &dyn MetricSpace, pts: &[u32], centers: &[u32]) -> Assignment {
+    assert!(!centers.is_empty(), "assign_reference: empty center set");
+    let n = pts.len();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut idx = vec![u32::MAX; n];
+    let mut buf = vec![0.0f64; n];
+    for (j, &c) in centers.iter().enumerate() {
+        space.dist_batch(pts, c, &mut buf);
+        for (i, &d) in buf.iter().enumerate() {
+            if d < dist[i] {
+                dist[i] = d;
+                idx[i] = j as u32;
+            }
+        }
+    }
+    Assignment { dist, idx }
+}
+
+/// Incremental center-to-center rows for a center list: `rows[j]` holds
+/// `d(centers[j], centers[..j])` — the broadcast a coordinator computes
+/// once so every reducer's tracker can prune against the same cached
+/// geometry. Total cost m(m-1)/2 evaluations.
+pub fn center_rows(space: &dyn MetricSpace, centers: &[u32]) -> Vec<Vec<f64>> {
+    let mut rows = Vec::with_capacity(centers.len());
+    for j in 0..centers.len() {
+        let mut row = vec![0.0; j];
+        if j > 0 {
+            space.dist_batch(&centers[..j], centers[j], &mut row);
+        }
+        rows.push(row);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::data::synth::GaussianMixtureSpec;
+    use crate::metric::counter;
+    use crate::metric::dense::{EuclideanSpace, ManhattanSpace};
+
+    fn mixture(n: usize, seed: u64) -> Arc<crate::points::VectorData> {
+        let (data, _) = GaussianMixtureSpec {
+            n,
+            d: 3,
+            k: 4,
+            spread: 20.0,
+            outlier_frac: 0.02,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        Arc::new(data)
+    }
+
+    #[test]
+    fn pruned_assignment_bit_identical_and_cheaper() {
+        let data = mixture(600, 7);
+        let spaces: Vec<Box<dyn MetricSpace>> = vec![
+            Box::new(EuclideanSpace::new(data.clone())),
+            Box::new(ManhattanSpace::new(data)),
+        ];
+        let pts: Vec<u32> = (0..600).collect();
+        let centers: Vec<u32> = vec![3, 77, 150, 301, 420, 599];
+        for space in &spaces {
+            let (reference, eref) =
+                counter::counted(|| assign_reference(space.as_ref(), &pts, &centers));
+            let (pruned, epr) = counter::counted(|| assign_pruned(space.as_ref(), &pts, &centers));
+            assert_eq!(pruned.idx, reference.idx, "{}", space.name());
+            for (a, b) in pruned.dist.iter().zip(&reference.dist) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", space.name());
+            }
+            assert!(epr <= eref, "{}: pruned {epr} > reference {eref}", space.name());
+        }
+    }
+
+    #[test]
+    fn incremental_push_matches_fresh_fold() {
+        let data = mixture(400, 13);
+        let space = EuclideanSpace::new(data);
+        let pts: Vec<u32> = (0..400).collect();
+        let centers: Vec<u32> = vec![10, 42, 200, 333];
+        let mut t = NearestTracker::new(&space, &pts, true);
+        for (m, &c) in centers.iter().enumerate() {
+            t.push(c);
+            let reference = assign_reference(&space, &pts, &centers[..=m]);
+            assert_eq!(t.idx(), &reference.idx[..], "prefix {m}");
+            for (a, b) in t.dist().iter().zip(&reference.dist) {
+                assert_eq!(a.to_bits(), b.to_bits(), "prefix {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn with_state_resumes_exactly() {
+        let data = mixture(300, 29);
+        let space = EuclideanSpace::new(data);
+        let pts: Vec<u32> = (0..300).collect();
+        let head: Vec<u32> = vec![5, 100];
+        let tail: Vec<u32> = vec![222, 17, 290];
+        let a0 = assign_reference(&space, &pts, &head);
+        let mut t = NearestTracker::with_state(&space, &pts, head.clone(), a0.dist, a0.idx, true);
+        let rows = center_rows(&space, &[head.clone(), tail.clone()].concat());
+        for (i, &c) in tail.iter().enumerate() {
+            t.push_with_row(c, &rows[head.len() + i]);
+        }
+        let all: Vec<u32> = head.iter().chain(&tail).copied().collect();
+        let reference = assign_reference(&space, &pts, &all);
+        assert_eq!(t.idx(), &reference.idx[..]);
+        for (a, b) in t.dist().iter().zip(&reference.dist) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bounds_disabled_without_uniform_precision() {
+        // a space that disavows uniform precision must get the full fold
+        // (equal charges to the reference) while staying bit-identical
+        struct NonUniform(EuclideanSpace);
+        impl MetricSpace for NonUniform {
+            fn n_points(&self) -> usize {
+                self.0.n_points()
+            }
+            fn dist(&self, i: u32, j: u32) -> f64 {
+                self.0.dist(i, j)
+            }
+            fn name(&self) -> &'static str {
+                "non-uniform"
+            }
+            fn uniform_precision(&self) -> bool {
+                false
+            }
+        }
+        let data = mixture(200, 3);
+        let space = NonUniform(EuclideanSpace::new(data));
+        let pts: Vec<u32> = (0..200).collect();
+        let centers: Vec<u32> = vec![1, 50, 120];
+        let (reference, eref) = counter::counted(|| assign_reference(&space, &pts, &centers));
+        let (pruned, epr) = counter::counted(|| assign_pruned(&space, &pts, &centers));
+        assert_eq!(pruned.idx, reference.idx);
+        assert_eq!(epr, eref, "no pruning allowed: charges must match");
+    }
+}

@@ -116,7 +116,7 @@ pub fn outlier_coreset(
         let res =
             cover_with_balls_weighted(space, &cs.indices, Some(&cs.weights), &t, global_r, ce, cb);
         meter.charge(res.set.len()); // E_w
-        meter.release(cs.len() + t.len());
+        meter.release(cs.len() + t.len() + res.set.len());
         res.set
     });
     let coreset = e_parts.into_iter().next().expect("one compress reducer");

@@ -1,0 +1,323 @@
+//! Property tests pinning the bounds-pruned baselines **bit-for-bit** to
+//! their unpruned reference twins:
+//!
+//! 1. `kmeans_parallel::run` vs `run_unpruned` — the incremental
+//!    candidate folds and final Voronoi weighting through
+//!    `NearestTracker`;
+//! 2. `pamae_lite::run` vs `run_unpruned` — pruned candidate evaluation,
+//!    phase-2 assignment, and `exact_one_center_pruned` refinement;
+//! 3. `ene_im_moseley::run` vs `run_unpruned` — carried nearest-pivot
+//!    state with broadcast center rows, including duplicate-heavy /
+//!    integer tie grids that hammer the NaN-safe filter sort, and the
+//!    Levenshtein space (integer distances, the general-metric path);
+//! 4. `lloyd` vs `lloyd_reference` — Hamerly bounds across iterations,
+//!    weighted and unweighted;
+//! 5. the pruned baselines stay bit-identical across simulator thread
+//!    counts (1 vs 8) with identical attributed distance evaluations.
+//!
+//! Pruning must only skip evaluations whose comparison a bound already
+//! decided — any drift in centers, costs, summary sizes, or round counts
+//! is a bug, not a tolerance question.
+
+use std::sync::Arc;
+
+use mrcoreset::algorithms::lloyd::{lloyd, lloyd_reference, LloydCfg};
+use mrcoreset::baselines::ene_im_moseley::{self, EimCfg};
+use mrcoreset::baselines::kmeans_parallel::{self, KmeansParCfg};
+use mrcoreset::baselines::pamae_lite::{self, PamaeCfg};
+use mrcoreset::baselines::BaselineReport;
+use mrcoreset::data::strings::StringClusterSpec;
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::Simulator;
+use mrcoreset::metric::dense::{EuclideanSpace, ManhattanSpace};
+use mrcoreset::metric::levenshtein::StringSpace;
+use mrcoreset::metric::{MetricSpace, Objective};
+use mrcoreset::points::VectorData;
+use mrcoreset::util::prop::check;
+use mrcoreset::util::rng::Rng;
+
+fn reports_bit_identical(a: &BaselineReport, b: &BaselineReport) -> Result<(), String> {
+    if a.solution.centers != b.solution.centers {
+        return Err(format!("centers differ: {:?} vs {:?}", a.solution.centers, b.solution.centers));
+    }
+    if a.solution.cost.to_bits() != b.solution.cost.to_bits() {
+        return Err(format!("solution cost differs: {} vs {}", a.solution.cost, b.solution.cost));
+    }
+    if a.full_cost.to_bits() != b.full_cost.to_bits() {
+        return Err(format!("full cost differs: {} vs {}", a.full_cost, b.full_cost));
+    }
+    if a.summary_size != b.summary_size {
+        return Err(format!("summary size differs: {} vs {}", a.summary_size, b.summary_size));
+    }
+    if a.rounds != b.rounds {
+        return Err(format!("rounds differ: {} vs {}", a.rounds, b.rounds));
+    }
+    Ok(())
+}
+
+/// Euclidean exercises the overridden pruned batch, Manhattan the macro
+/// override on the generic path.
+fn random_vector_spaces(rng: &mut Rng) -> (Vec<Box<dyn MetricSpace>>, usize) {
+    let n = 150 + rng.below(400);
+    let (data, _) = GaussianMixtureSpec {
+        n,
+        d: 1 + rng.below(4),
+        k: 1 + rng.below(5),
+        spread: 1.0 + rng.f64() * 30.0,
+        outlier_frac: if rng.below(3) == 0 { 0.05 } else { 0.0 },
+        seed: rng.next_u64(),
+    }
+    .generate();
+    let shared = Arc::new(data);
+    let spaces: Vec<Box<dyn MetricSpace>> = vec![
+        Box::new(EuclideanSpace::new(shared.clone())),
+        Box::new(ManhattanSpace::new(shared)),
+    ];
+    (spaces, n)
+}
+
+/// Duplicate-heavy integer lattice: scores of exact ties in every
+/// distance comparison, the worst case for tie-handling in the EIM
+/// filter sort and the trackers' strict `<` updates.
+fn tie_grid_space(rng: &mut Rng) -> (EuclideanSpace, usize) {
+    let n = 150 + rng.below(250);
+    let side = 2 + rng.below(4);
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| vec![rng.below(side) as f32, rng.below(side) as f32])
+        .collect();
+    (EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows))), n)
+}
+
+fn random_subset(rng: &mut Rng, n: usize) -> Vec<u32> {
+    // sometimes the identity, sometimes a shuffled strict subset — the
+    // baselines must never assume `pts[i] == i`
+    if rng.below(2) == 0 {
+        (0..n as u32).collect()
+    } else {
+        let m = n / 2 + rng.below(n / 2);
+        let mut ids: Vec<u32> = rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect();
+        rng.shuffle(&mut ids);
+        ids
+    }
+}
+
+#[test]
+fn kmeans_parallel_pruned_matches_unpruned() {
+    check("kmeans-par-equivalence", 0x6B3A_0001, 12, |rng| {
+        let (spaces, n) = random_vector_spaces(rng);
+        let pts = random_subset(rng, n);
+        let k = 2 + rng.below(5);
+        let cfg = KmeansParCfg {
+            ell: 2.0 + rng.f64() * 16.0,
+            rounds: 2 + rng.below(3),
+            seed: rng.next_u64(),
+        };
+        for space in &spaces {
+            for obj in [Objective::Median, Objective::Means] {
+                let sim = Simulator::new();
+                let pruned = kmeans_parallel::run(space.as_ref(), obj, &pts, k, &cfg, &sim);
+                let reference =
+                    kmeans_parallel::run_unpruned(space.as_ref(), obj, &pts, k, &cfg, &sim);
+                reports_bit_identical(&pruned, &reference)
+                    .map_err(|e| format!("{} {obj}: {e}", space.name()))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pamae_lite_pruned_matches_unpruned() {
+    check("pamae-equivalence", 0x6B3A_0002, 8, |rng| {
+        let (spaces, n) = random_vector_spaces(rng);
+        let pts = random_subset(rng, n);
+        let k = 2 + rng.below(4);
+        let cfg = PamaeCfg {
+            num_samples: 2 + rng.below(2),
+            sample_size: 60 + rng.below(60),
+            refine_size: 60 + rng.below(60),
+            seed: rng.next_u64(),
+        };
+        for space in &spaces {
+            for obj in [Objective::Median, Objective::Means] {
+                let sim = Simulator::new();
+                let pruned = pamae_lite::run(space.as_ref(), obj, &pts, k, &cfg, &sim);
+                let reference = pamae_lite::run_unpruned(space.as_ref(), obj, &pts, k, &cfg, &sim);
+                reports_bit_identical(&pruned, &reference)
+                    .map_err(|e| format!("{} {obj}: {e}", space.name()))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ene_im_moseley_pruned_matches_unpruned() {
+    check("eim-equivalence", 0x6B3A_0003, 10, |rng| {
+        let (spaces, n) = random_vector_spaces(rng);
+        let pts = random_subset(rng, n);
+        let k = 2 + rng.below(4);
+        let cfg = EimCfg {
+            sample_per_iter: 20 + rng.below(30),
+            stop_below: 40 + rng.below(40),
+            seed: rng.next_u64(),
+        };
+        for space in &spaces {
+            for obj in [Objective::Median, Objective::Means] {
+                let sim = Simulator::new();
+                let pruned = ene_im_moseley::run(space.as_ref(), obj, &pts, k, &cfg, &sim);
+                let reference =
+                    ene_im_moseley::run_unpruned(space.as_ref(), obj, &pts, k, &cfg, &sim);
+                reports_bit_identical(&pruned, &reference)
+                    .map_err(|e| format!("{} {obj}: {e}", space.name()))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Duplicate-heavy tie grids: every carried comparison and the filter
+/// sort see massive distance ties; kept halves and assignments must
+/// still match the reference exactly.
+#[test]
+fn ene_im_moseley_equivalent_on_tie_grids() {
+    check("eim-tie-grid", 0x6B3A_0004, 10, |rng| {
+        let (space, n) = tie_grid_space(rng);
+        let pts: Vec<u32> = (0..n as u32).collect();
+        let k = 2 + rng.below(3);
+        let cfg = EimCfg {
+            sample_per_iter: 15 + rng.below(25),
+            stop_below: 30 + rng.below(30),
+            seed: rng.next_u64(),
+        };
+        for obj in [Objective::Median, Objective::Means] {
+            let sim = Simulator::new();
+            let pruned = ene_im_moseley::run(&space, obj, &pts, k, &cfg, &sim);
+            let reference = ene_im_moseley::run_unpruned(&space, obj, &pts, k, &cfg, &sim);
+            reports_bit_identical(&pruned, &reference).map_err(|e| format!("{obj}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Levenshtein: integer distances (tie-heavy) on the true general-metric
+/// path — the tracker's batched DP folds must stay exact.
+#[test]
+fn baselines_equivalent_on_levenshtein() {
+    check("baselines-levenshtein", 0x6B3A_0005, 5, |rng| {
+        let n = 80 + rng.below(120);
+        let (strings, _) = StringClusterSpec {
+            n,
+            clusters: 1 + rng.below(5),
+            base_len: 8 + rng.below(10),
+            max_edits: 3,
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let space = StringSpace::new(strings);
+        let pts: Vec<u32> = (0..n as u32).collect();
+        let k = 2 + rng.below(3);
+        let sim = Simulator::new();
+        let ecfg =
+            EimCfg { sample_per_iter: 15, stop_below: 30, seed: rng.next_u64() };
+        let pruned = ene_im_moseley::run(&space, Objective::Median, &pts, k, &ecfg, &sim);
+        let reference =
+            ene_im_moseley::run_unpruned(&space, Objective::Median, &pts, k, &ecfg, &sim);
+        reports_bit_identical(&pruned, &reference).map_err(|e| format!("eim: {e}"))?;
+        let kcfg = KmeansParCfg { ell: 6.0, rounds: 3, seed: rng.next_u64() };
+        let pruned = kmeans_parallel::run(&space, Objective::Median, &pts, k, &kcfg, &sim);
+        let reference =
+            kmeans_parallel::run_unpruned(&space, Objective::Median, &pts, k, &kcfg, &sim);
+        reports_bit_identical(&pruned, &reference).map_err(|e| format!("kmeans||: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn lloyd_bounded_matches_reference() {
+    check("lloyd-equivalence", 0x6B3A_0006, 10, |rng| {
+        let n = 150 + rng.below(400);
+        let (data, _) = GaussianMixtureSpec {
+            n,
+            d: 1 + rng.below(4),
+            k: 1 + rng.below(5),
+            spread: 1.0 + rng.f64() * 40.0,
+            outlier_frac: 0.0,
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let pts: Vec<u32> = (0..n as u32).collect();
+        let weights: Vec<u64> = if rng.below(2) == 0 {
+            vec![1u64; n]
+        } else {
+            (0..n).map(|_| 1 + rng.below(9) as u64).collect()
+        };
+        let k = 1 + rng.below(6);
+        let cfg = LloydCfg { seed: rng.next_u64(), ..LloydCfg::default() };
+        let bounded = lloyd(&data, &pts, &weights, k, &cfg);
+        let reference = lloyd_reference(&data, &pts, &weights, k, &cfg);
+        if bounded.cost.to_bits() != reference.cost.to_bits() {
+            return Err(format!("cost differs: {} vs {}", bounded.cost, reference.cost));
+        }
+        if bounded.centroids.n() != reference.centroids.n() {
+            return Err("centroid count differs".to_string());
+        }
+        for j in 0..reference.centroids.n() as u32 {
+            let (a, b) = (bounded.centroids.row(j), reference.centroids.row(j));
+            if !a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()) {
+                return Err(format!("centroid {j} differs: {a:?} vs {b:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The pruned baselines run reducers in real threads; results and the
+/// attributed work metric must not depend on the thread count.
+#[test]
+fn pruned_baselines_bit_identical_across_thread_counts() {
+    let (data, _) = GaussianMixtureSpec {
+        n: 2000,
+        d: 3,
+        k: 5,
+        spread: 25.0,
+        seed: 41,
+        ..Default::default()
+    }
+    .generate();
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..2000).collect();
+    type Runner = dyn Fn(&dyn MetricSpace, &[u32], &Simulator) -> BaselineReport;
+    let runners: Vec<(&str, Box<Runner>)> = vec![
+        (
+            "kmeans||",
+            Box::new(|s, p, sim| {
+                kmeans_parallel::run(s, Objective::Means, p, 5, &KmeansParCfg::new(5), sim)
+            }),
+        ),
+        (
+            "pamae",
+            Box::new(|s, p, sim| {
+                let cfg = PamaeCfg { num_samples: 2, sample_size: 120, refine_size: 150, seed: 9 };
+                pamae_lite::run(s, Objective::Median, p, 5, &cfg, sim)
+            }),
+        ),
+        (
+            "eim",
+            Box::new(|s, p, sim| {
+                let cfg = EimCfg { sample_per_iter: 50, stop_below: 120, seed: 9 };
+                ene_im_moseley::run(s, Objective::Median, p, 5, &cfg, sim)
+            }),
+        ),
+    ];
+    for (name, run) in &runners {
+        let sim1 = Simulator::new().with_threads(1);
+        let a = run(&space, &pts, &sim1);
+        let sim8 = Simulator::new().with_threads(8);
+        let b = run(&space, &pts, &sim8);
+        reports_bit_identical(&a, &b).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let e1 = sim1.take_stats().total_dist_evals();
+        let e8 = sim8.take_stats().total_dist_evals();
+        assert_eq!(e1, e8, "{name}: dist_evals drift across thread counts");
+    }
+}
