@@ -43,12 +43,17 @@ use mrcoreset::metric::dense::{sq_euclidean, EuclideanSpace};
 use mrcoreset::metric::{MetricSpace, Objective};
 use mrcoreset::outliers::{local_search_outliers, robust_cost};
 use mrcoreset::runtime::XlaEngine;
-use mrcoreset::util::bench::{bench, to_json, to_json_with_metrics, BenchResult};
+use mrcoreset::util::bench::{
+    bench, to_json, to_json_with_metrics, with_meta, BenchMeta, BenchResult,
+};
 
 /// Persist results as machine-readable JSON next to the bench output so
-/// the perf trajectory is tracked across PRs, not just printed.
-fn write_bench_json(path: &str, results: &[BenchResult]) {
-    write_json_doc(path, to_json(results));
+/// the perf trajectory is tracked across PRs, not just printed. Every
+/// document carries a `"meta"` stamp (schema version, smoke flag,
+/// thread count, git sha) so artifacts in the cross-PR series are
+/// self-describing.
+fn write_bench_json(path: &str, results: &[BenchResult], smoke: bool) {
+    write_json_doc(path, with_meta(to_json(results), &BenchMeta::collect(smoke)));
 }
 
 fn write_json_doc(path: &str, doc: String) {
@@ -199,7 +204,7 @@ fn micro_benches(smoke: bool) {
         println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(n) / 1e3);
         micro_results.push(r);
     }
-    write_bench_json("BENCH_micro.json", &micro_results);
+    write_bench_json("BENCH_micro.json", &micro_results, smoke);
 }
 
 fn outlier_benches(smoke: bool) {
@@ -268,7 +273,7 @@ fn outlier_benches(smoke: bool) {
         println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(ntotal) / 1e3);
         outlier_results.push(r);
     }
-    write_bench_json("BENCH_outliers.json", &outlier_results);
+    write_bench_json("BENCH_outliers.json", &outlier_results, smoke);
 }
 
 /// Geometry-pruning comparison: the quantities that matter here are
@@ -544,5 +549,8 @@ fn pruning_benches(smoke: bool) {
         ("lloyd_evals_bounded", ll_bounded as f64),
         ("lloyd_evals_saved_ratio", ll_ratio),
     ];
-    write_json_doc("BENCH_pruning.json", to_json_with_metrics(&results, &metrics));
+    write_json_doc(
+        "BENCH_pruning.json",
+        with_meta(to_json_with_metrics(&results, &metrics), &BenchMeta::collect(smoke)),
+    );
 }

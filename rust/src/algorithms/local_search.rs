@@ -38,6 +38,7 @@
 //! sits far below the worst-case bound on non-adversarial instances.
 
 use crate::metric::{MetricSpace, Objective};
+use crate::obs::counters as obs;
 use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 
@@ -354,11 +355,14 @@ fn local_search_impl(
     let mut cost = book_cost(&book, obj, inst.weights);
     let exhaustive = n <= cfg.exhaustive_below;
     let mut dry_passes = 0usize;
+    let mut passes: u64 = 0;
+    let mut swaps: u64 = 0;
     let mut dc_buf = vec![0.0f64; n];
     let mut best_dc = vec![0.0f64; n];
     let mut delta_buf: Vec<f64> = Vec::with_capacity(centers.len());
     let mut in_centers = Bitset::from_members(space.n_points(), &centers);
     for _pass in 0..cfg.max_passes {
+        passes += 1;
         // candidate pool: exhaustive for small instances; otherwise half
         // uniform, half cost-biased (w·cost(d1) — the D^p intuition:
         // badly-served heavy points are the promising swap-ins, and rare
@@ -411,6 +415,7 @@ fn local_search_impl(
                 );
                 cost = book_cost(&book, obj, inst.weights);
                 dry_passes = 0;
+                swaps += 1;
             }
             _ if exhaustive => break, // true local optimum
             _ => {
@@ -421,6 +426,9 @@ fn local_search_impl(
             }
         }
     }
+    // per-call telemetry (snapshotted per reducer by the simulator)
+    obs::add("local_search.passes", passes);
+    obs::add("local_search.swaps", swaps);
     Solution { centers, cost }
 }
 

@@ -10,6 +10,7 @@
 //! O(|P|^{2/3} k^{1/3} (c/ε)^{2D} log² |P|) — substantially sublinear
 //! for small doubling dimension D.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::algorithms::local_search::{local_search, LocalSearchCfg};
@@ -19,6 +20,7 @@ use crate::coreset::pipeline::{one_round_coreset, two_round_coreset, CoresetConf
 use crate::coreset::TlAlgo;
 use crate::mapreduce::{default_l, JobStats, PartitionStrategy, Simulator};
 use crate::metric::{MetricSpace, Objective};
+use crate::obs::{self, Event, Recorder, TRACE_SCHEMA_VERSION};
 use crate::outliers::{
     local_search_outliers, outlier_coreset, robust_cost_of_dists, OutlierCoresetConfig,
 };
@@ -116,13 +118,32 @@ pub struct RunReport {
 
 /// Run the full 3-round algorithm on (pts, k).
 pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunReport {
+    solve_traced(space, pts, cfg, obs::noop())
+}
+
+/// [`solve`] with a telemetry recorder attached to the simulator: every
+/// round emits span events (see `obs::event`), bracketed by
+/// `run_start`/`run_end`. `solve` is exactly this with the disabled
+/// recorder, so traced and untraced runs compute identical reports.
+pub fn solve_traced(
+    space: &dyn MetricSpace,
+    pts: &[u32],
+    cfg: &ClusterConfig,
+    recorder: Arc<dyn Recorder>,
+) -> RunReport {
     assert!(cfg.k >= 1 && cfg.k <= pts.len(), "require 1 <= k <= |P|");
     assert!(cfg.eps > 0.0, "eps must be positive");
     let t0 = Instant::now();
     let n = pts.len();
     let l = cfg.l.unwrap_or_else(|| default_l(n, cfg.k));
     let m = cfg.m.unwrap_or(2 * cfg.k).max(cfg.k);
-    let mut sim = Simulator::new();
+    if recorder.enabled() {
+        recorder.record(&Event::RunStart {
+            schema: TRACE_SCHEMA_VERSION,
+            label: format!("{} k={} n={} eps={} seed={}", cfg.objective, cfg.k, n, cfg.eps, cfg.seed),
+        });
+    }
+    let mut sim = Simulator::new().with_recorder(recorder.clone());
     if let Some(t) = cfg.threads {
         sim = sim.with_threads(t);
     }
@@ -217,6 +238,14 @@ pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunRe
     };
 
     let stats = sim.take_stats();
+    if recorder.enabled() {
+        recorder.record(&Event::RunEnd {
+            rounds: stats.num_rounds() as u64,
+            dist_evals: stats.total_dist_evals(),
+            max_local_memory: stats.max_local_memory() as u64,
+        });
+        recorder.flush();
+    }
     RunReport {
         full_cost,
         outliers: cfg.outliers,

@@ -1,5 +1,6 @@
-//! Human-readable run reports.
+//! Human-readable and JSON run reports.
 
+use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 
 use super::driver::RunReport;
@@ -34,16 +35,83 @@ impl RunReport {
             self.wall.as_secs_f64()
         ));
         for r in &self.stats.rounds {
+            let md = r.mem_distribution();
             s.push_str(&format!(
-                "  round {:22} reducers={:4} peak_local={:8} dist={:12} wall={:.3}s\n",
+                "  round {:22} reducers={:4} peak_local={:8} mem_p50={:8.0} mem_p95={:8.0} \
+                 dist={:12} wall={:.3}s\n",
                 r.name,
                 r.reducers,
                 r.max_local_peak,
+                md.p50,
+                md.p95,
                 r.dist_evals,
                 r.wall.as_secs_f64()
             ));
         }
         s
+    }
+
+    /// Deterministic JSON twin of [`RunReport::summary`]: everything the
+    /// run measured except wall-clock, so two runs of the same seeded
+    /// config — at any thread count — serialize byte-identically (the
+    /// determinism suite diffs exactly this string).
+    pub fn to_json(&self) -> String {
+        let mut o = Json::obj();
+        let mut sol = Json::obj();
+        sol.set("k", Json::num(self.solution.centers.len() as f64));
+        sol.set(
+            "centers",
+            Json::Arr(self.solution.centers.iter().map(|&c| Json::num(c as f64)).collect()),
+        );
+        sol.set("coreset_cost", Json::num(self.solution.cost));
+        o.set("solution", sol);
+        o.set("full_cost", Json::num(self.full_cost));
+        o.set("outliers", Json::num(self.outliers as f64));
+        if self.outliers > 0 {
+            o.set("robust_full_cost", Json::num(self.robust_full_cost));
+            o.set(
+                "excluded",
+                Json::Arr(self.excluded.iter().map(|&p| Json::num(p as f64)).collect()),
+            );
+        }
+        o.set("coreset_size", Json::num(self.coreset_size as f64));
+        o.set("cw_size", Json::num(self.cw_size as f64));
+        o.set("l", Json::num(self.l as f64));
+        o.set("m", Json::num(self.m as f64));
+        o.set("rounds", Json::num(self.rounds as f64));
+        o.set("max_local_memory", Json::num(self.max_local_memory as f64));
+        o.set("aggregate_memory", Json::num(self.aggregate_memory as f64));
+        o.set("dist_evals", Json::num(self.dist_evals as f64));
+        let rounds: Vec<Json> = self
+            .stats
+            .rounds
+            .iter()
+            .map(|r| {
+                let md = r.mem_distribution();
+                let ed = r.evals_distribution();
+                let mut rj = Json::obj();
+                rj.set("name", Json::str(r.name.clone()));
+                rj.set("reducers", Json::num(r.reducers as f64));
+                rj.set("mem_max", Json::num(r.max_local_peak as f64));
+                rj.set("mem_p50", Json::num(md.p50));
+                rj.set("mem_p95", Json::num(md.p95));
+                rj.set("aggregate", Json::num(r.aggregate_peak as f64));
+                rj.set("dist_evals", Json::num(r.dist_evals as f64));
+                rj.set("evals_p50", Json::num(ed.p50));
+                rj.set("evals_p95", Json::num(ed.p95));
+                rj.set("in_items", Json::num(r.in_items as f64));
+                rj.set("out_items", Json::num(r.out_items as f64));
+                rj.set("violations", Json::num(r.budget_violations as f64));
+                let mut cj = Json::obj();
+                for (k, v) in &r.counters {
+                    cj.set(k, Json::num(*v as f64));
+                }
+                rj.set("counters", cj);
+                rj
+            })
+            .collect();
+        o.set("round_stats", Json::Arr(rounds));
+        o.to_string()
     }
 
     /// One row for experiment tables:

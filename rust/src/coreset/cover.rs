@@ -64,6 +64,7 @@
 //! consistency check.
 
 use crate::metric::MetricSpace;
+use crate::obs::counters as obs;
 use crate::points::WeightedSet;
 
 /// Result of CoverWithBalls: the weighted cover + the map τ.
@@ -192,6 +193,7 @@ pub fn cover_with_balls_weighted(
     let mut pruned_evals: u64 = 0;
     let mut baseline_evals: u64 = 0;
     let mut bounds_paying = true;
+    let mut bucket_vetoes: u64 = 0;
     let give_up_slack = 16 * t.len() as u64 + n as u64;
 
     // Reused scratch for the per-bucket pruned batch.
@@ -251,6 +253,7 @@ pub fn cover_with_balls_weighted(
                 // bucket's [lo, hi] interval (widened by the margin).
                 let slack = LB_MARGIN * (dcj + b.hi);
                 if dcj < b.lo - slack || dcj > b.hi + slack {
+                    bucket_vetoes += 1;
                     continue;
                 }
             }
@@ -305,6 +308,18 @@ pub fn cover_with_balls_weighted(
         }
     }
 
+    // Flush per-call telemetry once (not per iteration): the simulator
+    // snapshots these thread-locals around each reducer, so traces show
+    // pruning effectiveness per reducer with no plumbing through here.
+    obs::add("cover.points", n as u64);
+    obs::add("cover.iterations", centers.len() as u64);
+    obs::add("cover.evals_charged", pruned_evals);
+    obs::add("cover.evals_baseline", baseline_evals);
+    obs::add("cover.veto_bucket", bucket_vetoes);
+    if !bounds_paying {
+        obs::incr("cover.give_up");
+    }
+
     CoverResult { set: WeightedSet::new(centers, weights), tau, dist_to_t: setup.dist_to_t }
 }
 
@@ -333,6 +348,7 @@ pub fn cover_with_balls_weighted_unpruned(
     let mut alive: Vec<u32> = (0..n as u32).collect(); // positions into pts
     let mut alive_pts: Vec<u32> = pts.to_vec(); // pts[alive[i]], compacted in step
     let mut dist_buf = vec![0.0f64; n];
+    let mut scans: u64 = 0;
 
     while !alive.is_empty() {
         // arbitrary remaining point: smallest position (deterministic)
@@ -366,7 +382,13 @@ pub fn cover_with_balls_weighted_unpruned(
         alive_pts.truncate(write);
         debug_assert!(w >= 1, "the new representative must remove itself");
         weights.push(w);
+        scans += m as u64;
     }
+
+    obs::add("cover.points", n as u64);
+    obs::add("cover.iterations", centers.len() as u64);
+    obs::add("cover.evals_charged", scans);
+    obs::add("cover.evals_baseline", scans);
 
     CoverResult { set: WeightedSet::new(centers, weights), tau, dist_to_t: setup.dist_to_t }
 }
@@ -476,6 +498,25 @@ mod tests {
             counts[ti as usize] += 1;
         }
         assert_eq!(counts, res.set.weights);
+    }
+
+    /// Telemetry: each call flushes its `cover.*` counters to the
+    /// thread-local obs ledger (the simulator snapshots them per
+    /// reducer), and the pruned path's charges stay within the give-up
+    /// slack of the reference cost.
+    #[test]
+    fn telemetry_counters_flushed_per_call() {
+        let (space, pts) = mixture(500, 3, 4, 2);
+        let t = vec![0u32, 100, 200, 300];
+        let before = obs::snapshot();
+        let res = cover_with_balls(&space, &pts, &t, 1.0, 0.5, 2.0);
+        let delta = obs::delta_since(&before);
+        let get = |k: &str| delta.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or(0);
+        assert_eq!(get("cover.points"), 500);
+        assert_eq!(get("cover.iterations"), res.set.len() as u64);
+        assert!(get("cover.evals_charged") > 0);
+        let slack = 16 * t.len() as u64 + pts.len() as u64;
+        assert!(get("cover.evals_charged") <= get("cover.evals_baseline") + slack);
     }
 
     /// Representatives map to themselves (they remove themselves).

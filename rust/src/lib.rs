@@ -20,6 +20,7 @@ pub mod data;
 pub mod eval;
 pub mod mapreduce;
 pub mod metric;
+pub mod obs;
 pub mod outliers;
 pub mod points;
 pub mod runtime;

@@ -2,23 +2,33 @@
 //! k-median/k-means solver and its experiment suite.
 //!
 //! Subcommands:
-//!   run     solve a clustering instance (synthetic or CSV); `--z Z`
-//!           switches to the outlier-robust (k, z) pipeline
-//!   exp     run experiments e1..e12 (or `all`) and print their tables
-//!   gen     generate a synthetic dataset to CSV
-//!   info    report engine/artifact status
+//!   run         solve a clustering instance (synthetic or CSV); `--z Z`
+//!               switches to the outlier-robust (k, z) pipeline;
+//!               `--trace FILE` writes a JSONL telemetry trace and
+//!               `--json` prints the run report as JSON
+//!   exp         run experiments e1..e12 (or `all`) and print their tables
+//!   gen         generate a synthetic dataset to CSV
+//!   report      render a `--trace` JSONL file: per-round skew table plus
+//!               a pruning-effectiveness breakdown
+//!   bench-diff  compare the deterministic metrics of two bench JSON
+//!               files; exit 1 on regression (the CI perf gate)
+//!   info        report engine/artifact status
 //!
 //! Examples:
 //!   mrcoreset run --alg kmedian --n 20000 --d 2 --k 8 --eps 0.4
 //!   mrcoreset run --alg kmedian --k 8 --noise 200 --z 200
 //!   mrcoreset run data.csv --alg kmeans --k 10 --eps 0.25
+//!   mrcoreset run --k 8 --trace out.jsonl --json
+//!   mrcoreset report out.jsonl
+//!   mrcoreset bench-diff ../BENCH_baseline/BENCH_pruning.json BENCH_pruning.json
 //!   mrcoreset exp e4 --full
 //!   mrcoreset gen --n 10000 --d 4 --k 8 --out points.csv
 
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use mrcoreset::coordinator::{solve, ClusterConfig, FinalAlgo};
+use mrcoreset::coordinator::{solve_traced, ClusterConfig, FinalAlgo};
 use mrcoreset::coreset::TlAlgo;
 use mrcoreset::data::csv;
 use mrcoreset::data::synth::{GaussianMixtureSpec, NoiseSpec};
@@ -26,29 +36,46 @@ use mrcoreset::eval::{run_experiment, validate_ids, ALL_IDS};
 use mrcoreset::mapreduce::PartitionStrategy;
 use mrcoreset::metric::dense::EuclideanSpace;
 use mrcoreset::metric::Objective;
+use mrcoreset::obs::{self, log, Event, JsonlSink, Recorder};
 use mrcoreset::runtime::XlaEngine;
 use mrcoreset::util::cli::Args;
+use mrcoreset::util::json::Json;
+use mrcoreset::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: mrcoreset <run|exp|gen|info> [flags]
+const USAGE: &str = "usage: mrcoreset <run|exp|gen|report|bench-diff|info> [flags]
   run  [file.csv] --alg kmedian|kmeans --k K --eps E [--z Z] [--n N --d D]
        [--noise N] [--l L] [--m M] [--beta B] [--tl dpp|local-search|gonzalez]
        [--final local-search|pam|robust] [--one-round]
        [--strategy rr|contig|shuffle] [--seed S] [--no-engine]
+       [--trace FILE] [--json]
   exp  <e1..e12|all> [--full]
   gen  --n N --d D --k K --out FILE [--spread S] [--outliers F] [--noise N]
        [--seed S]
+  report      <trace.jsonl>
+  bench-diff  <baseline.json> <current.json> [--tolerance 0.02]
   info
 
-  --z Z      solve the (k, z) objective: write off the Z most expensive
-             points as outliers (outlier-robust pipeline + finisher)
-  --noise N  append N uniform noise points to the synthetic input";
+  global: -v/--verbose for detail, -q/--quiet to suppress progress notes
+
+  --z Z       solve the (k, z) objective: write off the Z most expensive
+              points as outliers (outlier-robust pipeline + finisher)
+  --noise N   append N uniform noise points to the synthetic input
+  --trace F   write per-round/per-reducer telemetry events to F (JSONL)
+  --json      print the run report as deterministic JSON (no wall-clock)";
 
 fn main() {
     let args = Args::from_env();
+    if args.has("quiet") || args.has("q") {
+        log::set_verbosity(log::QUIET);
+    } else if args.has("verbose") || args.has("v") {
+        log::set_verbosity(log::VERBOSE);
+    }
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("exp") => cmd_exp(&args),
         Some("gen") => cmd_gen(&args),
+        Some("report") => cmd_report(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!("{USAGE}");
@@ -76,7 +103,9 @@ fn cmd_run(args: &Args) {
     // data: CSV positional, or synthetic with --n/--d
     let data = if let Some(file) = args.positional.first() {
         if args.has("noise") {
-            eprintln!("note: --noise only applies to synthetic inputs; {file} is used as-is");
+            log::warn(&format!(
+                "--noise only applies to synthetic inputs; {file} is used as-is"
+            ));
         }
         match csv::load_csv(Path::new(file)) {
             Ok(d) => d,
@@ -99,7 +128,7 @@ fn cmd_run(args: &Args) {
         }
     };
     let n = data.n();
-    println!("input: n={} d={} objective={}", n, data.d(), obj);
+    log::info(&format!("input: n={} d={} objective={}", n, data.d(), obj));
 
     let shared = Arc::new(data);
     let space = if args.has("no-engine") {
@@ -107,7 +136,10 @@ fn cmd_run(args: &Args) {
     } else {
         match XlaEngine::load_default() {
             Some(engine) => {
-                println!("engine: XLA/PJRT with {} artifacts", engine.manifest().entries.len());
+                log::info(&format!(
+                    "engine: XLA/PJRT with {} artifacts",
+                    engine.manifest().entries.len()
+                ));
                 EuclideanSpace::with_engine(shared, Arc::new(engine))
             }
             None => EuclideanSpace::new(shared),
@@ -160,23 +192,41 @@ fn cmd_run(args: &Args) {
     if robust_run {
         if cfg.outliers > 0 && args.has("final") && cfg.final_algo != FinalAlgo::RobustLocalSearch
         {
-            eprintln!("note: --z overrides --final (robust local search is used)");
+            log::warn("--z overrides --final (robust local search is used)");
         }
         if cfg.one_round {
-            eprintln!("note: the robust pipeline ignores --one-round (it is 2-round)");
+            log::warn("the robust pipeline ignores --one-round (it is 2-round)");
         }
         if args.has("m") {
-            eprintln!(
-                "note: the robust pipeline sets per-partition centers to k + ceil(z/L)*2; \
-                 --m is ignored"
+            log::warn(
+                "the robust pipeline sets per-partition centers to k + ceil(z/L)*2; \
+                 --m is ignored",
             );
         }
     }
 
+    let recorder: Arc<dyn Recorder> = match args.get("trace") {
+        Some(path) => match JsonlSink::create(Path::new(path)) {
+            Ok(sink) => {
+                log::debug(&format!("trace: writing telemetry to {path}"));
+                Arc::new(sink)
+            }
+            Err(e) => {
+                eprintln!("error: cannot create trace file {path}: {e}");
+                std::process::exit(1);
+            }
+        },
+        None => obs::noop(),
+    };
+
     let pts: Vec<u32> = (0..n as u32).collect();
-    let rep = solve(&space, &pts, &cfg);
-    print!("{}", rep.summary());
-    println!("centers: {:?}", rep.solution.centers);
+    let rep = solve_traced(&space, &pts, &cfg, recorder);
+    if args.has("json") {
+        println!("{}", rep.to_json());
+    } else {
+        print!("{}", rep.summary());
+        println!("centers: {:?}", rep.solution.centers);
+    }
 }
 
 fn cmd_exp(args: &Args) {
@@ -225,6 +275,228 @@ fn cmd_gen(args: &Args) {
     println!("wrote {} points ({} dims) to {out}", data.n(), data.d());
 }
 
+fn cmd_report(args: &Args) {
+    let path = match args.positional.first() {
+        Some(p) => p,
+        None => {
+            eprintln!("usage: mrcoreset report <trace.jsonl>");
+            std::process::exit(2);
+        }
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match Event::parse(line) {
+            Ok(ev) => events.push(ev),
+            Err(e) => {
+                eprintln!("error: {path}:{}: {e}", i + 1);
+                std::process::exit(1);
+            }
+        }
+    }
+    print!("{}", render_trace_report(&events));
+}
+
+/// Render a parsed trace: per-round skew table (from `round_end` spans)
+/// plus a pruning-effectiveness breakdown aggregated over the per-reducer
+/// counter deltas.
+fn render_trace_report(events: &[Event]) -> String {
+    let mut s = String::new();
+    for ev in events {
+        if let Event::RunStart { schema, label } = ev {
+            s.push_str(&format!("trace: schema v{schema}  {label}\n"));
+        }
+    }
+    let mut t = Table::new(vec![
+        "round",
+        "name",
+        "reducers",
+        "dist_evals",
+        "evals_p95",
+        "evals_max",
+        "mem_p50",
+        "mem_p95",
+        "mem_max",
+        "skew",
+    ]);
+    for ev in events {
+        if let Event::RoundEnd {
+            round,
+            name,
+            reducers,
+            dist_evals,
+            mem_max,
+            mem_p50,
+            mem_p95,
+            evals_max,
+            evals_p95,
+            ..
+        } = ev
+        {
+            // straggler factor: the busiest reducer vs. the median one
+            let skew = if *mem_p50 > 0.0 { *mem_max as f64 / *mem_p50 } else { 1.0 };
+            t.row(vec![
+                round.to_string(),
+                name.clone(),
+                reducers.to_string(),
+                dist_evals.to_string(),
+                fnum(*evals_p95),
+                evals_max.to_string(),
+                fnum(*mem_p50),
+                fnum(*mem_p95),
+                mem_max.to_string(),
+                format!("{skew:.2}"),
+            ]);
+        }
+    }
+    if !t.is_empty() {
+        s.push_str(&t.to_markdown());
+    }
+    let mut counters: BTreeMap<String, u64> = BTreeMap::new();
+    for ev in events {
+        if let Event::Reducer { counters: cs, .. } = ev {
+            for (k, v) in cs {
+                *counters.entry(k.clone()).or_insert(0) += v;
+            }
+        }
+    }
+    if !counters.is_empty() {
+        s.push_str("counters (summed over reducers):\n");
+        for (k, v) in &counters {
+            s.push_str(&format!("  {k:28} {v}\n"));
+        }
+        for scope in ["pruned", "cover"] {
+            let charged =
+                counters.get(&format!("{scope}.evals_charged")).copied().unwrap_or(0);
+            let baseline =
+                counters.get(&format!("{scope}.evals_baseline")).copied().unwrap_or(0);
+            if baseline > 0 {
+                let saved = 100.0 * (1.0 - charged as f64 / baseline as f64);
+                s.push_str(&format!(
+                    "pruning[{scope}]: {charged} of {baseline} baseline evals charged \
+                     ({saved:.1}% saved)\n"
+                ));
+            }
+        }
+    }
+    for ev in events {
+        if let Event::RunEnd { rounds, dist_evals, max_local_memory } = ev {
+            s.push_str(&format!(
+                "run: rounds={rounds} dist_evals={dist_evals} max_local_memory={max_local_memory}\n"
+            ));
+        }
+    }
+    s
+}
+
+fn cmd_bench_diff(args: &Args) {
+    let (base_path, cur_path) = match (args.positional.first(), args.positional.get(1)) {
+        (Some(b), Some(c)) => (b, c),
+        _ => {
+            eprintln!("usage: mrcoreset bench-diff <baseline.json> <current.json> [--tolerance T]");
+            std::process::exit(2);
+        }
+    };
+    let tolerance: f64 = args.parse_or("tolerance", 0.02);
+    let load = |p: &str| -> Json {
+        let text = std::fs::read_to_string(p).unwrap_or_else(|e| {
+            eprintln!("error: {p}: {e}");
+            std::process::exit(1);
+        });
+        Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("error: {p}: {e}");
+            std::process::exit(1);
+        })
+    };
+    let base = load(base_path);
+    let cur = load(cur_path);
+    let (text, regressions) = bench_diff(&base, &cur, tolerance);
+    print!("{text}");
+    if regressions > 0 {
+        std::process::exit(1);
+    }
+}
+
+/// Compare the `"metrics"` objects of two bench JSON files. Only raw
+/// deterministic work counts are gated — `*_ratio` keys are derived and
+/// skipped, and timings live under `"benchmarks"` which this never
+/// reads (wall time is not comparable across machines). Every gated
+/// metric is a cost (distance evaluations), so larger = worse; a
+/// relative increase beyond `tolerance`, or a metric that disappeared,
+/// counts as a regression.
+fn bench_diff(base: &Json, cur: &Json, tolerance: f64) -> (String, usize) {
+    let empty: Vec<(String, Json)> = Vec::new();
+    let base_metrics = base.get("metrics").and_then(|m| m.as_obj()).unwrap_or(&empty);
+    let cur_metrics = cur.get("metrics").and_then(|m| m.as_obj()).unwrap_or(&empty);
+    if base_metrics.is_empty() {
+        return (
+            "bench-diff: baseline has no metrics to gate (seed it by copying a fresh \
+             BENCH_pruning.json into BENCH_baseline/)\n"
+                .to_string(),
+            0,
+        );
+    }
+    let mut text = String::new();
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    for (k, bv) in base_metrics {
+        if k.ends_with("_ratio") {
+            continue;
+        }
+        let b = match bv.as_f64() {
+            Some(x) => x,
+            None => continue,
+        };
+        compared += 1;
+        let c = cur_metrics.iter().find(|(ck, _)| ck == k).and_then(|(_, v)| v.as_f64());
+        let c = match c {
+            Some(x) => x,
+            None => {
+                text.push_str(&format!("MISSING  {k:32} baseline {}\n", fnum(b)));
+                regressions += 1;
+                continue;
+            }
+        };
+        let rel = if b != 0.0 {
+            (c - b) / b
+        } else if c == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        };
+        let status = if rel > tolerance {
+            regressions += 1;
+            "REGRESS"
+        } else if rel < -tolerance {
+            "IMPROVE"
+        } else {
+            "ok"
+        };
+        text.push_str(&format!(
+            "{status:8} {k:32} {} -> {}  ({:+.2}%)\n",
+            fnum(b),
+            fnum(c),
+            rel * 100.0
+        ));
+    }
+    text.push_str(&format!(
+        "bench-diff: {compared} metric(s) compared, {regressions} regression(s), \
+         tolerance {:.1}%\n",
+        tolerance * 100.0
+    ));
+    (text, regressions)
+}
+
 fn cmd_info() {
     println!(
         "mrcoreset {} — 3-round MapReduce k-median/k-means (Mazzetto et al. 2019)",
@@ -243,4 +515,100 @@ fn cmd_info() {
         None => println!("engine: unavailable (run `make artifacts`)"),
     }
     println!("threads: {}", mrcoreset::util::pool::default_threads());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_trace_report_covers_rounds_counters_and_pruning() {
+        let events = vec![
+            Event::RunStart { schema: 1, label: "median k=3 n=500 eps=0.5 seed=1".to_string() },
+            Event::RoundStart { round: 0, name: "coreset-r1-local".to_string(), reducers: 2 },
+            Event::Reducer {
+                round: 0,
+                reducer: 0,
+                name: "coreset-r1-local".to_string(),
+                in_items: 250,
+                out_items: 20,
+                dist_evals: 900,
+                mem_peak: 260,
+                wall_us: 0,
+                counters: vec![
+                    ("cover.evals_baseline".to_string(), 1000),
+                    ("cover.evals_charged".to_string(), 600),
+                ],
+            },
+            Event::Reducer {
+                round: 0,
+                reducer: 1,
+                name: "coreset-r1-local".to_string(),
+                in_items: 250,
+                out_items: 20,
+                dist_evals: 800,
+                mem_peak: 250,
+                wall_us: 0,
+                counters: vec![("cover.evals_charged".to_string(), 200)],
+            },
+            Event::RoundEnd {
+                round: 0,
+                name: "coreset-r1-local".to_string(),
+                reducers: 2,
+                dist_evals: 1700,
+                mem_max: 260,
+                mem_p50: 255.0,
+                mem_p95: 259.5,
+                evals_max: 900,
+                evals_p50: 850.0,
+                evals_p95: 895.0,
+                violations: 0,
+                wall_us: 0,
+            },
+            Event::RunEnd { rounds: 1, dist_evals: 1700, max_local_memory: 260 },
+        ];
+        let s = render_trace_report(&events);
+        assert!(s.contains("trace: schema v1"), "{s}");
+        assert!(s.contains("coreset-r1-local"), "{s}");
+        assert!(s.contains("cover.evals_charged"), "{s}");
+        // 600 + 200 charged of 1000 baseline → 20% saved
+        assert!(s.contains("pruning[cover]: 800 of 1000"), "{s}");
+        assert!(s.contains("20.0% saved"), "{s}");
+        assert!(s.contains("run: rounds=1 dist_evals=1700 max_local_memory=260"), "{s}");
+    }
+
+    #[test]
+    fn bench_diff_flags_regressions_and_skips_ratios() {
+        let base = Json::parse(
+            "{\"benchmarks\":[],\"metrics\":{\"cover_evals\":1000,\
+             \"assign_evals\":500,\"gone_evals\":7,\"saved_ratio\":3.5}}",
+        )
+        .unwrap();
+        let cur = Json::parse(
+            "{\"benchmarks\":[],\"metrics\":{\"cover_evals\":1050,\
+             \"assign_evals\":500,\"saved_ratio\":1.0}}",
+        )
+        .unwrap();
+        let (text, regressions) = bench_diff(&base, &cur, 0.02);
+        // cover_evals +5% regresses, gone_evals vanished, ratio ignored
+        assert_eq!(regressions, 2, "{text}");
+        assert!(text.contains("REGRESS  cover_evals"), "{text}");
+        assert!(text.contains("MISSING  gone_evals"), "{text}");
+        assert!(text.contains("ok       assign_evals"), "{text}");
+        assert!(!text.contains("saved_ratio"), "{text}");
+        assert!(text.contains("3 metric(s) compared, 2 regression(s)"), "{text}");
+
+        let (text, regressions) = bench_diff(&base, &base, 0.02);
+        assert_eq!(regressions, 0, "identical files must pass: {text}");
+    }
+
+    #[test]
+    fn bench_diff_within_tolerance_passes() {
+        let base = Json::parse("{\"metrics\":{\"evals\":10000}}").unwrap();
+        let cur = Json::parse("{\"metrics\":{\"evals\":10100}}").unwrap();
+        let (_, regressions) = bench_diff(&base, &cur, 0.02);
+        assert_eq!(regressions, 0, "+1% is inside the 2% tolerance");
+        let (_, regressions) = bench_diff(&base, &cur, 0.005);
+        assert_eq!(regressions, 1, "+1% is outside a 0.5% tolerance");
+    }
 }

@@ -1,0 +1,122 @@
+//! Item counts for reducer inputs and outputs.
+//!
+//! The simulator reports `in_items` / `out_items` on every reducer span
+//! (see `obs::event`), so traces can show shuffle skew without the
+//! drivers computing anything. The convention follows the codebase's
+//! types: a `u32`/`u64` is a point id or weight (1 item), a `usize` or
+//! `f64` is a label or scalar statistic (0 items), containers count
+//! their elements, tuples sum.
+
+use crate::algorithms::Solution;
+use crate::coreset::local::LocalCoresetOut;
+use crate::metric::Assignment;
+use crate::points::WeightedSet;
+
+/// Number of logical items a reducer input/output carries.
+pub trait Cardinality {
+    fn cardinality(&self) -> u64;
+}
+
+impl Cardinality for () {
+    fn cardinality(&self) -> u64 {
+        0
+    }
+}
+
+/// Labels and indices (partition numbers, counts) are not shuffled data.
+impl Cardinality for usize {
+    fn cardinality(&self) -> u64 {
+        0
+    }
+}
+
+/// Scalar statistics (costs, radii) are not shuffled data.
+impl Cardinality for f64 {
+    fn cardinality(&self) -> u64 {
+        0
+    }
+}
+
+/// A point id.
+impl Cardinality for u32 {
+    fn cardinality(&self) -> u64 {
+        1
+    }
+}
+
+/// A weight or count.
+impl Cardinality for u64 {
+    fn cardinality(&self) -> u64 {
+        1
+    }
+}
+
+impl<T> Cardinality for Vec<T> {
+    fn cardinality(&self) -> u64 {
+        self.len() as u64
+    }
+}
+
+impl<A: Cardinality, B: Cardinality> Cardinality for (A, B) {
+    fn cardinality(&self) -> u64 {
+        self.0.cardinality() + self.1.cardinality()
+    }
+}
+
+impl<A: Cardinality, B: Cardinality, C: Cardinality> Cardinality for (A, B, C) {
+    fn cardinality(&self) -> u64 {
+        self.0.cardinality() + self.1.cardinality() + self.2.cardinality()
+    }
+}
+
+impl Cardinality for WeightedSet {
+    fn cardinality(&self) -> u64 {
+        self.len() as u64
+    }
+}
+
+impl Cardinality for Solution {
+    fn cardinality(&self) -> u64 {
+        self.centers.len() as u64
+    }
+}
+
+/// Round-1 local output ships T_ℓ plus the local cover C_{w,ℓ}.
+impl Cardinality for LocalCoresetOut {
+    fn cardinality(&self) -> u64 {
+        (self.t.len() + self.cover.set.len()) as u64
+    }
+}
+
+impl Cardinality for Assignment {
+    fn cardinality(&self) -> u64 {
+        self.dist.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn containers_count_elements_scalars_follow_convention() {
+        assert_eq!(().cardinality(), 0);
+        assert_eq!(7usize.cardinality(), 0);
+        assert_eq!(1.5f64.cardinality(), 0);
+        assert_eq!(7u32.cardinality(), 1);
+        assert_eq!(7u64.cardinality(), 1);
+        assert_eq!(vec![1u32, 2, 3].cardinality(), 3);
+        assert_eq!((2usize, vec![1u32, 2]).cardinality(), 2);
+        assert_eq!((vec![1u32], vec![1.0f64, 2.0], vec![9u32, 9]).cardinality(), 5);
+    }
+
+    #[test]
+    fn domain_types_count_their_payload() {
+        let ws = WeightedSet::new(vec![1, 2, 3], vec![1, 1, 2]);
+        assert_eq!(ws.cardinality(), 3);
+        let sol = Solution { centers: vec![4, 5], cost: 0.5 };
+        assert_eq!(sol.cardinality(), 2);
+        let a = Assignment { dist: vec![0.0, 1.0], idx: vec![0, 0] };
+        assert_eq!(a.cardinality(), 2);
+    }
+}

@@ -19,17 +19,21 @@
 //! algorithm is simply the number of `round` calls it makes (E7 asserts
 //! the paper's 3 rounds).
 
+pub mod cardinality;
 pub mod memory;
 pub mod partition;
 
+pub use cardinality::Cardinality;
 pub use memory::MemoryMeter;
 pub use partition::{default_l, partition, PartitionStrategy};
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::metric::counter;
+use crate::obs::{self, counters as obs_counters, Event, Recorder};
 use crate::util::pool::{default_threads, scoped_map};
+use crate::util::stats::Distribution;
 
 /// Statistics for one executed round.
 #[derive(Clone, Debug)]
@@ -40,12 +44,40 @@ pub struct RoundStats {
     pub max_local_peak: usize,
     /// sum over reducers of peak local memory (points) — the round's M_A
     pub aggregate_peak: usize,
+    /// peak local memory (points) of each reducer (input order) — the
+    /// per-machine distribution behind `max_local_peak`
+    pub reducer_mem_peaks: Vec<usize>,
     /// distance evaluations charged by each reducer (input order)
     pub reducer_dist_evals: Vec<u64>,
     /// Σ over reducers — the round's distance-evaluation work
     pub dist_evals: u64,
+    /// Σ over reducers of input/output item counts (`Cardinality`)
+    pub in_items: u64,
+    pub out_items: u64,
+    /// named `obs::counters` charged by this round's reducers, summed
+    /// and name-sorted (e.g. `pruned.give_up`, `cover.iterations`)
+    pub counters: Vec<(String, u64)>,
     pub wall: std::time::Duration,
     pub budget_violations: usize,
+}
+
+impl RoundStats {
+    /// Per-reducer peak-memory distribution (p50/p95/max, in points).
+    pub fn mem_distribution(&self) -> Distribution {
+        let v: Vec<f64> = self.reducer_mem_peaks.iter().map(|&m| m as f64).collect();
+        Distribution::of(&v)
+    }
+
+    /// Per-reducer distance-evaluation distribution.
+    pub fn evals_distribution(&self) -> Distribution {
+        let v: Vec<f64> = self.reducer_dist_evals.iter().map(|&e| e as f64).collect();
+        Distribution::of(&v)
+    }
+
+    /// Value of one named counter in this round (0 if never charged).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap_or(0)
+    }
 }
 
 /// Whole-job statistics.
@@ -85,6 +117,13 @@ impl JobStats {
     pub fn dist_evals_for(&self, name: &str) -> u64 {
         self.rounds.iter().filter(|r| r.name == name).map(|r| r.dist_evals).sum()
     }
+
+    /// Total of one named `obs` counter across all rounds (0 if never
+    /// charged) — e.g. `counter_total("pruned.give_up")` tells whether
+    /// the adaptive bounds ledger ever bailed during the job.
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.rounds.iter().map(|r| r.counter(name)).sum()
+    }
 }
 
 /// The simulator: runs rounds, accumulates stats.
@@ -94,6 +133,10 @@ pub struct Simulator {
     /// exceeding it are *recorded* (not killed), so experiments can
     /// assert the theoretical budget holds.
     local_budget: Option<usize>,
+    /// Telemetry sink; `obs::noop()` (disabled) by default. All events
+    /// are emitted by the coordinator thread in (round, reducer) order,
+    /// so traces are bit-identical across `threads` settings.
+    recorder: Arc<dyn Recorder>,
     stats: Mutex<JobStats>,
 }
 
@@ -102,6 +145,7 @@ impl Simulator {
         Simulator {
             threads: default_threads(),
             local_budget: None,
+            recorder: obs::noop(),
             stats: Mutex::new(JobStats::default()),
         }
     }
@@ -116,26 +160,46 @@ impl Simulator {
         self
     }
 
+    pub fn with_recorder(mut self, recorder: Arc<dyn Recorder>) -> Simulator {
+        self.recorder = recorder;
+        self
+    }
+
     /// Execute one parallel round: `f(reducer_index, input, meter)` runs
     /// for each input group on the thread pool. Returns reducer outputs
     /// in input order.
     pub fn round<I, O, F>(&self, name: &str, inputs: Vec<I>, f: F) -> Vec<O>
     where
-        I: Send + Sync,
-        O: Send,
+        I: Send + Sync + Cardinality,
+        O: Send + Cardinality,
         F: Fn(usize, &I, &mut MemoryMeter) -> O + Sync,
     {
         let t0 = Instant::now();
         let reducers = inputs.len();
+        // round index within the current job (take_stats resets it)
+        let round_idx = self.stats.lock().unwrap().rounds.len() as u32;
+        let traced = self.recorder.enabled();
+        if traced {
+            self.recorder.record(&Event::RoundStart {
+                round: round_idx,
+                name: name.to_string(),
+                reducers: reducers as u32,
+            });
+        }
+        let in_cards: Vec<u64> = inputs.iter().map(Cardinality::cardinality).collect();
         let results = scoped_map(reducers, self.threads, |i| {
             let mut meter = match self.local_budget {
                 Some(b) => MemoryMeter::with_budget(b),
                 None => MemoryMeter::new(),
             };
             // the reducer runs entirely on this thread, so the tally
-            // delta is exactly its distance-evaluation work
+            // deltas (dist_evals and named obs counters) are exactly its
+            // own work
             let evals0 = counter::thread_count();
+            let obs0 = obs_counters::snapshot();
+            let rt0 = Instant::now();
             let out = f(i, &inputs[i], &mut meter);
+            let wall_us = rt0.elapsed().as_micros() as u64;
             // every charge must be released by the time the reducer
             // returns — a leak here inflates cross-round peaks and turns
             // the M_L scaling stats into nonsense
@@ -145,20 +209,43 @@ impl Simulator {
                 "reducer {i} of round '{name}' returned with unreleased memory charges"
             );
             let evals = counter::thread_count() - evals0;
-            (out, meter, evals)
+            let cnt = obs_counters::delta_since(&obs0);
+            (out, meter, evals, cnt, wall_us)
         });
         let mut outs = Vec::with_capacity(reducers);
         let mut max_peak = 0usize;
         let mut agg = 0usize;
         let mut violations = 0usize;
+        let mut reducer_mem_peaks = Vec::with_capacity(reducers);
         let mut reducer_dist_evals = Vec::with_capacity(reducers);
         let mut dist_evals = 0u64;
-        for (o, meter, evals) in results {
+        let mut out_items = 0u64;
+        let mut per_counters = Vec::with_capacity(reducers);
+        // collection (and hence event emission) is in input order on
+        // this thread — never in worker arrival order
+        for (i, (o, meter, evals, cnt, wall_us)) in results.into_iter().enumerate() {
+            let out_card = o.cardinality();
             max_peak = max_peak.max(meter.peak());
             agg += meter.peak();
             violations += usize::from(meter.violated());
+            reducer_mem_peaks.push(meter.peak());
             reducer_dist_evals.push(evals);
             dist_evals += evals;
+            out_items += out_card;
+            if traced {
+                self.recorder.record(&Event::Reducer {
+                    round: round_idx,
+                    reducer: i as u32,
+                    name: name.to_string(),
+                    in_items: in_cards[i],
+                    out_items: out_card,
+                    dist_evals: evals,
+                    mem_peak: meter.peak() as u64,
+                    wall_us,
+                    counters: cnt.clone(),
+                });
+            }
+            per_counters.push(cnt);
             outs.push(o);
         }
         let stats = RoundStats {
@@ -166,11 +253,33 @@ impl Simulator {
             reducers,
             max_local_peak: max_peak,
             aggregate_peak: agg,
+            reducer_mem_peaks,
             reducer_dist_evals,
             dist_evals,
+            in_items: in_cards.iter().sum(),
+            out_items,
+            counters: obs_counters::merge(&per_counters),
             wall: t0.elapsed(),
             budget_violations: violations,
         };
+        if traced {
+            let md = stats.mem_distribution();
+            let ed = stats.evals_distribution();
+            self.recorder.record(&Event::RoundEnd {
+                round: round_idx,
+                name: name.to_string(),
+                reducers: reducers as u32,
+                dist_evals,
+                mem_max: max_peak as u64,
+                mem_p50: md.p50,
+                mem_p95: md.p95,
+                evals_max: stats.reducer_dist_evals.iter().copied().max().unwrap_or(0),
+                evals_p50: ed.p50,
+                evals_p95: ed.p95,
+                violations: violations as u64,
+                wall_us: t0.elapsed().as_micros() as u64,
+            });
+        }
         self.stats.lock().unwrap().rounds.push(stats);
         outs
     }
@@ -207,6 +316,65 @@ mod tests {
         assert_eq!(stats.rounds[0].reducers, 3);
         assert_eq!(stats.rounds[0].max_local_peak, 3);
         assert_eq!(stats.rounds[0].aggregate_peak, 6);
+        assert_eq!(stats.rounds[0].reducer_mem_peaks, vec![3, 2, 1]);
+        assert_eq!(stats.rounds[0].in_items, 6, "three parts of 3+2+1 input items");
+        assert_eq!(stats.rounds[0].out_items, 3, "one scalar sum per reducer");
+    }
+
+    /// Tracing: events arrive in (round, reducer) order on the
+    /// coordinator thread regardless of worker thread count, and carry
+    /// the same numbers as `RoundStats`.
+    #[test]
+    fn traced_round_emits_ordered_events() {
+        use crate::obs::MemSink;
+
+        let sink = Arc::new(MemSink::new());
+        let rec: Arc<dyn crate::obs::Recorder> = sink.clone();
+        let sim = Simulator::new().with_threads(4).with_recorder(rec);
+        let parts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![4, 5], vec![6]];
+        let _ = sim.round("sum", parts, |_, part, meter| {
+            meter.charge(part.len());
+            let s: u32 = part.iter().sum();
+            meter.release(part.len());
+            s
+        });
+        let stats = sim.take_stats();
+        let evs = sink.take();
+        assert_eq!(evs.len(), 5, "round_start + 3 reducers + round_end");
+        assert!(matches!(&evs[0], Event::RoundStart { round: 0, reducers: 3, .. }));
+        for (j, ev) in evs[1..4].iter().enumerate() {
+            match ev {
+                Event::Reducer { round, reducer, in_items, out_items, mem_peak, .. } => {
+                    assert_eq!(*round, 0);
+                    assert_eq!(*reducer, j as u32, "input order, not arrival order");
+                    assert_eq!(*in_items, [3, 2, 1][j]);
+                    assert_eq!(*out_items, 1);
+                    assert_eq!(*mem_peak, stats.rounds[0].reducer_mem_peaks[j] as u64);
+                }
+                other => panic!("expected reducer span, got {other:?}"),
+            }
+        }
+        match &evs[4] {
+            Event::RoundEnd { round: 0, reducers: 3, mem_max, .. } => {
+                assert_eq!(*mem_max, stats.rounds[0].max_local_peak as u64);
+            }
+            other => panic!("expected round_end, got {other:?}"),
+        }
+    }
+
+    /// The default recorder is disabled and rounds skip event assembly.
+    #[test]
+    fn untraced_round_records_nothing_but_full_stats() {
+        let sim = Simulator::new();
+        let _ = sim.round("r", vec![vec![1u32, 2]], |_, part, m| {
+            m.charge(part.len());
+            m.release(part.len());
+            part.len()
+        });
+        let stats = sim.take_stats();
+        assert_eq!(stats.rounds[0].in_items, 2);
+        assert_eq!(stats.rounds[0].out_items, 0, "usize outputs are labels");
+        assert!(stats.rounds[0].counters.is_empty());
     }
 
     #[test]

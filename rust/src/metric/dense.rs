@@ -179,7 +179,9 @@ impl MetricSpace for EuclideanSpace {
                     }
                     Err(e) => {
                         // Fall back to the scalar path; the engine logs once.
-                        eprintln!("warn: engine assign failed ({e}); using scalar path");
+                        crate::obs::log::warn(&format!(
+                            "engine assign failed ({e}); using scalar path"
+                        ));
                     }
                 }
             }

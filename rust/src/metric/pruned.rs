@@ -25,6 +25,21 @@
 //! path for engine-attached spaces.
 
 use super::{Assignment, MetricSpace};
+use crate::obs::counters as obs;
+
+/// Snapshot of a tracker's adaptive give-up ledger. The same numbers are
+/// charged incrementally to `obs::counters` under `pruned.*`, so traced
+/// runs see them per reducer without holding the tracker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PruneLedger {
+    /// Evaluations the pruned path actually computed (rows + survivors).
+    pub evals_charged: u64,
+    /// Evaluations the reference fold would have computed.
+    pub evals_baseline: u64,
+    /// False once the give-up latch has fired (bounds cost more than
+    /// they saved; later pushes fold everything).
+    pub bounds_paying: bool,
+}
 
 /// Relative slack applied to every lower bound before it may veto a
 /// distance evaluation (same contract as `coreset/cover.rs`): distances
@@ -151,6 +166,15 @@ impl<'a> NearestTracker<'a> {
         Assignment { dist: self.dist.clone(), idx: self.idx.clone() }
     }
 
+    /// Current give-up ledger (see [`PruneLedger`]).
+    pub fn ledger(&self) -> PruneLedger {
+        PruneLedger {
+            evals_charged: self.pruned_evals,
+            evals_baseline: self.baseline_evals,
+            bounds_paying: self.bounds_paying,
+        }
+    }
+
     /// Fold one new center into the tracked state. Computes the cached
     /// center-to-center row itself when bounds are active.
     pub fn push(&mut self, c: u32) {
@@ -158,6 +182,7 @@ impl<'a> NearestTracker<'a> {
             let mut row = vec![0.0; self.centers.len()];
             self.space.dist_batch(&self.centers, c, &mut row);
             self.pruned_evals += row.len() as u64;
+            obs::add("pruned.evals_charged", row.len() as u64);
             self.push_bounded(c, &row);
         } else {
             self.push_full(c);
@@ -202,6 +227,8 @@ impl<'a> NearestTracker<'a> {
         self.centers.push(c);
         self.pruned_evals += self.pts.len() as u64;
         self.baseline_evals += self.pts.len() as u64;
+        obs::add("pruned.evals_charged", self.pts.len() as u64);
+        obs::add("pruned.evals_baseline", self.pts.len() as u64);
         if self.use_bounds && self.bounds_paying {
             // seed / refresh buckets so a later push can prune
             self.rebuild_buckets();
@@ -226,6 +253,7 @@ impl<'a> NearestTracker<'a> {
         let jn = self.centers.len() as u32;
         let n = self.pts.len();
         self.baseline_evals += n as u64;
+        obs::add("pruned.evals_baseline", n as u64);
         let mut moved: Vec<u32> = Vec::new();
         let mut moved_hi = 0.0f64;
         let mut computed_total = 0usize;
@@ -239,6 +267,7 @@ impl<'a> NearestTracker<'a> {
             // bound `dcb - a - LB_MARGIN*(dcb + a)` already exceeds its
             // cutoff `a` whenever `dcb - LB_MARGIN*(dcb + hi) > 2*hi`
             if dcb - LB_MARGIN * (dcb + hi) > 2.0 * hi {
+                obs::incr("pruned.veto_bucket");
                 continue;
             }
             // assemble the bucket's survivors for the pruned batch
@@ -293,11 +322,13 @@ impl<'a> NearestTracker<'a> {
         // reference fold would (rows + surviving evals), latch it off —
         // the state stays exact, later pushes just fold everything.
         self.pruned_evals += computed_total as u64;
+        obs::add("pruned.evals_charged", computed_total as u64);
         let slack = self.pts.len() as u64 + 64;
         if self.pruned_evals > self.baseline_evals + slack {
             self.bounds_paying = false;
             self.buckets.clear();
             self.bucket_hi.clear();
+            obs::incr("pruned.give_up");
         }
     }
 }
@@ -433,6 +464,64 @@ mod tests {
         for (a, b) in t.dist().iter().zip(&reference.dist) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    /// Adversarial (bounds-hostile) input: all points duplicated at one
+    /// location. Every lower bound is 0 and never strictly exceeds its
+    /// 0 cutoff, so nothing is ever vetoed — the center rows are pure
+    /// overhead. Once that overhead exceeds the slack, the give-up latch
+    /// must fire (once), the `pruned.give_up` counter must record it,
+    /// and the state must remain bit-identical to the reference fold.
+    #[test]
+    fn give_up_latch_fires_on_duplicate_points() {
+        use crate::points::VectorData;
+
+        let rows: Vec<Vec<f32>> = vec![vec![0.0, 0.0]; 64];
+        let space = EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows)));
+        let pts: Vec<u32> = (0..64).collect();
+        let centers: Vec<u32> = (0..40).collect();
+        let before = obs::snapshot();
+        let mut t = NearestTracker::new(&space, &pts, true);
+        for &c in &centers {
+            t.push(c);
+        }
+        let led = t.ledger();
+        assert!(!led.bounds_paying, "latch must have fired: {led:?}");
+        assert!(
+            led.evals_charged > led.evals_baseline,
+            "rows cost extra on duplicates: {led:?}"
+        );
+        let delta = obs::delta_since(&before);
+        let give_ups = delta.iter().find(|(k, _)| k == "pruned.give_up");
+        assert_eq!(give_ups, Some(&("pruned.give_up".to_string(), 1)), "delta: {delta:?}");
+        let reference = assign_reference(&space, &pts, &centers);
+        assert_eq!(t.idx(), &reference.idx[..]);
+        for (a, b) in t.dist().iter().zip(&reference.dist) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// On a well-spread input the ledger shows bounds paying for
+    /// themselves and no give-up is recorded.
+    #[test]
+    fn ledger_reports_savings_on_spread_input() {
+        let data = mixture(600, 21);
+        let space = EuclideanSpace::new(data);
+        let pts: Vec<u32> = (0..600).collect();
+        let before = obs::snapshot();
+        let mut t = NearestTracker::new(&space, &pts, true);
+        for &c in &[3u32, 77, 150, 301, 420, 599] {
+            t.push(c);
+        }
+        let led = t.ledger();
+        assert!(led.bounds_paying);
+        assert!(led.evals_charged <= led.evals_baseline, "{led:?}");
+        let delta = obs::delta_since(&before);
+        assert!(delta.iter().all(|(k, _)| k != "pruned.give_up"), "delta: {delta:?}");
+        assert!(
+            delta.iter().any(|(k, _)| k == "pruned.evals_charged"),
+            "charges must be mirrored to obs counters: {delta:?}"
+        );
     }
 
     #[test]

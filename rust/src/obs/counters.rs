@@ -1,0 +1,114 @@
+//! Thread-local named counters for instrumented inner loops.
+//!
+//! The pruning engine (`metric::pruned`, `coreset::cover`) and the local
+//! search loop charge counters here by static name (`pruned.evals_charged`,
+//! `cover.give_up`, `local_search.swaps`, ...). Like
+//! `metric::counter`, the storage is thread-local so worker reducers never
+//! contend; the simulator snapshots before/after each reducer closure and
+//! attaches the delta to that reducer's span. Deltas are name-sorted and
+//! zero entries are dropped, so the attached vectors are deterministic
+//! regardless of which loops ran in what order.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+thread_local! {
+    static COUNTERS: RefCell<BTreeMap<&'static str, u64>> = const { RefCell::new(BTreeMap::new()) };
+}
+
+/// Charge `n` to the counter `name` on this thread.
+pub fn add(name: &'static str, n: u64) {
+    if n == 0 {
+        return;
+    }
+    COUNTERS.with(|c| {
+        *c.borrow_mut().entry(name).or_insert(0) += n;
+    });
+}
+
+/// Charge 1 to the counter `name` on this thread.
+pub fn incr(name: &'static str) {
+    add(name, 1);
+}
+
+/// Snapshot of this thread's cumulative counters, for later delta-taking.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    vals: BTreeMap<&'static str, u64>,
+}
+
+/// Capture this thread's current counter totals.
+pub fn snapshot() -> Snapshot {
+    Snapshot { vals: COUNTERS.with(|c| c.borrow().clone()) }
+}
+
+/// Counters charged on this thread since `since`, name-sorted, zero
+/// deltas dropped. Counters only grow, so the subtraction is safe.
+pub fn delta_since(since: &Snapshot) -> Vec<(String, u64)> {
+    COUNTERS.with(|c| {
+        c.borrow()
+            .iter()
+            .filter_map(|(name, now)| {
+                let before = since.vals.get(name).copied().unwrap_or(0);
+                let d = now.saturating_sub(before);
+                (d > 0).then(|| (name.to_string(), d))
+            })
+            .collect()
+    })
+}
+
+/// Merge per-reducer deltas into one name-sorted total (for round-level
+/// aggregation in `RoundStats`).
+pub fn merge(parts: &[Vec<(String, u64)>]) -> Vec<(String, u64)> {
+    let mut total: BTreeMap<&str, u64> = BTreeMap::new();
+    for part in parts {
+        for (name, n) in part {
+            *total.entry(name.as_str()).or_insert(0) += n;
+        }
+    }
+    total.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+/// Reset this thread's counters to zero (tests only — production code
+/// always works in deltas).
+pub fn reset() {
+    COUNTERS.with(|c| c.borrow_mut().clear());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_is_sorted_and_drops_zeros() {
+        reset();
+        let before = snapshot();
+        add("z.late", 3);
+        add("a.early", 2);
+        add("m.zero", 0);
+        incr("a.early");
+        let d = delta_since(&before);
+        assert_eq!(d, vec![("a.early".to_string(), 3), ("z.late".to_string(), 3)]);
+    }
+
+    #[test]
+    fn delta_ignores_pre_snapshot_charges() {
+        reset();
+        add("x", 10);
+        let before = snapshot();
+        add("x", 5);
+        assert_eq!(delta_since(&before), vec![("x".to_string(), 5)]);
+    }
+
+    #[test]
+    fn merge_sums_across_parts() {
+        let parts = vec![
+            vec![("a".to_string(), 1), ("b".to_string(), 2)],
+            vec![("b".to_string(), 3), ("c".to_string(), 4)],
+        ];
+        assert_eq!(
+            merge(&parts),
+            vec![("a".to_string(), 1), ("b".to_string(), 5), ("c".to_string(), 4)]
+        );
+    }
+}

@@ -1,0 +1,346 @@
+//! Trace event schema (version [`TRACE_SCHEMA_VERSION`]).
+//!
+//! Every event serializes to one flat JSON object with an `"ev"`
+//! discriminator; a trace file is JSONL (one event per line). Schema:
+//!
+//! | `ev`          | fields                                                                 |
+//! |---------------|------------------------------------------------------------------------|
+//! | `run_start`   | `schema`, `label`                                                      |
+//! | `round_start` | `round`, `name`, `reducers`                                            |
+//! | `reducer`     | `round`, `reducer`, `name`, `in_items`, `out_items`, `dist_evals`, `mem_peak`, `wall_us`, `counters{}` |
+//! | `round_end`   | `round`, `name`, `reducers`, `dist_evals`, `mem_max`, `mem_p50`, `mem_p95`, `evals_max`, `evals_p50`, `evals_p95`, `violations`, `wall_us` |
+//! | `run_end`     | `rounds`, `dist_evals`, `max_local_memory`                             |
+//!
+//! Determinism contract: every field except `wall_us` is a deterministic
+//! function of the run's inputs (seeded RNGs, fixed partitioning), and
+//! events are emitted in (round, reducer) order by the coordinator
+//! thread — so [`Event::stable_json`] (which omits `wall_us`) is
+//! bit-identical across simulator thread counts. `counters` keys are
+//! name-sorted on emission.
+
+use crate::util::json::Json;
+
+/// Version stamp written by `run_start`; bump on breaking field changes.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// One telemetry event. See the module docs for the field schema.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    RunStart {
+        schema: u64,
+        label: String,
+    },
+    RoundStart {
+        round: u32,
+        name: String,
+        reducers: u32,
+    },
+    /// Per-reducer span: the unit of skew analysis.
+    Reducer {
+        round: u32,
+        reducer: u32,
+        name: String,
+        in_items: u64,
+        out_items: u64,
+        dist_evals: u64,
+        mem_peak: u64,
+        wall_us: u64,
+        /// Name-sorted deltas of `obs::counters` charged by this reducer.
+        counters: Vec<(String, u64)>,
+    },
+    RoundEnd {
+        round: u32,
+        name: String,
+        reducers: u32,
+        dist_evals: u64,
+        mem_max: u64,
+        mem_p50: f64,
+        mem_p95: f64,
+        evals_max: u64,
+        evals_p50: f64,
+        evals_p95: f64,
+        violations: u64,
+        wall_us: u64,
+    },
+    RunEnd {
+        rounds: u64,
+        dist_evals: u64,
+        max_local_memory: u64,
+    },
+}
+
+impl Event {
+    /// The `"ev"` discriminator string.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RunStart { .. } => "run_start",
+            Event::RoundStart { .. } => "round_start",
+            Event::Reducer { .. } => "reducer",
+            Event::RoundEnd { .. } => "round_end",
+            Event::RunEnd { .. } => "run_end",
+        }
+    }
+
+    /// Full single-line JSON, wall-clock included.
+    pub fn to_json(&self) -> String {
+        self.build(true).to_string()
+    }
+
+    /// Deterministic single-line JSON: identical to [`Event::to_json`]
+    /// minus the `wall_us` fields. This is the comparable form the
+    /// determinism suite diffs across thread counts.
+    pub fn stable_json(&self) -> String {
+        self.build(false).to_string()
+    }
+
+    fn build(&self, with_wall: bool) -> Json {
+        let mut o = Json::obj();
+        o.set("ev", Json::str(self.kind()));
+        match self {
+            Event::RunStart { schema, label } => {
+                o.set("schema", Json::num(*schema as f64));
+                o.set("label", Json::str(label.clone()));
+            }
+            Event::RoundStart { round, name, reducers } => {
+                o.set("round", Json::num(*round as f64));
+                o.set("name", Json::str(name.clone()));
+                o.set("reducers", Json::num(*reducers as f64));
+            }
+            Event::Reducer {
+                round,
+                reducer,
+                name,
+                in_items,
+                out_items,
+                dist_evals,
+                mem_peak,
+                wall_us,
+                counters,
+            } => {
+                o.set("round", Json::num(*round as f64));
+                o.set("reducer", Json::num(*reducer as f64));
+                o.set("name", Json::str(name.clone()));
+                o.set("in_items", Json::num(*in_items as f64));
+                o.set("out_items", Json::num(*out_items as f64));
+                o.set("dist_evals", Json::num(*dist_evals as f64));
+                o.set("mem_peak", Json::num(*mem_peak as f64));
+                if with_wall {
+                    o.set("wall_us", Json::num(*wall_us as f64));
+                }
+                let mut c = Json::obj();
+                for (k, v) in counters {
+                    c.set(k, Json::num(*v as f64));
+                }
+                o.set("counters", c);
+            }
+            Event::RoundEnd {
+                round,
+                name,
+                reducers,
+                dist_evals,
+                mem_max,
+                mem_p50,
+                mem_p95,
+                evals_max,
+                evals_p50,
+                evals_p95,
+                violations,
+                wall_us,
+            } => {
+                o.set("round", Json::num(*round as f64));
+                o.set("name", Json::str(name.clone()));
+                o.set("reducers", Json::num(*reducers as f64));
+                o.set("dist_evals", Json::num(*dist_evals as f64));
+                o.set("mem_max", Json::num(*mem_max as f64));
+                o.set("mem_p50", Json::num(*mem_p50));
+                o.set("mem_p95", Json::num(*mem_p95));
+                o.set("evals_max", Json::num(*evals_max as f64));
+                o.set("evals_p50", Json::num(*evals_p50));
+                o.set("evals_p95", Json::num(*evals_p95));
+                o.set("violations", Json::num(*violations as f64));
+                if with_wall {
+                    o.set("wall_us", Json::num(*wall_us as f64));
+                }
+            }
+            Event::RunEnd { rounds, dist_evals, max_local_memory } => {
+                o.set("rounds", Json::num(*rounds as f64));
+                o.set("dist_evals", Json::num(*dist_evals as f64));
+                o.set("max_local_memory", Json::num(*max_local_memory as f64));
+            }
+        }
+        o
+    }
+
+    /// Parse one JSONL line back into an event (`wall_us` defaults to 0
+    /// when absent, so stable lines parse too). Errors name the missing
+    /// or ill-typed field — this is the schema validator the round-trip
+    /// test drives.
+    pub fn parse(line: &str) -> Result<Event, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        let kind = field_str(&v, "ev")?;
+        let ev = match kind.as_str() {
+            "run_start" => Event::RunStart {
+                schema: field_u64(&v, "schema")?,
+                label: field_str(&v, "label")?,
+            },
+            "round_start" => Event::RoundStart {
+                round: field_u64(&v, "round")? as u32,
+                name: field_str(&v, "name")?,
+                reducers: field_u64(&v, "reducers")? as u32,
+            },
+            "reducer" => {
+                let counters = match v.get("counters") {
+                    Some(c) => c
+                        .as_obj()
+                        .ok_or("field `counters` must be an object")?
+                        .iter()
+                        .map(|(k, val)| {
+                            val.as_u64()
+                                .map(|n| (k.clone(), n))
+                                .ok_or_else(|| format!("counter `{k}` must be a u64"))
+                        })
+                        .collect::<Result<Vec<_>, _>>()?,
+                    None => return Err("missing field `counters`".to_string()),
+                };
+                Event::Reducer {
+                    round: field_u64(&v, "round")? as u32,
+                    reducer: field_u64(&v, "reducer")? as u32,
+                    name: field_str(&v, "name")?,
+                    in_items: field_u64(&v, "in_items")?,
+                    out_items: field_u64(&v, "out_items")?,
+                    dist_evals: field_u64(&v, "dist_evals")?,
+                    mem_peak: field_u64(&v, "mem_peak")?,
+                    wall_us: opt_u64(&v, "wall_us"),
+                    counters,
+                }
+            }
+            "round_end" => Event::RoundEnd {
+                round: field_u64(&v, "round")? as u32,
+                name: field_str(&v, "name")?,
+                reducers: field_u64(&v, "reducers")? as u32,
+                dist_evals: field_u64(&v, "dist_evals")?,
+                mem_max: field_u64(&v, "mem_max")?,
+                mem_p50: field_f64(&v, "mem_p50")?,
+                mem_p95: field_f64(&v, "mem_p95")?,
+                evals_max: field_u64(&v, "evals_max")?,
+                evals_p50: field_f64(&v, "evals_p50")?,
+                evals_p95: field_f64(&v, "evals_p95")?,
+                violations: field_u64(&v, "violations")?,
+                wall_us: opt_u64(&v, "wall_us"),
+            },
+            "run_end" => Event::RunEnd {
+                rounds: field_u64(&v, "rounds")?,
+                dist_evals: field_u64(&v, "dist_evals")?,
+                max_local_memory: field_u64(&v, "max_local_memory")?,
+            },
+            other => return Err(format!("unknown event kind `{other}`")),
+        };
+        Ok(ev)
+    }
+
+    /// Copy with `wall_us` zeroed — the canonical comparable form.
+    pub fn without_wall(&self) -> Event {
+        let mut e = self.clone();
+        match &mut e {
+            Event::Reducer { wall_us, .. } | Event::RoundEnd { wall_us, .. } => *wall_us = 0,
+            _ => {}
+        }
+        e
+    }
+}
+
+fn field_str(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(|f| f.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing or non-string field `{key}`"))
+}
+
+fn field_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(|f| f.as_u64())
+        .ok_or_else(|| format!("missing or non-u64 field `{key}`"))
+}
+
+fn field_f64(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(|f| f.as_f64())
+        .ok_or_else(|| format!("missing or non-numeric field `{key}`"))
+}
+
+fn opt_u64(v: &Json, key: &str) -> u64 {
+    v.get(key).and_then(|f| f.as_u64()).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_reducer() -> Event {
+        Event::Reducer {
+            round: 2,
+            reducer: 5,
+            name: "coreset-r1-local".to_string(),
+            in_items: 1000,
+            out_items: 42,
+            dist_evals: 123456,
+            mem_peak: 1100,
+            wall_us: 777,
+            counters: vec![("cover.iterations".to_string(), 42), ("pruned.give_up".to_string(), 1)],
+        }
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        let events = vec![
+            Event::RunStart { schema: TRACE_SCHEMA_VERSION, label: "test".to_string() },
+            Event::RoundStart { round: 0, name: "r1".to_string(), reducers: 8 },
+            sample_reducer(),
+            Event::RoundEnd {
+                round: 2,
+                name: "coreset-r1-local".to_string(),
+                reducers: 8,
+                dist_evals: 999,
+                mem_max: 1100,
+                mem_p50: 1000.5,
+                mem_p95: 1090.0,
+                evals_max: 200,
+                evals_p50: 150.0,
+                evals_p95: 190.0,
+                violations: 0,
+                wall_us: 88,
+            },
+            Event::RunEnd { rounds: 3, dist_evals: 5000, max_local_memory: 1100 },
+        ];
+        for ev in events {
+            let parsed = Event::parse(&ev.to_json()).unwrap();
+            assert_eq!(parsed, ev, "full json must round-trip");
+        }
+    }
+
+    #[test]
+    fn stable_json_omits_wall_only() {
+        let ev = sample_reducer();
+        let full = ev.to_json();
+        let stable = ev.stable_json();
+        assert!(full.contains("\"wall_us\":777"));
+        assert!(!stable.contains("wall_us"));
+        // stable lines still parse, with wall zeroed
+        assert_eq!(Event::parse(&stable).unwrap(), ev.without_wall());
+    }
+
+    #[test]
+    fn parse_rejects_missing_fields_and_unknown_kinds() {
+        assert!(Event::parse("{\"ev\":\"nope\"}").unwrap_err().contains("unknown event kind"));
+        assert!(Event::parse("{\"round\":1}").unwrap_err().contains("`ev`"));
+        let err = Event::parse("{\"ev\":\"round_start\",\"round\":0,\"name\":\"x\"}").unwrap_err();
+        assert!(err.contains("`reducers`"), "{err}");
+        assert!(Event::parse("not json at all").is_err());
+    }
+
+    #[test]
+    fn counters_serialize_as_nested_object() {
+        let s = sample_reducer().to_json();
+        assert!(s.contains("\"counters\":{\"cover.iterations\":42,\"pruned.give_up\":1}"), "{s}");
+    }
+}

@@ -1,0 +1,61 @@
+//! The human sink: leveled progress output on stderr.
+//!
+//! Verbosity is a process-global (`--quiet` = 0, default = 1, `-v` = 2);
+//! structured data goes through [`super::Recorder`] — this module is only
+//! for messages meant to be read by a person, replacing the ad-hoc
+//! `eprintln!` notes scattered through the runtime and metric layers.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Suppress everything except hard errors.
+pub const QUIET: u8 = 0;
+/// Default: warnings and one-line progress notes.
+pub const NORMAL: u8 = 1;
+/// `-v`: per-phase detail.
+pub const VERBOSE: u8 = 2;
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(NORMAL);
+
+pub fn set_verbosity(level: u8) {
+    VERBOSITY.store(level, Ordering::Relaxed);
+}
+
+pub fn verbosity() -> u8 {
+    VERBOSITY.load(Ordering::Relaxed)
+}
+
+/// Warning: shown unless `--quiet`.
+pub fn warn(msg: &str) {
+    if verbosity() >= NORMAL {
+        eprintln!("warning: {msg}");
+    }
+}
+
+/// Progress note: shown unless `--quiet`.
+pub fn info(msg: &str) {
+    if verbosity() >= NORMAL {
+        eprintln!("{msg}");
+    }
+}
+
+/// Detail shown only with `-v`.
+pub fn debug(msg: &str) {
+    if verbosity() >= VERBOSE {
+        eprintln!("{msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verbosity_round_trips() {
+        let prev = verbosity();
+        set_verbosity(QUIET);
+        assert_eq!(verbosity(), QUIET);
+        set_verbosity(VERBOSE);
+        assert_eq!(verbosity(), VERBOSE);
+        set_verbosity(prev);
+    }
+}

@@ -1,0 +1,66 @@
+//! Structured run telemetry.
+//!
+//! The paper's claims are *distributional*: local memory per reducer,
+//! distance-evaluation work per round, skew across machines. A single
+//! `max_local_peak` number cannot show stragglers, and the pruning
+//! engine's adaptive give-up decisions (`metric::pruned`,
+//! `coreset::cover`) are invisible from outside. This module makes a run
+//! observable without touching its semantics:
+//!
+//! - [`Recorder`] — the event sink the [`crate::mapreduce::Simulator`]
+//!   drives per round and per reducer. Implementations:
+//!   [`sink::JsonlSink`] (one JSON object per line, for
+//!   `mrcoreset run --trace`), [`sink::MemSink`] (in-memory, for tests
+//!   and the determinism suite), [`sink::NoopRecorder`] (the default —
+//!   `enabled()` is false and the simulator skips event assembly
+//!   entirely, so an untraced run pays one branch per round).
+//! - [`event::Event`] — the trace schema (see `event` module docs).
+//!   Events are emitted by the coordinator thread **keyed and ordered by
+//!   (round, reducer index)**, never by arrival order, so a trace is
+//!   bit-identical across simulator thread counts; wall-clock lives in
+//!   dedicated `wall_us` fields that [`event::Event::stable_json`]
+//!   omits, keeping every comparable byte deterministic.
+//! - [`counters`] — thread-local named counters charged by the pruning
+//!   and search loops (`pruned.*`, `cover.*`, `local_search.*`). The
+//!   simulator snapshots them around each reducer closure — exactly as
+//!   it does `metric::counter` — and attaches the per-reducer deltas to
+//!   the reducer's span event and to `RoundStats::counters`.
+//! - [`log`] — the human sink: global verbosity (`-v` / `--quiet`) and
+//!   leveled progress output, replacing ad-hoc `eprintln!` notes.
+//!
+//! The schema contract is pinned by `tests/obs_trace.rs`: every event
+//! round-trips through `to_json` → JSONL → [`event::Event::parse`], and
+//! `mrcoreset report` renders any trace this module wrote.
+
+pub mod counters;
+pub mod event;
+pub mod log;
+pub mod sink;
+
+pub use event::{Event, TRACE_SCHEMA_VERSION};
+pub use sink::{JsonlSink, MemSink, NoopRecorder};
+
+use std::sync::Arc;
+
+/// An event sink for structured run telemetry. Implementations must be
+/// cheap to call (the simulator invokes `record` once per reducer per
+/// round, from the coordinator thread only) and thread-safe (`solve`
+/// may run on any thread).
+pub trait Recorder: Send + Sync {
+    /// False for the no-op recorder: producers skip event assembly.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Record one event. Events arrive in deterministic
+    /// (round, reducer) order from a single thread per run.
+    fn record(&self, ev: &Event);
+
+    /// Flush buffered output (JSONL sink); default no-op.
+    fn flush(&self) {}
+}
+
+/// The shared disabled recorder (the default everywhere).
+pub fn noop() -> Arc<dyn Recorder> {
+    Arc::new(NoopRecorder)
+}

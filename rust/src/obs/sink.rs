@@ -1,0 +1,118 @@
+//! Recorder implementations: no-op, in-memory, and JSONL file.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::event::Event;
+use super::Recorder;
+
+/// The default recorder: drops everything, reports `enabled() == false`
+/// so producers skip event assembly entirely.
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn record(&self, _ev: &Event) {}
+}
+
+/// In-memory recorder for tests and the determinism suite.
+#[derive(Default)]
+pub struct MemSink {
+    events: Mutex<Vec<Event>>,
+}
+
+impl MemSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clone of everything recorded so far, in record order.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Drain the recorded events.
+    pub fn take(&self) -> Vec<Event> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+}
+
+impl Recorder for MemSink {
+    fn record(&self, ev: &Event) {
+        self.events.lock().unwrap().push(ev.clone());
+    }
+}
+
+/// JSONL file recorder: one event per line, buffered. Used by
+/// `mrcoreset run --trace out.jsonl`.
+pub struct JsonlSink {
+    out: Mutex<BufWriter<File>>,
+}
+
+impl JsonlSink {
+    pub fn create(path: &Path) -> io::Result<Self> {
+        let file = File::create(path)?;
+        Ok(Self { out: Mutex::new(BufWriter::new(file)) })
+    }
+}
+
+impl Recorder for JsonlSink {
+    fn record(&self, ev: &Event) {
+        let mut out = self.out.lock().unwrap();
+        // An unwritable trace shouldn't abort a clustering run mid-flight;
+        // drop the line and let flush report persistent failure.
+        let _ = writeln!(out, "{}", ev.to_json());
+    }
+
+    fn flush(&self) {
+        let _ = self.out.lock().unwrap().flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_is_disabled() {
+        let r = NoopRecorder;
+        assert!(!r.enabled());
+        r.record(&Event::RunEnd { rounds: 0, dist_evals: 0, max_local_memory: 0 });
+    }
+
+    #[test]
+    fn mem_sink_preserves_record_order() {
+        let sink = MemSink::new();
+        assert!(sink.enabled());
+        sink.record(&Event::RoundStart { round: 0, name: "a".into(), reducers: 1 });
+        sink.record(&Event::RoundStart { round: 1, name: "b".into(), reducers: 2 });
+        let evs = sink.take();
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(&evs[0], Event::RoundStart { round: 0, .. }));
+        assert!(matches!(&evs[1], Event::RoundStart { round: 1, .. }));
+        assert!(sink.snapshot().is_empty(), "take drains");
+    }
+
+    #[test]
+    fn jsonl_sink_writes_parseable_lines() {
+        let dir = std::env::temp_dir().join("mrcoreset-obs-sink-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let sink = JsonlSink::create(&path).unwrap();
+        sink.record(&Event::RunStart { schema: 1, label: "t".into() });
+        sink.record(&Event::RunEnd { rounds: 3, dist_evals: 7, max_local_memory: 9 });
+        sink.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            Event::parse(line).unwrap();
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -66,7 +66,9 @@ impl XlaEngine {
         match XlaEngine::load(Path::new(&dir)) {
             Ok(e) => Some(e),
             Err(err) => {
-                eprintln!("note: XLA engine unavailable ({err}); using scalar distance path");
+                crate::obs::log::info(&format!(
+                    "note: XLA engine unavailable ({err}); using scalar distance path"
+                ));
                 None
             }
         }

@@ -42,7 +42,9 @@ impl XlaEngine {
     /// (artifacts may exist on disk, but there is no backend to run
     /// them); callers fall back to the scalar/batched CPU paths.
     pub fn load_default() -> Option<XlaEngine> {
-        eprintln!("note: XLA engine unavailable (built without `pjrt`); using CPU distance paths");
+        crate::obs::log::info(
+            "note: XLA engine unavailable (built without `pjrt`); using CPU distance paths",
+        );
         None
     }
 

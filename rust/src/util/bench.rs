@@ -98,6 +98,71 @@ pub fn to_json_with_metrics(results: &[BenchResult], metrics: &[(&str, f64)]) ->
     out
 }
 
+/// Version stamp for the bench JSON document layout; bump when keys
+/// move or change meaning so `bench-diff` consumers can refuse to
+/// compare across incompatible layouts.
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
+
+/// Run metadata stamped into every bench JSON artifact: enough to tell
+/// two documents in the cross-PR series apart without opening CI logs.
+/// Timings vary by machine; the metadata says *which* machine state
+/// (commit, thread count, smoke vs full sizes) produced them.
+#[derive(Clone, Debug)]
+pub struct BenchMeta {
+    pub schema_version: u64,
+    pub smoke: bool,
+    pub threads: usize,
+    pub git_sha: String,
+}
+
+impl BenchMeta {
+    /// Collect from the environment: thread count from the simulator's
+    /// default pool, commit from `GITHUB_SHA` (set by CI) or
+    /// `git rev-parse HEAD`, `"unknown"` when neither is available.
+    pub fn collect(smoke: bool) -> BenchMeta {
+        BenchMeta {
+            schema_version: BENCH_SCHEMA_VERSION,
+            smoke,
+            threads: crate::util::pool::default_threads(),
+            git_sha: detect_git_sha(),
+        }
+    }
+}
+
+fn detect_git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Append a `"meta"` object to a document produced by [`to_json`] or
+/// [`to_json_with_metrics`]. Kept separate so the measurement helpers
+/// stay pure and the environment probe happens once per document.
+pub fn with_meta(doc: String, meta: &BenchMeta) -> String {
+    let mut out = doc;
+    assert!(out.ends_with('}'), "bench JSON must be a top-level object");
+    out.truncate(out.len() - 1);
+    out.push_str(&format!(
+        ",\"meta\":{{\"schema_version\":{},\"smoke\":{},\"threads\":{},\"git_sha\":\"{}\"}}}}",
+        meta.schema_version,
+        meta.smoke,
+        meta.threads,
+        json_escape(&meta.git_sha)
+    ));
+    out
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -197,6 +262,37 @@ mod tests {
         assert!(s.ends_with("}}"));
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn meta_appends_without_breaking_the_document() {
+        let meta = BenchMeta {
+            schema_version: BENCH_SCHEMA_VERSION,
+            smoke: true,
+            threads: 8,
+            git_sha: "abc123".to_string(),
+        };
+        let s = with_meta(to_json(&[]), &meta);
+        assert!(
+            s.contains("\"meta\":{\"schema_version\":2,\"smoke\":true,\"threads\":8,\"git_sha\":\"abc123\"}"),
+            "{s}"
+        );
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        // and it must stay parseable by the in-tree JSON reader
+        let v = crate::util::json::Json::parse(&s).unwrap();
+        let m = v.get("meta").expect("meta object");
+        assert_eq!(m.get("threads").and_then(|t| t.as_u64()), Some(8));
+        assert_eq!(m.get("smoke").and_then(|t| t.as_bool()), Some(true));
+        assert_eq!(m.get("git_sha").and_then(|t| t.as_str()), Some("abc123"));
+    }
+
+    #[test]
+    fn collected_meta_has_a_sha_and_threads() {
+        let meta = BenchMeta::collect(false);
+        assert!(!meta.git_sha.is_empty());
+        assert!(meta.threads >= 1);
+        assert!(!meta.smoke);
+        assert_eq!(meta.schema_version, BENCH_SCHEMA_VERSION);
     }
 
     #[test]

@@ -16,10 +16,16 @@ pub struct Args {
 impl Args {
     /// Parse from raw args (excluding argv[0]). Flags may be written
     /// `--key value` or `--key=value`; a flag with no following value (or
-    /// followed by another flag) is boolean. A bare token following a
-    /// flag is consumed as that flag's value, so positionals must precede
-    /// flags (or boolean flags must be written last / with `=`).
+    /// followed by another flag) is boolean. Single-dash tokens (`-v`,
+    /// `-q`) are boolean short flags unless they parse as a number
+    /// (`--shift -3.5` still works). A bare token following a flag is
+    /// consumed as that flag's value, so positionals must precede flags
+    /// (or boolean flags must be written last / with `=`).
     pub fn parse(raw: &[String]) -> Args {
+        // A flag-shaped token: dashed and not a bare negative number.
+        fn is_flag(tok: &str) -> bool {
+            tok.starts_with('-') && tok.len() > 1 && tok.parse::<f64>().is_err()
+        }
         let mut it = raw.iter().peekable();
         let mut subcommand = None;
         let mut flags = HashMap::new();
@@ -36,12 +42,15 @@ impl Args {
                     flags.insert(k.to_string(), v.to_string());
                 } else {
                     match it.peek() {
-                        Some(next) if !next.starts_with("--") => {
+                        Some(next) if !is_flag(next) => {
                             flags.insert(stripped.to_string(), it.next().unwrap().clone());
                         }
                         _ => bools.push(stripped.to_string()),
                     }
                 }
+            } else if is_flag(tok) {
+                // single-dash short flag: always boolean, never takes a value
+                bools.push(tok[1..].to_string());
             } else {
                 positional.push(tok.clone());
             }
@@ -141,5 +150,19 @@ mod tests {
     fn negative_number_value() {
         let a = args("run --shift=-3.5");
         assert_eq!(a.get("shift"), Some("-3.5"));
+        let a = args("run --shift -3.5");
+        assert_eq!(a.get("shift"), Some("-3.5"));
+    }
+
+    #[test]
+    fn short_flags_are_boolean() {
+        let a = args("run -v --n 10");
+        assert!(a.has("v"));
+        assert_eq!(a.get("n"), Some("10"));
+        // a short flag after a long flag is NOT consumed as its value
+        let a = args("run --json -q");
+        assert!(a.has("json"), "--json must stay boolean: {a:?}");
+        assert!(a.has("q"));
+        assert_eq!(a.get("json"), None);
     }
 }

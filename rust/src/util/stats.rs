@@ -32,6 +32,45 @@ pub fn summarize(values: &[f64]) -> Summary {
     }
 }
 
+/// Skew-oriented summary of a per-reducer sample (memory, dist_evals):
+/// the three numbers the telemetry layer reports everywhere.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Distribution {
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Distribution {
+    /// Summarize a sample; empty samples yield all-zero (a round with no
+    /// reducers has no distribution to speak of).
+    pub fn of(values: &[f64]) -> Distribution {
+        if values.is_empty() {
+            return Distribution { p50: 0.0, p95: 0.0, max: 0.0 };
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Distribution {
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            max: sorted[sorted.len() - 1],
+        }
+    }
+
+    /// Straggler ratio max/p50: 1.0 means perfectly balanced. An
+    /// all-zero sample is balanced by convention; a zero median with
+    /// nonzero max is unboundedly skewed.
+    pub fn skew(&self) -> f64 {
+        if self.p50 > 0.0 {
+            self.max / self.p50
+        } else if self.max > 0.0 {
+            f64::INFINITY
+        } else {
+            1.0
+        }
+    }
+}
+
 /// Percentile with linear interpolation; input must be sorted ascending.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     assert!(!sorted.is_empty());
@@ -87,6 +126,20 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn distribution_of_sample_and_skew() {
+        let d = Distribution::of(&[1.0, 1.0, 1.0, 1.0, 9.0]);
+        assert_eq!(d.p50, 1.0);
+        assert_eq!(d.max, 9.0);
+        assert!((d.skew() - 9.0).abs() < 1e-12);
+        let balanced = Distribution::of(&[4.0, 4.0, 4.0]);
+        assert_eq!(balanced.skew(), 1.0);
+        let empty = Distribution::of(&[]);
+        assert_eq!(empty, Distribution { p50: 0.0, p95: 0.0, max: 0.0 });
+        assert_eq!(empty.skew(), 1.0);
+        assert_eq!(Distribution { p50: 0.0, p95: 0.0, max: 2.0 }.skew(), f64::INFINITY);
     }
 
     #[test]

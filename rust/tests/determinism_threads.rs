@@ -7,7 +7,8 @@
 
 use std::sync::Arc;
 
-use mrcoreset::coordinator::{solve, ClusterConfig};
+use mrcoreset::coordinator::{solve, solve_traced, ClusterConfig};
+use mrcoreset::obs::{MemSink, Recorder};
 use mrcoreset::coreset::{two_round_coreset, CoresetConfig, PipelineOutput};
 use mrcoreset::data::synth::GaussianMixtureSpec;
 use mrcoreset::mapreduce::{PartitionStrategy, Simulator};
@@ -89,6 +90,36 @@ fn outlier_solve_bit_identical_across_thread_counts() {
         assert_eq!(a.coreset_size, b.coreset_size, "{obj}");
         assert_eq!(a.dist_evals, b.dist_evals, "{obj}");
     }
+}
+
+/// Telemetry inherits the determinism contract: with tracing ENABLED,
+/// the JSON report and the stable trace lines (wall-clock omitted) must
+/// be bit-identical at 1 vs 8 simulator threads — events are emitted by
+/// the coordinator in (round, reducer) order, never arrival order.
+#[test]
+fn traced_solve_identical_reports_and_traces_across_thread_counts() {
+    let (space, pts) = mixture(2000, 9);
+    let run = |threads: usize| {
+        let sink = Arc::new(MemSink::new());
+        let rec: Arc<dyn Recorder> = sink.clone();
+        let mut cfg = ClusterConfig::new(Objective::Median, 4, 0.5);
+        cfg.threads = Some(threads);
+        let rep = solve_traced(&space, &pts, &cfg, rec);
+        let trace: Vec<String> = sink.snapshot().iter().map(|e| e.stable_json()).collect();
+        (rep.to_json(), trace)
+    };
+    let (json1, trace1) = run(1);
+    let (json8, trace8) = run(8);
+    assert_eq!(json1, json8, "RunReport::to_json must be thread-count invariant");
+    assert!(trace1.len() > 5, "expected run/round/reducer events, got {}", trace1.len());
+    assert_eq!(trace1, trace8, "stable trace lines must be bit-identical across thread counts");
+
+    // and tracing must be a pure observer: the untraced solve computes
+    // the same report
+    let mut cfg = ClusterConfig::new(Objective::Median, 4, 0.5);
+    cfg.threads = Some(8);
+    let untraced = solve(&space, &pts, &cfg);
+    assert_eq!(untraced.to_json(), json8, "tracing must not change the computation");
 }
 
 #[test]

@@ -1,0 +1,111 @@
+//! Integration tests for the `obs` telemetry subsystem.
+//!
+//! Two contracts are pinned here:
+//! 1. Schema round-trip: a trace written end-to-end by `solve_traced`
+//!    through a [`JsonlSink`] parses back via [`Event::parse`] and
+//!    re-serializes byte-identically — `mrcoreset report` can render
+//!    any file this crate writes.
+//! 2. The pruning engine's give-up ledger is not just an internal
+//!    state flip: when a reducer hits a bounds-hostile input, the
+//!    give-up lands in that reducer's span event in the trace.
+
+use std::sync::Arc;
+
+use mrcoreset::coordinator::{solve_traced, ClusterConfig};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::Simulator;
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::pruned::NearestTracker;
+use mrcoreset::metric::Objective;
+use mrcoreset::obs::{Event, JsonlSink, MemSink, Recorder, TRACE_SCHEMA_VERSION};
+use mrcoreset::points::VectorData;
+
+#[test]
+fn traced_solve_round_trips_through_jsonl_schema() {
+    let (data, _) =
+        GaussianMixtureSpec { n: 800, d: 2, k: 3, seed: 5, ..Default::default() }.generate();
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..800).collect();
+    let cfg = ClusterConfig::new(Objective::Median, 3, 0.5);
+
+    let path = std::env::temp_dir().join("mrcoreset-obs-trace-roundtrip.jsonl");
+    {
+        let rec: Arc<dyn Recorder> =
+            Arc::new(JsonlSink::create(&path).expect("create trace file"));
+        let _ = solve_traced(&space, &pts, &cfg, rec);
+    }
+    let text = std::fs::read_to_string(&path).expect("trace written");
+    let _ = std::fs::remove_file(&path);
+    let parsed: Vec<Event> =
+        text.lines().map(|l| Event::parse(l).expect("valid event line")).collect();
+
+    assert!(
+        matches!(parsed.first(), Some(Event::RunStart { schema, .. })
+            if *schema == TRACE_SCHEMA_VERSION),
+        "trace must open with a versioned run_start"
+    );
+    assert!(matches!(parsed.last(), Some(Event::RunEnd { .. })), "trace must close with run_end");
+    assert!(parsed.iter().any(|e| matches!(e, Event::Reducer { .. })), "no reducer spans");
+
+    // parse is the inverse of to_json: re-serializing the parsed events
+    // reproduces the file byte-for-byte
+    let reserialized: Vec<String> = parsed.iter().map(Event::to_json).collect();
+    let original: Vec<&str> = text.lines().collect();
+    assert_eq!(reserialized.len(), original.len());
+    for (ours, theirs) in reserialized.iter().zip(&original) {
+        assert_eq!(ours, theirs, "round-trip must be byte-identical");
+    }
+
+    // an in-memory trace of the identical seeded run matches the file
+    // line-for-line once wall-clock is stripped
+    let mem = Arc::new(MemSink::new());
+    let rec: Arc<dyn Recorder> = mem.clone();
+    let _ = solve_traced(&space, &pts, &cfg, rec);
+    let mem_stable: Vec<String> = mem.take().iter().map(Event::stable_json).collect();
+    let file_stable: Vec<String> = parsed.iter().map(Event::stable_json).collect();
+    assert_eq!(mem_stable, file_stable, "same seeded config, same stable trace");
+}
+
+#[test]
+fn give_up_ledger_reaches_the_trace_on_bounds_hostile_input() {
+    // 64 duplicated points against 40 centers: every candidate center is
+    // equidistant, so bound rows can never veto anything and their upkeep
+    // exceeds the slack — the tracker must flip its give-up latch, and
+    // that decision must surface in the reducer's span counters.
+    let rows: Vec<Vec<f32>> = vec![vec![0.0, 0.0]; 64];
+    let space = EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows)));
+    let sink = Arc::new(MemSink::new());
+    let rec: Arc<dyn Recorder> = sink.clone();
+    let sim = Simulator::new().with_threads(2).with_recorder(rec);
+    let parts: Vec<Vec<u32>> = vec![(0..64).collect()];
+    let _ = sim.round("adversarial-assign", parts, |_, part, _meter| {
+        let mut t = NearestTracker::new(&space, part, true);
+        for c in 0..40u32 {
+            t.push(c);
+        }
+        let led = t.ledger();
+        assert!(!led.bounds_paying, "latch must fire on duplicates: {led:?}");
+        t.idx().to_vec()
+    });
+    let stats = sim.take_stats();
+    let evs = sink.take();
+    let counters = evs
+        .iter()
+        .find_map(|e| match e {
+            Event::Reducer { counters, .. } => Some(counters.clone()),
+            _ => None,
+        })
+        .expect("reducer span recorded");
+    let give_up = counters.iter().find(|(k, _)| k == "pruned.give_up");
+    assert_eq!(
+        give_up,
+        Some(&("pruned.give_up".to_string(), 1)),
+        "give-up must fire exactly once: {counters:?}"
+    );
+    assert!(
+        counters.iter().any(|(k, _)| k == "pruned.evals_charged"),
+        "eval accounting missing: {counters:?}"
+    );
+    // the round stats carry the same ledger for untraced consumers
+    assert_eq!(stats.rounds[0].counter("pruned.give_up"), 1);
+}
