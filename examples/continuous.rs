@@ -49,7 +49,8 @@ fn main() {
             PartitionStrategy::RoundRobin,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         let sol = lloyd_best(&data, &out.coreset.indices, &out.coreset.weights, k);
         let cost = continuous_cost(&data, &pts, &unit, &sol.centroids);
         println!(

@@ -21,7 +21,7 @@ fn main() {
     // two-round pipeline with external timing
     let sim = Simulator::new().with_threads(1); // serialize for clean attribution
     let t0 = Instant::now();
-    let out = two_round_coreset(&space, Objective::Median, &pts, l, PartitionStrategy::RoundRobin, &cfg, &sim);
+    let out = two_round_coreset(&space, Objective::Median, &pts, l, PartitionStrategy::RoundRobin, &cfg, &sim).expect("pipeline");
     let t_pipe = t0.elapsed();
     let stats = sim.take_stats();
     for r in &stats.rounds { println!("{}: {:.3}s", r.name, r.wall.as_secs_f64()); }

@@ -9,6 +9,14 @@
 //! With L = ∛(|P|/k) the per-reducer memory is
 //! O(|P|^{2/3} k^{1/3} (c/ε)^{2D} log² |P|) — substantially sublinear
 //! for small doubling dimension D.
+//!
+//! The driver solves against an [`Executor`] handle built from
+//! `ClusterConfig::executor`: the in-memory backend replays the
+//! historical simulator behaviour bit for bit, while the spill backend
+//! stages every round's shards on disk and enforces a hard per-reducer
+//! byte budget. Budget violations and I/O failures surface as
+//! [`ExecError`] through [`try_solve_traced`]; the panicking wrappers
+//! [`solve`]/[`solve_traced`] keep the historical infallible signatures.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,7 +26,9 @@ use crate::algorithms::pam::{pam, PamCfg};
 use crate::algorithms::{Instance, Solution};
 use crate::coreset::pipeline::{one_round_coreset, two_round_coreset, CoresetConfig};
 use crate::coreset::TlAlgo;
-use crate::mapreduce::{default_l, JobStats, PartitionStrategy, Simulator};
+use crate::mapreduce::{
+    default_l, ExecError, Executor, ExecutorCfg, JobStats, PartitionStrategy,
+};
 use crate::metric::{MetricSpace, Objective};
 use crate::obs::{self, Event, Recorder, TRACE_SCHEMA_VERSION};
 use crate::outliers::{
@@ -63,8 +73,12 @@ pub struct ClusterConfig {
     /// (ablation: costs a factor ~2 in the approximation).
     pub one_round: bool,
     pub seed: u64,
-    /// Worker threads for the simulator (None = auto).
+    /// Worker threads for the executor (None = auto).
     pub threads: Option<usize>,
+    /// Execution backend + per-reducer byte budget (defaults honour the
+    /// `MRCORESET_EXECUTOR` / `MRCORESET_MEM_BUDGET` environment
+    /// variables, so whole test suites can be replayed out of core).
+    pub executor: ExecutorCfg,
 }
 
 impl ClusterConfig {
@@ -83,6 +97,7 @@ impl ClusterConfig {
             one_round: false,
             seed: 0xD15C0,
             threads: None,
+            executor: ExecutorCfg::default(),
         }
     }
 }
@@ -104,11 +119,19 @@ pub struct RunReport {
     pub excluded: Vec<u32>,
     pub coreset_size: usize,
     pub cw_size: usize,
+    /// Effective number of round-1 partitions (= number of reducers that
+    /// actually ran; see `l_requested` when the input was too small).
     pub l: usize,
+    /// The L that was asked for. `partition()` silently caps L at |P|;
+    /// the gap between this and `l` surfaces that cap.
+    pub l_requested: usize,
     pub m: usize,
     pub rounds: usize,
     pub max_local_memory: usize,
     pub aggregate_memory: usize,
+    /// Peak executor-materialised bytes in any single reducer slot
+    /// (identical across backends by the byte-parity contract).
+    pub max_local_bytes: u64,
     /// Total distance evaluations charged inside the MapReduce rounds
     /// (per-round and per-reducer breakdowns live in `stats.rounds`).
     pub dist_evals: u64,
@@ -121,16 +144,34 @@ pub fn solve(space: &dyn MetricSpace, pts: &[u32], cfg: &ClusterConfig) -> RunRe
     solve_traced(space, pts, cfg, obs::noop())
 }
 
-/// [`solve`] with a telemetry recorder attached to the simulator: every
+/// [`solve`] with a telemetry recorder attached to the executor: every
 /// round emits span events (see `obs::event`), bracketed by
 /// `run_start`/`run_end`. `solve` is exactly this with the disabled
 /// recorder, so traced and untraced runs compute identical reports.
+///
+/// Panics on executor failures (over-budget, spill I/O); use
+/// [`try_solve_traced`] to handle those as values.
 pub fn solve_traced(
     space: &dyn MetricSpace,
     pts: &[u32],
     cfg: &ClusterConfig,
     recorder: Arc<dyn Recorder>,
 ) -> RunReport {
+    try_solve_traced(space, pts, cfg, recorder)
+        .unwrap_or_else(|e| panic!("mapreduce execution failed: {e}"))
+}
+
+/// Fallible core of [`solve_traced`]: builds the executor backend from
+/// `cfg.executor` and returns a structured [`ExecError`] when a reducer
+/// exceeds its byte budget or spill I/O fails — instead of aborting the
+/// process. A failed run leaves a trace with `run_start` (and any
+/// completed rounds) but no `run_end`.
+pub fn try_solve_traced(
+    space: &dyn MetricSpace,
+    pts: &[u32],
+    cfg: &ClusterConfig,
+    recorder: Arc<dyn Recorder>,
+) -> Result<RunReport, ExecError> {
     assert!(cfg.k >= 1 && cfg.k <= pts.len(), "require 1 <= k <= |P|");
     assert!(cfg.eps > 0.0, "eps must be positive");
     let t0 = Instant::now();
@@ -143,10 +184,7 @@ pub fn solve_traced(
             label: format!("{} k={} n={} eps={} seed={}", cfg.objective, cfg.k, n, cfg.eps, cfg.seed),
         });
     }
-    let mut sim = Simulator::new().with_recorder(recorder.clone());
-    if let Some(t) = cfg.threads {
-        sim = sim.with_threads(t);
-    }
+    let exec = cfg.executor.build(cfg.threads, recorder.clone())?;
     let ccfg = CoresetConfig { eps: cfg.eps, beta: cfg.beta, m, tl: cfg.tl, seed: cfg.seed };
     let use_robust = cfg.outliers > 0 || cfg.final_algo == FinalAlgo::RobustLocalSearch;
 
@@ -164,17 +202,18 @@ pub fn solve_traced(
             seed: cfg.seed,
         };
         let m_local = ocfg.m_local(l.min(n));
-        (outlier_coreset(space, cfg.objective, pts, l, cfg.strategy, &ocfg, &sim), m_local)
+        (outlier_coreset(space, cfg.objective, pts, l, cfg.strategy, &ocfg, &exec)?, m_local)
     } else if cfg.one_round {
-        (one_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &sim), m)
+        (one_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &exec)?, m)
     } else {
-        (two_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &sim), m)
+        (two_round_coreset(space, cfg.objective, pts, l, cfg.strategy, &ccfg, &exec)?, m)
     };
     let coreset = pipe.coreset;
 
     // Round 3: sequential solve on the weighted coreset instance
     // (single reducer holding E_w).
-    let solutions = sim.round("final-solve", vec![coreset.clone()], |_, cs, meter| {
+    let cs_input = exec.scatter(vec![coreset.clone()])?;
+    let solutions = exec.round("final-solve", &cs_input, |_, cs, meter| {
         meter.charge(cs.len());
         let inst = Instance::new(&cs.indices, &cs.weights);
         if use_robust {
@@ -221,8 +260,8 @@ pub fn solve_traced(
         };
         meter.release(cs.len());
         sol
-    });
-    let solution = solutions.into_iter().next().expect("one reducer");
+    })?;
+    let solution = solutions.into_items()?.into_iter().next().expect("one reducer");
 
     // Evaluation (outside the MR job): cost on the full input, plus the
     // robust (z-excluded) cost when outliers are enabled.
@@ -237,32 +276,35 @@ pub fn solve_traced(
         (full_cost, Vec::new())
     };
 
-    let stats = sim.take_stats();
+    let stats = exec.take_stats();
     if recorder.enabled() {
         recorder.record(&Event::RunEnd {
             rounds: stats.num_rounds() as u64,
             dist_evals: stats.total_dist_evals(),
             max_local_memory: stats.max_local_memory() as u64,
+            max_local_bytes: stats.max_local_bytes(),
         });
         recorder.flush();
     }
-    RunReport {
+    Ok(RunReport {
         full_cost,
         outliers: cfg.outliers,
         robust_full_cost,
         excluded,
         coreset_size: coreset.len(),
         cw_size: pipe.cw_size,
-        l,
+        l: pipe.part_sizes.len(),
+        l_requested: l,
         m: m_used,
         rounds: stats.num_rounds(),
         max_local_memory: stats.max_local_memory(),
         aggregate_memory: stats.aggregate_memory(),
+        max_local_bytes: stats.max_local_bytes(),
         dist_evals: stats.total_dist_evals(),
         wall: t0.elapsed(),
         stats,
         solution,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -357,6 +399,46 @@ mod tests {
         let b = solve(&space, &pts, &cfg);
         assert_eq!(a.solution.centers, b.solution.centers);
         assert_eq!(a.coreset_size, b.coreset_size);
+    }
+
+    #[test]
+    fn effective_l_is_reported_when_partitioning_shrinks() {
+        // Request more partitions than points: partition() caps L at |P|
+        // and the report must expose both the requested and effective L.
+        let (space, pts) = mixture(60, 2, 23);
+        let mut cfg = ClusterConfig::new(Objective::Median, 2, 0.5);
+        cfg.l = Some(600);
+        let rep = solve(&space, &pts, &cfg);
+        assert_eq!(rep.l_requested, 600);
+        assert_eq!(rep.l, 60, "effective L is the reducer count that ran");
+    }
+
+    #[test]
+    fn executor_reports_materialised_bytes() {
+        let (space, pts) = mixture(600, 3, 29);
+        let cfg = ClusterConfig::new(Objective::Median, 3, 0.5);
+        let rep = solve(&space, &pts, &cfg);
+        // round-1 shards alone are 8 + 4·|P_ℓ| bytes, so the peak is
+        // comfortably positive on any non-trivial input.
+        assert!(rep.max_local_bytes > 0, "byte metering must be wired through");
+        assert_eq!(rep.max_local_bytes, rep.stats.max_local_bytes());
+    }
+
+    #[test]
+    fn over_budget_is_a_structured_error_not_a_crash() {
+        let (space, pts) = mixture(500, 3, 31);
+        let mut cfg = ClusterConfig::new(Objective::Median, 3, 0.5);
+        cfg.executor = ExecutorCfg::in_memory().with_budget(16);
+        let err = try_solve_traced(&space, &pts, &cfg, obs::noop())
+            .expect_err("16-byte budget cannot hold a partition");
+        match err {
+            ExecError::OverBudget { round, needed, budget, .. } => {
+                assert_eq!(budget, 16);
+                assert!(needed > 16);
+                assert_eq!(round, "coreset-r1-local", "first round must trip first");
+            }
+            other => panic!("expected OverBudget, got {other}"),
+        }
     }
 
     /// Clusters in a small box plus a far uniform noise blob — the

@@ -6,4 +6,4 @@
 pub mod driver;
 pub mod report;
 
-pub use driver::{solve, solve_traced, ClusterConfig, FinalAlgo, RunReport};
+pub use driver::{solve, solve_traced, try_solve_traced, ClusterConfig, FinalAlgo, RunReport};

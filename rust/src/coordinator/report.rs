@@ -22,15 +22,21 @@ impl RunReport {
                 self.excluded.len()
             ));
         }
+        let l_note = if self.l != self.l_requested {
+            format!(" (requested {})", self.l_requested)
+        } else {
+            String::new()
+        };
         s.push_str(&format!(
-            "coreset:  |E_w|={} (|C_w|={}), L={}, m={}\n",
-            self.coreset_size, self.cw_size, self.l, self.m
+            "coreset:  |E_w|={} (|C_w|={}), L={}{}, m={}\n",
+            self.coreset_size, self.cw_size, self.l, l_note, self.m
         ));
         s.push_str(&format!(
-            "mapreduce: rounds={} M_L={} pts M_A={} pts dist_evals={} wall={:.3}s\n",
+            "mapreduce: rounds={} M_L={} pts M_A={} pts M_B={} B dist_evals={} wall={:.3}s\n",
             self.rounds,
             self.max_local_memory,
             self.aggregate_memory,
+            self.max_local_bytes,
             self.dist_evals,
             self.wall.as_secs_f64()
         ));
@@ -38,12 +44,13 @@ impl RunReport {
             let md = r.mem_distribution();
             s.push_str(&format!(
                 "  round {:22} reducers={:4} peak_local={:8} mem_p50={:8.0} mem_p95={:8.0} \
-                 dist={:12} wall={:.3}s\n",
+                 bytes={:9} dist={:12} wall={:.3}s\n",
                 r.name,
                 r.reducers,
                 r.max_local_peak,
                 md.p50,
                 md.p95,
+                r.max_local_bytes,
                 r.dist_evals,
                 r.wall.as_secs_f64()
             ));
@@ -77,10 +84,15 @@ impl RunReport {
         o.set("coreset_size", Json::num(self.coreset_size as f64));
         o.set("cw_size", Json::num(self.cw_size as f64));
         o.set("l", Json::num(self.l as f64));
+        o.set("l_requested", Json::num(self.l_requested as f64));
         o.set("m", Json::num(self.m as f64));
         o.set("rounds", Json::num(self.rounds as f64));
         o.set("max_local_memory", Json::num(self.max_local_memory as f64));
         o.set("aggregate_memory", Json::num(self.aggregate_memory as f64));
+        // Byte peaks are backend-invariant (the executors' byte-parity
+        // contract), so they belong in the determinism-diffed JSON; the
+        // backend-dependent spill read/write volumes deliberately do not.
+        o.set("max_local_bytes", Json::num(self.max_local_bytes as f64));
         o.set("dist_evals", Json::num(self.dist_evals as f64));
         let rounds: Vec<Json> = self
             .stats
@@ -95,6 +107,7 @@ impl RunReport {
                 rj.set("mem_max", Json::num(r.max_local_peak as f64));
                 rj.set("mem_p50", Json::num(md.p50));
                 rj.set("mem_p95", Json::num(md.p95));
+                rj.set("mem_bytes_max", Json::num(r.max_local_bytes as f64));
                 rj.set("aggregate", Json::num(r.aggregate_peak as f64));
                 rj.set("dist_evals", Json::num(r.dist_evals as f64));
                 rj.set("evals_p50", Json::num(ed.p50));

@@ -1,4 +1,4 @@
-//! The MapReduce coreset pipelines over the simulator.
+//! The MapReduce coreset pipelines over a pluggable executor.
 //!
 //! - `one_round_coreset` (§3.1): partition → local coreset per reducer →
 //!   union C_w. An α-approximation on C_w yields 2α+O(ε) (discrete) or
@@ -16,11 +16,20 @@
 //!   and an O(ε)-centroid set (Lemmas 3.7/3.11) — the property that
 //!   removes the factor 2 from the approximation ratio.
 //!
-//! Memory accounting per reducer (charged to the simulator's meter):
+//! The pipelines are generic over [`Executor`]: the in-memory backend
+//! keeps every partition resident, while the spill backend materialises
+//! one shard at a time from disk under a hard byte budget. Either way
+//! round outputs come back as a [`Manifest`] and are folded into the
+//! running coreset one partition at a time (`WeightedSet::merge`), so
+//! the coordinator never holds more than one round-output shard beyond
+//! the accumulated union.
+//!
+//! Item-memory accounting per reducer (charged to the executor's meter):
 //! round 1 holds P_ℓ + T_ℓ + C_{w,ℓ}; round 2 holds P_ℓ + C_w (broadcast)
-//! + E_{w,ℓ}.
+//! + E_{w,ℓ}. Byte accounting for executor-materialised shards is done
+//! by the executor itself (see `mapreduce::executor`).
 
-use crate::mapreduce::{partition, PartitionStrategy, Simulator};
+use crate::mapreduce::{partition_reported, ExecError, Executor, Manifest, PartitionStrategy};
 use crate::metric::{MetricSpace, Objective};
 use crate::points::WeightedSet;
 use crate::util::rng::Rng;
@@ -65,20 +74,21 @@ pub struct PipelineOutput {
 
 /// Round 1 of every pipeline (shared with `outliers::pipeline`, which
 /// passes its own round name, seed salt, and oversampled m through
-/// `cfg`): per-partition local coresets, memory-metered.
-pub(crate) fn run_round1_named(
+/// `cfg`): per-partition local coresets, memory-metered. The reducer
+/// index doubles as the partition index ℓ, so RNG streams match the
+/// historical `(ℓ, P_ℓ)` tupled inputs bit for bit.
+pub(crate) fn run_round1_named<E: Executor>(
     space: &dyn MetricSpace,
     obj: Objective,
-    parts: &[Vec<u32>],
+    parts: &Manifest<Vec<u32>>,
     cfg: &CoresetConfig,
-    sim: &Simulator,
+    exec: &E,
     name: &str,
     seed_salt: u64,
-) -> Vec<LocalCoresetOut> {
-    let inputs: Vec<(usize, Vec<u32>)> = parts.iter().cloned().enumerate().collect();
-    sim.round(name, inputs, |_, (ell, pts), meter| {
+) -> Result<Manifest<LocalCoresetOut>, ExecError> {
+    exec.round(name, parts, |ell, pts, meter| {
         meter.charge(pts.len()); // resident partition
-        let mut rng = Rng::new(cfg.seed ^ (seed_salt + *ell as u64));
+        let mut rng = Rng::new(cfg.seed ^ (seed_salt + ell as u64));
         let out = local_coreset(space, obj, pts, cfg.m, cfg.eps, cfg.beta, cfg.tl, &mut rng);
         meter.charge(out.t.len() + out.cover.set.len()); // T_ℓ + C_{w,ℓ}
         meter.release(pts.len() + out.t.len() + out.cover.set.len());
@@ -86,14 +96,14 @@ pub(crate) fn run_round1_named(
     })
 }
 
-fn run_round1(
+fn run_round1<E: Executor>(
     space: &dyn MetricSpace,
     obj: Objective,
-    parts: &[Vec<u32>],
+    parts: &Manifest<Vec<u32>>,
     cfg: &CoresetConfig,
-    sim: &Simulator,
-) -> Vec<LocalCoresetOut> {
-    run_round1_named(space, obj, parts, cfg, sim, "coreset-r1-local", 0xA5A5_0000)
+    exec: &E,
+) -> Result<Manifest<LocalCoresetOut>, ExecError> {
+    run_round1_named(space, obj, parts, cfg, exec, "coreset-r1-local", 0xA5A5_0000)
 }
 
 /// Global tolerance radius R from the per-partition radii (step 1 of
@@ -121,73 +131,81 @@ pub(crate) fn global_radius(obj: Objective, radii: &[f64], part_sizes: &[usize])
 }
 
 /// §3.1: 1-round construction, returns C_w.
-pub fn one_round_coreset(
+pub fn one_round_coreset<E: Executor>(
     space: &dyn MetricSpace,
     obj: Objective,
     pts: &[u32],
     l: usize,
     strategy: PartitionStrategy,
     cfg: &CoresetConfig,
-    sim: &Simulator,
-) -> PipelineOutput {
-    let parts = partition(pts, l, strategy);
-    let locals = run_round1(space, obj, &parts, cfg, sim);
-    let coreset =
-        WeightedSet::union(&locals.iter().map(|o| o.cover.set.clone()).collect::<Vec<_>>());
+    exec: &E,
+) -> Result<PipelineOutput, ExecError> {
+    let parts = partition_reported(pts, l, strategy, "one_round_coreset");
+    let part_sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+    let inputs = exec.scatter(parts)?;
+    let locals = run_round1(space, obj, &inputs, cfg, exec)?;
+    let mut coreset = WeightedSet::default();
+    let mut radii = Vec::new();
+    locals.for_each(|o| {
+        coreset.merge(&o.cover.set);
+        radii.push(o.r);
+    })?;
     let cw_size = coreset.len();
-    PipelineOutput {
-        coreset,
-        radii: locals.iter().map(|o| o.r).collect(),
-        part_sizes: parts.iter().map(Vec::len).collect(),
-        cw_size,
-        global_r: None,
-    }
+    Ok(PipelineOutput { coreset, radii, part_sizes, cw_size, global_r: None })
 }
 
 /// §3.2 (k-median) / §3.3 (k-means): 2-round construction, returns E_w.
-pub fn two_round_coreset(
+pub fn two_round_coreset<E: Executor>(
     space: &dyn MetricSpace,
     obj: Objective,
     pts: &[u32],
     l: usize,
     strategy: PartitionStrategy,
     cfg: &CoresetConfig,
-    sim: &Simulator,
-) -> PipelineOutput {
-    let parts = partition(pts, l, strategy);
-    let locals = run_round1(space, obj, &parts, cfg, sim);
-    let radii: Vec<f64> = locals.iter().map(|o| o.r).collect();
+    exec: &E,
+) -> Result<PipelineOutput, ExecError> {
+    let parts = partition_reported(pts, l, strategy, "two_round_coreset");
     let part_sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
-    let cw = WeightedSet::union(&locals.iter().map(|o| o.cover.set.clone()).collect::<Vec<_>>());
+    let inputs = exec.scatter(parts)?;
+    let locals = run_round1(space, obj, &inputs, cfg, exec)?;
+    let mut radii = Vec::new();
+    let mut cw = WeightedSet::default();
+    locals.for_each(|o| {
+        radii.push(o.r);
+        cw.merge(&o.cover.set);
+    })?;
 
     // Global tolerance radius R (step 1 of round 2).
     let global_r = global_radius(obj, &radii, &part_sizes);
 
     // Round 2: every reducer receives its partition + broadcast C_w + R.
+    // The partitions are reread from the round-1 input manifest (for the
+    // spill backend that means a second pass over the same shards).
     let (ce, cb) = cover_params(obj, cfg.eps, cfg.beta);
     let cw_ref = &cw;
-    let inputs: Vec<Vec<u32>> = parts;
-    let e_parts = sim.round("coreset-r2-refine", inputs, move |_, pts_l, meter| {
+    let e_parts = exec.round("coreset-r2-refine", &inputs, move |_, pts_l, meter| {
         meter.charge(pts_l.len() + cw_ref.len()); // partition + broadcast C_w
         let res = super::cover::cover_with_balls(space, pts_l, &cw_ref.indices, global_r, ce, cb);
         meter.charge(res.set.len()); // E_{w,ℓ}
         meter.release(pts_l.len() + cw_ref.len() + res.set.len());
         res.set
-    });
-    let coreset = WeightedSet::union(&e_parts);
-    PipelineOutput {
+    })?;
+    let mut coreset = WeightedSet::default();
+    e_parts.for_each(|s| coreset.merge(s))?;
+    Ok(PipelineOutput {
         coreset,
         radii,
         part_sizes,
         cw_size: cw.len(),
         global_r: Some(global_r),
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::GaussianMixtureSpec;
+    use crate::mapreduce::Simulator;
     use crate::metric::dense::EuclideanSpace;
     use std::sync::Arc;
 
@@ -210,7 +228,8 @@ mod tests {
             PartitionStrategy::RoundRobin,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         assert_eq!(out.coreset.total_weight(), 1500);
         assert_eq!(out.radii.len(), 5);
         assert_eq!(sim.take_stats().num_rounds(), 1);
@@ -230,7 +249,8 @@ mod tests {
                 PartitionStrategy::RoundRobin,
                 &cfg,
                 &sim,
-            );
+            )
+            .expect("pipeline");
             assert_eq!(out.coreset.total_weight(), 2000, "{obj}");
             assert!(out.global_r.unwrap() > 0.0);
             let stats = sim.take_stats();
@@ -253,7 +273,8 @@ mod tests {
             PartitionStrategy::RoundRobin,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         assert!(out.coreset.len() <= pts.len());
         assert!(out.cw_size > 0);
     }
@@ -274,7 +295,8 @@ mod tests {
             PartitionStrategy::RoundRobin,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         let stats = sim.take_stats();
         // round 1 reducers hold ~n/L + m + |C_ℓ| ≪ n
         assert!(
@@ -297,7 +319,8 @@ mod tests {
             PartitionStrategy::Contiguous,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         assert_eq!(out.part_sizes, vec![500]);
         assert_eq!(out.coreset.total_weight(), 500);
     }

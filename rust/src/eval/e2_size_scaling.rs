@@ -40,7 +40,8 @@ pub fn run(quick: bool) -> ExpResult {
                 PartitionStrategy::RoundRobin,
                 &cfg,
                 &sim,
-            );
+            )
+            .expect("pipeline");
             size_tab.row(vec![
                 dim.to_string(),
                 fnum(eps),
@@ -73,7 +74,8 @@ pub fn run(quick: bool) -> ExpResult {
             PartitionStrategy::RoundRobin,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         n_tab.row(vec![
             n.to_string(),
             out.coreset.len().to_string(),

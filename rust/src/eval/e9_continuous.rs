@@ -57,7 +57,8 @@ pub fn run(quick: bool) -> ExpResult {
             PartitionStrategy::RoundRobin,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         let sol = lloyd_best(&data, &out.coreset.indices, &out.coreset.weights, k);
         // evaluate the coreset-derived centroids on the FULL input
         let cost_full_input = continuous_cost(&data, &pts, &unit, &sol.centroids);

@@ -28,12 +28,12 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use mrcoreset::coordinator::{solve_traced, ClusterConfig, FinalAlgo};
+use mrcoreset::coordinator::{try_solve_traced, ClusterConfig, FinalAlgo};
 use mrcoreset::coreset::TlAlgo;
 use mrcoreset::data::csv;
 use mrcoreset::data::synth::{GaussianMixtureSpec, NoiseSpec};
 use mrcoreset::eval::{run_experiment, validate_ids, ALL_IDS};
-use mrcoreset::mapreduce::PartitionStrategy;
+use mrcoreset::mapreduce::{parse_bytes, ExecBackend, PartitionStrategy};
 use mrcoreset::metric::dense::EuclideanSpace;
 use mrcoreset::metric::Objective;
 use mrcoreset::obs::{self, log, Event, JsonlSink, Recorder};
@@ -46,7 +46,8 @@ const USAGE: &str = "usage: mrcoreset <run|exp|gen|report|bench-diff|info> [flag
   run  [file.csv] --alg kmedian|kmeans --k K --eps E [--z Z] [--n N --d D]
        [--noise N] [--l L] [--m M] [--beta B] [--tl dpp|local-search|gonzalez]
        [--final local-search|pam|robust] [--one-round]
-       [--strategy rr|contig|shuffle] [--seed S] [--no-engine]
+       [--partition rr|contig|shuffle] [--seed S] [--no-engine]
+       [--executor mem|spill] [--mem-budget BYTES] [--spill-dir DIR]
        [--trace FILE] [--json]
   exp  <e1..e12|all> [--full]
   gen  --n N --d D --k K --out FILE [--spread S] [--outliers F] [--noise N]
@@ -60,6 +61,17 @@ const USAGE: &str = "usage: mrcoreset <run|exp|gen|report|bench-diff|info> [flag
   --z Z       solve the (k, z) objective: write off the Z most expensive
               points as outliers (outlier-robust pipeline + finisher)
   --noise N   append N uniform noise points to the synthetic input
+  --partition how points are split into the L reducers (rr = round-robin,
+              contig = contiguous, shuffle = seeded shuffle); --strategy
+              is accepted as an alias
+  --executor  mem (default) keeps every shard in RAM; spill stages each
+              round's shards on disk and materializes one per reducer
+  --mem-budget B
+              hard per-reducer byte budget (k/m/g suffixes, powers of
+              1024); an overflowing run fails with a structured error
+              instead of an OOM kill. Both executors enforce it
+  --spill-dir D
+              shard directory for --executor spill (default: fresh temp)
   --trace F   write per-round/per-reducer telemetry events to F (JSONL)
   --json      print the run report as deterministic JSON (no wall-clock)";
 
@@ -175,15 +187,39 @@ fn cmd_run(args: &Args) {
             std::process::exit(2);
         }
     };
-    cfg.strategy = match args.str_or("strategy", "rr") {
+    // --partition is the documented name; --strategy stays as an alias
+    let strat = args.get("partition").unwrap_or_else(|| args.str_or("strategy", "rr"));
+    cfg.strategy = match strat {
         "rr" => PartitionStrategy::RoundRobin,
         "contig" => PartitionStrategy::Contiguous,
         "shuffle" => PartitionStrategy::Shuffled(cfg.seed),
         other => {
-            eprintln!("error: unknown --strategy {other}");
+            eprintln!("error: unknown --partition {other}");
             std::process::exit(2);
         }
     };
+    if let Some(backend) = args.get("executor") {
+        cfg.executor.backend = match backend {
+            "mem" | "in-memory" => ExecBackend::InMemory,
+            "spill" => ExecBackend::Spill,
+            other => {
+                eprintln!("error: unknown --executor {other} (want mem or spill)");
+                std::process::exit(2);
+            }
+        };
+    }
+    if let Some(b) = args.get("mem-budget") {
+        match parse_bytes(b) {
+            Some(bytes) => cfg.executor.mem_budget = Some(bytes),
+            None => {
+                eprintln!("error: invalid --mem-budget {b} (bytes; k/m/g suffixes allowed)");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(dir) = args.get("spill-dir") {
+        cfg.executor.spill_dir = Some(std::path::PathBuf::from(dir));
+    }
 
     // the robust pipeline (--z, or --final robust on its own) has its
     // own round structure and center counts — tell the user which
@@ -220,7 +256,13 @@ fn cmd_run(args: &Args) {
     };
 
     let pts: Vec<u32> = (0..n as u32).collect();
-    let rep = solve_traced(&space, &pts, &cfg, recorder);
+    let rep = match try_solve_traced(&space, &pts, &cfg, recorder) {
+        Ok(rep) => rep,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    };
     if args.has("json") {
         println!("{}", rep.to_json());
     } else {
@@ -327,6 +369,7 @@ fn render_trace_report(events: &[Event]) -> String {
         "mem_p50",
         "mem_p95",
         "mem_max",
+        "bytes_max",
         "skew",
     ]);
     for ev in events {
@@ -338,6 +381,7 @@ fn render_trace_report(events: &[Event]) -> String {
             mem_max,
             mem_p50,
             mem_p95,
+            bytes_max,
             evals_max,
             evals_p95,
             ..
@@ -355,12 +399,25 @@ fn render_trace_report(events: &[Event]) -> String {
                 fnum(*mem_p50),
                 fnum(*mem_p95),
                 mem_max.to_string(),
+                bytes_max.to_string(),
                 format!("{skew:.2}"),
             ]);
         }
     }
     if !t.is_empty() {
         s.push_str(&t.to_markdown());
+    }
+    // spill traffic (wall-gated span fields; zero for the in-memory
+    // backend, where nothing touches the disk)
+    let (mut spill_read, mut spill_write) = (0u64, 0u64);
+    for ev in events {
+        if let Event::Reducer { spill_read: r, spill_write: w, .. } = ev {
+            spill_read += r;
+            spill_write += w;
+        }
+    }
+    if spill_read + spill_write > 0 {
+        s.push_str(&format!("spill: read={spill_read} B written={spill_write} B\n"));
     }
     let mut counters: BTreeMap<String, u64> = BTreeMap::new();
     for ev in events {
@@ -390,9 +447,10 @@ fn render_trace_report(events: &[Event]) -> String {
         }
     }
     for ev in events {
-        if let Event::RunEnd { rounds, dist_evals, max_local_memory } = ev {
+        if let Event::RunEnd { rounds, dist_evals, max_local_memory, max_local_bytes } = ev {
             s.push_str(&format!(
-                "run: rounds={rounds} dist_evals={dist_evals} max_local_memory={max_local_memory}\n"
+                "run: rounds={rounds} dist_evals={dist_evals} \
+                 max_local_memory={max_local_memory} max_local_bytes={max_local_bytes}\n"
             ));
         }
     }
@@ -524,7 +582,7 @@ mod tests {
     #[test]
     fn render_trace_report_covers_rounds_counters_and_pruning() {
         let events = vec![
-            Event::RunStart { schema: 1, label: "median k=3 n=500 eps=0.5 seed=1".to_string() },
+            Event::RunStart { schema: 2, label: "median k=3 n=500 eps=0.5 seed=1".to_string() },
             Event::RoundStart { round: 0, name: "coreset-r1-local".to_string(), reducers: 2 },
             Event::Reducer {
                 round: 0,
@@ -534,7 +592,10 @@ mod tests {
                 out_items: 20,
                 dist_evals: 900,
                 mem_peak: 260,
+                mem_bytes: 1240,
                 wall_us: 0,
+                spill_read: 1008,
+                spill_write: 232,
                 counters: vec![
                     ("cover.evals_baseline".to_string(), 1000),
                     ("cover.evals_charged".to_string(), 600),
@@ -548,7 +609,10 @@ mod tests {
                 out_items: 20,
                 dist_evals: 800,
                 mem_peak: 250,
+                mem_bytes: 1200,
                 wall_us: 0,
+                spill_read: 1008,
+                spill_write: 192,
                 counters: vec![("cover.evals_charged".to_string(), 200)],
             },
             Event::RoundEnd {
@@ -559,22 +623,35 @@ mod tests {
                 mem_max: 260,
                 mem_p50: 255.0,
                 mem_p95: 259.5,
+                bytes_max: 1240,
                 evals_max: 900,
                 evals_p50: 850.0,
                 evals_p95: 895.0,
                 violations: 0,
                 wall_us: 0,
             },
-            Event::RunEnd { rounds: 1, dist_evals: 1700, max_local_memory: 260 },
+            Event::RunEnd {
+                rounds: 1,
+                dist_evals: 1700,
+                max_local_memory: 260,
+                max_local_bytes: 1240,
+            },
         ];
         let s = render_trace_report(&events);
-        assert!(s.contains("trace: schema v1"), "{s}");
+        assert!(s.contains("trace: schema v2"), "{s}");
         assert!(s.contains("coreset-r1-local"), "{s}");
         assert!(s.contains("cover.evals_charged"), "{s}");
         // 600 + 200 charged of 1000 baseline → 20% saved
         assert!(s.contains("pruning[cover]: 800 of 1000"), "{s}");
         assert!(s.contains("20.0% saved"), "{s}");
-        assert!(s.contains("run: rounds=1 dist_evals=1700 max_local_memory=260"), "{s}");
+        assert!(s.contains("1240"), "bytes_max column missing: {s}");
+        assert!(s.contains("spill: read=2016 B written=424 B"), "{s}");
+        assert!(
+            s.contains(
+                "run: rounds=1 dist_evals=1700 max_local_memory=260 max_local_bytes=1240"
+            ),
+            "{s}"
+        );
     }
 
     #[test]

@@ -1,0 +1,621 @@
+//! Pluggable execution backends for the MapReduce rounds.
+//!
+//! The coreset pipelines and the driver run against the [`Executor`]
+//! trait instead of a concrete simulator. Two backends exist:
+//!
+//! - [`InMemoryExecutor`] (= [`Simulator`]): every manifest is a plain
+//!   `Vec` in RAM — today's behavior, bit for bit.
+//! - [`SpillExecutor`]: every manifest is a set of on-disk shards
+//!   ([`SpillStore`]); a reducer materializes exactly one input shard,
+//!   runs, encodes its output back to disk, and drops both.
+//!
+//! **Byte parity is the determinism contract.** Both backends charge the
+//! same byte sequence per reducer — the encoded size of the input shard
+//! *before* loading it, then the encoded size of the output (computed
+//! arithmetically via [`Spillable::encoded_len`], before any encoding) —
+//! and release both at the end. Peaks, traces, `RunReport`s and
+//! `dist_evals` are therefore bit-identical across backends and thread
+//! counts; the only backend-dependent numbers are the wall-gated
+//! `spill_read`/`spill_write` span fields, which the stable trace form
+//! omits. Because every charge precedes the corresponding
+//! materialization, a run under budget B either completes with peak
+//! resident bytes ≤ B or fails with a structured [`ExecError::OverBudget`]
+//! — never an OOM kill. Transient codec buffers and broadcast state
+//! (e.g. the r2 C_w) are item-metered only.
+//!
+//! Backend selection is configuration, not code: [`ExecutorCfg::default`]
+//! reads `MRCORESET_EXECUTOR` (`mem`|`spill`) and `MRCORESET_MEM_BUDGET`
+//! (bytes, `k`/`m`/`g` suffixes), which is how CI re-runs the whole
+//! suite out-of-core with a tight budget and zero code changes.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::obs::Recorder;
+
+use super::memory::MemoryMeter;
+use super::spill::{ShardRef, SpillStore, Spillable};
+use super::{Cardinality, JobStats, Simulator, SlotOut};
+
+/// Structured executor failure. Over-budget is the interesting one: it
+/// carries exactly which round/reducer refused which charge, so a run
+/// that does not fit in its memory budget dies with an actionable error
+/// instead of an OOM kill.
+#[derive(Debug)]
+pub enum ExecError {
+    OverBudget { round: String, reducer: usize, needed: u64, budget: u64, resident: u64 },
+    Io { context: String, source: std::io::Error },
+    Codec { context: String, detail: String },
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::OverBudget { round, reducer, needed, budget, resident } => write!(
+                f,
+                "memory budget exceeded in round '{round}' reducer {reducer}: needs {needed} \
+                 more bytes with {resident} resident against a budget of {budget}"
+            ),
+            ExecError::Io { context, source } => write!(f, "spill I/O failed ({context}): {source}"),
+            ExecError::Codec { context, detail } => {
+                write!(f, "corrupt spill shard ({context}): {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ExecError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// One round's worth of reducer values, owned by a backend: either
+/// resident vectors (in-memory) or per-value disk shards (spill). The
+/// key operation is [`Manifest::shard_bytes`] — the exact encoded size
+/// of slot `i`, known *without* touching the disk, so executors can
+/// charge the byte budget before materializing anything.
+pub enum Manifest<T> {
+    Mem(Vec<T>),
+    Spill { store: Arc<SpillStore>, shards: Vec<ShardRef> },
+}
+
+/// A materialized manifest slot: borrowed straight out of an in-memory
+/// manifest, or owned freshly-decoded bytes from a spill shard.
+pub enum Shard<'a, T> {
+    Borrowed(&'a T),
+    Owned(T),
+}
+
+impl<T> std::ops::Deref for Shard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        match self {
+            Shard::Borrowed(t) => t,
+            Shard::Owned(t) => t,
+        }
+    }
+}
+
+fn decode_shard<T: Spillable>(store: &SpillStore, shard: &ShardRef) -> Result<T, ExecError> {
+    let payload = store.read(shard).map_err(|e| ExecError::Io {
+        context: format!("read shard {}", shard.tag),
+        source: e,
+    })?;
+    let mut d = super::spill::Decoder::new(&payload);
+    let value = T::decode(&mut d).map_err(|e| ExecError::Codec {
+        context: format!("decode shard {}", shard.tag),
+        detail: e.0,
+    })?;
+    d.finish().map_err(|e| ExecError::Codec {
+        context: format!("decode shard {}", shard.tag),
+        detail: e.0,
+    })?;
+    Ok(value)
+}
+
+impl<T: Spillable> Manifest<T> {
+    pub fn len(&self) -> usize {
+        match self {
+            Manifest::Mem(items) => items.len(),
+            Manifest::Spill { shards, .. } => shards.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Exact encoded size of slot `i`, without any I/O.
+    pub fn shard_bytes(&self, i: usize) -> u64 {
+        match self {
+            Manifest::Mem(items) => items[i].encoded_len(),
+            Manifest::Spill { shards, .. } => shards[i].bytes,
+        }
+    }
+
+    /// Total encoded size of the manifest (the round's shuffle volume).
+    pub fn total_bytes(&self) -> u64 {
+        match self {
+            Manifest::Mem(items) => items.iter().map(Spillable::encoded_len).sum(),
+            Manifest::Spill { shards, .. } => shards.iter().map(|s| s.bytes).sum(),
+        }
+    }
+
+    /// Materialize slot `i` (borrow in memory, read + decode on spill).
+    pub fn load(&self, i: usize) -> Result<Shard<'_, T>, ExecError> {
+        match self {
+            Manifest::Mem(items) => Ok(Shard::Borrowed(&items[i])),
+            Manifest::Spill { store, shards } => {
+                Ok(Shard::Owned(decode_shard(store, &shards[i])?))
+            }
+        }
+    }
+
+    /// Visit every value in slot order, materializing one at a time —
+    /// the coordinator-side streaming fold (e.g. merging per-partition
+    /// coresets) that never holds more than one shard resident.
+    pub fn for_each(&self, mut f: impl FnMut(&T)) -> Result<(), ExecError> {
+        match self {
+            Manifest::Mem(items) => {
+                for t in items {
+                    f(t);
+                }
+                Ok(())
+            }
+            Manifest::Spill { store, shards } => {
+                for s in shards {
+                    let item = decode_shard::<T>(store, s)?;
+                    f(&item);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Own every value (decodes all shards on spill) — for terminal
+    /// single-slot manifests like the final solution.
+    pub fn into_items(self) -> Result<Vec<T>, ExecError> {
+        match self {
+            Manifest::Mem(items) => Ok(items),
+            Manifest::Spill { store, shards } => {
+                let mut out = Vec::with_capacity(shards.len());
+                for s in &shards {
+                    out.push(decode_shard(&store, s)?);
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// A pluggable MapReduce execution backend.
+///
+/// Note for concrete [`Simulator`] call sites: its inherent legacy
+/// `round(Vec<I>)` shadows the trait method in method-call syntax; reach
+/// the manifest-based round via generics or `Executor::round(&sim, ..)`.
+pub trait Executor {
+    /// Place the coordinator-built values under backend ownership (the
+    /// scatter step of a round: in RAM, or encoded out to shards).
+    fn scatter<T>(&self, parts: Vec<T>) -> Result<Manifest<T>, ExecError>
+    where
+        T: Spillable;
+
+    /// Execute one parallel round over a manifest: `f(i, input, meter)`
+    /// per slot, outputs returned as a new manifest in input order.
+    fn round<I, O, F>(
+        &self,
+        name: &str,
+        inputs: &Manifest<I>,
+        f: F,
+    ) -> Result<Manifest<O>, ExecError>
+    where
+        I: Spillable + Cardinality + Sync,
+        O: Spillable + Cardinality + Send,
+        F: Fn(usize, &I, &mut MemoryMeter) -> O + Sync;
+
+    /// Take the accumulated job statistics (resets the backend).
+    fn take_stats(&self) -> JobStats;
+}
+
+/// The in-RAM backend is the simulator itself.
+pub type InMemoryExecutor = Simulator;
+
+fn charge(
+    meter: &mut MemoryMeter,
+    round: &str,
+    reducer: usize,
+    bytes: u64,
+) -> Result<(), ExecError> {
+    meter.try_charge_bytes(bytes).map_err(|e| ExecError::OverBudget {
+        round: round.to_string(),
+        reducer,
+        needed: e.needed,
+        budget: e.budget,
+        resident: e.resident,
+    })
+}
+
+impl Executor for Simulator {
+    fn scatter<T>(&self, parts: Vec<T>) -> Result<Manifest<T>, ExecError>
+    where
+        T: Spillable,
+    {
+        Ok(Manifest::Mem(parts))
+    }
+
+    fn round<I, O, F>(
+        &self,
+        name: &str,
+        inputs: &Manifest<I>,
+        f: F,
+    ) -> Result<Manifest<O>, ExecError>
+    where
+        I: Spillable + Cardinality + Sync,
+        O: Spillable + Cardinality + Send,
+        F: Fn(usize, &I, &mut MemoryMeter) -> O + Sync,
+    {
+        let outs = self.round_impl(name, inputs.len(), |i, meter| {
+            let in_bytes = inputs.shard_bytes(i);
+            charge(meter, name, i, in_bytes)?;
+            let shard = inputs.load(i)?;
+            let input: &I = &shard;
+            let in_card = input.cardinality();
+            let out = f(i, input, meter);
+            let out_bytes = out.encoded_len();
+            charge(meter, name, i, out_bytes)?;
+            meter.release_bytes(in_bytes + out_bytes);
+            let out_card = out.cardinality();
+            Ok(SlotOut {
+                out,
+                in_card,
+                out_card,
+                in_bytes,
+                out_bytes,
+                spill_read: 0,
+                spill_write: 0,
+            })
+        })?;
+        Ok(Manifest::Mem(outs))
+    }
+
+    fn take_stats(&self) -> JobStats {
+        Simulator::take_stats(self)
+    }
+}
+
+/// Out-of-core backend: manifests live on disk, reducers materialize
+/// one input shard at a time under the simulator's hard byte budget,
+/// and outputs are encoded back out before the next slot runs. Stats,
+/// traces and results are bit-identical to the in-memory backend.
+pub struct SpillExecutor {
+    sim: Simulator,
+    store: Arc<SpillStore>,
+    seq: AtomicU64,
+}
+
+impl SpillExecutor {
+    /// Wrap a configured simulator (threads / budgets / recorder) with a
+    /// shard store at `dir`, or a fresh temp directory (removed when the
+    /// last manifest referencing it drops) when `None`.
+    pub fn new(sim: Simulator, dir: Option<&Path>) -> Result<SpillExecutor, ExecError> {
+        let store = SpillStore::create(dir).map_err(|e| ExecError::Io {
+            context: "create spill store".to_string(),
+            source: e,
+        })?;
+        Ok(SpillExecutor { sim, store: Arc::new(store), seq: AtomicU64::new(0) })
+    }
+
+    pub fn store_dir(&self) -> &Path {
+        self.store.dir()
+    }
+}
+
+impl Executor for SpillExecutor {
+    fn scatter<T>(&self, parts: Vec<T>) -> Result<Manifest<T>, ExecError>
+    where
+        T: Spillable,
+    {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut shards = Vec::with_capacity(parts.len());
+        let mut buf = Vec::new();
+        for (i, p) in parts.iter().enumerate() {
+            buf.clear();
+            p.encode(&mut buf);
+            debug_assert_eq!(buf.len() as u64, p.encoded_len(), "encoded_len must be exact");
+            let tag = format!("s{seq}-{i}");
+            let shard = self.store.write(&tag, &buf).map_err(|e| ExecError::Io {
+                context: format!("write shard {tag}"),
+                source: e,
+            })?;
+            shards.push(shard);
+        }
+        Ok(Manifest::Spill { store: Arc::clone(&self.store), shards })
+    }
+
+    fn round<I, O, F>(
+        &self,
+        name: &str,
+        inputs: &Manifest<I>,
+        f: F,
+    ) -> Result<Manifest<O>, ExecError>
+    where
+        I: Spillable + Cardinality + Sync,
+        O: Spillable + Cardinality + Send,
+        F: Fn(usize, &I, &mut MemoryMeter) -> O + Sync,
+    {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let store = &self.store;
+        let from_disk = matches!(inputs, Manifest::Spill { .. });
+        let shards = self.sim.round_impl(name, inputs.len(), |i, meter| {
+            let in_bytes = inputs.shard_bytes(i);
+            charge(meter, name, i, in_bytes)?;
+            let shard = inputs.load(i)?;
+            let input: &I = &shard;
+            let in_card = input.cardinality();
+            let out = f(i, input, meter);
+            let out_bytes = out.encoded_len();
+            charge(meter, name, i, out_bytes)?;
+            let out_card = out.cardinality();
+            let mut buf = Vec::with_capacity(out_bytes as usize);
+            out.encode(&mut buf);
+            debug_assert_eq!(buf.len() as u64, out_bytes, "encoded_len must be exact");
+            drop(out);
+            let tag = format!("r{seq}-{i}");
+            let sref = store.write(&tag, &buf).map_err(|e| ExecError::Io {
+                context: format!("write shard {tag}"),
+                source: e,
+            })?;
+            meter.release_bytes(in_bytes + out_bytes);
+            Ok(SlotOut {
+                out: sref,
+                in_card,
+                out_card,
+                in_bytes,
+                out_bytes,
+                spill_read: if from_disk { in_bytes } else { 0 },
+                spill_write: out_bytes,
+            })
+        })?;
+        Ok(Manifest::Spill { store: Arc::clone(&self.store), shards })
+    }
+
+    fn take_stats(&self) -> JobStats {
+        self.sim.take_stats()
+    }
+}
+
+/// Backend selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecBackend {
+    InMemory,
+    Spill,
+}
+
+/// Parse a byte count: a plain integer, optionally with a trailing
+/// `k`/`m`/`g` (powers of 1024, case-insensitive). `parse_bytes("8m")`
+/// is 8 MiB.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim();
+    let (num, mult) = match t.chars().last()? {
+        'k' | 'K' => (&t[..t.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&t[..t.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&t[..t.len() - 1], 1u64 << 30),
+        _ => (t, 1),
+    };
+    num.trim().parse::<u64>().ok().and_then(|n| n.checked_mul(mult))
+}
+
+/// Declarative executor choice carried by `ClusterConfig`.
+///
+/// The default reads `MRCORESET_EXECUTOR` and `MRCORESET_MEM_BUDGET`
+/// from the environment (falling back to unbudgeted in-memory), so an
+/// entire test suite or CI leg can be switched out-of-core without
+/// touching code.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecutorCfg {
+    pub backend: ExecBackend,
+    /// Hard per-reducer byte budget (both backends enforce it).
+    pub mem_budget: Option<u64>,
+    /// Spill shard directory; fresh temp dir when `None`.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for ExecutorCfg {
+    fn default() -> ExecutorCfg {
+        let backend = match std::env::var("MRCORESET_EXECUTOR").ok().as_deref() {
+            Some("spill") => ExecBackend::Spill,
+            _ => ExecBackend::InMemory,
+        };
+        let mem_budget =
+            std::env::var("MRCORESET_MEM_BUDGET").ok().and_then(|s| parse_bytes(&s));
+        ExecutorCfg { backend, mem_budget, spill_dir: None }
+    }
+}
+
+impl ExecutorCfg {
+    pub fn in_memory() -> ExecutorCfg {
+        ExecutorCfg { backend: ExecBackend::InMemory, mem_budget: None, spill_dir: None }
+    }
+
+    pub fn spill() -> ExecutorCfg {
+        ExecutorCfg { backend: ExecBackend::Spill, mem_budget: None, spill_dir: None }
+    }
+
+    pub fn with_budget(mut self, bytes: u64) -> ExecutorCfg {
+        self.mem_budget = Some(bytes);
+        self
+    }
+
+    /// Build the backend around a simulator configured with `threads`
+    /// and `recorder`.
+    pub fn build(
+        &self,
+        threads: Option<usize>,
+        recorder: Arc<dyn Recorder>,
+    ) -> Result<ExecutorHandle, ExecError> {
+        let mut sim = Simulator::new().with_recorder(recorder);
+        if let Some(t) = threads {
+            sim = sim.with_threads(t);
+        }
+        if let Some(b) = self.mem_budget {
+            sim = sim.with_byte_budget(b);
+        }
+        match self.backend {
+            ExecBackend::InMemory => Ok(ExecutorHandle::Mem(sim)),
+            ExecBackend::Spill => {
+                Ok(ExecutorHandle::Spill(SpillExecutor::new(sim, self.spill_dir.as_deref())?))
+            }
+        }
+    }
+}
+
+/// A built backend, dispatched by enum so the driver stays object-safe
+/// (the `Executor` trait has generic methods and cannot be boxed).
+pub enum ExecutorHandle {
+    Mem(Simulator),
+    Spill(SpillExecutor),
+}
+
+impl Executor for ExecutorHandle {
+    fn scatter<T>(&self, parts: Vec<T>) -> Result<Manifest<T>, ExecError>
+    where
+        T: Spillable,
+    {
+        match self {
+            ExecutorHandle::Mem(sim) => sim.scatter(parts),
+            ExecutorHandle::Spill(sp) => sp.scatter(parts),
+        }
+    }
+
+    fn round<I, O, F>(
+        &self,
+        name: &str,
+        inputs: &Manifest<I>,
+        f: F,
+    ) -> Result<Manifest<O>, ExecError>
+    where
+        I: Spillable + Cardinality + Sync,
+        O: Spillable + Cardinality + Send,
+        F: Fn(usize, &I, &mut MemoryMeter) -> O + Sync,
+    {
+        match self {
+            ExecutorHandle::Mem(sim) => Executor::round(sim, name, inputs, f),
+            ExecutorHandle::Spill(sp) => sp.round(name, inputs, f),
+        }
+    }
+
+    fn take_stats(&self) -> JobStats {
+        match self {
+            ExecutorHandle::Mem(sim) => Executor::take_stats(sim),
+            ExecutorHandle::Spill(sp) => sp.take_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doubling_round<E: Executor>(exec: &E, budget_ok: bool) {
+        let parts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![4, 5], vec![6]];
+        let inputs = exec.scatter(parts).expect("scatter");
+        assert_eq!(inputs.len(), 3);
+        assert_eq!(inputs.shard_bytes(0), 8 + 3 * 4);
+        let out = exec.round("double", &inputs, |_, p: &Vec<u32>, m| {
+            m.charge(p.len());
+            let d: Vec<u32> = p.iter().map(|x| x * 2).collect();
+            m.release(p.len());
+            d
+        });
+        if !budget_ok {
+            assert!(matches!(out, Err(ExecError::OverBudget { .. })), "tight budget must refuse");
+            return;
+        }
+        let out = out.expect("round").into_items().expect("collect");
+        assert_eq!(out, vec![vec![2, 4, 6], vec![8, 10], vec![12]]);
+        let stats = exec.take_stats();
+        // in 8+12, out 8+12 for the largest slot: peak 40 bytes
+        assert_eq!(stats.rounds[0].max_local_bytes, 40);
+        assert_eq!(stats.rounds[0].reducer_mem_bytes, vec![40, 32, 24]);
+        assert_eq!(stats.rounds[0].in_items, 6);
+        assert_eq!(stats.rounds[0].out_items, 6);
+    }
+
+    #[test]
+    fn in_memory_round_meters_bytes() {
+        let sim = Simulator::new().with_threads(2);
+        doubling_round(&sim, true);
+    }
+
+    #[test]
+    fn spill_round_matches_in_memory_accounting() {
+        let sp = SpillExecutor::new(Simulator::new().with_threads(2), None).expect("store");
+        doubling_round(&sp, true);
+    }
+
+    #[test]
+    fn both_backends_refuse_over_budget_identically() {
+        // largest slot needs 40 resident bytes; 39 must fail on both
+        let sim = Simulator::new().with_threads(1).with_byte_budget(39);
+        doubling_round(&sim, false);
+        let sp = SpillExecutor::new(Simulator::new().with_threads(1).with_byte_budget(39), None)
+            .expect("store");
+        doubling_round(&sp, false);
+        // ...and 40 exactly is enough
+        let sim = Simulator::new().with_threads(1).with_byte_budget(40);
+        doubling_round(&sim, true);
+        let sp = SpillExecutor::new(Simulator::new().with_threads(1).with_byte_budget(40), None)
+            .expect("store");
+        doubling_round(&sp, true);
+    }
+
+    #[test]
+    fn spill_round_reports_disk_traffic() {
+        let sp = SpillExecutor::new(Simulator::new().with_threads(1), None).expect("store");
+        let inputs = sp.scatter(vec![vec![7u32, 8]]).expect("scatter");
+        let out = sp.round("id", &inputs, |_, p: &Vec<u32>, _| p.clone()).expect("round");
+        assert!(matches!(out, Manifest::Spill { .. }));
+        let stats = sp.take_stats();
+        assert_eq!(stats.rounds[0].spill_read_bytes, 16);
+        assert_eq!(stats.rounds[0].spill_write_bytes, 16);
+        assert_eq!(stats.spill_write_bytes(), 16);
+    }
+
+    #[test]
+    fn streaming_fold_visits_in_slot_order() {
+        let sp = SpillExecutor::new(Simulator::new(), None).expect("store");
+        let m = sp.scatter(vec![vec![1u32], vec![2], vec![3]]).expect("scatter");
+        let mut seen = Vec::new();
+        m.for_each(|v| seen.push(v[0])).expect("fold");
+        assert_eq!(seen, vec![1, 2, 3]);
+        assert_eq!(m.total_bytes(), 3 * 12);
+    }
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("1048576"), Some(1 << 20));
+        assert_eq!(parse_bytes("64k"), Some(64 << 10));
+        assert_eq!(parse_bytes("8M"), Some(8 << 20));
+        assert_eq!(parse_bytes("2g"), Some(2 << 30));
+        assert_eq!(parse_bytes(" 16m "), Some(16 << 20));
+        assert_eq!(parse_bytes(""), None);
+        assert_eq!(parse_bytes("m"), None);
+        assert_eq!(parse_bytes("x12"), None);
+    }
+
+    #[test]
+    fn executor_cfg_builds_both_backends() {
+        let mem = ExecutorCfg::in_memory().build(Some(2), crate::obs::noop()).expect("mem");
+        assert!(matches!(mem, ExecutorHandle::Mem(_)));
+        let spill = ExecutorCfg::spill().with_budget(1 << 20);
+        let h = spill.build(Some(2), crate::obs::noop()).expect("spill");
+        assert!(matches!(h, ExecutorHandle::Spill(_)));
+    }
+}

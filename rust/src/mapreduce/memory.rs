@@ -1,21 +1,49 @@
-//! Local-memory accounting for the MapReduce simulator.
+//! Local-memory accounting for the MapReduce executors.
 //!
 //! The MapReduce model (paper §2) bounds two quantities: M_L, the local
-//! memory of each reducer, and M_A, the aggregate memory. The simulator
-//! cannot introspect allocations, so drivers *charge* the meter for every
-//! object a real reducer would hold (its partition, broadcast state,
-//! output), in units of points; peak local usage is what Theorem 3.14
-//! bounds as O(|P|^{2/3} k^{1/3} (c/ε)^{2D} log² |P|).
+//! memory of each reducer, and M_A, the aggregate memory. Two ledgers
+//! coexist in one meter:
+//!
+//! - **Items** (`charge`/`release`): drivers charge one unit per
+//!   point-sized record a real reducer would hold (its partition,
+//!   broadcast state, output). Peak item usage is what Theorem 3.14
+//!   bounds as O(|P|^{2/3} k^{1/3} (c/ε)^{2D} log² |P|). The item budget
+//!   is *soft*: exceeding it latches a violation flag that experiments
+//!   assert on, but the round keeps running.
+//! - **Bytes** (`try_charge_bytes`/`release_bytes`): executors charge
+//!   the encoded size of every shard before materializing it. The byte
+//!   budget is *hard*: a charge that would exceed it fails with
+//!   [`OverBudget`] — without charging — so an out-of-core run degrades
+//!   into a structured error instead of an OOM kill. Transient codec
+//!   buffers and broadcast state are item-metered only.
 
-/// Per-reducer memory meter (units: points / point-sized records).
+/// A byte charge was refused because it would exceed the hard budget.
+///
+/// Returned by [`MemoryMeter::try_charge_bytes`]; the failed charge is
+/// *not* applied, so `resident` is the usage at the moment of refusal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OverBudget {
+    /// Size of the refused charge.
+    pub needed: u64,
+    /// The configured hard budget.
+    pub budget: u64,
+    /// Bytes already resident when the charge was refused.
+    pub resident: u64,
+}
+
+/// Per-reducer memory meter (items = point-sized records, plus bytes).
 #[derive(Clone, Debug, Default)]
 pub struct MemoryMeter {
     current: usize,
     peak: usize,
-    /// Optional hard budget: exceeding it marks a violation (experiments
+    /// Optional soft budget: exceeding it marks a violation (experiments
     /// assert none occur at the theory-predicted budget).
     budget: Option<usize>,
     violated: bool,
+    bytes_current: u64,
+    bytes_peak: u64,
+    /// Optional hard budget on resident bytes; see [`OverBudget`].
+    byte_budget: Option<u64>,
 }
 
 impl MemoryMeter {
@@ -25,6 +53,10 @@ impl MemoryMeter {
 
     pub fn with_budget(budget: usize) -> MemoryMeter {
         MemoryMeter { budget: Some(budget), ..Default::default() }
+    }
+
+    pub fn with_budgets(budget: Option<usize>, byte_budget: Option<u64>) -> MemoryMeter {
+        MemoryMeter { budget, byte_budget, ..Default::default() }
     }
 
     /// Charge `items` resident records.
@@ -45,6 +77,27 @@ impl MemoryMeter {
         self.current = self.current.saturating_sub(items);
     }
 
+    /// Charge `bytes` of resident shard data, refusing (without charging)
+    /// any charge that would push residency past the hard byte budget.
+    pub fn try_charge_bytes(&mut self, bytes: u64) -> Result<(), OverBudget> {
+        let next = self.bytes_current.saturating_add(bytes);
+        if let Some(b) = self.byte_budget {
+            if next > b {
+                return Err(OverBudget { needed: bytes, budget: b, resident: self.bytes_current });
+            }
+        }
+        self.bytes_current = next;
+        if next > self.bytes_peak {
+            self.bytes_peak = next;
+        }
+        Ok(())
+    }
+
+    /// Release `bytes` of resident shard data.
+    pub fn release_bytes(&mut self, bytes: u64) {
+        self.bytes_current = self.bytes_current.saturating_sub(bytes);
+    }
+
     pub fn peak(&self) -> usize {
         self.peak
     }
@@ -55,6 +108,18 @@ impl MemoryMeter {
 
     pub fn violated(&self) -> bool {
         self.violated
+    }
+
+    pub fn bytes_peak(&self) -> u64 {
+        self.bytes_peak
+    }
+
+    pub fn bytes_current(&self) -> u64 {
+        self.bytes_current
+    }
+
+    pub fn byte_budget(&self) -> Option<u64> {
+        self.byte_budget
     }
 }
 
@@ -91,5 +156,74 @@ mod tests {
         m.charge(3);
         m.release(100);
         assert_eq!(m.current(), 0);
+    }
+
+    #[test]
+    fn bytes_track_peak_independently_of_items() {
+        let mut m = MemoryMeter::new();
+        m.try_charge_bytes(100).unwrap();
+        m.try_charge_bytes(50).unwrap();
+        m.release_bytes(120);
+        m.try_charge_bytes(40).unwrap();
+        assert_eq!(m.bytes_peak(), 150);
+        assert_eq!(m.bytes_current(), 70);
+        assert_eq!(m.peak(), 0, "byte charges must not touch the item ledger");
+    }
+
+    #[test]
+    fn byte_charge_to_exactly_the_budget_is_allowed() {
+        let mut m = MemoryMeter::with_budgets(None, Some(64));
+        m.try_charge_bytes(40).unwrap();
+        m.try_charge_bytes(24).unwrap();
+        assert_eq!(m.bytes_current(), 64);
+        assert_eq!(m.bytes_peak(), 64);
+    }
+
+    #[test]
+    fn over_budget_charge_fails_without_charging() {
+        let mut m = MemoryMeter::with_budgets(None, Some(64));
+        m.try_charge_bytes(60).unwrap();
+        let err = m.try_charge_bytes(5).unwrap_err();
+        assert_eq!(err, OverBudget { needed: 5, budget: 64, resident: 60 });
+        // the refused charge left the ledger untouched: after releasing,
+        // a charge that fits succeeds
+        assert_eq!(m.bytes_current(), 60);
+        assert_eq!(m.bytes_peak(), 60);
+        m.release_bytes(60);
+        m.try_charge_bytes(64).unwrap();
+        assert_eq!(m.bytes_current(), 64);
+    }
+
+    #[test]
+    fn single_oversized_charge_reports_zero_resident() {
+        let mut m = MemoryMeter::with_budgets(None, Some(10));
+        let err = m.try_charge_bytes(11).unwrap_err();
+        assert_eq!(err, OverBudget { needed: 11, budget: 10, resident: 0 });
+    }
+
+    #[test]
+    fn byte_release_saturates() {
+        let mut m = MemoryMeter::new();
+        m.try_charge_bytes(8).unwrap();
+        m.release_bytes(1000);
+        assert_eq!(m.bytes_current(), 0);
+        assert_eq!(m.bytes_peak(), 8);
+    }
+
+    #[test]
+    fn no_byte_budget_means_unbounded() {
+        let mut m = MemoryMeter::new();
+        m.try_charge_bytes(u64::MAX).unwrap();
+        m.try_charge_bytes(u64::MAX).unwrap(); // saturates, must not panic
+        assert_eq!(m.bytes_current(), u64::MAX);
+    }
+
+    #[test]
+    fn item_budget_and_byte_budget_are_independent() {
+        let mut m = MemoryMeter::with_budgets(Some(10), Some(100));
+        m.charge(50); // item violation latches, but items stay soft
+        assert!(m.violated());
+        m.try_charge_bytes(100).unwrap(); // bytes at the boundary: fine
+        assert!(m.try_charge_bytes(1).is_err());
     }
 }

@@ -1,31 +1,45 @@
-//! Thread-backed MapReduce round simulator (substrate S1, DESIGN.md §5).
+//! Thread-backed MapReduce execution layer (substrate S1, DESIGN.md §5).
 //!
 //! The paper's model (§2): a MapReduce algorithm runs in a sequence of
 //! rounds; in each round, reducers independently process disjoint groups
 //! of key-value pairs under a local memory budget M_L, with aggregate
-//! memory M_A across all reducers. This simulator executes each round's
-//! reducers as real parallel threads, and — what the theory actually
-//! bounds — *measures* per-reducer peak local memory, aggregate memory,
-//! and shuffle volumes, via `MemoryMeter` charges from the drivers.
+//! memory M_A across all reducers. Execution is pluggable behind the
+//! [`executor::Executor`] trait:
+//!
+//! - [`Simulator`] (alias [`executor::InMemoryExecutor`]) runs each
+//!   round's reducers as real parallel threads with every input resident
+//!   in RAM, and — what the theory actually bounds — *measures*
+//!   per-reducer peak local memory, aggregate memory, and shuffle
+//!   volumes, via `MemoryMeter` charges from the drivers.
+//! - [`executor::SpillExecutor`] keeps round inputs/outputs on disk
+//!   ([`spill`]) and materializes one shard at a time under a hard
+//!   per-reducer byte budget — same results bit-for-bit, bounded RAM.
 //!
 //! Next to memory, each round also accounts **distance evaluations** —
 //! the work measure that dominates every algorithm in this family. Every
-//! reducer closure runs entirely on one thread, so `Simulator::round`
+//! reducer closure runs entirely on one thread, so the round engine
 //! brackets it with `metric::counter::thread_count()` reads and records
 //! the per-reducer deltas in `RoundStats::reducer_dist_evals` (summed in
 //! `dist_evals`); no instrumentation is needed in the drivers.
 //!
-//! Rounds are explicit (`Simulator::round`), so the round count of an
-//! algorithm is simply the number of `round` calls it makes (E7 asserts
-//! the paper's 3 rounds).
+//! Rounds are explicit (`Simulator::round` / `Executor::round`), so the
+//! round count of an algorithm is simply the number of `round` calls it
+//! makes (E7 asserts the paper's 3 rounds).
 
 pub mod cardinality;
+pub mod executor;
 pub mod memory;
 pub mod partition;
+pub mod spill;
 
 pub use cardinality::Cardinality;
-pub use memory::MemoryMeter;
-pub use partition::{default_l, partition, PartitionStrategy};
+pub use executor::{
+    parse_bytes, ExecBackend, ExecError, Executor, ExecutorCfg, ExecutorHandle, InMemoryExecutor,
+    Manifest, Shard, SpillExecutor,
+};
+pub use memory::{MemoryMeter, OverBudget};
+pub use partition::{default_l, partition, partition_reported, PartitionStrategy};
+pub use spill::{CodecError, Decoder, ShardRef, SpillStore, Spillable};
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -47,6 +61,17 @@ pub struct RoundStats {
     /// peak local memory (points) of each reducer (input order) — the
     /// per-machine distribution behind `max_local_peak`
     pub reducer_mem_peaks: Vec<usize>,
+    /// peak resident *bytes* of each reducer (input order): the encoded
+    /// sizes charged by the executor for shards held at once. All-zero
+    /// for rounds driven through the item-only legacy `round` API.
+    pub reducer_mem_bytes: Vec<u64>,
+    /// max over reducers of peak resident bytes — the measured M_L in
+    /// bytes that the spill backend's hard budget bounds
+    pub max_local_bytes: u64,
+    /// bytes actually read from / written to the spill store by this
+    /// round (0 under the in-memory backend)
+    pub spill_read_bytes: u64,
+    pub spill_write_bytes: u64,
     /// distance evaluations charged by each reducer (input order)
     pub reducer_dist_evals: Vec<u64>,
     /// Σ over reducers — the round's distance-evaluation work
@@ -65,6 +90,12 @@ impl RoundStats {
     /// Per-reducer peak-memory distribution (p50/p95/max, in points).
     pub fn mem_distribution(&self) -> Distribution {
         let v: Vec<f64> = self.reducer_mem_peaks.iter().map(|&m| m as f64).collect();
+        Distribution::of(&v)
+    }
+
+    /// Per-reducer peak resident-bytes distribution.
+    pub fn bytes_distribution(&self) -> Distribution {
+        let v: Vec<f64> = self.reducer_mem_bytes.iter().map(|&m| m as f64).collect();
         Distribution::of(&v)
     }
 
@@ -101,6 +132,17 @@ impl JobStats {
         self.rounds.iter().map(|r| r.aggregate_peak).max().unwrap_or(0)
     }
 
+    /// The job's measured M_L in bytes: max over rounds of the largest
+    /// per-reducer resident encoded footprint.
+    pub fn max_local_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.max_local_bytes).max().unwrap_or(0)
+    }
+
+    /// Total bytes spilled to disk across the job (0 in-memory).
+    pub fn spill_write_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.spill_write_bytes).sum()
+    }
+
     pub fn total_violations(&self) -> usize {
         self.rounds.iter().map(|r| r.budget_violations).sum()
     }
@@ -126,13 +168,32 @@ impl JobStats {
     }
 }
 
-/// The simulator: runs rounds, accumulates stats.
+/// One reducer's result inside the round engine: the output value plus
+/// the byte/item accounting the backend measured for it. Backends build
+/// this in their worker closures; `round_impl` folds it into
+/// `RoundStats` and trace events.
+pub(crate) struct SlotOut<R> {
+    pub out: R,
+    pub in_card: u64,
+    pub out_card: u64,
+    pub in_bytes: u64,
+    pub out_bytes: u64,
+    pub spill_read: u64,
+    pub spill_write: u64,
+}
+
+/// The in-memory executor: runs rounds on a thread pool, accumulates
+/// stats. (Kept under its historical name; `InMemoryExecutor` is an
+/// alias.)
 pub struct Simulator {
     threads: usize,
     /// Optional per-reducer local-memory budget (points); reducers
     /// exceeding it are *recorded* (not killed), so experiments can
     /// assert the theoretical budget holds.
     local_budget: Option<usize>,
+    /// Optional hard per-reducer byte budget, enforced by executors on
+    /// every shard charge; see `MemoryMeter::try_charge_bytes`.
+    byte_budget: Option<u64>,
     /// Telemetry sink; `obs::noop()` (disabled) by default. All events
     /// are emitted by the coordinator thread in (round, reducer) order,
     /// so traces are bit-identical across `threads` settings.
@@ -145,6 +206,7 @@ impl Simulator {
         Simulator {
             threads: default_threads(),
             local_budget: None,
+            byte_budget: None,
             recorder: obs::noop(),
             stats: Mutex::new(JobStats::default()),
         }
@@ -160,6 +222,11 @@ impl Simulator {
         self
     }
 
+    pub fn with_byte_budget(mut self, budget: u64) -> Simulator {
+        self.byte_budget = Some(budget);
+        self
+    }
+
     pub fn with_recorder(mut self, recorder: Arc<dyn Recorder>) -> Simulator {
         self.recorder = recorder;
         self
@@ -168,14 +235,58 @@ impl Simulator {
     /// Execute one parallel round: `f(reducer_index, input, meter)` runs
     /// for each input group on the thread pool. Returns reducer outputs
     /// in input order.
+    ///
+    /// This is the legacy owned-`Vec` API (no byte accounting, never
+    /// fails); executor-driven rounds go through `round_impl` with shard
+    /// manifests and hard byte budgets instead.
     pub fn round<I, O, F>(&self, name: &str, inputs: Vec<I>, f: F) -> Vec<O>
     where
         I: Send + Sync + Cardinality,
         O: Send + Cardinality,
         F: Fn(usize, &I, &mut MemoryMeter) -> O + Sync,
     {
+        let res = self.round_impl(name, inputs.len(), |i, meter| {
+            let input = &inputs[i];
+            let in_card = input.cardinality();
+            let out = f(i, input, meter);
+            let out_card = out.cardinality();
+            Ok(SlotOut {
+                out,
+                in_card,
+                out_card,
+                in_bytes: 0,
+                out_bytes: 0,
+                spill_read: 0,
+                spill_write: 0,
+            })
+        });
+        match res {
+            Ok(outs) => outs,
+            Err(e) => unreachable!("legacy in-RAM rounds never charge bytes: {e}"),
+        }
+    }
+
+    /// The round engine shared by every backend: schedules `work` per
+    /// reducer on the thread pool, brackets it with distance/counter
+    /// tallies, emits trace events in (round, reducer) input order on
+    /// this thread, and folds `SlotOut` accounting into `RoundStats`.
+    ///
+    /// Failure is deterministic: all workers run to completion, then the
+    /// error of the lowest-indexed failing reducer is returned — never
+    /// the one that happened to lose the wall-clock race. A failed round
+    /// records no `RoundStats` and no `RoundEnd` event, so a trace that
+    /// ends after a `round_start` marks the failing round.
+    pub(crate) fn round_impl<R, W>(
+        &self,
+        name: &str,
+        reducers: usize,
+        work: W,
+    ) -> Result<Vec<R>, ExecError>
+    where
+        R: Send,
+        W: Fn(usize, &mut MemoryMeter) -> Result<SlotOut<R>, ExecError> + Sync,
+    {
         let t0 = Instant::now();
-        let reducers = inputs.len();
         // round index within the current job (take_stats resets it)
         let round_idx = self.stats.lock().unwrap().rounds.len() as u32;
         let traced = self.recorder.enabled();
@@ -186,77 +297,101 @@ impl Simulator {
                 reducers: reducers as u32,
             });
         }
-        let in_cards: Vec<u64> = inputs.iter().map(Cardinality::cardinality).collect();
         let results = scoped_map(reducers, self.threads, |i| {
-            let mut meter = match self.local_budget {
-                Some(b) => MemoryMeter::with_budget(b),
-                None => MemoryMeter::new(),
-            };
+            let mut meter = MemoryMeter::with_budgets(self.local_budget, self.byte_budget);
             // the reducer runs entirely on this thread, so the tally
             // deltas (dist_evals and named obs counters) are exactly its
             // own work
             let evals0 = counter::thread_count();
             let obs0 = obs_counters::snapshot();
             let rt0 = Instant::now();
-            let out = f(i, &inputs[i], &mut meter);
+            let slot = work(i, &mut meter);
             let wall_us = rt0.elapsed().as_micros() as u64;
             // every charge must be released by the time the reducer
             // returns — a leak here inflates cross-round peaks and turns
-            // the M_L scaling stats into nonsense
-            debug_assert_eq!(
-                meter.current(),
-                0,
-                "reducer {i} of round '{name}' returned with unreleased memory charges"
-            );
+            // the M_L scaling stats into nonsense. (On the error path
+            // the in-flight charges are expected: the round aborts.)
+            if slot.is_ok() {
+                debug_assert_eq!(
+                    meter.current(),
+                    0,
+                    "reducer {i} of round '{name}' returned with unreleased memory charges"
+                );
+                debug_assert_eq!(
+                    meter.bytes_current(),
+                    0,
+                    "reducer {i} of round '{name}' returned with unreleased byte charges"
+                );
+            }
             let evals = counter::thread_count() - evals0;
             let cnt = obs_counters::delta_since(&obs0);
-            (out, meter, evals, cnt, wall_us)
+            (slot, meter, evals, cnt, wall_us)
         });
+        // deterministic failure: first error in input order wins
+        let mut slots = Vec::with_capacity(reducers);
+        for (slot, meter, evals, cnt, wall_us) in results {
+            slots.push((slot?, meter, evals, cnt, wall_us));
+        }
         let mut outs = Vec::with_capacity(reducers);
         let mut max_peak = 0usize;
         let mut agg = 0usize;
         let mut violations = 0usize;
         let mut reducer_mem_peaks = Vec::with_capacity(reducers);
+        let mut reducer_mem_bytes = Vec::with_capacity(reducers);
         let mut reducer_dist_evals = Vec::with_capacity(reducers);
         let mut dist_evals = 0u64;
+        let mut in_items = 0u64;
         let mut out_items = 0u64;
+        let mut spill_read_bytes = 0u64;
+        let mut spill_write_bytes = 0u64;
         let mut per_counters = Vec::with_capacity(reducers);
         // collection (and hence event emission) is in input order on
         // this thread — never in worker arrival order
-        for (i, (o, meter, evals, cnt, wall_us)) in results.into_iter().enumerate() {
-            let out_card = o.cardinality();
+        for (i, (slot, meter, evals, cnt, wall_us)) in slots.into_iter().enumerate() {
             max_peak = max_peak.max(meter.peak());
             agg += meter.peak();
             violations += usize::from(meter.violated());
             reducer_mem_peaks.push(meter.peak());
+            reducer_mem_bytes.push(meter.bytes_peak());
             reducer_dist_evals.push(evals);
             dist_evals += evals;
-            out_items += out_card;
+            in_items += slot.in_card;
+            out_items += slot.out_card;
+            spill_read_bytes += slot.spill_read;
+            spill_write_bytes += slot.spill_write;
             if traced {
                 self.recorder.record(&Event::Reducer {
                     round: round_idx,
                     reducer: i as u32,
                     name: name.to_string(),
-                    in_items: in_cards[i],
-                    out_items: out_card,
+                    in_items: slot.in_card,
+                    out_items: slot.out_card,
                     dist_evals: evals,
                     mem_peak: meter.peak() as u64,
+                    mem_bytes: meter.bytes_peak(),
+                    spill_read: slot.spill_read,
+                    spill_write: slot.spill_write,
                     wall_us,
                     counters: cnt.clone(),
                 });
             }
             per_counters.push(cnt);
-            outs.push(o);
+            outs.push(slot.out);
         }
+        let max_bytes = reducer_mem_bytes.iter().copied().max().unwrap_or(0);
         let stats = RoundStats {
             name: name.to_string(),
             reducers,
             max_local_peak: max_peak,
             aggregate_peak: agg,
             reducer_mem_peaks,
+            reducer_mem_bytes,
+            max_local_bytes: max_bytes,
+            spill_read_bytes,
+            spill_write_bytes,
             reducer_dist_evals,
             dist_evals,
-            in_items: in_cards.iter().sum(),
+            in_items,
             out_items,
             counters: obs_counters::merge(&per_counters),
             wall: t0.elapsed(),
@@ -273,6 +408,7 @@ impl Simulator {
                 mem_max: max_peak as u64,
                 mem_p50: md.p50,
                 mem_p95: md.p95,
+                bytes_max: max_bytes,
                 evals_max: stats.reducer_dist_evals.iter().copied().max().unwrap_or(0),
                 evals_p50: ed.p50,
                 evals_p95: ed.p95,
@@ -281,7 +417,7 @@ impl Simulator {
             });
         }
         self.stats.lock().unwrap().rounds.push(stats);
-        outs
+        Ok(outs)
     }
 
     /// Take the accumulated job statistics (resets the simulator).
@@ -319,6 +455,9 @@ mod tests {
         assert_eq!(stats.rounds[0].reducer_mem_peaks, vec![3, 2, 1]);
         assert_eq!(stats.rounds[0].in_items, 6, "three parts of 3+2+1 input items");
         assert_eq!(stats.rounds[0].out_items, 3, "one scalar sum per reducer");
+        // the legacy API does no byte metering
+        assert_eq!(stats.rounds[0].reducer_mem_bytes, vec![0, 0, 0]);
+        assert_eq!(stats.max_local_bytes(), 0);
     }
 
     /// Tracing: events arrive in (round, reducer) order on the
@@ -424,6 +563,22 @@ mod tests {
     fn unbalanced_reducer_is_rejected() {
         let sim = Simulator::new().with_threads(1);
         let _ = sim.round("leaky", vec![()], |_, _, m| m.charge(3));
+    }
+
+    /// The byte ledger has the same balanced-at-return contract as the
+    /// item ledger (executors release every shard charge before the
+    /// reducer returns).
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "unreleased byte charges")]
+    fn unbalanced_byte_charges_are_rejected() {
+        let sim = Simulator::new().with_threads(1);
+        let inputs = sim.scatter(vec![vec![1u32]]).expect("in-memory scatter");
+        // UFCS: `sim.round` would resolve to the inherent legacy method
+        let _ = Executor::round(&sim, "byte-leaky", &inputs, |_, p: &Vec<u32>, m| {
+            m.try_charge_bytes(10).expect("no budget set");
+            p.clone()
+        });
     }
 
     /// Distance accounting: per-reducer counts are attributed to the

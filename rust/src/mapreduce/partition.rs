@@ -1,5 +1,6 @@
 //! Deterministic partitioning of point-index sets into L reducer inputs.
 
+use crate::obs::log;
 use crate::util::rng::Rng;
 
 /// Partitioning strategy for splitting P across L reducers.
@@ -33,6 +34,29 @@ pub fn partition(pts: &[u32], l: usize, strategy: PartitionStrategy) -> Vec<Vec<
             chunks(v, l)
         }
     }
+}
+
+/// [`partition`], but loud about the silent-shrink edge: when `l`
+/// exceeds |P| the split runs with |P| partitions, and callers used to
+/// discover that only by counting `parts`. This wrapper warns through
+/// `obs::log` and leaves the effective L visible as `parts.len()`, which
+/// pipelines carry into `part_sizes` (and the driver into
+/// `RunReport::{l, l_requested}` and the round's `reducers` field).
+pub fn partition_reported(
+    pts: &[u32],
+    l: usize,
+    strategy: PartitionStrategy,
+    ctx: &str,
+) -> Vec<Vec<u32>> {
+    let parts = partition(pts, l, strategy);
+    if parts.len() < l {
+        log::warn(&format!(
+            "{ctx}: requested L={l} exceeds |P|={}; running {} partitions",
+            pts.len(),
+            parts.len()
+        ));
+    }
+    parts
 }
 
 fn chunks(v: Vec<u32>, l: usize) -> Vec<Vec<u32>> {
@@ -96,6 +120,15 @@ mod tests {
         let pts: Vec<u32> = (0..3).collect();
         let parts = partition(&pts, 10, PartitionStrategy::RoundRobin);
         assert_eq!(parts.len(), 3);
+    }
+
+    #[test]
+    fn reported_partition_matches_silent_one() {
+        let pts: Vec<u32> = (0..3).collect();
+        let loud = partition_reported(&pts, 10, PartitionStrategy::RoundRobin, "test");
+        let quiet = partition(&pts, 10, PartitionStrategy::RoundRobin);
+        assert_eq!(loud, quiet);
+        assert_eq!(loud.len(), 3, "effective L is |P| when l > |P|");
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! Disk-backed shard store and spill codec for out-of-core execution.
+//!
+//! The [`SpillExecutor`](super::executor::SpillExecutor) never holds a
+//! round's full input or output in RAM: every reducer input and output
+//! lives on disk as a *shard* — one file per value, framed as
+//!
+//! ```text
+//! +----------+----------------+-----------------+
+//! | b"MRCSPILL" | payload len (u64 LE) | payload |
+//! +----------+----------------+-----------------+
+//! ```
+//!
+//! — and is materialized one at a time, after its encoded size has been
+//! charged against the hard byte budget. The codec is deliberately dumb:
+//! fixed-width little-endian integers, `f64` via `to_bits` (bit-exact
+//! round-trip, NaN payloads included), `u64` length prefixes on
+//! sequences. [`Spillable::encoded_len`] must equal the exact encoded
+//! size *without encoding* — executors use it to charge the meter before
+//! any bytes are materialized, which is what makes "structured
+//! over-budget error, never OOM" possible.
+
+use std::fs::{self, File};
+use std::io::{self, BufWriter, Read as _, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::algorithms::Solution;
+use crate::coreset::cover::CoverResult;
+use crate::coreset::local::LocalCoresetOut;
+use crate::points::WeightedSet;
+
+const MAGIC: &[u8; 8] = b"MRCSPILL";
+const READ_CHUNK: usize = 1 << 20;
+
+/// A shard failed to decode (truncated, trailing bytes, inconsistent
+/// lengths). Carries a human-readable detail string.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodecError(pub String);
+
+/// Cursor over an encoded payload.
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Decoder<'a> {
+        Decoder { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| CodecError("payload offset overflow".to_string()))?;
+        let s = self.buf.get(self.pos..end).ok_or_else(|| {
+            CodecError(format!("truncated payload: wanted {n} bytes at offset {}", self.pos))
+        })?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Assert the payload is fully consumed — trailing bytes mean the
+    /// shard was written by a different type than it is read as.
+    pub fn finish(self) -> Result<(), CodecError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(CodecError(format!(
+                "trailing bytes: consumed {} of {}",
+                self.pos,
+                self.buf.len()
+            )))
+        }
+    }
+}
+
+/// A value that can round-trip through the spill format.
+///
+/// Contract: `decode(encode(v)) == v` bit-exactly, and
+/// `encoded_len() == encode(v).len()` *computed arithmetically* — no
+/// encoding allowed, since executors call it to pre-charge budgets.
+pub trait Spillable: Sized {
+    fn encode(&self, out: &mut Vec<u8>);
+    fn decode(d: &mut Decoder) -> Result<Self, CodecError>;
+    fn encoded_len(&self) -> u64;
+}
+
+impl Spillable for u32 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn decode(d: &mut Decoder) -> Result<u32, CodecError> {
+        d.u32()
+    }
+
+    fn encoded_len(&self) -> u64 {
+        4
+    }
+}
+
+impl Spillable for u64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn decode(d: &mut Decoder) -> Result<u64, CodecError> {
+        d.u64()
+    }
+
+    fn encoded_len(&self) -> u64 {
+        8
+    }
+}
+
+impl Spillable for f64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+
+    fn decode(d: &mut Decoder) -> Result<f64, CodecError> {
+        d.f64()
+    }
+
+    fn encoded_len(&self) -> u64 {
+        8
+    }
+}
+
+impl<T: Spillable> Spillable for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        for v in self {
+            v.encode(out);
+        }
+    }
+
+    fn decode(d: &mut Decoder) -> Result<Vec<T>, CodecError> {
+        let n = d.u64()? as usize;
+        // every element encodes to >= 1 byte, so a length beyond the
+        // remaining payload is corrupt — refuse before allocating
+        if n > d.remaining() {
+            return Err(CodecError(format!(
+                "sequence length {n} exceeds remaining payload {}",
+                d.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(T::decode(d)?);
+        }
+        Ok(out)
+    }
+
+    fn encoded_len(&self) -> u64 {
+        8 + self.iter().map(Spillable::encoded_len).sum::<u64>()
+    }
+}
+
+impl Spillable for WeightedSet {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.indices.encode(out);
+        self.weights.encode(out);
+    }
+
+    fn decode(d: &mut Decoder) -> Result<WeightedSet, CodecError> {
+        let indices = Vec::<u32>::decode(d)?;
+        let weights = Vec::<u64>::decode(d)?;
+        if indices.len() != weights.len() {
+            return Err(CodecError(format!(
+                "weighted set with {} indices but {} weights",
+                indices.len(),
+                weights.len()
+            )));
+        }
+        Ok(WeightedSet { indices, weights })
+    }
+
+    fn encoded_len(&self) -> u64 {
+        self.indices.encoded_len() + self.weights.encoded_len()
+    }
+}
+
+impl Spillable for Solution {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.centers.encode(out);
+        self.cost.encode(out);
+    }
+
+    fn decode(d: &mut Decoder) -> Result<Solution, CodecError> {
+        Ok(Solution { centers: Vec::<u32>::decode(d)?, cost: f64::decode(d)? })
+    }
+
+    fn encoded_len(&self) -> u64 {
+        self.centers.encoded_len() + 8
+    }
+}
+
+impl Spillable for CoverResult {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.set.encode(out);
+        self.tau.encode(out);
+        self.dist_to_t.encode(out);
+    }
+
+    fn decode(d: &mut Decoder) -> Result<CoverResult, CodecError> {
+        Ok(CoverResult {
+            set: WeightedSet::decode(d)?,
+            tau: Vec::<u32>::decode(d)?,
+            dist_to_t: Vec::<f64>::decode(d)?,
+        })
+    }
+
+    fn encoded_len(&self) -> u64 {
+        self.set.encoded_len() + self.tau.encoded_len() + self.dist_to_t.encoded_len()
+    }
+}
+
+impl Spillable for LocalCoresetOut {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.cover.encode(out);
+        self.r.encode(out);
+        self.t.encode(out);
+        self.t_cost.encode(out);
+    }
+
+    fn decode(d: &mut Decoder) -> Result<LocalCoresetOut, CodecError> {
+        Ok(LocalCoresetOut {
+            cover: CoverResult::decode(d)?,
+            r: f64::decode(d)?,
+            t: Vec::<u32>::decode(d)?,
+            t_cost: f64::decode(d)?,
+        })
+    }
+
+    fn encoded_len(&self) -> u64 {
+        self.cover.encoded_len() + 8 + self.t.encoded_len() + 8
+    }
+}
+
+/// Handle to one on-disk shard: its file tag and exact payload size.
+///
+/// `bytes` is authoritative — executors charge it against the byte
+/// budget *before* reading the file, so the decision to materialize a
+/// shard never requires touching the disk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardRef {
+    pub tag: String,
+    pub bytes: u64,
+}
+
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Directory of spill shards. Writes are append-only and single-shot
+/// (one file per shard, unique tags); reads are chunked so the transient
+/// I/O buffer stays bounded. Dropping an ephemeral store (one created
+/// without an explicit directory) removes its files.
+pub struct SpillStore {
+    dir: PathBuf,
+    ephemeral: bool,
+}
+
+impl SpillStore {
+    /// Open a store at `dir`, or at a fresh unique directory under the
+    /// system temp dir when `None` (removed again on drop).
+    pub fn create(dir: Option<&Path>) -> io::Result<SpillStore> {
+        let (dir, ephemeral) = match dir {
+            Some(d) => (d.to_path_buf(), false),
+            None => {
+                let seq = STORE_SEQ.fetch_add(1, Ordering::Relaxed);
+                let name = format!("mrcoreset-spill-{}-{seq}", std::process::id());
+                (std::env::temp_dir().join(name), true)
+            }
+        };
+        fs::create_dir_all(&dir)?;
+        Ok(SpillStore { dir, ephemeral })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_of(&self, tag: &str) -> PathBuf {
+        self.dir.join(format!("{tag}.shard"))
+    }
+
+    /// Write one shard; `tag` must be unique within the store.
+    pub fn write(&self, tag: &str, payload: &[u8]) -> io::Result<ShardRef> {
+        let mut w = BufWriter::new(File::create(self.path_of(tag))?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(payload.len() as u64).to_le_bytes())?;
+        w.write_all(payload)?;
+        w.flush()?;
+        Ok(ShardRef { tag: tag.to_string(), bytes: payload.len() as u64 })
+    }
+
+    /// Read a shard's payload back, validating frame and length.
+    pub fn read(&self, shard: &ShardRef) -> io::Result<Vec<u8>> {
+        let mut f = File::open(self.path_of(&shard.tag))?;
+        let mut header = [0u8; 16];
+        f.read_exact(&mut header)?;
+        if &header[..8] != MAGIC {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("shard {}: bad magic", shard.tag),
+            ));
+        }
+        let len = u64::from_le_bytes(header[8..].try_into().expect("8-byte slice"));
+        if len != shard.bytes {
+            let detail =
+                format!("shard {}: frame len {len} != manifest len {}", shard.tag, shard.bytes);
+            return Err(io::Error::new(io::ErrorKind::InvalidData, detail));
+        }
+        let mut payload = Vec::with_capacity(len as usize);
+        let mut chunk = vec![0u8; READ_CHUNK.min(len.max(1) as usize)];
+        let mut left = len as usize;
+        while left > 0 {
+            let want = left.min(chunk.len());
+            f.read_exact(&mut chunk[..want])?;
+            payload.extend_from_slice(&chunk[..want]);
+            left -= want;
+        }
+        Ok(payload)
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        if self.ephemeral {
+            let _ = fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip<T: Spillable + PartialEq + std::fmt::Debug>(v: &T) {
+        let mut buf = Vec::new();
+        v.encode(&mut buf);
+        assert_eq!(buf.len() as u64, v.encoded_len(), "encoded_len must be exact");
+        let mut d = Decoder::new(&buf);
+        let back = T::decode(&mut d).expect("decode");
+        d.finish().expect("fully consumed");
+        assert_eq!(&back, v);
+    }
+
+    #[test]
+    fn scalars_and_vectors_round_trip() {
+        round_trip(&7u32);
+        round_trip(&u64::MAX);
+        round_trip(&-0.0f64);
+        round_trip(&f64::NAN.to_bits()); // NaN via bits: PartialEq-safe
+        round_trip(&vec![1u32, 2, 3]);
+        round_trip(&Vec::<f64>::new());
+        round_trip(&vec![vec![1u32], vec![], vec![2, 3]]);
+    }
+
+    #[test]
+    fn nan_payload_survives_bit_exactly() {
+        let v = f64::from_bits(0x7ff8_0000_dead_beef);
+        let mut buf = Vec::new();
+        v.encode(&mut buf);
+        let back = f64::decode(&mut Decoder::new(&buf)).unwrap();
+        assert_eq!(back.to_bits(), v.to_bits());
+    }
+
+    #[test]
+    fn weighted_set_round_trips_and_rejects_skew() {
+        round_trip(&WeightedSet { indices: vec![5, 9], weights: vec![2, 7] });
+        // hand-build a payload with mismatched lengths
+        let mut buf = Vec::new();
+        vec![1u32].encode(&mut buf);
+        vec![1u64, 2].encode(&mut buf);
+        let err = WeightedSet::decode(&mut Decoder::new(&buf)).unwrap_err();
+        assert!(err.0.contains("1 indices but 2 weights"), "{err:?}");
+    }
+
+    #[test]
+    fn local_coreset_out_round_trips() {
+        let out = LocalCoresetOut {
+            cover: CoverResult {
+                set: WeightedSet { indices: vec![1, 4], weights: vec![3, 1] },
+                tau: vec![0, 0, 1],
+                dist_to_t: vec![0.5, 1.25, 0.0],
+            },
+            r: 2.5,
+            t: vec![1, 4],
+            t_cost: 9.75,
+        };
+        let mut buf = Vec::new();
+        out.encode(&mut buf);
+        assert_eq!(buf.len() as u64, out.encoded_len());
+        let mut d = Decoder::new(&buf);
+        let back = LocalCoresetOut::decode(&mut d).expect("decode");
+        d.finish().expect("fully consumed");
+        assert_eq!(back.cover.set, out.cover.set);
+        assert_eq!(back.cover.tau, out.cover.tau);
+        assert_eq!(back.r, out.r);
+        assert_eq!(back.t, out.t);
+        assert_eq!(back.t_cost, out.t_cost);
+    }
+
+    #[test]
+    fn truncated_and_trailing_payloads_are_rejected() {
+        let mut buf = Vec::new();
+        vec![1u32, 2, 3].encode(&mut buf);
+        assert!(Vec::<u32>::decode(&mut Decoder::new(&buf[..buf.len() - 1])).is_err());
+        let mut d = Decoder::new(&buf);
+        let _ = Vec::<u32>::decode(&mut d).unwrap();
+        assert!(d.finish().is_ok());
+        buf.push(0);
+        let mut d = Decoder::new(&buf);
+        let _ = Vec::<u32>::decode(&mut d).unwrap();
+        assert!(d.finish().is_err(), "trailing byte must be rejected");
+    }
+
+    #[test]
+    fn corrupt_length_prefix_fails_before_allocating() {
+        let buf = u64::MAX.to_le_bytes().to_vec();
+        let err = Vec::<u32>::decode(&mut Decoder::new(&buf)).unwrap_err();
+        assert!(err.0.contains("exceeds remaining payload"), "{err:?}");
+    }
+
+    #[test]
+    fn store_round_trips_shards_and_validates_frames() {
+        let store = SpillStore::create(None).expect("temp store");
+        let mut buf = Vec::new();
+        vec![10u32, 20, 30].encode(&mut buf);
+        let shard = store.write("t-0", &buf).expect("write");
+        assert_eq!(shard.bytes, buf.len() as u64);
+        let payload = store.read(&shard).expect("read");
+        assert_eq!(payload, buf);
+        let back = Vec::<u32>::decode(&mut Decoder::new(&payload)).unwrap();
+        assert_eq!(back, vec![10, 20, 30]);
+        // a manifest/frame length mismatch is surfaced, not trusted
+        let lying = ShardRef { tag: "t-0".to_string(), bytes: shard.bytes + 1 };
+        assert!(store.read(&lying).is_err());
+    }
+
+    #[test]
+    fn ephemeral_store_cleans_up_on_drop() {
+        let dir;
+        {
+            let store = SpillStore::create(None).expect("temp store");
+            dir = store.dir().to_path_buf();
+            store.write("x", &[1, 2, 3]).expect("write");
+            assert!(dir.exists());
+        }
+        assert!(!dir.exists(), "ephemeral spill dir must be removed on drop");
+    }
+}

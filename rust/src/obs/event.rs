@@ -7,21 +7,29 @@
 //! |---------------|------------------------------------------------------------------------|
 //! | `run_start`   | `schema`, `label`                                                      |
 //! | `round_start` | `round`, `name`, `reducers`                                            |
-//! | `reducer`     | `round`, `reducer`, `name`, `in_items`, `out_items`, `dist_evals`, `mem_peak`, `wall_us`, `counters{}` |
-//! | `round_end`   | `round`, `name`, `reducers`, `dist_evals`, `mem_max`, `mem_p50`, `mem_p95`, `evals_max`, `evals_p50`, `evals_p95`, `violations`, `wall_us` |
-//! | `run_end`     | `rounds`, `dist_evals`, `max_local_memory`                             |
+//! | `reducer`     | `round`, `reducer`, `name`, `in_items`, `out_items`, `dist_evals`, `mem_peak`, `mem_bytes`, `wall_us`, `spill_read`, `spill_write`, `counters{}` |
+//! | `round_end`   | `round`, `name`, `reducers`, `dist_evals`, `mem_max`, `mem_p50`, `mem_p95`, `bytes_max`, `evals_max`, `evals_p50`, `evals_p95`, `violations`, `wall_us` |
+//! | `run_end`     | `rounds`, `dist_evals`, `max_local_memory`, `max_local_bytes`          |
 //!
-//! Determinism contract: every field except `wall_us` is a deterministic
-//! function of the run's inputs (seeded RNGs, fixed partitioning), and
-//! events are emitted in (round, reducer) order by the coordinator
-//! thread — so [`Event::stable_json`] (which omits `wall_us`) is
-//! bit-identical across simulator thread counts. `counters` keys are
-//! name-sorted on emission.
+//! Schema v2 adds byte-level residency to the spans: `mem_bytes` /
+//! `bytes_max` / `max_local_bytes` are the encoded shard footprints the
+//! executors charge (identical across backends — part of the stable
+//! form), while `spill_read` / `spill_write` are actual disk traffic
+//! (backend-dependent, so gated like `wall_us`). v1 traces still parse;
+//! the new numeric fields default to 0.
+//!
+//! Determinism contract: every field except `wall_us`, `spill_read` and
+//! `spill_write` is a deterministic function of the run's inputs (seeded
+//! RNGs, fixed partitioning, byte-parity executor charges), and events
+//! are emitted in (round, reducer) order by the coordinator thread — so
+//! [`Event::stable_json`] (which omits the gated fields) is
+//! bit-identical across thread counts *and* execution backends.
+//! `counters` keys are name-sorted on emission.
 
 use crate::util::json::Json;
 
 /// Version stamp written by `run_start`; bump on breaking field changes.
-pub const TRACE_SCHEMA_VERSION: u64 = 1;
+pub const TRACE_SCHEMA_VERSION: u64 = 2;
 
 /// One telemetry event. See the module docs for the field schema.
 #[derive(Clone, Debug, PartialEq)]
@@ -44,7 +52,13 @@ pub enum Event {
         out_items: u64,
         dist_evals: u64,
         mem_peak: u64,
+        /// Peak resident encoded bytes (executor shard charges).
+        mem_bytes: u64,
         wall_us: u64,
+        /// Bytes read from / written to the spill store — 0 in-memory,
+        /// so wall-gated out of the stable form like `wall_us`.
+        spill_read: u64,
+        spill_write: u64,
         /// Name-sorted deltas of `obs::counters` charged by this reducer.
         counters: Vec<(String, u64)>,
     },
@@ -56,6 +70,8 @@ pub enum Event {
         mem_max: u64,
         mem_p50: f64,
         mem_p95: f64,
+        /// Max over reducers of peak resident encoded bytes.
+        bytes_max: u64,
         evals_max: u64,
         evals_p50: f64,
         evals_p95: f64,
@@ -66,6 +82,7 @@ pub enum Event {
         rounds: u64,
         dist_evals: u64,
         max_local_memory: u64,
+        max_local_bytes: u64,
     },
 }
 
@@ -81,14 +98,15 @@ impl Event {
         }
     }
 
-    /// Full single-line JSON, wall-clock included.
+    /// Full single-line JSON, wall-clock and spill traffic included.
     pub fn to_json(&self) -> String {
         self.build(true).to_string()
     }
 
     /// Deterministic single-line JSON: identical to [`Event::to_json`]
-    /// minus the `wall_us` fields. This is the comparable form the
-    /// determinism suite diffs across thread counts.
+    /// minus the `wall_us` and `spill_read`/`spill_write` fields. This
+    /// is the comparable form the determinism suite diffs across thread
+    /// counts and execution backends.
     pub fn stable_json(&self) -> String {
         self.build(false).to_string()
     }
@@ -114,7 +132,10 @@ impl Event {
                 out_items,
                 dist_evals,
                 mem_peak,
+                mem_bytes,
                 wall_us,
+                spill_read,
+                spill_write,
                 counters,
             } => {
                 o.set("round", Json::num(*round as f64));
@@ -124,8 +145,11 @@ impl Event {
                 o.set("out_items", Json::num(*out_items as f64));
                 o.set("dist_evals", Json::num(*dist_evals as f64));
                 o.set("mem_peak", Json::num(*mem_peak as f64));
+                o.set("mem_bytes", Json::num(*mem_bytes as f64));
                 if with_wall {
                     o.set("wall_us", Json::num(*wall_us as f64));
+                    o.set("spill_read", Json::num(*spill_read as f64));
+                    o.set("spill_write", Json::num(*spill_write as f64));
                 }
                 let mut c = Json::obj();
                 for (k, v) in counters {
@@ -141,6 +165,7 @@ impl Event {
                 mem_max,
                 mem_p50,
                 mem_p95,
+                bytes_max,
                 evals_max,
                 evals_p50,
                 evals_p95,
@@ -154,6 +179,7 @@ impl Event {
                 o.set("mem_max", Json::num(*mem_max as f64));
                 o.set("mem_p50", Json::num(*mem_p50));
                 o.set("mem_p95", Json::num(*mem_p95));
+                o.set("bytes_max", Json::num(*bytes_max as f64));
                 o.set("evals_max", Json::num(*evals_max as f64));
                 o.set("evals_p50", Json::num(*evals_p50));
                 o.set("evals_p95", Json::num(*evals_p95));
@@ -162,17 +188,19 @@ impl Event {
                     o.set("wall_us", Json::num(*wall_us as f64));
                 }
             }
-            Event::RunEnd { rounds, dist_evals, max_local_memory } => {
+            Event::RunEnd { rounds, dist_evals, max_local_memory, max_local_bytes } => {
                 o.set("rounds", Json::num(*rounds as f64));
                 o.set("dist_evals", Json::num(*dist_evals as f64));
                 o.set("max_local_memory", Json::num(*max_local_memory as f64));
+                o.set("max_local_bytes", Json::num(*max_local_bytes as f64));
             }
         }
         o
     }
 
-    /// Parse one JSONL line back into an event (`wall_us` defaults to 0
-    /// when absent, so stable lines parse too). Errors name the missing
+    /// Parse one JSONL line back into an event (`wall_us` and the other
+    /// gated or v2-only numeric fields default to 0 when absent, so
+    /// stable lines and v1 traces parse too). Errors name the missing
     /// or ill-typed field — this is the schema validator the round-trip
     /// test drives.
     pub fn parse(line: &str) -> Result<Event, String> {
@@ -210,7 +238,10 @@ impl Event {
                     out_items: field_u64(&v, "out_items")?,
                     dist_evals: field_u64(&v, "dist_evals")?,
                     mem_peak: field_u64(&v, "mem_peak")?,
+                    mem_bytes: opt_u64(&v, "mem_bytes"),
                     wall_us: opt_u64(&v, "wall_us"),
+                    spill_read: opt_u64(&v, "spill_read"),
+                    spill_write: opt_u64(&v, "spill_write"),
                     counters,
                 }
             }
@@ -222,6 +253,7 @@ impl Event {
                 mem_max: field_u64(&v, "mem_max")?,
                 mem_p50: field_f64(&v, "mem_p50")?,
                 mem_p95: field_f64(&v, "mem_p95")?,
+                bytes_max: opt_u64(&v, "bytes_max"),
                 evals_max: field_u64(&v, "evals_max")?,
                 evals_p50: field_f64(&v, "evals_p50")?,
                 evals_p95: field_f64(&v, "evals_p95")?,
@@ -232,17 +264,24 @@ impl Event {
                 rounds: field_u64(&v, "rounds")?,
                 dist_evals: field_u64(&v, "dist_evals")?,
                 max_local_memory: field_u64(&v, "max_local_memory")?,
+                max_local_bytes: opt_u64(&v, "max_local_bytes"),
             },
             other => return Err(format!("unknown event kind `{other}`")),
         };
         Ok(ev)
     }
 
-    /// Copy with `wall_us` zeroed — the canonical comparable form.
+    /// Copy with the gated fields (`wall_us`, `spill_read`,
+    /// `spill_write`) zeroed — the canonical comparable form.
     pub fn without_wall(&self) -> Event {
         let mut e = self.clone();
         match &mut e {
-            Event::Reducer { wall_us, .. } | Event::RoundEnd { wall_us, .. } => *wall_us = 0,
+            Event::Reducer { wall_us, spill_read, spill_write, .. } => {
+                *wall_us = 0;
+                *spill_read = 0;
+                *spill_write = 0;
+            }
+            Event::RoundEnd { wall_us, .. } => *wall_us = 0,
             _ => {}
         }
         e
@@ -285,7 +324,10 @@ mod tests {
             out_items: 42,
             dist_evals: 123456,
             mem_peak: 1100,
+            mem_bytes: 4408,
             wall_us: 777,
+            spill_read: 4008,
+            spill_write: 400,
             counters: vec![("cover.iterations".to_string(), 42), ("pruned.give_up".to_string(), 1)],
         }
     }
@@ -304,13 +346,19 @@ mod tests {
                 mem_max: 1100,
                 mem_p50: 1000.5,
                 mem_p95: 1090.0,
+                bytes_max: 4408,
                 evals_max: 200,
                 evals_p50: 150.0,
                 evals_p95: 190.0,
                 violations: 0,
                 wall_us: 88,
             },
-            Event::RunEnd { rounds: 3, dist_evals: 5000, max_local_memory: 1100 },
+            Event::RunEnd {
+                rounds: 3,
+                dist_evals: 5000,
+                max_local_memory: 1100,
+                max_local_bytes: 4408,
+            },
         ];
         for ev in events {
             let parsed = Event::parse(&ev.to_json()).unwrap();
@@ -319,14 +367,33 @@ mod tests {
     }
 
     #[test]
-    fn stable_json_omits_wall_only() {
+    fn stable_json_omits_gated_fields_only() {
         let ev = sample_reducer();
         let full = ev.to_json();
         let stable = ev.stable_json();
         assert!(full.contains("\"wall_us\":777"));
+        assert!(full.contains("\"spill_read\":4008"));
+        assert!(full.contains("\"spill_write\":400"));
         assert!(!stable.contains("wall_us"));
-        // stable lines still parse, with wall zeroed
+        assert!(!stable.contains("spill_read"));
+        assert!(!stable.contains("spill_write"));
+        // the byte residency is part of the stable (backend-invariant) form
+        assert!(stable.contains("\"mem_bytes\":4408"));
+        // stable lines still parse, with the gated fields zeroed
         assert_eq!(Event::parse(&stable).unwrap(), ev.without_wall());
+    }
+
+    #[test]
+    fn v1_reducer_lines_still_parse() {
+        // a line written by schema v1 (no byte or spill fields)
+        let line = "{\"ev\":\"reducer\",\"round\":0,\"reducer\":1,\"name\":\"r\",\"in_items\":3,\
+                    \"out_items\":1,\"dist_evals\":9,\"mem_peak\":3,\"wall_us\":5,\"counters\":{}}";
+        match Event::parse(line).unwrap() {
+            Event::Reducer { mem_bytes, spill_read, spill_write, wall_us, .. } => {
+                assert_eq!((mem_bytes, spill_read, spill_write, wall_us), (0, 0, 0, 5));
+            }
+            other => panic!("expected reducer, got {other:?}"),
+        }
     }
 
     #[test]

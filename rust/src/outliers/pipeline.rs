@@ -18,9 +18,11 @@
 //!    instance, and runs `cover_with_balls_weighted`(C_w, w, T, R, ·, ·)
 //!    — carrying the round-1 weights through — to produce E_w.
 //!
-//! Both rounds charge the simulator's memory meter and (implicitly, via
+//! Both rounds charge the executor's memory meter and (implicitly, via
 //! the metric counter) the per-reducer distance-evaluation accounting,
-//! so `RoundStats` attributes the oversampling overhead per round.
+//! so `RoundStats` attributes the oversampling overhead per round. Like
+//! the base pipelines, this one is generic over [`Executor`], so the
+//! spill backend can stage both rounds' inputs out of core.
 
 use crate::algorithms::seeding::dpp_seeding;
 use crate::algorithms::Instance;
@@ -28,7 +30,7 @@ use crate::coreset::cover::cover_with_balls_weighted;
 use crate::coreset::local::cover_params;
 use crate::coreset::pipeline::{global_radius, run_round1_named, CoresetConfig, PipelineOutput};
 use crate::coreset::TlAlgo;
-use crate::mapreduce::{partition, PartitionStrategy, Simulator};
+use crate::mapreduce::{partition_reported, ExecError, Executor, PartitionStrategy};
 use crate::metric::{MetricSpace, Objective};
 use crate::points::WeightedSet;
 use crate::util::rng::Rng;
@@ -72,16 +74,17 @@ impl OutlierCoresetConfig {
 
 /// 2-round outlier-aware coreset construction; returns E_w (weights sum
 /// to |P| — exclusion happens in the finisher, not here).
-pub fn outlier_coreset(
+pub fn outlier_coreset<E: Executor>(
     space: &dyn MetricSpace,
     obj: Objective,
     pts: &[u32],
     l: usize,
     strategy: PartitionStrategy,
     cfg: &OutlierCoresetConfig,
-    sim: &Simulator,
-) -> PipelineOutput {
-    let parts = partition(pts, l, strategy);
+    exec: &E,
+) -> Result<PipelineOutput, ExecError> {
+    let parts = partition_reported(pts, l, strategy, "outlier_coreset");
+    let part_sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
 
     // Round 1: the shared per-partition local-coreset round, with the
     // oversampled center count k + z′ and an outliers-specific seed salt.
@@ -92,12 +95,15 @@ pub fn outlier_coreset(
         tl: cfg.tl,
         seed: cfg.seed,
     };
+    let inputs = exec.scatter(parts)?;
     let locals =
-        run_round1_named(space, obj, &parts, &r1cfg, sim, "outliers-r1-local", 0x0071_0000);
-    let radii: Vec<f64> = locals.iter().map(|o| o.r).collect();
-    let part_sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
-    let cw =
-        WeightedSet::union(&locals.iter().map(|o| o.cover.set.clone()).collect::<Vec<_>>());
+        run_round1_named(space, obj, &inputs, &r1cfg, exec, "outliers-r1-local", 0x0071_0000)?;
+    let mut radii = Vec::new();
+    let mut cw = WeightedSet::default();
+    locals.for_each(|o| {
+        radii.push(o.r);
+        cw.merge(&o.cover.set);
+    })?;
     let cw_size = cw.len();
 
     // Global tolerance radius R (same aggregation as the base pipeline).
@@ -106,7 +112,8 @@ pub fn outlier_coreset(
     // Round 2: compress the weighted union with a weighted cover against
     // a global (k + z)-center rough solution.
     let (ce, cb) = cover_params(obj, cfg.eps, cfg.beta);
-    let e_parts = sim.round("outliers-r2-compress", vec![cw], move |_, cs, meter| {
+    let compress_in = exec.scatter(vec![cw])?;
+    let e_parts = exec.round("outliers-r2-compress", &compress_in, move |_, cs, meter| {
         meter.charge(cs.len()); // resident weighted union C_w
         let mut rng = Rng::new(cfg.seed ^ 0x0171_CAFE);
         let m_global = (cfg.k + cfg.z).min(cs.len());
@@ -118,16 +125,17 @@ pub fn outlier_coreset(
         meter.charge(res.set.len()); // E_w
         meter.release(cs.len() + t.len() + res.set.len());
         res.set
-    });
-    let coreset = e_parts.into_iter().next().expect("one compress reducer");
+    })?;
+    let coreset = e_parts.into_items()?.into_iter().next().expect("one compress reducer");
 
-    PipelineOutput { coreset, radii, part_sizes, cw_size, global_r: Some(global_r) }
+    Ok(PipelineOutput { coreset, radii, part_sizes, cw_size, global_r: Some(global_r) })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::{GaussianMixtureSpec, NoiseSpec};
+    use crate::mapreduce::Simulator;
     use crate::metric::dense::EuclideanSpace;
     use std::sync::Arc;
 
@@ -157,7 +165,8 @@ mod tests {
                 PartitionStrategy::RoundRobin,
                 &cfg,
                 &sim,
-            );
+            )
+            .expect("pipeline");
             assert_eq!(out.coreset.total_weight(), pts.len() as u64, "{obj}");
             assert!(out.coreset.len() <= pts.len(), "{obj}");
             assert!(out.global_r.unwrap() > 0.0, "{obj}");
@@ -195,7 +204,8 @@ mod tests {
             PartitionStrategy::RoundRobin,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         let b = outlier_coreset(
             &space,
             Objective::Median,
@@ -204,7 +214,8 @@ mod tests {
             PartitionStrategy::RoundRobin,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         assert_eq!(a.coreset, b.coreset);
         assert_eq!(a.radii, b.radii);
         assert_eq!(a.global_r, b.global_r);
@@ -223,7 +234,8 @@ mod tests {
             PartitionStrategy::Contiguous,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         assert_eq!(out.part_sizes, vec![410]);
         assert_eq!(out.coreset.total_weight(), 410);
     }

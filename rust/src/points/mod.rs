@@ -127,10 +127,19 @@ impl WeightedSet {
     pub fn union(parts: &[WeightedSet]) -> WeightedSet {
         let mut out = WeightedSet::default();
         for p in parts {
-            out.indices.extend_from_slice(&p.indices);
-            out.weights.extend_from_slice(&p.weights);
+            out.merge(p);
         }
         out
+    }
+
+    /// Append one partition's coreset — the streaming form of [`union`]
+    /// (same concatenation order when called in slot order), so an
+    /// out-of-core fold never holds more than one part resident.
+    ///
+    /// [`union`]: WeightedSet::union
+    pub fn merge(&mut self, other: &WeightedSet) {
+        self.indices.extend_from_slice(&other.indices);
+        self.weights.extend_from_slice(&other.weights);
     }
 }
 

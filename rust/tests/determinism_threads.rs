@@ -30,6 +30,7 @@ fn run_pipeline(
     let sim = Simulator::new().with_threads(threads);
     let cfg = CoresetConfig { seed: 0xD1CE, ..CoresetConfig::new(5, 0.4) };
     two_round_coreset(space, obj, pts, 6, PartitionStrategy::RoundRobin, &cfg, &sim)
+        .expect("pipeline")
 }
 
 #[test]

@@ -1,0 +1,148 @@
+//! Property: the execution backends are interchangeable bit for bit.
+//!
+//! `InMemoryExecutor` and `SpillExecutor` must produce identical
+//! `RunReport::to_json()` strings, identical stable-form trace lines
+//! (wall-clock and spill traffic omitted — see `Event::stable_json`),
+//! and identical `dist_evals` on the e2-style mixture at 1 and 8
+//! threads. This is the byte-parity contract of `mapreduce::executor`:
+//! both backends charge the same byte sequence per reducer (encoded
+//! input size before loading, arithmetic output size before encoding),
+//! so even the byte peaks in traces and reports agree exactly.
+//!
+//! The budget half of the contract: a spill run under hard budget B
+//! either completes with peak resident bytes ≤ B, or fails with a
+//! structured `ExecError::OverBudget` — never an abort.
+
+use std::sync::Arc;
+
+use mrcoreset::coordinator::{solve, solve_traced, try_solve_traced, ClusterConfig};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::{ExecError, ExecutorCfg};
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::Objective;
+use mrcoreset::obs::{self, MemSink, Recorder};
+
+fn mixture(n: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+    let (data, _) =
+        GaussianMixtureSpec { n, d: 2, k: 5, seed, ..Default::default() }.generate();
+    (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+}
+
+/// One traced solve under an explicit backend/thread choice; returns the
+/// three comparable artifacts (report JSON, stable trace, dist_evals).
+fn traced_run(
+    space: &EuclideanSpace,
+    pts: &[u32],
+    obj: Objective,
+    executor: ExecutorCfg,
+    threads: usize,
+) -> (String, Vec<String>, u64) {
+    let sink = Arc::new(MemSink::new());
+    let rec: Arc<dyn Recorder> = sink.clone();
+    let mut cfg = ClusterConfig::new(obj, 5, 0.4);
+    cfg.threads = Some(threads);
+    cfg.executor = executor;
+    let rep = solve_traced(space, pts, &cfg, rec);
+    let trace: Vec<String> = sink.snapshot().iter().map(|e| e.stable_json()).collect();
+    (rep.to_json(), trace, rep.dist_evals)
+}
+
+#[test]
+fn backends_bit_identical_reports_traces_and_dist_evals() {
+    let (space, pts) = mixture(2500, 42);
+    for obj in [Objective::Median, Objective::Means] {
+        let (ref_json, ref_trace, ref_evals) =
+            traced_run(&space, &pts, obj, ExecutorCfg::in_memory(), 1);
+        assert!(ref_trace.len() > 5, "{obj}: expected run/round/reducer events");
+        let variants: [(&str, ExecutorCfg, usize); 3] = [
+            ("mem/8", ExecutorCfg::in_memory(), 8),
+            ("spill/1", ExecutorCfg::spill(), 1),
+            ("spill/8", ExecutorCfg::spill(), 8),
+        ];
+        for (label, executor, threads) in variants {
+            let (json, trace, evals) = traced_run(&space, &pts, obj, executor, threads);
+            assert_eq!(ref_json, json, "{obj} {label}: RunReport::to_json differs");
+            assert_eq!(ref_trace, trace, "{obj} {label}: stable trace lines differ");
+            assert_eq!(ref_evals, evals, "{obj} {label}: dist_evals differ");
+        }
+    }
+}
+
+/// The outlier pipeline exercises the remaining manifest paths (the
+/// weighted-union scatter and the single-reducer compress round), so it
+/// gets its own backend-parity check.
+#[test]
+fn outlier_pipeline_backend_parity() {
+    use mrcoreset::data::synth::NoiseSpec;
+    let spec =
+        GaussianMixtureSpec { n: 1200, d: 2, k: 4, spread: 30.0, seed: 33, ..Default::default() };
+    let (data, _) = spec.generate_with_noise(&NoiseSpec {
+        count: 30,
+        expanse: 10.0,
+        offset: 40.0,
+        seed: 34,
+    });
+    let total = data.n() as u32;
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..total).collect();
+    let run = |executor: ExecutorCfg, threads: usize| {
+        let mut cfg = ClusterConfig::new(Objective::Median, 4, 0.5);
+        cfg.outliers = 30;
+        cfg.threads = Some(threads);
+        cfg.executor = executor;
+        solve(&space, &pts, &cfg)
+    };
+    let a = run(ExecutorCfg::in_memory(), 1);
+    let b = run(ExecutorCfg::spill(), 8);
+    assert_eq!(a.to_json(), b.to_json(), "robust reports must be backend-invariant");
+    assert_eq!(a.excluded, b.excluded);
+    assert_eq!(a.dist_evals, b.dist_evals);
+}
+
+/// A spill run whose hard budget is exactly the measured in-memory peak
+/// must complete — byte parity means the spill backend needs not one
+/// byte more — and its reported peak must respect the budget.
+#[test]
+fn spill_run_fits_exactly_within_measured_peak_budget() {
+    let (space, pts) = mixture(1500, 7);
+    let mut mem_cfg = ClusterConfig::new(Objective::Median, 5, 0.4);
+    mem_cfg.executor = ExecutorCfg::in_memory();
+    let mem_rep = solve(&space, &pts, &mem_cfg);
+    let budget = mem_rep.max_local_bytes;
+    assert!(budget > 0, "byte metering must be active");
+
+    let mut spill_cfg = ClusterConfig::new(Objective::Median, 5, 0.4);
+    spill_cfg.executor = ExecutorCfg::spill().with_budget(budget);
+    let spill_rep = try_solve_traced(&space, &pts, &spill_cfg, obs::noop())
+        .expect("a budget of exactly the peak must suffice");
+    assert!(
+        spill_rep.max_local_bytes <= budget,
+        "peak {} exceeds hard budget {budget}",
+        spill_rep.max_local_bytes
+    );
+    assert_eq!(mem_rep.to_json(), spill_rep.to_json(), "budgeted run must not change results");
+}
+
+/// Under a budget that cannot hold even one partition, both backends
+/// fail with the structured over-budget error — same round, same budget,
+/// deterministically — instead of aborting or OOMing.
+#[test]
+fn impossible_budget_yields_structured_error_on_both_backends() {
+    let (space, pts) = mixture(500, 11);
+    for executor in [ExecutorCfg::in_memory(), ExecutorCfg::spill()] {
+        let mut cfg = ClusterConfig::new(Objective::Median, 3, 0.5);
+        cfg.executor = executor.with_budget(64);
+        let err = try_solve_traced(&space, &pts, &cfg, obs::noop())
+            .expect_err("64 bytes cannot hold a partition shard");
+        match err {
+            ExecError::OverBudget { round, reducer, needed, budget, resident } => {
+                assert_eq!(budget, 64);
+                assert_eq!(round, "coreset-r1-local", "round 1 must trip first");
+                assert_eq!(reducer, 0, "first reducer in input order wins");
+                assert_eq!(resident, 0, "the input shard is the very first charge");
+                assert!(needed > 64, "a round-1 shard is larger than the budget");
+            }
+            other => panic!("expected OverBudget, got {other}"),
+        }
+    }
+}

@@ -87,7 +87,8 @@ fn prop_two_round_weight_conservation() {
             PartitionStrategy::RoundRobin,
             &cfg,
             &sim,
-        );
+        )
+        .expect("pipeline");
         prop_assert!(
             out.coreset.total_weight() == pts.len() as u64,
             "{obj}: weight {} != {}",

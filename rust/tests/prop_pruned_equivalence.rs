@@ -285,11 +285,11 @@ fn pruned_pipeline_bit_identical_across_thread_counts() {
     let cfg = CoresetConfig { seed: 0xBEEF, ..CoresetConfig::new(5, 0.4) };
     for obj in [Objective::Median, Objective::Means] {
         let sim1 = Simulator::new().with_threads(1);
-        let a =
-            two_round_coreset(&space, obj, &pts, 6, PartitionStrategy::RoundRobin, &cfg, &sim1);
+        let a = two_round_coreset(&space, obj, &pts, 6, PartitionStrategy::RoundRobin, &cfg, &sim1)
+            .expect("pipeline");
         let sim8 = Simulator::new().with_threads(8);
-        let b =
-            two_round_coreset(&space, obj, &pts, 6, PartitionStrategy::RoundRobin, &cfg, &sim8);
+        let b = two_round_coreset(&space, obj, &pts, 6, PartitionStrategy::RoundRobin, &cfg, &sim8)
+            .expect("pipeline");
         assert_eq!(a.coreset.indices, b.coreset.indices, "{obj}");
         assert_eq!(a.coreset.weights, b.coreset.weights, "{obj}");
         assert_eq!(a.radii, b.radii, "{obj}");
