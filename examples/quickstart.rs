@@ -15,9 +15,11 @@ fn main() {
     let (data, _labels) =
         GaussianMixtureSpec { n: 10_000, d: 2, k: 8, seed: 42, ..Default::default() }.generate();
 
-    // 2. Space: Euclidean metric over the point store. (Attach the XLA
-    //    engine with `EuclideanSpace::with_engine` for the fast path —
-    //    see examples/e2e_workload.rs.)
+    // 2. Space: Euclidean metric over the point store. `new` resolves
+    //    the distance-kernel backend (cache-blocked by default; see the
+    //    `metric::kernel` docs, or pin one with
+    //    `EuclideanSpace::with_kernel`). Attach the XLA engine with
+    //    `EuclideanSpace::with_engine` — see examples/e2e_workload.rs.
     let space = EuclideanSpace::new(Arc::new(data));
     let pts: Vec<u32> = (0..10_000).collect();
 
@@ -27,8 +29,10 @@ fn main() {
     let cfg = ClusterConfig::new(Objective::Median, 8, 0.8);
     let report = solve(&space, &pts, &cfg);
 
-    // 4. Inspect.
+    // 4. Inspect. `report.kernel` records which backend served the
+    //    bulk distance queries.
     print!("{}", report.summary());
+    println!("kernel: {}", report.kernel);
     assert_eq!(report.rounds, 3);
     println!("\ncenters (point indices): {:?}", report.solution.centers);
     println!(

@@ -37,7 +37,10 @@ fn main() {
     cfg.executor = ExecutorCfg::in_memory();
     let mem = solve(&space, &pts, &cfg);
     let peak = mem.max_local_bytes;
-    println!("in-memory: cost={:.1} peak resident = {peak} B", mem.full_cost);
+    println!(
+        "in-memory: cost={:.1} peak resident = {peak} B (kernel {})",
+        mem.full_cost, mem.kernel
+    );
 
     // 3. The same solve out of core, under a hard budget of exactly the
     //    measured peak. Byte parity means this is the tightest budget

@@ -6,7 +6,9 @@
 //!      reproduction (quick mode by default; `-- --full` for the sizes
 //!      recorded in EXPERIMENTS.md).
 //!   2. Micro/throughput benchmarks of the hot paths: CoverWithBalls,
-//!      bulk assignment (scalar vs XLA engine), local search, the
+//!      bulk assignment (per distance-kernel backend: scalar loop,
+//!      blocked, simd, XLA engine — the `euclidean.assign.*` series in
+//!      BENCH_micro.json), local search, the
 //!      end-to-end 3-round solve, the outlier-robust pipeline, and the
 //!      geometry-pruning comparison (pruned vs unpruned cover,
 //!      incremental vs rebuild swap scan) — persisted as
@@ -40,6 +42,7 @@ use mrcoreset::eval::{run_experiment, ALL_IDS};
 use mrcoreset::mapreduce::Simulator;
 use mrcoreset::metric::counter;
 use mrcoreset::metric::dense::{sq_euclidean, EuclideanSpace};
+use mrcoreset::metric::kernel::KernelKind;
 use mrcoreset::metric::{MetricSpace, Objective};
 use mrcoreset::outliers::{local_search_outliers, robust_cost};
 use mrcoreset::runtime::XlaEngine;
@@ -153,6 +156,40 @@ fn micro_benches(smoke: bool) {
     );
     let (_, evals) = counter::counted(|| plain.nearest_batch(&pts, &centers));
     println!("distance evals per assignment pass: {evals}\n");
+
+    // Per-kernel assignment series — the cross-PR perf trajectory of
+    // the pluggable backends. Key shape `euclidean.assign.<kernel>` is
+    // load-bearing: BENCH_baseline/BENCH_micro.json and the CI kernel
+    // matrix gate on these names.
+    let mut kernel_medians: Vec<(&'static str, f64)> = Vec::new();
+    for kind in [KernelKind::Scalar, KernelKind::Blocked, KernelKind::Simd] {
+        let kspace = EuclideanSpace::with_kernel(shared.clone(), kind);
+        let r = bench(&format!("euclidean.assign.{} {nk} x 256", kind.name()), 1, samples, || {
+            std::hint::black_box(kspace.nearest_batch(&pts, &centers));
+        });
+        println!("{r}   [{:.1} Mpairs/s]", r.throughput_per_sec(n * 256) / 1e6);
+        kernel_medians.push((kind.name(), r.median.as_secs_f64()));
+        micro_results.push(r);
+    }
+    let median_of = |name: &str| -> f64 {
+        kernel_medians.iter().find(|(k, _)| *k == name).map(|(_, t)| *t).unwrap_or(f64::NAN)
+    };
+    // speedups vs the seed per-point scalar loop (the pre-kernel
+    // baseline every hot path used to issue)
+    let loop_t = rs.median.as_secs_f64();
+    let blocked_speedup = loop_t / median_of("blocked").max(1e-12);
+    let simd_speedup = loop_t / median_of("simd").max(1e-12);
+    println!(
+        "assignment speedup vs scalar loop: blocked {blocked_speedup:.2}x  \
+         simd {simd_speedup:.2}x\n"
+    );
+    if !smoke && blocked_speedup < 5.0 {
+        eprintln!(
+            "warning: blocked assignment speedup {blocked_speedup:.2}x below the 5x \
+             acceptance bar"
+        );
+    }
+
     if let Some(engine) = XlaEngine::load_default() {
         let mut engine = engine;
         engine.set_dispatch_threshold(1);
@@ -204,7 +241,18 @@ fn micro_benches(smoke: bool) {
         println!("{r}   [{:.0} kpts/s]", r.throughput_per_sec(n) / 1e3);
         micro_results.push(r);
     }
-    write_bench_json("BENCH_micro.json", &micro_results, smoke);
+    // Deterministic work counts gate cross-PR regressions (bench-diff
+    // reads "metrics" only); `*_ratio` keys are timing-derived context
+    // and are skipped by the gate.
+    let metrics: Vec<(&str, f64)> = vec![
+        ("assign_dist_evals", evals as f64),
+        ("assign_blocked_speedup_ratio", blocked_speedup),
+        ("assign_simd_speedup_ratio", simd_speedup),
+    ];
+    write_json_doc(
+        "BENCH_micro.json",
+        with_meta(to_json_with_metrics(&micro_results, &metrics), &BenchMeta::collect(smoke)),
+    );
 }
 
 fn outlier_benches(smoke: bool) {
@@ -288,7 +336,10 @@ fn pruning_benches(smoke: bool) {
     let (data, _) =
         GaussianMixtureSpec { n, d: 4, k: 8, seed: 11, ..Default::default() }.generate();
     let shared = Arc::new(data);
-    let space = EuclideanSpace::new(shared.clone());
+    // pinned to an exact kernel: bounds pruning is only active under
+    // uniform precision, and the pruned-vs-unpruned dist_evals metrics
+    // must stay meaningful (and gate-stable) under any MRCORESET_KERNEL
+    let space = EuclideanSpace::with_kernel(shared.clone(), KernelKind::Blocked);
     let pts: Vec<u32> = (0..n as u32).collect();
     let nk = fmt_k(n);
     let t: Vec<u32> = (0..16u32).map(|i| i * (n as u32 / 16)).collect();

@@ -135,6 +135,10 @@ pub struct RunReport {
     /// Total distance evaluations charged inside the MapReduce rounds
     /// (per-round and per-reducer breakdowns live in `stats.rounds`).
     pub dist_evals: u64,
+    /// Distance-kernel backend the metric space resolved to for this run
+    /// (`scalar`/`blocked`/`simd`/`engine`/`bitparallel`, see
+    /// [`crate::metric::kernel`]).
+    pub kernel: &'static str,
     pub wall: std::time::Duration,
     pub stats: JobStats,
 }
@@ -181,7 +185,15 @@ pub fn try_solve_traced(
     if recorder.enabled() {
         recorder.record(&Event::RunStart {
             schema: TRACE_SCHEMA_VERSION,
-            label: format!("{} k={} n={} eps={} seed={}", cfg.objective, cfg.k, n, cfg.eps, cfg.seed),
+            label: format!(
+                "{} k={} n={} eps={} seed={} kernel={}",
+                cfg.objective,
+                cfg.k,
+                n,
+                cfg.eps,
+                cfg.seed,
+                space.kernel_name()
+            ),
         });
     }
     let exec = cfg.executor.build(cfg.threads, recorder.clone())?;
@@ -301,6 +313,7 @@ pub fn try_solve_traced(
         aggregate_memory: stats.aggregate_memory(),
         max_local_bytes: stats.max_local_bytes(),
         dist_evals: stats.total_dist_evals(),
+        kernel: space.kernel_name(),
         wall: t0.elapsed(),
         stats,
         solution,

@@ -32,12 +32,14 @@ impl RunReport {
             self.coreset_size, self.cw_size, self.l, l_note, self.m
         ));
         s.push_str(&format!(
-            "mapreduce: rounds={} M_L={} pts M_A={} pts M_B={} B dist_evals={} wall={:.3}s\n",
+            "mapreduce: rounds={} M_L={} pts M_A={} pts M_B={} B dist_evals={} kernel={} \
+             wall={:.3}s\n",
             self.rounds,
             self.max_local_memory,
             self.aggregate_memory,
             self.max_local_bytes,
             self.dist_evals,
+            self.kernel,
             self.wall.as_secs_f64()
         ));
         for r in &self.stats.rounds {
@@ -94,6 +96,10 @@ impl RunReport {
         // backend-dependent spill read/write volumes deliberately do not.
         o.set("max_local_bytes", Json::num(self.max_local_bytes as f64));
         o.set("dist_evals", Json::num(self.dist_evals as f64));
+        // Backend identity, not a measurement: lets archived reports say
+        // which kernel produced them. Exact kernels serialize identical
+        // metrics, so this never masks a real determinism diff.
+        o.set("kernel", Json::str(self.kernel));
         let rounds: Vec<Json> = self
             .stats
             .rounds

@@ -35,7 +35,8 @@ use mrcoreset::data::synth::{GaussianMixtureSpec, NoiseSpec};
 use mrcoreset::eval::{run_experiment, validate_ids, ALL_IDS};
 use mrcoreset::mapreduce::{parse_bytes, ExecBackend, PartitionStrategy};
 use mrcoreset::metric::dense::EuclideanSpace;
-use mrcoreset::metric::Objective;
+use mrcoreset::metric::kernel::KernelKind;
+use mrcoreset::metric::{MetricSpace, Objective};
 use mrcoreset::obs::{self, log, Event, JsonlSink, Recorder};
 use mrcoreset::runtime::XlaEngine;
 use mrcoreset::util::cli::Args;
@@ -47,9 +48,10 @@ const USAGE: &str = "usage: mrcoreset <run|exp|gen|report|bench-diff|info> [flag
        [--noise N] [--l L] [--m M] [--beta B] [--tl dpp|local-search|gonzalez]
        [--final local-search|pam|robust] [--one-round]
        [--partition rr|contig|shuffle] [--seed S] [--no-engine]
+       [--kernel auto|scalar|blocked|simd]
        [--executor mem|spill] [--mem-budget BYTES] [--spill-dir DIR]
        [--trace FILE] [--json]
-  exp  <e1..e12|all> [--full]
+  exp  <e1..e12|all> [--full] [--kernel auto|scalar|blocked|simd]
   gen  --n N --d D --k K --out FILE [--spread S] [--outliers F] [--noise N]
        [--seed S]
   report      <trace.jsonl>
@@ -64,6 +66,13 @@ const USAGE: &str = "usage: mrcoreset <run|exp|gen|report|bench-diff|info> [flag
   --partition how points are split into the L reducers (rr = round-robin,
               contig = contiguous, shuffle = seeded shuffle); --strategy
               is accepted as an alias
+  --kernel K  dense distance-kernel backend: auto (default; cache-blocked,
+              or the XLA engine when one is loaded), scalar (exact f64
+              reference), blocked (cache-blocked, bit-identical to
+              scalar), simd (f32 SIMD rows, inexact — disables pruning).
+              The MRCORESET_KERNEL env var sets the default; the flag
+              wins. The resolved backend is logged and recorded in the
+              run report/trace
   --executor  mem (default) keeps every shard in RAM; spill stages each
               round's shards on disk and materializes one per reducer
   --mem-budget B
@@ -94,6 +103,18 @@ fn main() {
             std::process::exit(2);
         }
     }
+}
+
+/// Parse `--kernel` if present; a typo is a usage error, not a silent
+/// fall-through (unlike the `MRCORESET_KERNEL` env override).
+fn kernel_of(args: &Args) -> Option<KernelKind> {
+    args.get("kernel").map(|s| match KernelKind::parse(s) {
+        Some(kind) => kind,
+        None => {
+            eprintln!("error: unknown --kernel {s} (want auto, scalar, blocked, or simd)");
+            std::process::exit(2);
+        }
+    })
 }
 
 fn objective_of(args: &Args) -> Objective {
@@ -143,20 +164,20 @@ fn cmd_run(args: &Args) {
     log::info(&format!("input: n={} d={} objective={}", n, data.d(), obj));
 
     let shared = Arc::new(data);
-    let space = if args.has("no-engine") {
-        EuclideanSpace::new(shared)
-    } else {
-        match XlaEngine::load_default() {
-            Some(engine) => {
-                log::info(&format!(
-                    "engine: XLA/PJRT with {} artifacts",
-                    engine.manifest().entries.len()
-                ));
-                EuclideanSpace::with_engine(shared, Arc::new(engine))
-            }
-            None => EuclideanSpace::new(shared),
+    // flag > MRCORESET_KERNEL > auto; an explicit non-auto kind
+    // deliberately sidelines the engine (see `EuclideanSpace::has_engine`)
+    let kind = KernelKind::resolve(kernel_of(args));
+    let mut space = EuclideanSpace::with_kernel(shared, kind);
+    if !args.has("no-engine") {
+        if let Some(engine) = XlaEngine::load_default() {
+            log::info(&format!(
+                "engine: XLA/PJRT with {} artifacts",
+                engine.manifest().entries.len()
+            ));
+            space.set_engine(Some(Arc::new(engine)));
         }
-    };
+    }
+    log::info(&format!("kernel: {}", space.kernel_name()));
 
     let mut cfg = ClusterConfig::new(obj, k, eps);
     if args.has("l") {
@@ -272,6 +293,12 @@ fn cmd_run(args: &Args) {
 }
 
 fn cmd_exp(args: &Args) {
+    // Experiments construct their own spaces via `::new`, which resolves
+    // the environment override — routing the flag through the env var
+    // applies it to every run the experiment performs.
+    if let Some(kind) = kernel_of(args) {
+        std::env::set_var("MRCORESET_KERNEL", kind.name());
+    }
     let quick = !args.has("full");
     let ids: Vec<&str> = match args.positional.first().map(String::as_str) {
         Some("all") | None => ALL_IDS.to_vec(),
@@ -291,6 +318,9 @@ fn cmd_exp(args: &Args) {
 }
 
 fn cmd_gen(args: &Args) {
+    // gen does no distance work, but validate the flag so a typo in a
+    // scripted run/gen pipeline fails here, not at the next stage
+    let _ = kernel_of(args);
     let spec = GaussianMixtureSpec {
         n: args.parse_or("n", 10_000),
         d: args.parse_or("d", 2),
@@ -572,6 +602,10 @@ fn cmd_info() {
         }
         None => println!("engine: unavailable (run `make artifacts`)"),
     }
+    println!(
+        "kernel: {} (default resolution; override with --kernel or MRCORESET_KERNEL)",
+        KernelKind::resolve(None).name()
+    );
     println!("threads: {}", mrcoreset::util::pool::default_threads());
 }
 

@@ -45,6 +45,10 @@ impl MetricSpace for CountingSpace<'_> {
         self.inner.name()
     }
 
+    fn kernel_name(&self) -> &'static str {
+        self.inner.kernel_name()
+    }
+
     fn uniform_precision(&self) -> bool {
         self.inner.uniform_precision()
     }
@@ -106,8 +110,11 @@ mod tests {
 
     #[test]
     fn counts_only_computed_pruned_distances() {
+        use crate::metric::kernel::KernelKind;
         let v = Arc::new(VectorData::from_rows(&[vec![0.0], vec![1.0], vec![10.0]]));
-        let e = EuclideanSpace::new(v);
+        // pinned to an exact kernel: the skip accounting asserted below
+        // requires pruning to be active (inexact kernels bypass it)
+        let e = EuclideanSpace::with_kernel(v, KernelKind::Blocked);
         let c = CountingSpace::new(&e);
         // distances to 0 are 0,1,10; lower bounds are exact, cutoff 2.0:
         // the 10.0 entry is prunable by the inner Euclidean override

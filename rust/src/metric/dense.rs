@@ -1,15 +1,38 @@
-//! Dense vector metrics over row-major f32 storage: Euclidean (with the
-//! optional XLA/Pallas fast path), Manhattan (L1), and Chebyshev (L∞).
+//! Dense vector metrics over row-major f32 storage: Euclidean (L2),
+//! Manhattan (L1), and Chebyshev (L∞).
+//!
+//! Bulk queries route through a pluggable [`DistKernel`]
+//! backend selected at construction (see [`super::kernel`] for the
+//! backend table and the exactness contract). The scalar pairwise
+//! `dist` stays on the exact f64 reference path on every backend, so
+//! metric axioms and known-distance expectations hold regardless of the
+//! configured kernel.
 
 use std::sync::Arc;
 
 use crate::points::{SharedVectors, VectorData};
 
+use super::kernel::{self, DistKernel, KernelKind};
 use super::{counter, Assignment, MetricSpace};
+
+/// Default smallest problem size (`pts.len() * centers.len()` pairs)
+/// worth dispatching to an attached accelerator engine. Below this the
+/// blocked CPU kernel wins on dispatch overhead alone; the measured
+/// crossover for real backends lands well under the per-dispatch cost
+/// of gather + transfer (see the `euclidean.assign.*` series in
+/// `BENCH_micro.json` for the CPU side of the comparison). Overridable
+/// per engine via `set_dispatch_threshold`.
+pub const DEFAULT_DISPATCH_THRESHOLD: usize = 1 << 15;
 
 /// Batched distance backend contract, implemented by `runtime::XlaEngine`
 /// over the AOT HLO artifacts. Distances here are SQUARED Euclidean (that
 /// is what the kernels emit); callers take sqrt.
+///
+/// An attached engine is consumed through
+/// [`kernel::EngineKernel`](super::kernel::EngineKernel): blocks of at
+/// least [`dispatch_threshold`](BulkEngine::dispatch_threshold) pairs
+/// dispatch here, smaller blocks and everything after a dispatch
+/// failure take the blocked CPU kernel.
 pub trait BulkEngine: Send + Sync {
     /// x: (n, d) row-major points block; c: (k, d) centers block.
     /// Returns per-row (min squared distance, argmin position).
@@ -20,46 +43,59 @@ pub trait BulkEngine: Send + Sync {
         -> anyhow::Result<()>;
 
     /// Smallest problem (pts.len() * centers.len()) worth dispatching.
-    /// Perf pass measurement (EXPERIMENTS.md §Perf): on this CPU testbed
-    /// the tiled scalar scan (431 Mpairs/s) beats both the
-    /// interpret-mode Pallas HLO (36 Mpairs/s) and a pure-jnp XLA
-    /// lowering (~100 Mpairs/s) at clustering dimensionalities, so the
-    /// default never auto-dispatches; the engine path remains for real
-    /// accelerator backends and is exercised by tests via
-    /// `set_dispatch_threshold`.
     fn dispatch_threshold(&self) -> usize {
-        usize::MAX
+        DEFAULT_DISPATCH_THRESHOLD
     }
 }
 
-/// Euclidean (L2) metric. `engine` optionally routes the bulk queries
-/// (`nearest_batch`/`dist_batch`/`min_update`) through the PJRT-compiled
-/// kernels for large blocks; the scalar path is always available and is
-/// the correctness reference (tests compare them).
+/// Euclidean (L2) metric. Bulk queries go through the configured
+/// [`DistKernel`]; an attached [`BulkEngine`] is folded in as the
+/// engine kernel when the resolved kind is `auto`. The scalar f64 path
+/// is always the correctness reference (tests compare against it).
 pub struct EuclideanSpace {
     data: SharedVectors,
+    kernel: Arc<dyn DistKernel>,
+    /// Requested kind (after env resolution) — kept so `set_engine`
+    /// rebuilds the kernel under the same policy.
+    kind: KernelKind,
     engine: Option<Arc<dyn BulkEngine>>,
+    engine_active: bool,
 }
 
 impl EuclideanSpace {
     pub fn new(data: SharedVectors) -> EuclideanSpace {
-        EuclideanSpace { data, engine: None }
+        EuclideanSpace::with_kernel(data, KernelKind::resolve(None))
+    }
+
+    /// Construct with an explicit kernel backend (bypasses the
+    /// `MRCORESET_KERNEL` environment resolution).
+    pub fn with_kernel(data: SharedVectors, kind: KernelKind) -> EuclideanSpace {
+        let (kernel, engine_active) = kernel::build(kind, None);
+        EuclideanSpace { data, kernel, kind, engine: None, engine_active }
     }
 
     pub fn with_engine(data: SharedVectors, engine: Arc<dyn BulkEngine>) -> EuclideanSpace {
-        EuclideanSpace { data, engine: Some(engine) }
+        let mut s = EuclideanSpace::new(data);
+        s.set_engine(Some(engine));
+        s
     }
 
     pub fn set_engine(&mut self, engine: Option<Arc<dyn BulkEngine>>) {
+        let (kernel, engine_active) = kernel::build(self.kind, engine.clone());
+        self.kernel = kernel;
         self.engine = engine;
+        self.engine_active = engine_active;
     }
 
     pub fn data(&self) -> &SharedVectors {
         &self.data
     }
 
+    /// Whether an engine is actually in the dispatch path (an explicit
+    /// non-auto `--kernel` pins the CPU backend and sidelines any
+    /// attached engine).
     pub fn has_engine(&self) -> bool {
-        self.engine.is_some()
+        self.engine_active
     }
 
     #[inline]
@@ -94,50 +130,38 @@ impl MetricSpace for EuclideanSpace {
         "euclidean"
     }
 
-    /// Bulk distances to one stored point. The CPU path is f64 all the
-    /// way and is the correctness reference the tiled scan is checked
-    /// against (the batch-equivalence property tests pin it to scalar
-    /// `dist` at 1e-12). Engine-dispatched blocks route through the
-    /// min_update kernel with an infinite running minimum and, like the
-    /// engine branch of `nearest_batch`, return f32-precision distances
-    /// — the documented engine numerics (see runtime tests' tolerances).
+    fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// Bulk distances to one stored point, via the configured kernel.
+    /// Exact backends are bit-identical to the scalar `dist` expression;
+    /// inexact backends (simd, engine-dispatched blocks) return
+    /// f32-precision distances — the documented fast-path numerics.
     fn dist_batch(&self, pts: &[u32], c: u32, out: &mut [f64]) {
         assert_eq!(pts.len(), out.len());
         counter::charge(pts.len());
-        if let Some(engine) = &self.engine {
-            if pts.len() >= engine.dispatch_threshold() {
-                let x = self.data.gather(pts);
-                let cb = self.data.gather(&[c]);
-                let mut cur = vec![f32::INFINITY; pts.len()];
-                if engine.min_update_block(&x, &cb, &mut cur).is_ok() {
-                    for (o, s) in out.iter_mut().zip(&cur) {
-                        *o = (*s as f64).max(0.0).sqrt();
-                    }
-                    return;
-                }
-            }
-        }
-        let crow = self.data.row(c);
-        for (o, &p) in out.iter_mut().zip(pts) {
-            *o = sq_euclidean(self.data.row(p), crow).sqrt();
-        }
+        self.kernel.l2_dist_batch(&self.data, pts, c, out);
     }
 
-    /// With an engine attached, bulk queries may return f32-precision
-    /// distances for large blocks while small blocks stay f64 — bounds
-    /// built from such mixed output are unsound, so pruned callers must
-    /// not trust them (they fall back to computing every comparison).
+    /// Bounds built from a kernel that mixes precisions across block
+    /// sizes (engine) or runs f32 throughout (simd) are unsound, so
+    /// pruned callers must not trust them.
     fn uniform_precision(&self) -> bool {
-        self.engine.is_none()
+        self.kernel.uniform_precision()
     }
 
     /// Geometry-pruned bulk distances: pairs whose caller-supplied lower
     /// bound exceeds the cutoff are skipped entirely (no coordinates
     /// touched, no counter charge); computed entries go through the same
-    /// f64 `sq_euclidean(..).sqrt()` expression as the scalar `dist_batch`
-    /// path, so they are bit-identical to it. This path never dispatches
-    /// to the engine: the pruned survivor set is sparse and irregular,
-    /// which is exactly where kernel dispatch overhead loses.
+    /// f64 `sq_euclidean(..).sqrt()` expression as the exact `dist_batch`
+    /// path, so they are bit-identical to it. Under an inexact kernel
+    /// the skip test would compare exact-domain bounds against
+    /// fast-path values, so this falls back to the plain batch (keeping
+    /// pruned and unpruned twins bit-identical per kernel). The skip
+    /// loop never dispatches to an engine either way: the pruned
+    /// survivor set is sparse and irregular, which is exactly where
+    /// kernel dispatch overhead loses.
     fn dist_batch_pruned(
         &self,
         pts: &[u32],
@@ -149,6 +173,10 @@ impl MetricSpace for EuclideanSpace {
         assert_eq!(pts.len(), lower.len());
         assert_eq!(pts.len(), cutoff.len());
         assert_eq!(pts.len(), out.len());
+        if !self.kernel.uniform_precision() {
+            self.dist_batch(pts, c, out);
+            return pts.len();
+        }
         let crow = self.data.row(c);
         let mut computed = 0usize;
         for i in 0..pts.len() {
@@ -166,173 +194,33 @@ impl MetricSpace for EuclideanSpace {
     fn nearest_batch(&self, pts: &[u32], centers: &[u32]) -> Assignment {
         assert!(!centers.is_empty(), "nearest_batch: empty center set");
         counter::charge(pts.len() * centers.len());
-        if let Some(engine) = &self.engine {
-            if pts.len() * centers.len() >= engine.dispatch_threshold() {
-                let x = self.data.gather(pts);
-                let c = self.data.gather(centers);
-                match engine.assign_block(&x, &c) {
-                    Ok((d2, idx)) => {
-                        return Assignment {
-                            dist: d2.iter().map(|&v| (v as f64).max(0.0).sqrt()).collect(),
-                            idx: idx.iter().map(|&v| v as u32).collect(),
-                        };
-                    }
-                    Err(e) => {
-                        // Fall back to the scalar path; the engine logs once.
-                        crate::obs::log::warn(&format!(
-                            "engine assign failed ({e}); using scalar path"
-                        ));
-                    }
-                }
-            }
-        }
-        scalar_assign(&self.data, pts, centers)
+        self.kernel.l2_nearest(&self.data, pts, centers)
     }
 
     fn min_update(&self, pts: &[u32], c: u32, cur: &mut [f64]) {
         assert_eq!(pts.len(), cur.len());
         counter::charge(pts.len());
-        if let Some(engine) = &self.engine {
-            // a single-center pass does pts.len() distance evals; the PJRT
-            // dispatch overhead only amortizes on large blocks
-            if pts.len() >= engine.dispatch_threshold() {
-                let x = self.data.gather(pts);
-                let cb = self.data.gather(&[c]);
-                // engine works on squared distances
-                let mut cur_sq: Vec<f32> = cur.iter().map(|&d| (d * d) as f32).collect();
-                if engine.min_update_block(&x, &cb, &mut cur_sq).is_ok() {
-                    for (o, s) in cur.iter_mut().zip(&cur_sq) {
-                        *o = (*s as f64).max(0.0).sqrt();
-                    }
-                    return;
-                }
-            }
-        }
-        let crow = self.data.row(c);
-        for (i, &p) in pts.iter().enumerate() {
-            let cut = (cur[i] * cur[i]) as f32;
-            let dd = sq_dist_f32(self.data.row(p), crow, cut);
-            if dd < cut {
-                // recompute the accepted winner in f64 (same contract as
-                // scalar_assign)
-                cur[i] = sq_euclidean(self.data.row(p), crow).sqrt();
-            }
-        }
-    }
-}
-
-/// Cache-tiled nearest-center scan. Centers are staged once into a
-/// contiguous block and processed in L1-sized tiles against point tiles,
-/// with a d-specialized squared-distance kernel (f32 accumulation inside
-/// a tile is safe: distances are compared, not summed). ~2-3x over the
-/// naive per-point scan at clustering-typical d (see EXPERIMENTS.md §Perf).
-fn scalar_assign(data: &VectorData, pts: &[u32], centers: &[u32]) -> Assignment {
-    let d = data.d();
-    let n = pts.len();
-    // stage centers contiguously (they are re-streamed n/TILE_P times)
-    let cblock = data.gather(centers);
-    let craw = cblock.raw();
-    let mut dist = vec![f32::INFINITY; n];
-    let mut idx = vec![0u32; n];
-    const TILE_P: usize = 64;
-    const TILE_C: usize = 512;
-    let mut prow_cache: Vec<&[f32]> = Vec::with_capacity(TILE_P);
-    for p0 in (0..n).step_by(TILE_P) {
-        let p1 = (p0 + TILE_P).min(n);
-        prow_cache.clear();
-        prow_cache.extend(pts[p0..p1].iter().map(|&p| data.row(p)));
-        for c0 in (0..centers.len()).step_by(TILE_C) {
-            let c1 = (c0 + TILE_C).min(centers.len());
-            for (pi, prow) in prow_cache.iter().enumerate() {
-                let (mut best, mut best_j) = (dist[p0 + pi], idx[p0 + pi]);
-                for j in c0..c1 {
-                    let crow = &craw[j * d..(j + 1) * d];
-                    let dd = sq_dist_f32(prow, crow, best);
-                    if dd < best {
-                        best = dd;
-                        best_j = j as u32;
-                    }
-                }
-                dist[p0 + pi] = best;
-                idx[p0 + pi] = best_j;
-            }
-        }
-    }
-    // recompute winners in f64: the scan used f32 for speed, the output
-    // contract stays at f64 accuracy (argmin ties within f32 noise are
-    // documented and harmless to every caller)
-    let dist64: Vec<f64> = pts
-        .iter()
-        .zip(&idx)
-        .map(|(&p, &j)| {
-            sq_euclidean(data.row(p), &craw[j as usize * d..(j as usize + 1) * d]).sqrt()
-        })
-        .collect();
-    Assignment { dist: dist64, idx }
-}
-
-/// f32 squared distance with small-d specialization and early exit
-/// against the running best (`cut`).
-#[inline(always)]
-fn sq_dist_f32(a: &[f32], b: &[f32], cut: f32) -> f32 {
-    match a.len() {
-        1 => {
-            let d0 = a[0] - b[0];
-            d0 * d0
-        }
-        2 => {
-            let d0 = a[0] - b[0];
-            let d1 = a[1] - b[1];
-            d0 * d0 + d1 * d1
-        }
-        3 => {
-            let d0 = a[0] - b[0];
-            let d1 = a[1] - b[1];
-            let d2 = a[2] - b[2];
-            d0 * d0 + d1 * d1 + d2 * d2
-        }
-        4 => {
-            let d0 = a[0] - b[0];
-            let d1 = a[1] - b[1];
-            let d2 = a[2] - b[2];
-            let d3 = a[3] - b[3];
-            (d0 * d0 + d1 * d1) + (d2 * d2 + d3 * d3)
-        }
-        _ => {
-            // chunks of 4 keep the compiler vectorizing; early exit every
-            // 16 dims bounds wasted work on far centers in high d
-            let mut acc = 0.0f32;
-            let mut chunks = a.chunks_exact(4).zip(b.chunks_exact(4));
-            let mut i = 0;
-            for (ca, cb) in &mut chunks {
-                let d0 = ca[0] - cb[0];
-                let d1 = ca[1] - cb[1];
-                let d2 = ca[2] - cb[2];
-                let d3 = ca[3] - cb[3];
-                acc += (d0 * d0 + d1 * d1) + (d2 * d2 + d3 * d3);
-                i += 4;
-                if i % 16 == 0 && acc >= cut {
-                    return acc;
-                }
-            }
-            for k in (a.len() - a.len() % 4)..a.len() {
-                let dk = a[k] - b[k];
-                acc += dk * dk;
-            }
-            acc
-        }
+        self.kernel.l2_min_update(&self.data, pts, c, cur)
     }
 }
 
 macro_rules! vector_space {
-    ($name:ident, $metric_name:literal, $dist_fn:expr) => {
+    ($name:ident, $metric_name:literal, $dist_fn:expr, $row_batch:ident) => {
         pub struct $name {
             data: SharedVectors,
+            kernel: Arc<dyn DistKernel>,
         }
 
         impl $name {
             pub fn new(data: SharedVectors) -> $name {
-                $name { data }
+                $name::with_kernel(data, KernelKind::resolve(None))
+            }
+
+            /// Construct with an explicit kernel backend (bypasses the
+            /// `MRCORESET_KERNEL` environment resolution).
+            pub fn with_kernel(data: SharedVectors, kind: KernelKind) -> $name {
+                let (kernel, _) = kernel::build(kind, None);
+                $name { data, kernel }
             }
 
             pub fn data(&self) -> &SharedVectors {
@@ -352,20 +240,27 @@ macro_rules! vector_space {
                 f(self.data.row(i), self.data.row(j))
             }
 
-            /// Batched: stage the center row once, stream the points.
+            /// Batched rows via the configured kernel (exact backends
+            /// reproduce the scalar `dist` expression bit-for-bit).
             fn dist_batch(&self, pts: &[u32], c: u32, out: &mut [f64]) {
                 assert_eq!(pts.len(), out.len());
                 counter::charge(pts.len());
-                let f: fn(&[f32], &[f32]) -> f64 = $dist_fn;
-                let crow = self.data.row(c);
-                for (o, &p) in out.iter_mut().zip(pts) {
-                    *o = f(self.data.row(p), crow);
-                }
+                self.kernel.$row_batch(&self.data, pts, c, out);
+            }
+
+            fn uniform_precision(&self) -> bool {
+                self.kernel.uniform_precision()
+            }
+
+            fn kernel_name(&self) -> &'static str {
+                self.kernel.name()
             }
 
             /// Geometry-pruned batch: skip (and do not charge) pairs the
             /// caller's lower bound already decides; computed entries use
-            /// the same distance expression as `dist_batch`.
+            /// the same distance expression as the exact `dist_batch`.
+            /// Inexact kernels fall back to the plain batch (exact-domain
+            /// bounds cannot prune fast-path values soundly).
             fn dist_batch_pruned(
                 &self,
                 pts: &[u32],
@@ -377,6 +272,10 @@ macro_rules! vector_space {
                 assert_eq!(pts.len(), lower.len());
                 assert_eq!(pts.len(), cutoff.len());
                 assert_eq!(pts.len(), out.len());
+                if !self.kernel.uniform_precision() {
+                    self.dist_batch(pts, c, out);
+                    return pts.len();
+                }
                 let f: fn(&[f32], &[f32]) -> f64 = $dist_fn;
                 let crow = self.data.row(c);
                 let mut computed = 0usize;
@@ -409,8 +308,8 @@ pub fn chebyshev(a: &[f32], b: &[f32]) -> f64 {
     a.iter().zip(b).map(|(x, y)| ((*x - *y) as f64).abs()).fold(0.0, f64::max)
 }
 
-vector_space!(ManhattanSpace, "manhattan", manhattan);
-vector_space!(ChebyshevSpace, "chebyshev", chebyshev);
+vector_space!(ManhattanSpace, "manhattan", manhattan, l1_dist_batch);
+vector_space!(ChebyshevSpace, "chebyshev", chebyshev, linf_dist_batch);
 
 #[cfg(test)]
 mod tests {
@@ -466,10 +365,12 @@ mod tests {
         use super::super::counter;
         let d = data();
         let pts: Vec<u32> = (0..4).collect();
+        // pinned to an exact kernel: this test asserts pruning-active
+        // behavior (skip accounting), which inexact kernels bypass
         for s in [
-            &EuclideanSpace::new(d.clone()) as &dyn MetricSpace,
-            &ManhattanSpace::new(d.clone()),
-            &ChebyshevSpace::new(d.clone()),
+            &EuclideanSpace::with_kernel(d.clone(), KernelKind::Blocked) as &dyn MetricSpace,
+            &ManhattanSpace::with_kernel(d.clone(), KernelKind::Blocked),
+            &ChebyshevSpace::with_kernel(d.clone(), KernelKind::Blocked),
         ] {
             for c in 0..4u32 {
                 // triangle-inequality lower bounds via reference point 0:
@@ -501,6 +402,47 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn inexact_kernel_pruned_batch_falls_back_to_plain_batch() {
+        let d = data();
+        let pts: Vec<u32> = (0..4).collect();
+        for s in [
+            &EuclideanSpace::with_kernel(d.clone(), KernelKind::Simd) as &dyn MetricSpace,
+            &ManhattanSpace::with_kernel(d.clone(), KernelKind::Simd),
+            &ChebyshevSpace::with_kernel(d.clone(), KernelKind::Simd),
+        ] {
+            assert!(!s.uniform_precision(), "{}", s.name());
+            assert_eq!(s.kernel_name(), "simd");
+            let mut plain = vec![0.0f64; 4];
+            s.dist_batch(&pts, 1, &mut plain);
+            let lower = vec![1e9; 4]; // would skip everything if trusted
+            let cutoff = vec![0.0; 4];
+            let mut out = vec![0.0f64; 4];
+            let computed = s.dist_batch_pruned(&pts, 1, &lower, &cutoff, &mut out);
+            assert_eq!(computed, 4, "{}", s.name());
+            for i in 0..4 {
+                assert_eq!(out[i].to_bits(), plain[i].to_bits(), "{} i={i}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_selection_is_visible() {
+        // with_kernel bypasses the environment, so these hold under any
+        // MRCORESET_KERNEL (the CI matrix leg sets it)
+        let d = data();
+        assert_eq!(
+            EuclideanSpace::with_kernel(d.clone(), KernelKind::Auto).kernel_name(),
+            "blocked"
+        );
+        assert_eq!(
+            EuclideanSpace::with_kernel(d.clone(), KernelKind::Scalar).kernel_name(),
+            "scalar"
+        );
+        let e = EuclideanSpace::with_kernel(d, KernelKind::Scalar);
+        assert!(!e.has_engine());
     }
 
     #[test]

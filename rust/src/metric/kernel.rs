@@ -1,0 +1,852 @@
+//! Pluggable vectorized kernel backends for the dense vector metrics.
+//!
+//! A [`DistKernel`] owns the bulk-query arithmetic of a dense space —
+//! `dist_batch` rows, `nearest_batch` scans, `min_update` folds — while
+//! the space keeps the [`MetricSpace`](super::MetricSpace) contract:
+//! counter charging (bulk ops charge `|pts| · |centers|` *before*
+//! dispatching, so `dist_evals` is kernel-invariant), pruning-gate
+//! decisions, and the pruned code paths themselves. Kernels never touch
+//! [`super::counter`].
+//!
+//! # Backends
+//!
+//! | kernel    | L2 assignment                   | L1/L∞ rows | exact | prunable |
+//! |-----------|---------------------------------|------------|-------|----------|
+//! | `scalar`  | f64 per-pair reference fold     | f64 scalar | yes   | yes      |
+//! | `blocked` | cache-blocked `‖x‖²+‖c‖²−2x·c` f32 scan + exact f64 verify | f64 scalar | yes | yes |
+//! | `simd`    | 4-lane f32 SIMD accumulation    | 4-lane f32 SIMD | no | no  |
+//! | engine    | `BulkEngine` dispatch (PJRT), blocked CPU fallback | blocked | no | no |
+//!
+//! `auto` resolves to `blocked` (or the engine kernel when a
+//! [`BulkEngine`] is attached). Selection mirrors the executor override
+//! pattern: `MRCORESET_KERNEL` overrides the built-in default, an
+//! explicit `--kernel`/constructor choice overrides the environment.
+//!
+//! # Exactness contract
+//!
+//! Kernels reporting `uniform_precision() == true` must be *decision
+//! bit-identical* to [`ScalarKernel`]: same `Assignment` bits, same
+//! argmin ties, same `min_update` results. The blocked kernel achieves
+//! this without paying f64 GEMM cost: the norm-decomposition scan is
+//! only a *bounding* pass. With per-pair margin `M = (d+8)·ε₃₂·(‖x‖²+‖c‖²)`
+//! (the 4-lane f32 dot's forward error is below `(d/4+2)·ε₃₂·(‖x‖²+‖c‖²)`,
+//! so `M` carries ≥4x analytic headroom; randomized cross-validation
+//! measured ≥11x), every center whose approximate squared distance could
+//! reach the minimum lands in a candidate set that is then verified with
+//! the exact f64 `sq_euclidean` in center order — in the common case one
+//! exact evaluation per point, the winner, whose exact distance the
+//! output needs anyway. Inexact kernels (`simd`, engine) report
+//! `uniform_precision() == false`; the owning spaces then route
+//! `dist_batch_pruned` through the plain batch path and bounds-pruned
+//! callers fall back to their exact reference folds.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::points::{sq_norm_f64, sq_norms_f64, VectorData};
+
+use super::dense::{chebyshev, manhattan, sq_euclidean, BulkEngine};
+use super::Assignment;
+
+/// f32 machine epsilon as f64 (2⁻²³) — the unit of the blocked margin.
+const EPS32: f64 = f32::EPSILON as f64;
+
+/// Requested kernel backend. `Auto` lets construction pick: the blocked
+/// exact kernel, or the engine kernel when a `BulkEngine` is attached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    Auto,
+    Scalar,
+    Blocked,
+    Simd,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "auto" => Some(KernelKind::Auto),
+            "scalar" => Some(KernelKind::Scalar),
+            "blocked" => Some(KernelKind::Blocked),
+            "simd" => Some(KernelKind::Simd),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Blocked => "blocked",
+            KernelKind::Simd => "simd",
+        }
+    }
+
+    /// `MRCORESET_KERNEL` override, mirroring `MRCORESET_EXECUTOR`:
+    /// unrecognized values fall through to the built-in default.
+    pub fn from_env() -> Option<KernelKind> {
+        std::env::var("MRCORESET_KERNEL").ok().and_then(|v| KernelKind::parse(&v))
+    }
+
+    /// Selection order: explicit choice (CLI/constructor) beats the
+    /// environment override beats `Auto`.
+    pub fn resolve(explicit: Option<KernelKind>) -> KernelKind {
+        explicit.or_else(KernelKind::from_env).unwrap_or(KernelKind::Auto)
+    }
+}
+
+/// Bulk-query backend for dense row-major f32 data. See the module docs
+/// for the exactness contract; implementations never charge the
+/// distance counter (the owning space charges before dispatch).
+pub trait DistKernel: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Whether bulk results are bit-identical to the scalar f64
+    /// reference (and therefore safe to build pruning bounds from).
+    fn uniform_precision(&self) -> bool;
+
+    /// `out[i] = d(pts[i], c)` under L2.
+    fn l2_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]);
+
+    /// Nearest-center assignment under L2; ties break toward the
+    /// earlier center position (strict `<` fold semantics).
+    fn l2_nearest(&self, data: &VectorData, pts: &[u32], centers: &[u32]) -> Assignment;
+
+    /// `cur[i] = min(cur[i], d(pts[i], c))` under L2.
+    fn l2_min_update(&self, data: &VectorData, pts: &[u32], c: u32, cur: &mut [f64]);
+
+    /// `out[i] = d(pts[i], c)` under L1 (Manhattan).
+    fn l1_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]);
+
+    /// `out[i] = d(pts[i], c)` under L∞ (Chebyshev).
+    fn linf_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]);
+}
+
+/// Build the kernel for a resolved kind. Returns the kernel plus
+/// whether the engine is actually in the dispatch path (an explicit
+/// non-auto kind pins the CPU kernel and sidelines the engine).
+pub fn build(kind: KernelKind, engine: Option<Arc<dyn BulkEngine>>) -> (Arc<dyn DistKernel>, bool) {
+    match kind {
+        KernelKind::Scalar => (Arc::new(ScalarKernel), false),
+        KernelKind::Blocked => (Arc::new(BlockedKernel), false),
+        KernelKind::Simd => (Arc::new(SimdKernel), false),
+        KernelKind::Auto => match engine {
+            Some(e) => (Arc::new(EngineKernel::new(e)), true),
+            None => (Arc::new(BlockedKernel), false),
+        },
+    }
+}
+
+/// Shared fold shape: visit centers in ascending position per point with
+/// a strict `<` update — the reference semantics every kernel's
+/// `nearest` must reproduce (it is exactly the trait-default fold over
+/// `dist_batch` rows, reordered point-major).
+fn fold_nearest<R>(data: &VectorData, pts: &[u32], centers: &[u32], row_dist: R) -> Assignment
+where
+    R: Fn(&[f32], &[f32]) -> f64,
+{
+    let d = data.d();
+    let cblock = data.gather(centers);
+    let craw = cblock.raw();
+    let n = pts.len();
+    let mut dist = vec![0.0f64; n];
+    let mut idx = vec![0u32; n];
+    for (i, &p) in pts.iter().enumerate() {
+        let prow = data.row(p);
+        let (mut bd, mut bj) = (f64::INFINITY, 0u32);
+        for j in 0..centers.len() {
+            let e = row_dist(prow, &craw[j * d..(j + 1) * d]);
+            if e < bd {
+                bd = e;
+                bj = j as u32;
+            }
+        }
+        dist[i] = bd;
+        idx[i] = bj;
+    }
+    Assignment { dist, idx }
+}
+
+/// Exact f64 per-pair reference: the semantics every exact backend is
+/// pinned against (and the `scalar` series in `BENCH_micro.json`).
+pub struct ScalarKernel;
+
+impl DistKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn uniform_precision(&self) -> bool {
+        true
+    }
+
+    fn l2_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        let crow = data.row(c);
+        for (o, &p) in out.iter_mut().zip(pts) {
+            *o = sq_euclidean(data.row(p), crow).sqrt();
+        }
+    }
+
+    fn l2_nearest(&self, data: &VectorData, pts: &[u32], centers: &[u32]) -> Assignment {
+        fold_nearest(data, pts, centers, |a, b| sq_euclidean(a, b).sqrt())
+    }
+
+    fn l2_min_update(&self, data: &VectorData, pts: &[u32], c: u32, cur: &mut [f64]) {
+        let crow = data.row(c);
+        for (o, &p) in cur.iter_mut().zip(pts) {
+            let e = sq_euclidean(data.row(p), crow).sqrt();
+            if e < *o {
+                *o = e;
+            }
+        }
+    }
+
+    fn l1_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        let crow = data.row(c);
+        for (o, &p) in out.iter_mut().zip(pts) {
+            *o = manhattan(data.row(p), crow);
+        }
+    }
+
+    fn linf_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        let crow = data.row(c);
+        for (o, &p) in out.iter_mut().zip(pts) {
+            *o = chebyshev(data.row(p), crow);
+        }
+    }
+}
+
+/// Cache-blocked GEMM-style L2 assignment: a 4-lane f32
+/// norm-decomposition scan over L1-resident center tiles bounds the
+/// candidate set, exact f64 verification picks the winner — decision
+/// bit-identical to [`ScalarKernel`] (module docs prove the margin).
+pub struct BlockedKernel;
+
+/// Point tile: bounds the approx-row scratch and keeps the staged point
+/// rows hot while a center tile is resident.
+const TILE_P: usize = 64;
+
+impl BlockedKernel {
+    /// Center tile sized for L1d residency: ~24 KiB of f32 rows leaves
+    /// room for the point tile and the approx scratch lines.
+    fn tile_c(d: usize) -> usize {
+        (24 * 1024 / (4 * d)).clamp(8, 1024)
+    }
+}
+
+impl DistKernel for BlockedKernel {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn uniform_precision(&self) -> bool {
+        true
+    }
+
+    fn l2_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        // single-center rows are the value-producing primitive every
+        // caller folds over: keep them on the exact f64 reference path
+        let crow = data.row(c);
+        for (o, &p) in out.iter_mut().zip(pts) {
+            *o = sq_euclidean(data.row(p), crow).sqrt();
+        }
+    }
+
+    fn l2_nearest(&self, data: &VectorData, pts: &[u32], centers: &[u32]) -> Assignment {
+        let d = data.d();
+        let n = pts.len();
+        let k = centers.len();
+        let cblock = data.gather(centers);
+        let craw = cblock.raw();
+        let cnorms = sq_norms_f64(craw, d);
+        let kappa = (d as f64 + 8.0) * EPS32;
+        let tile_c = Self::tile_c(d);
+        let mut dist = vec![0.0f64; n];
+        let mut idx = vec![0u32; n];
+        let rows = TILE_P.min(n.max(1));
+        let mut approx = vec![0.0f64; rows * k];
+        let mut pnorms = [0.0f64; TILE_P];
+        for p0 in (0..n).step_by(TILE_P) {
+            let pl = TILE_P.min(n - p0);
+            for pi in 0..pl {
+                pnorms[pi] = sq_norm_f64(data.row(pts[p0 + pi]));
+            }
+            // GEMM-shaped scan: each center tile stays L1-resident while
+            // being re-streamed across the whole point tile
+            for c0 in (0..k).step_by(tile_c) {
+                let c1 = (c0 + tile_c).min(k);
+                for pi in 0..pl {
+                    let prow = data.row(pts[p0 + pi]);
+                    let pn = pnorms[pi];
+                    let row = &mut approx[pi * k..(pi + 1) * k];
+                    for j in c0..c1 {
+                        let dot = dot_f32(prow, &craw[j * d..(j + 1) * d]) as f64;
+                        row[j] = pn + cnorms[j] - 2.0 * dot;
+                    }
+                }
+            }
+            // candidate envelope + exact verification, in center order,
+            // with the same linear-domain strict-< comparisons as the
+            // reference fold (sqrt rounding can tie squared-distinct
+            // values, so the squared domain must not decide the argmin)
+            for pi in 0..pl {
+                let prow = data.row(pts[p0 + pi]);
+                let pn = pnorms[pi];
+                let row = &approx[pi * k..(pi + 1) * k];
+                let mut best_ub = f64::INFINITY;
+                for j in 0..k {
+                    let ub = row[j] + kappa * (pn + cnorms[j]);
+                    if ub < best_ub {
+                        best_ub = ub;
+                    }
+                }
+                let (mut bd, mut bj) = (f64::INFINITY, 0u32);
+                for j in 0..k {
+                    if row[j] - kappa * (pn + cnorms[j]) <= best_ub {
+                        let e = sq_euclidean(prow, &craw[j * d..(j + 1) * d]).sqrt();
+                        if e < bd {
+                            bd = e;
+                            bj = j as u32;
+                        }
+                    }
+                }
+                dist[p0 + pi] = bd;
+                idx[p0 + pi] = bj;
+            }
+        }
+        Assignment { dist, idx }
+    }
+
+    fn l2_min_update(&self, data: &VectorData, pts: &[u32], c: u32, cur: &mut [f64]) {
+        let d = data.d();
+        let crow = data.row(c);
+        let cn = sq_norm_f64(crow);
+        let kappa = (d as f64 + 8.0) * EPS32;
+        for (i, &p) in pts.iter().enumerate() {
+            let prow = data.row(p);
+            let pn = sq_norm_f64(prow);
+            let scale = pn + cn;
+            let approx = scale - 2.0 * dot_f32(prow, crow) as f64;
+            // sound skip: beyond the f32-scale margin, 1e-12 relative
+            // slack absorbs the squared-vs-linear domain rounding of
+            // `cur²`, so a skipped pair provably satisfies e >= cur.
+            // cur = INFINITY (or any non-improving bound) always computes.
+            if approx - kappa * scale > cur[i] * cur[i] * (1.0 + 1e-12) {
+                continue;
+            }
+            let e = sq_euclidean(prow, crow).sqrt();
+            if e < cur[i] {
+                cur[i] = e;
+            }
+        }
+    }
+
+    fn l1_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        ScalarKernel.l1_dist_batch(data, pts, c, out)
+    }
+
+    fn linf_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        ScalarKernel.linf_dist_batch(data, pts, c, out)
+    }
+}
+
+/// Explicit-SIMD f32 kernel: 4-lane accumulation for all three dense
+/// metrics (SSE2 on x86_64, a lane-for-lane portable mirror elsewhere —
+/// identical results either way). Fast but inexact relative to the f64
+/// reference, so it reports `uniform_precision() == false` and never
+/// feeds the bounds-pruned paths.
+pub struct SimdKernel;
+
+impl DistKernel for SimdKernel {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn uniform_precision(&self) -> bool {
+        false
+    }
+
+    fn l2_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        let crow = data.row(c);
+        for (o, &p) in out.iter_mut().zip(pts) {
+            // widen before sqrt: integer-exact inputs still round-trip
+            *o = (simd_rows::l2_row(data.row(p), crow) as f64).sqrt();
+        }
+    }
+
+    fn l2_nearest(&self, data: &VectorData, pts: &[u32], centers: &[u32]) -> Assignment {
+        fold_nearest(data, pts, centers, |a, b| (simd_rows::l2_row(a, b) as f64).sqrt())
+    }
+
+    fn l2_min_update(&self, data: &VectorData, pts: &[u32], c: u32, cur: &mut [f64]) {
+        let crow = data.row(c);
+        for (o, &p) in cur.iter_mut().zip(pts) {
+            let e = (simd_rows::l2_row(data.row(p), crow) as f64).sqrt();
+            if e < *o {
+                *o = e;
+            }
+        }
+    }
+
+    fn l1_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        let crow = data.row(c);
+        for (o, &p) in out.iter_mut().zip(pts) {
+            *o = simd_rows::l1_row(data.row(p), crow) as f64;
+        }
+    }
+
+    fn linf_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        let crow = data.row(c);
+        for (o, &p) in out.iter_mut().zip(pts) {
+            *o = simd_rows::linf_row(data.row(p), crow) as f64;
+        }
+    }
+}
+
+/// `BulkEngine` (PJRT) dispatch folded in as a kernel backend. Large
+/// blocks go to the engine (f32 engine numerics); small blocks and every
+/// call after the first dispatch failure take the blocked CPU kernel —
+/// the failure latch replaces the old per-call gather-then-fallback
+/// double work with exactly one wasted gather per process.
+pub struct EngineKernel {
+    engine: Arc<dyn BulkEngine>,
+    fallback: BlockedKernel,
+    threshold: usize,
+    failed: AtomicBool,
+}
+
+impl EngineKernel {
+    pub fn new(engine: Arc<dyn BulkEngine>) -> EngineKernel {
+        let threshold = engine.dispatch_threshold();
+        EngineKernel { engine, fallback: BlockedKernel, threshold, failed: AtomicBool::new(false) }
+    }
+
+    fn engine_ready(&self, pairs: usize) -> bool {
+        pairs >= self.threshold && !self.failed.load(Ordering::Relaxed)
+    }
+
+    fn disable(&self, err: &anyhow::Error) {
+        if !self.failed.swap(true, Ordering::Relaxed) {
+            crate::obs::log::warn(&format!(
+                "engine dispatch failed ({err}); all further bulk queries use the blocked CPU \
+                 kernel"
+            ));
+        }
+    }
+}
+
+impl DistKernel for EngineKernel {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    /// Engine blocks are f32 while small blocks are f64 — mixed output
+    /// is unsound to build pruning bounds from.
+    fn uniform_precision(&self) -> bool {
+        false
+    }
+
+    fn l2_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        if self.engine_ready(pts.len()) {
+            let x = data.gather(pts);
+            let cb = data.gather(&[c]);
+            let mut cur = vec![f32::INFINITY; pts.len()];
+            match self.engine.min_update_block(&x, &cb, &mut cur) {
+                Ok(()) => {
+                    for (o, s) in out.iter_mut().zip(&cur) {
+                        *o = (*s as f64).max(0.0).sqrt();
+                    }
+                    return;
+                }
+                Err(e) => self.disable(&e),
+            }
+        }
+        self.fallback.l2_dist_batch(data, pts, c, out)
+    }
+
+    fn l2_nearest(&self, data: &VectorData, pts: &[u32], centers: &[u32]) -> Assignment {
+        if self.engine_ready(pts.len() * centers.len()) {
+            let x = data.gather(pts);
+            let c = data.gather(centers);
+            match self.engine.assign_block(&x, &c) {
+                Ok((d2, idx)) => {
+                    return Assignment {
+                        dist: d2.iter().map(|&v| (v as f64).max(0.0).sqrt()).collect(),
+                        idx: idx.iter().map(|&v| v as u32).collect(),
+                    };
+                }
+                Err(e) => self.disable(&e),
+            }
+        }
+        self.fallback.l2_nearest(data, pts, centers)
+    }
+
+    fn l2_min_update(&self, data: &VectorData, pts: &[u32], c: u32, cur: &mut [f64]) {
+        if self.engine_ready(pts.len()) {
+            let x = data.gather(pts);
+            let cb = data.gather(&[c]);
+            // engine works on squared distances
+            let mut cur_sq: Vec<f32> = cur.iter().map(|&v| (v * v) as f32).collect();
+            match self.engine.min_update_block(&x, &cb, &mut cur_sq) {
+                Ok(()) => {
+                    for (o, s) in cur.iter_mut().zip(&cur_sq) {
+                        *o = (*s as f64).max(0.0).sqrt();
+                    }
+                    return;
+                }
+                Err(e) => self.disable(&e),
+            }
+        }
+        self.fallback.l2_min_update(data, pts, c, cur)
+    }
+
+    fn l1_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        self.fallback.l1_dist_batch(data, pts, c, out)
+    }
+
+    fn linf_dist_batch(&self, data: &VectorData, pts: &[u32], c: u32, out: &mut [f64]) {
+        self.fallback.linf_dist_batch(data, pts, c, out)
+    }
+}
+
+/// 4-lane f32 dot product (the blocked kernel's bounding scan). Lane
+/// shape and `(l0+l1)+(l2+l3)` combine order are fixed: the margin in
+/// the module docs is proved against exactly this summation.
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() / 4 * 4;
+    let mut l = [0.0f32; 4];
+    let mut i = 0;
+    while i < n4 {
+        l[0] += a[i] * b[i];
+        l[1] += a[i + 1] * b[i + 1];
+        l[2] += a[i + 2] * b[i + 2];
+        l[3] += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut acc = (l[0] + l[1]) + (l[2] + l[3]);
+    for j in n4..a.len() {
+        acc += a[j] * b[j];
+    }
+    acc
+}
+
+#[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+mod simd_rows {
+    //! SSE2 row primitives. `sse2` is part of the x86_64 baseline
+    //! feature set, so the cfg gate is static — no runtime detection.
+    //! The portable mirror below uses the same lane shapes and combine
+    //! order, so both paths produce bit-identical f32 results.
+    use std::arch::x86_64::*;
+
+    #[inline]
+    pub fn l1_row(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n4 = a.len() / 4 * 4;
+        // SAFETY: sse2 is statically enabled (module cfg); unaligned
+        // loads via _mm_loadu_ps; i + 4 <= n4 <= len keeps loads in
+        // bounds.
+        unsafe {
+            let sign = _mm_set1_ps(-0.0);
+            let mut acc = _mm_setzero_ps();
+            let mut i = 0;
+            while i < n4 {
+                let va = _mm_loadu_ps(a.as_ptr().add(i));
+                let vb = _mm_loadu_ps(b.as_ptr().add(i));
+                acc = _mm_add_ps(acc, _mm_andnot_ps(sign, _mm_sub_ps(va, vb)));
+                i += 4;
+            }
+            let mut l = [0.0f32; 4];
+            _mm_storeu_ps(l.as_mut_ptr(), acc);
+            let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+            for j in n4..a.len() {
+                s += (a[j] - b[j]).abs();
+            }
+            s
+        }
+    }
+
+    #[inline]
+    pub fn l2_row(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n4 = a.len() / 4 * 4;
+        // SAFETY: as in l1_row.
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            let mut i = 0;
+            while i < n4 {
+                let va = _mm_loadu_ps(a.as_ptr().add(i));
+                let vb = _mm_loadu_ps(b.as_ptr().add(i));
+                let dv = _mm_sub_ps(va, vb);
+                acc = _mm_add_ps(acc, _mm_mul_ps(dv, dv));
+                i += 4;
+            }
+            let mut l = [0.0f32; 4];
+            _mm_storeu_ps(l.as_mut_ptr(), acc);
+            let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+            for j in n4..a.len() {
+                let dj = a[j] - b[j];
+                s += dj * dj;
+            }
+            s
+        }
+    }
+
+    #[inline]
+    pub fn linf_row(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n4 = a.len() / 4 * 4;
+        // SAFETY: as in l1_row. _mm_max_ps NaN semantics are irrelevant:
+        // |x−y| of finite inputs is never NaN.
+        unsafe {
+            let sign = _mm_set1_ps(-0.0);
+            let mut acc = _mm_setzero_ps();
+            let mut i = 0;
+            while i < n4 {
+                let va = _mm_loadu_ps(a.as_ptr().add(i));
+                let vb = _mm_loadu_ps(b.as_ptr().add(i));
+                acc = _mm_max_ps(acc, _mm_andnot_ps(sign, _mm_sub_ps(va, vb)));
+                i += 4;
+            }
+            let mut l = [0.0f32; 4];
+            _mm_storeu_ps(l.as_mut_ptr(), acc);
+            let mut s = (l[0].max(l[1])).max(l[2].max(l[3]));
+            for j in n4..a.len() {
+                s = s.max((a[j] - b[j]).abs());
+            }
+            s
+        }
+    }
+}
+
+#[cfg(not(all(target_arch = "x86_64", target_feature = "sse2")))]
+mod simd_rows {
+    //! Portable lane-for-lane mirror of the SSE2 path: same 4-lane
+    //! shapes and combine order, so results are bit-identical across
+    //! architectures (IEEE ops applied in the same sequence).
+
+    #[inline]
+    pub fn l1_row(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n4 = a.len() / 4 * 4;
+        let mut l = [0.0f32; 4];
+        let mut i = 0;
+        while i < n4 {
+            l[0] += (a[i] - b[i]).abs();
+            l[1] += (a[i + 1] - b[i + 1]).abs();
+            l[2] += (a[i + 2] - b[i + 2]).abs();
+            l[3] += (a[i + 3] - b[i + 3]).abs();
+            i += 4;
+        }
+        let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+        for j in n4..a.len() {
+            s += (a[j] - b[j]).abs();
+        }
+        s
+    }
+
+    #[inline]
+    pub fn l2_row(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n4 = a.len() / 4 * 4;
+        let mut l = [0.0f32; 4];
+        let mut i = 0;
+        while i < n4 {
+            let d0 = a[i] - b[i];
+            let d1 = a[i + 1] - b[i + 1];
+            let d2 = a[i + 2] - b[i + 2];
+            let d3 = a[i + 3] - b[i + 3];
+            l[0] += d0 * d0;
+            l[1] += d1 * d1;
+            l[2] += d2 * d2;
+            l[3] += d3 * d3;
+            i += 4;
+        }
+        let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+        for j in n4..a.len() {
+            let dj = a[j] - b[j];
+            s += dj * dj;
+        }
+        s
+    }
+
+    #[inline]
+    pub fn linf_row(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n4 = a.len() / 4 * 4;
+        let mut l = [0.0f32; 4];
+        let mut i = 0;
+        while i < n4 {
+            l[0] = l[0].max((a[i] - b[i]).abs());
+            l[1] = l[1].max((a[i + 1] - b[i + 1]).abs());
+            l[2] = l[2].max((a[i + 2] - b[i + 2]).abs());
+            l[3] = l[3].max((a[i + 3] - b[i + 3]).abs());
+            i += 4;
+        }
+        let mut s = (l[0].max(l[1])).max(l[2].max(l[3]));
+        for j in n4..a.len() {
+            s = s.max((a[j] - b[j]).abs());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianMixtureSpec;
+    use std::sync::atomic::AtomicUsize;
+
+    fn mixture(n: usize, d: usize, seed: u64) -> VectorData {
+        GaussianMixtureSpec { n, d, k: 4, seed, ..Default::default() }.generate().0
+    }
+
+    /// Tie-heavy adversarial grid: duplicated rows and exactly
+    /// equidistant centers exercise the argmin tie-break.
+    fn tie_grid() -> VectorData {
+        let mut rows = Vec::new();
+        for x in 0..6 {
+            for y in 0..6 {
+                rows.push(vec![x as f32, y as f32, 0.0]);
+                rows.push(vec![x as f32, y as f32, 0.0]);
+            }
+        }
+        VectorData::from_rows(&rows)
+    }
+
+    fn assert_assignment_bits(a: &Assignment, b: &Assignment, ctx: &str) {
+        assert_eq!(a.idx, b.idx, "{ctx}: idx");
+        for (i, (x, y)) in a.dist.iter().zip(&b.dist).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: dist[{i}]");
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in
+            [KernelKind::Auto, KernelKind::Scalar, KernelKind::Blocked, KernelKind::Simd]
+        {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse("xla"), None);
+        assert_eq!(KernelKind::resolve(Some(KernelKind::Simd)), KernelKind::Simd);
+    }
+
+    #[test]
+    fn blocked_nearest_bitwise_matches_scalar() {
+        for (data, tag) in [(mixture(300, 7, 3), "mixture"), (tie_grid(), "tie_grid")] {
+            let pts: Vec<u32> = (0..data.n() as u32).collect();
+            let centers: Vec<u32> = (0..data.n() as u32).step_by(5).collect();
+            let a = ScalarKernel.l2_nearest(&data, &pts, &centers);
+            let b = BlockedKernel.l2_nearest(&data, &pts, &centers);
+            assert_assignment_bits(&a, &b, tag);
+        }
+    }
+
+    #[test]
+    fn blocked_min_update_bitwise_matches_scalar() {
+        let data = mixture(200, 5, 9);
+        let pts: Vec<u32> = (0..200).collect();
+        let mut a = vec![f64::INFINITY; 200];
+        let mut b = vec![f64::INFINITY; 200];
+        for c in [0u32, 7, 100, 100, 199] {
+            ScalarKernel.l2_min_update(&data, &pts, c, &mut a);
+            BlockedKernel.l2_min_update(&data, &pts, c, &mut b);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "c={c} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_rows_bounded_relative_error() {
+        let data = mixture(150, 13, 5);
+        let pts: Vec<u32> = (0..150).collect();
+        let mut exact = vec![0.0f64; 150];
+        let mut fast = vec![0.0f64; 150];
+        assert!(!SimdKernel.uniform_precision());
+        type Batch = fn(&SimdKernel, &VectorData, &[u32], u32, &mut [f64]);
+        type RefBatch = fn(&ScalarKernel, &VectorData, &[u32], u32, &mut [f64]);
+        let ops: [(Batch, RefBatch); 3] = [
+            (SimdKernel::l2_dist_batch, ScalarKernel::l2_dist_batch),
+            (SimdKernel::l1_dist_batch, ScalarKernel::l1_dist_batch),
+            (SimdKernel::linf_dist_batch, ScalarKernel::linf_dist_batch),
+        ];
+        for (fast_op, exact_op) in ops {
+            for c in [0u32, 42, 149] {
+                fast_op(&SimdKernel, &data, &pts, c, &mut fast);
+                exact_op(&ScalarKernel, &data, &pts, c, &mut exact);
+                for i in 0..150 {
+                    let tol = 1e-4 * (1.0 + exact[i]);
+                    assert!(
+                        (fast[i] - exact[i]).abs() <= tol,
+                        "c={c} i={i}: {} vs {}",
+                        fast[i],
+                        exact[i]
+                    );
+                }
+            }
+        }
+    }
+
+    struct FailingEngine {
+        calls: AtomicUsize,
+    }
+
+    impl BulkEngine for FailingEngine {
+        fn assign_block(
+            &self,
+            _x: &VectorData,
+            _c: &VectorData,
+        ) -> anyhow::Result<(Vec<f32>, Vec<i32>)> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("injected failure")
+        }
+
+        fn min_update_block(
+            &self,
+            _x: &VectorData,
+            _c: &VectorData,
+            _cur: &mut [f32],
+        ) -> anyhow::Result<()> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("injected failure")
+        }
+
+        fn dispatch_threshold(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn engine_kernel_latches_off_after_first_failure() {
+        let engine = Arc::new(FailingEngine { calls: AtomicUsize::new(0) });
+        let kernel = EngineKernel::new(engine.clone());
+        assert!(!kernel.uniform_precision());
+        let data = mixture(60, 4, 1);
+        let pts: Vec<u32> = (0..60).collect();
+        let centers = [0u32, 20, 40];
+        let a = kernel.l2_nearest(&data, &pts, &centers);
+        assert_eq!(engine.calls.load(Ordering::Relaxed), 1, "first call dispatches");
+        let b = kernel.l2_nearest(&data, &pts, &centers);
+        assert_eq!(engine.calls.load(Ordering::Relaxed), 1, "latch skips the engine");
+        let reference = BlockedKernel.l2_nearest(&data, &pts, &centers);
+        assert_assignment_bits(&a, &reference, "first (fallback)");
+        assert_assignment_bits(&b, &reference, "second (latched)");
+    }
+
+    #[test]
+    fn build_resolves_auto_by_engine_presence() {
+        let (k, active) = build(KernelKind::Auto, None);
+        assert_eq!(k.name(), "blocked");
+        assert!(!active);
+        let engine: Arc<dyn BulkEngine> = Arc::new(FailingEngine { calls: AtomicUsize::new(0) });
+        let (k, active) = build(KernelKind::Auto, Some(engine.clone()));
+        assert_eq!(k.name(), "engine");
+        assert!(active);
+        // an explicit kind pins the CPU kernel and sidelines the engine
+        let (k, active) = build(KernelKind::Scalar, Some(engine));
+        assert_eq!(k.name(), "scalar");
+        assert!(!active);
+    }
+}

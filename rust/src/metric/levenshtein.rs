@@ -1,29 +1,76 @@
 //! Levenshtein (edit-distance) metric over byte strings — the
 //! genuinely-non-Euclidean space exercising the paper's "general metric
-//! spaces" claim end to end (no XLA fast path exists or is needed here).
+//! spaces" claim end to end.
+//!
+//! Two backends, selected like the dense kernels at construction:
+//!
+//! - **scalar** — the classic two-row DP ([`levenshtein`]), kept as the
+//!   correctness reference;
+//! - **bitparallel** (default for every non-`scalar`
+//!   [`KernelKind`]) — Myers' bit-parallel algorithm
+//!   ([`myers`], Hyyrö's formulation) when the shorter string fits a
+//!   64-bit word (one `u64` of bit ops per text character instead of a
+//!   DP row), plus a **banded** DP ([`levenshtein_banded`]) on the
+//!   pruned path that uses the caller's cutoff to bound the band to
+//!   `2k+1` diagonals and abandons a pair as soon as a whole row
+//!   exceeds `k`.
+//!
+//! Both backends produce exact integer distances, so
+//! `uniform_precision()` stays `true` either way and every value the
+//! space returns is bit-identical across backends — except that the
+//! banded pruned path may report a pair whose exact distance provably
+//! exceeds the cutoff as `f64::INFINITY` (band overflow), the sentinel
+//! the [`MetricSpace::dist_batch_pruned`] contract reserves for decided
+//! comparisons. Charging is backend-invariant: every non-caller-skipped
+//! pair charges 1 whether it ran the full DP, the bit-parallel scan, or
+//! an abandoned band, so `dist_evals` never depends on the kernel.
 
+use super::kernel::KernelKind;
 use super::{counter, MetricSpace};
 
 /// A set of byte strings with edit distance.
 pub struct StringSpace {
     strings: Vec<Vec<u8>>,
+    /// Use Myers bit-parallel + banded pruning (any non-`scalar` kind).
+    bitparallel: bool,
 }
 
 impl StringSpace {
     pub fn new(strings: Vec<Vec<u8>>) -> StringSpace {
-        StringSpace { strings }
+        StringSpace::with_kernel(strings, KernelKind::resolve(None))
+    }
+
+    /// Construct with an explicit kernel backend (bypasses the
+    /// `MRCORESET_KERNEL` environment resolution). `scalar` pins the
+    /// two-row DP everywhere; every other kind enables the
+    /// bit-parallel/banded fast paths.
+    pub fn with_kernel(strings: Vec<Vec<u8>>, kind: KernelKind) -> StringSpace {
+        StringSpace { strings, bitparallel: kind != KernelKind::Scalar }
     }
 
     pub fn from_strs<S: AsRef<str>>(strs: &[S]) -> StringSpace {
-        StringSpace { strings: strs.iter().map(|s| s.as_ref().as_bytes().to_vec()).collect() }
+        StringSpace::new(strs.iter().map(|s| s.as_ref().as_bytes().to_vec()).collect())
     }
 
     pub fn string(&self, i: u32) -> &[u8] {
         &self.strings[i as usize]
     }
+
+    /// One pair on the configured backend: Myers when the shorter side
+    /// fits a word, DP otherwise (and always on the scalar backend).
+    fn edit_dist(&self, a: &[u8], b: &[u8], prev: &mut Vec<usize>, cur: &mut Vec<usize>) -> usize {
+        if self.bitparallel {
+            let (p, t) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+            if !p.is_empty() && p.len() <= 64 {
+                return myers(p, t);
+            }
+        }
+        levenshtein_with(a, b, prev, cur)
+    }
 }
 
 /// Classic two-row DP Levenshtein; O(|a|*|b|) time, O(min) space.
+/// The scalar correctness reference for both fast paths.
 pub fn levenshtein(a: &[u8], b: &[u8]) -> usize {
     let (a, b) = if a.len() < b.len() { (a, b) } else { (b, a) };
     if a.is_empty() {
@@ -42,6 +89,121 @@ pub fn levenshtein(a: &[u8], b: &[u8]) -> usize {
     prev[a.len()]
 }
 
+/// Myers' bit-parallel Levenshtein (Hyyrö's formulation): the whole DP
+/// column lives in two `u64` delta vectors, one word of bit ops per
+/// text character. Requires `1 <= pattern.len() <= 64`.
+pub fn myers(pattern: &[u8], text: &[u8]) -> usize {
+    debug_assert!((1..=64).contains(&pattern.len()));
+    let mut peq = [0u64; 256];
+    for (i, &pc) in pattern.iter().enumerate() {
+        peq[pc as usize] |= 1u64 << i;
+    }
+    myers_with(&peq, pattern.len(), text)
+}
+
+/// Myers inner loop over a prebuilt match-vector table (`peq[ch]` has
+/// bit `i` set iff `pattern[i] == ch`) — shared so a batch against one
+/// center builds the table once.
+fn myers_with(peq: &[u64; 256], m: usize, text: &[u8]) -> usize {
+    debug_assert!((1..=64).contains(&m));
+    let mut pv = !0u64;
+    let mut mv = 0u64;
+    let mut score = m;
+    let hibit = 1u64 << (m - 1);
+    for &tc in text {
+        let eq = peq[tc as usize];
+        let xv = eq | mv;
+        let xh = (((eq & pv).wrapping_add(pv)) ^ pv) | eq;
+        let mut ph = mv | !(xh | pv);
+        let mut mh = pv & xh;
+        if ph & hibit != 0 {
+            score += 1;
+        }
+        if mh & hibit != 0 {
+            score -= 1;
+        }
+        ph = (ph << 1) | 1;
+        mh <<= 1;
+        pv = mh | !(xv | ph);
+        mv = ph & xv;
+    }
+    score
+}
+
+/// Banded Levenshtein with cutoff `k`: only the `2k+1` diagonals that
+/// can hold a value `<= k` are evaluated, and the pair is abandoned as
+/// soon as a whole row exceeds `k`. Returns `Some(d)` with the exact
+/// distance iff `d <= k`, `None` iff the exact distance exceeds `k`.
+/// O(k·min(|a|,|b|)) time. Callers must ensure `k < max(|a|,|b|)`
+/// (a wider band is the full table — use the plain DP).
+pub fn levenshtein_banded(a: &[u8], b: &[u8], k: usize) -> Option<usize> {
+    levenshtein_banded_with(a, b, k, &mut Vec::new(), &mut Vec::new())
+}
+
+/// [`levenshtein_banded`] reusing caller-provided row buffers (the
+/// batched pruned inner loop).
+fn levenshtein_banded_with(
+    a: &[u8],
+    b: &[u8],
+    k: usize,
+    prev: &mut Vec<usize>,
+    cur: &mut Vec<usize>,
+) -> Option<usize> {
+    let (a, b) = if a.len() < b.len() { (a, b) } else { (b, a) };
+    let (m, n) = (a.len(), b.len());
+    if n - m > k {
+        // the length difference alone exceeds the cutoff
+        return None;
+    }
+    // `big` caps every out-of-band cell; values are clamped to it so the
+    // early-abandon test (`best > k`) is a plain compare. Callers keep
+    // k < n, so this cannot overflow.
+    let big = k + 1;
+    prev.clear();
+    prev.extend((0..=m).map(|i| if i <= k { i } else { big }));
+    cur.clear();
+    cur.resize(m + 1, big);
+    for (jm1, &bc) in b.iter().enumerate() {
+        let j = jm1 + 1;
+        let lo = j.saturating_sub(k).max(1);
+        let hi = (j + k).min(m);
+        let mut best = big;
+        if lo == 1 {
+            // boundary column: in-band iff j <= k
+            cur[0] = if j <= k { j } else { big };
+            best = best.min(cur[0]);
+        } else {
+            // left edge of the band: neutralize the stale cell the
+            // i == lo recurrence reads as `cur[lo-1]`
+            cur[lo - 1] = big;
+        }
+        for i in lo..=hi {
+            let cost = usize::from(a[i - 1] != bc);
+            let v = (prev[i] + 1).min(cur[i - 1] + 1).min(prev[i - 1] + cost).min(big);
+            cur[i] = v;
+            if v < best {
+                best = v;
+            }
+        }
+        // right edge: the next row's i == hi+1 recurrence reads
+        // `prev[hi+1]`, which would otherwise be a stale cell from two
+        // rows back once the band has slid past it
+        if hi + 1 <= m {
+            cur[hi + 1] = big;
+        }
+        if best > k {
+            // every extension of this row only grows: abandon
+            return None;
+        }
+        std::mem::swap(prev, cur);
+    }
+    if prev[m] <= k {
+        Some(prev[m])
+    } else {
+        None
+    }
+}
+
 impl MetricSpace for StringSpace {
     fn n_points(&self) -> usize {
         self.strings.len()
@@ -52,32 +214,65 @@ impl MetricSpace for StringSpace {
         if i == j {
             return 0.0;
         }
-        levenshtein(&self.strings[i as usize], &self.strings[j as usize]) as f64
+        let (mut prev, mut cur) = (Vec::new(), Vec::new());
+        self.edit_dist(&self.strings[i as usize], &self.strings[j as usize], &mut prev, &mut cur)
+            as f64
     }
 
-    /// Batched edit distances against one string: the DP rows are
-    /// allocated once per batch (not once per pair), and the virtual
-    /// dispatch happens per center instead of per pair.
+    fn name(&self) -> &'static str {
+        "levenshtein"
+    }
+
+    fn kernel_name(&self) -> &'static str {
+        if self.bitparallel {
+            "bitparallel"
+        } else {
+            "scalar"
+        }
+    }
+
+    /// Batched edit distances against one string: the Myers match-vector
+    /// table (or the DP rows on the scalar backend) is built once per
+    /// batch, and the virtual dispatch happens per center instead of
+    /// per pair.
     fn dist_batch(&self, pts: &[u32], c: u32, out: &mut [f64]) {
         assert_eq!(pts.len(), out.len());
         counter::charge(pts.len());
         let cs = &self.strings[c as usize];
         let mut prev: Vec<usize> = Vec::new();
         let mut cur: Vec<usize> = Vec::new();
+        let cpeq = if self.bitparallel && !cs.is_empty() && cs.len() <= 64 {
+            let mut peq = [0u64; 256];
+            for (i, &pc) in cs.iter().enumerate() {
+                peq[pc as usize] |= 1u64 << i;
+            }
+            Some(peq)
+        } else {
+            None
+        };
         for (o, &p) in out.iter_mut().zip(pts) {
             if p == c {
                 *o = 0.0;
                 continue;
             }
-            *o = levenshtein_with(&self.strings[p as usize], cs, &mut prev, &mut cur) as f64;
+            let s = &self.strings[p as usize];
+            *o = match &cpeq {
+                Some(peq) => myers_with(peq, cs.len(), s) as f64,
+                None => self.edit_dist(s, cs, &mut prev, &mut cur) as f64,
+            };
         }
     }
 
-    /// Geometry-pruned batch: each skipped pair saves an entire
-    /// O(|a|·|b|) DP table — the most expensive distance in the tree —
-    /// and only computed pairs charge the counter. Computed entries go
-    /// through the same DP (and the same `p == c` shortcut) as
-    /// `dist_batch`, so they are bit-identical to it.
+    /// Geometry-pruned batch. A caller-skipped pair (lower bound beyond
+    /// the cutoff) costs nothing and charges nothing, as everywhere.
+    /// On the bit-parallel backend every *computed* pair additionally
+    /// runs banded with `k = floor(cutoff)`: `O(k·min)` instead of the
+    /// full table, with band overflow reported as the `INFINITY`
+    /// sentinel (exact distance provably `> cutoff` — integer distances
+    /// make `> floor(cutoff)` and `> cutoff` the same decision). Every
+    /// non-caller-skipped pair still charges 1, so `dist_evals` is
+    /// identical across backends; the time saved per eval is what the
+    /// band buys.
     fn dist_batch_pruned(
         &self,
         pts: &[u32],
@@ -96,21 +291,31 @@ impl MetricSpace for StringSpace {
         for i in 0..pts.len() {
             if lower[i] > cutoff[i] {
                 out[i] = f64::INFINITY;
-            } else if pts[i] == c {
-                out[i] = 0.0;
-                computed += 1;
-            } else {
-                let s = &self.strings[pts[i] as usize];
-                out[i] = levenshtein_with(s, cs, &mut prev, &mut cur) as f64;
-                computed += 1;
+                continue;
             }
+            computed += 1;
+            if pts[i] == c {
+                out[i] = 0.0;
+                continue;
+            }
+            let s = &self.strings[pts[i] as usize];
+            if self.bitparallel {
+                let maxlen = s.len().max(cs.len());
+                let cut = cutoff[i];
+                let band = if cut.is_finite() { cut.max(0.0).floor() as usize } else { usize::MAX };
+                if band < maxlen {
+                    out[i] = match levenshtein_banded_with(s, cs, band, &mut prev, &mut cur) {
+                        Some(v) => v as f64,
+                        None => f64::INFINITY,
+                    };
+                    continue;
+                }
+                // band covers the whole table: the plain fast path wins
+            }
+            out[i] = self.edit_dist(s, cs, &mut prev, &mut cur) as f64;
         }
         counter::charge(computed);
         computed
-    }
-
-    fn name(&self) -> &'static str {
-        "levenshtein"
     }
 }
 
@@ -141,6 +346,17 @@ fn levenshtein_with(a: &[u8], b: &[u8], prev: &mut Vec<usize>, cur: &mut Vec<usi
 mod tests {
     use super::*;
 
+    /// Deterministic string generator (LCG over a 4-letter alphabet —
+    /// small alphabets maximize match-vector collisions).
+    fn gen_string(state: &mut u64, max_len: usize) -> Vec<u8> {
+        let mut next = || {
+            *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (*state >> 33) as usize
+        };
+        let len = next() % (max_len + 1);
+        (0..len).map(|_| b"abcd"[next() % 4]).collect()
+    }
+
     #[test]
     fn known_values() {
         assert_eq!(levenshtein(b"kitten", b"sitting"), 3);
@@ -153,6 +369,77 @@ mod tests {
     #[test]
     fn symmetric() {
         assert_eq!(levenshtein(b"abcdef", b"azced"), levenshtein(b"azced", b"abcdef"));
+    }
+
+    #[test]
+    fn myers_matches_dp() {
+        assert_eq!(myers(b"kitten", b"sitting"), 3);
+        let mut state = 0x9e3779b97f4a7c15u64;
+        for trial in 0..300 {
+            let a = gen_string(&mut state, 64);
+            let b = gen_string(&mut state, 90);
+            if a.is_empty() {
+                continue;
+            }
+            assert_eq!(myers(&a, &b), levenshtein(&a, &b), "trial={trial}");
+        }
+        // full-word pattern (m == 64): the high-bit masks are exercised
+        let a = vec![b'a'; 64];
+        let b: Vec<u8> = (0..100).map(|i| if i % 3 == 0 { b'a' } else { b'b' }).collect();
+        assert_eq!(myers(&a, &b), levenshtein(&a, &b));
+    }
+
+    #[test]
+    fn banded_matches_dp_including_sentinel() {
+        let words: &[&[u8]] =
+            &[b"cluster", b"clusters", b"custard", b"mustard", b"cloister", b"", b"x"];
+        for &a in words {
+            for &b in words {
+                let exact = levenshtein(a, b);
+                let maxlen = a.len().max(b.len());
+                for k in 0..maxlen {
+                    let got = levenshtein_banded(a, b, k);
+                    let want = if exact <= k { Some(exact) } else { None };
+                    assert_eq!(got, want, "a={a:?} b={b:?} k={k}");
+                }
+            }
+        }
+        let mut state = 0x243f6a8885a308d3u64;
+        for trial in 0..300 {
+            let a = gen_string(&mut state, 40);
+            let b = gen_string(&mut state, 40);
+            let exact = levenshtein(&a, &b);
+            let maxlen = a.len().max(b.len());
+            for k in [0, 1, 2, exact.saturating_sub(1), exact, exact + 1] {
+                if k >= maxlen {
+                    continue;
+                }
+                let got = levenshtein_banded(&a, &b, k);
+                let want = if exact <= k { Some(exact) } else { None };
+                assert_eq!(got, want, "trial={trial} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_every_pair() {
+        let mut state = 0x452821e638d01377u64;
+        let strings: Vec<Vec<u8>> = (0..20).map(|_| gen_string(&mut state, 80)).collect();
+        let scalar = StringSpace::with_kernel(strings.clone(), KernelKind::Scalar);
+        let fast = StringSpace::with_kernel(strings, KernelKind::Auto);
+        assert_eq!(scalar.kernel_name(), "scalar");
+        assert_eq!(fast.kernel_name(), "bitparallel");
+        let pts: Vec<u32> = (0..20).collect();
+        let mut a = vec![0.0f64; 20];
+        let mut b = vec![0.0f64; 20];
+        for c in 0..20u32 {
+            scalar.dist_batch(&pts, c, &mut a);
+            fast.dist_batch(&pts, c, &mut b);
+            for i in 0..20 {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "c={c} i={i}");
+                assert_eq!(fast.dist(pts[i], c), a[i], "c={c} i={i}");
+            }
+        }
     }
 
     #[test]
@@ -186,6 +473,48 @@ mod tests {
             s.dist_batch(&pts, c, &mut out);
             for (i, &p) in pts.iter().enumerate() {
                 assert_eq!(out[i], s.dist(p, c), "p={p} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_batch_banded_decides_like_reference() {
+        use super::super::counter;
+        let strs = ["cluster", "clusters", "custard", "mustard", "cloister", ""];
+        for kind in [KernelKind::Scalar, KernelKind::Auto] {
+            let s = StringSpace::with_kernel(
+                strs.iter().map(|w| w.as_bytes().to_vec()).collect(),
+                kind,
+            );
+            let pts: Vec<u32> = (0..strs.len() as u32).collect();
+            for c in pts.clone() {
+                let lower: Vec<f64> =
+                    pts.iter().map(|&p| (s.dist(p, 0) - s.dist(c, 0)).abs()).collect();
+                let mut reference = vec![0.0f64; pts.len()];
+                s.dist_batch(&pts, c, &mut reference);
+                for cut in [0.0f64, 1.5, 3.0, 100.0, f64::INFINITY] {
+                    let cutoff = vec![cut; pts.len()];
+                    let mut out = vec![0.0f64; pts.len()];
+                    let (computed, evals) = counter::counted(|| {
+                        s.dist_batch_pruned(&pts, c, &lower, &cutoff, &mut out)
+                    });
+                    assert_eq!(computed as u64, evals);
+                    // charging is backend-invariant: every pair the
+                    // caller's bound did not skip charges, banded or not
+                    let expect = lower.iter().filter(|&&l| l <= cut).count();
+                    assert_eq!(computed, expect, "kind={kind:?} c={c} cut={cut}");
+                    for i in 0..pts.len() {
+                        // sentinel or value, the cutoff decision matches
+                        assert_eq!(
+                            out[i] <= cut,
+                            reference[i] <= cut,
+                            "kind={kind:?} c={c} i={i} cut={cut}"
+                        );
+                        if out[i].is_finite() {
+                            assert_eq!(out[i].to_bits(), reference[i].to_bits());
+                        }
+                    }
+                }
             }
         }
     }

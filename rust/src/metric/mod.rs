@@ -21,12 +21,35 @@
 //! Default implementations reduce everything to `dist_batch` (one
 //! virtual call per center instead of per pair), and `dist_batch` itself
 //! defaults to a scalar loop, so a new metric only has to implement
-//! `dist` to work and can override the bulk ops to go fast. The dense
-//! Euclidean implementation overrides them with a cache-tiled f32 scan
-//! (and optionally routes large blocks through the AOT-compiled
-//! XLA/Pallas kernels via `runtime::XlaEngine`); the string/Levenshtein
-//! space overrides `dist_batch` to batch the DP row allocations —
-//! exercising the genuinely-general-metric path.
+//! `dist` to work and can override the bulk ops to go fast.
+//!
+//! # Kernel backends ([`kernel`])
+//!
+//! The dense vector spaces route their bulk overrides through a
+//! pluggable [`kernel::DistKernel`] selected at construction
+//! (`--kernel auto|scalar|blocked|simd` on the CLI, `MRCORESET_KERNEL`
+//! in the environment, [`kernel::KernelKind`] on the constructors):
+//!
+//! | kind      | resolves to | exact | notes |
+//! |-----------|-------------|-------|-------|
+//! | `auto`    | `blocked`, or the engine kernel when a `BulkEngine` is attached | per backend | the default |
+//! | `scalar`  | f64 per-pair reference | yes | the semantics everything is pinned against |
+//! | `blocked` | cache-blocked `‖x‖²+‖c‖²−2x·c` f32 scan + exact f64 verify | yes | decision bit-identical to `scalar` |
+//! | `simd`    | 4-lane f32 SIMD rows (L1/L2/L∞) | no | fastest; opts out of pruning |
+//!
+//! The `DistKernel` contract in one paragraph: kernels own arithmetic
+//! only — the space still charges [`counter`] (bulk ops charge
+//! `|pts| · |centers|` *before* dispatching, so `dist_evals` is
+//! kernel-invariant), still owns the pruned skip loops, and still
+//! answers `dist` on the exact f64 path on every backend. A kernel
+//! declares [`kernel::DistKernel::uniform_precision`]: exact backends
+//! must be decision bit-identical to `scalar` and may feed
+//! bounds-grade pruning; inexact backends report `false`, which makes
+//! the owning space report `false` too — pruned callers then take
+//! their historical exact code paths and `dist_batch_pruned` falls
+//! back to the plain batch. The string/Levenshtein space keeps its own
+//! fast path (bit-parallel and banded DP, see [`levenshtein`]) —
+//! exercising the genuinely-general-metric route.
 //!
 //! # Geometry-pruned queries
 //!
@@ -58,6 +81,7 @@ pub mod counting;
 pub mod dense;
 pub mod doubling;
 pub mod extra;
+pub mod kernel;
 pub mod levenshtein;
 pub mod pruned;
 
@@ -132,6 +156,14 @@ pub trait MetricSpace: Send + Sync {
 
     fn name(&self) -> &'static str;
 
+    /// Name of the kernel backend serving this space's bulk queries
+    /// (recorded in `RunReport`/trace metadata so runs stay
+    /// self-describing). Spaces without a pluggable backend report the
+    /// scalar reference path.
+    fn kernel_name(&self) -> &'static str {
+        "scalar"
+    }
+
     /// Bulk distances to one stored point: `out[i] = d(pts[i], c)`.
     /// The workhorse primitive the other bulk defaults reduce to;
     /// override it to batch per-center work (row staging, DP buffers).
@@ -148,13 +180,18 @@ pub trait MetricSpace: Send + Sync {
     /// over distances they already hold, e.g. `|d(x,t) − d(c,t)|` for a
     /// shared reference point `t`). For every `i` with
     /// `lower[i] > cutoff[i]` the implementation may skip the
-    /// evaluation and store `f64::INFINITY` in `out[i]`; every other
-    /// entry holds the exact distance, bit-identical to what
-    /// `dist_batch` would produce. Callers must therefore only consume
-    /// `out[i]` through comparisons of the form `out[i] <= cutoff[i]` —
-    /// exactly the comparisons the bound has already decided — which is
-    /// what keeps pruned algorithms bit-identical to their unpruned
-    /// references. Returns the number of distances actually computed.
+    /// evaluation and store `f64::INFINITY` in `out[i]`. An
+    /// implementation may also store the `INFINITY` sentinel for an
+    /// entry whose *exact* distance provably exceeds `cutoff[i]` even
+    /// though the caller's bound did not decide it — the banded
+    /// Levenshtein path detects band overflow mid-DP and reports the
+    /// pair that way. Every other entry holds the exact distance,
+    /// bit-identical to what `dist_batch` would produce. Callers must
+    /// therefore only consume `out[i]` through comparisons of the form
+    /// `out[i] <= cutoff[i]` — exactly the comparisons the bound (or
+    /// the band) has already decided — which is what keeps pruned
+    /// algorithms bit-identical to their unpruned references. Returns
+    /// the number of distances actually computed.
     ///
     /// Counter contract: unlike the other bulk queries (which charge
     /// `|pts| · |centers|` regardless of early-exit tricks), this
@@ -198,7 +235,7 @@ pub trait MetricSpace: Send + Sync {
     /// Nearest-center assignment of `pts` against `centers` — the bulk
     /// Voronoi query. Ties break toward the earlier center position.
     /// The default makes one `dist_batch` pass per center; dense spaces
-    /// override with cache-tiled scans.
+    /// override by dispatching to their [`kernel::DistKernel`] backend.
     fn nearest_batch(&self, pts: &[u32], centers: &[u32]) -> Assignment {
         assert!(!centers.is_empty(), "nearest_batch: empty center set");
         let n = pts.len();

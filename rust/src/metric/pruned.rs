@@ -477,7 +477,12 @@ mod tests {
         use crate::points::VectorData;
 
         let rows: Vec<Vec<f32>> = vec![vec![0.0, 0.0]; 64];
-        let space = EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows)));
+        // pinned to an exact kernel: the latch semantics asserted below
+        // require bounds to be active (inexact kernels disable them)
+        let space = EuclideanSpace::with_kernel(
+            Arc::new(VectorData::from_rows(&rows)),
+            crate::metric::kernel::KernelKind::Blocked,
+        );
         let pts: Vec<u32> = (0..64).collect();
         let centers: Vec<u32> = (0..40).collect();
         let before = obs::snapshot();
@@ -506,7 +511,10 @@ mod tests {
     #[test]
     fn ledger_reports_savings_on_spread_input() {
         let data = mixture(600, 21);
-        let space = EuclideanSpace::new(data);
+        // pinned to an exact kernel: bounds must be active for the
+        // ledger to have savings to report
+        let space =
+            EuclideanSpace::with_kernel(data, crate::metric::kernel::KernelKind::Blocked);
         let pts: Vec<u32> = (0..600).collect();
         let before = obs::snapshot();
         let mut t = NearestTracker::new(&space, &pts, true);

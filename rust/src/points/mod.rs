@@ -86,6 +86,37 @@ impl VectorData {
         }
         out[idx.len() * self.d..].fill(pad_value);
     }
+
+    /// Gather rows by index into a caller-owned buffer, reusing its
+    /// allocation (tile staging for the kernel backends — a hot call
+    /// that would otherwise allocate per block).
+    pub fn gather_into(&self, idx: &[u32], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(idx.len() * self.d);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
+        }
+    }
+}
+
+/// Exact-products squared L2 norm of one row, accumulated in f64
+/// (each `x_i * x_i` is an exact product of f32s widened to f64, so the
+/// only rounding is the f64 summation — negligible against f32 inputs).
+#[inline]
+pub fn sq_norm_f64(row: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in row {
+        let x = x as f64;
+        acc += x * x;
+    }
+    acc
+}
+
+/// Per-row squared L2 norms of a dense `(rows, d)` block (precomputed
+/// `||c||²` column for the norm-decomposition assignment kernels).
+pub fn sq_norms_f64(block: &[f32], d: usize) -> Vec<f64> {
+    assert!(d > 0 && block.len() % d == 0);
+    block.chunks_exact(d).map(sq_norm_f64).collect()
 }
 
 /// A weighted subset of a point store (the coreset representation).
@@ -177,6 +208,23 @@ mod tests {
         let mut out = vec![0.0f32; 4 * 2];
         v.gather_padded(&[1], &mut out, 9.0);
         assert_eq!(out, vec![2.0, 2.0, 9.0, 9.0, 9.0, 9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn gather_into_reuses_buffer() {
+        let v = VectorData::from_rows(&[vec![0.0, 1.0], vec![2.0, 3.0], vec![4.0, 5.0]]);
+        let mut buf = vec![9.0f32; 100];
+        v.gather_into(&[2, 0], &mut buf);
+        assert_eq!(buf, vec![4.0, 5.0, 0.0, 1.0]);
+        v.gather_into(&[1], &mut buf);
+        assert_eq!(buf, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn sq_norms_match_rows() {
+        let v = VectorData::from_rows(&[vec![3.0, 4.0], vec![0.0, 0.0], vec![-1.0, 2.0]]);
+        assert_eq!(sq_norms_f64(v.raw(), 2), vec![25.0, 0.0, 5.0]);
+        assert_eq!(sq_norm_f64(v.row(2)), 5.0);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::metric::dense::BulkEngine;
+use crate::metric::dense::{BulkEngine, DEFAULT_DISPATCH_THRESHOLD};
 use crate::points::VectorData;
 
 use super::manifest::{ArtifactKind, Manifest, ManifestEntry};
@@ -49,12 +49,12 @@ impl XlaEngine {
             dir: dir.to_path_buf(),
             manifest,
             inner: Mutex::new(EngineInner { client, cache: HashMap::new() }),
-            // see BulkEngine::dispatch_threshold — CPU default is "never";
-            // override via env for accelerator backends or experiments
+            // see BulkEngine::dispatch_threshold; override via env for
+            // experiments or backends with different dispatch overheads
             threshold: std::env::var("MRCORESET_ENGINE_THRESHOLD")
                 .ok()
                 .and_then(|v| v.parse().ok())
-                .unwrap_or(usize::MAX),
+                .unwrap_or(DEFAULT_DISPATCH_THRESHOLD),
         })
     }
 

@@ -11,7 +11,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::metric::dense::BulkEngine;
+use crate::metric::dense::{BulkEngine, DEFAULT_DISPATCH_THRESHOLD};
 use crate::points::VectorData;
 
 use super::manifest::Manifest;
@@ -35,7 +35,10 @@ impl XlaEngine {
         if manifest.entries.is_empty() {
             bail!("manifest at {} lists no artifacts", dir.display());
         }
-        Ok(XlaEngine { manifest, threshold: usize::MAX })
+        // real default threshold (not usize::MAX): a loaded engine is
+        // expected to dispatch, and the stub's dispatch error exercises
+        // the documented fallback latch on the first big block
+        Ok(XlaEngine { manifest, threshold: DEFAULT_DISPATCH_THRESHOLD })
     }
 
     /// The default engine is never available without the `pjrt` feature

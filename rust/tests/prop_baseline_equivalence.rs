@@ -30,6 +30,7 @@ use mrcoreset::data::strings::StringClusterSpec;
 use mrcoreset::data::synth::GaussianMixtureSpec;
 use mrcoreset::mapreduce::Simulator;
 use mrcoreset::metric::dense::{EuclideanSpace, ManhattanSpace};
+use mrcoreset::metric::kernel::KernelKind;
 use mrcoreset::metric::levenshtein::StringSpace;
 use mrcoreset::metric::{MetricSpace, Objective};
 use mrcoreset::points::VectorData;
@@ -69,9 +70,11 @@ fn random_vector_spaces(rng: &mut Rng) -> (Vec<Box<dyn MetricSpace>>, usize) {
     }
     .generate();
     let shared = Arc::new(data);
+    // pinned to an exact kernel: pruned-vs-unpruned bit identity is a
+    // bounds contract and must hold under any MRCORESET_KERNEL setting
     let spaces: Vec<Box<dyn MetricSpace>> = vec![
-        Box::new(EuclideanSpace::new(shared.clone())),
-        Box::new(ManhattanSpace::new(shared)),
+        Box::new(EuclideanSpace::with_kernel(shared.clone(), KernelKind::Blocked)),
+        Box::new(ManhattanSpace::with_kernel(shared, KernelKind::Blocked)),
     ];
     (spaces, n)
 }
@@ -85,7 +88,7 @@ fn tie_grid_space(rng: &mut Rng) -> (EuclideanSpace, usize) {
     let rows: Vec<Vec<f32>> = (0..n)
         .map(|_| vec![rng.below(side) as f32, rng.below(side) as f32])
         .collect();
-    (EuclideanSpace::new(Arc::new(VectorData::from_rows(&rows))), n)
+    (EuclideanSpace::with_kernel(Arc::new(VectorData::from_rows(&rows)), KernelKind::Blocked), n)
 }
 
 fn random_subset(rng: &mut Rng, n: usize) -> Vec<u32> {

@@ -1,35 +1,50 @@
-//! Property tests for the batched distance engine: on every metric
-//! space, `dist_batch` / `nearest_batch` / `min_update` must agree with
-//! scalar `dist` loops, and every bulk query must charge exactly
-//! |pts|·|centers| distance evaluations to the work counter.
+//! Kernel-parity property suite for the pluggable distance backends
+//! (`metric::kernel`): on every metric space and every kernel, the bulk
+//! queries must agree with scalar `dist` loops, and every bulk query
+//! must charge exactly |pts|·|centers| evaluations to the work counter
+//! regardless of which backend served it.
 //!
-//! Agreement tolerances: `dist_batch` is the f64 reference path on every
-//! space, so it must match scalar `dist` to 1e-12 (it is in fact the
-//! same arithmetic). `nearest_batch` is exact too except on the dense
-//! Euclidean space, whose cache-tiled scan compares distances in f32 and
-//! may resolve near-ties differently — there the distances must agree to
-//! f32 precision and the reported winner must be self-consistent to
-//! 1e-12 (the winner's distance is recomputed in f64 by contract).
+//! Parity tiers:
+//!  - **exact** kernels (`scalar`, `blocked`, and both Levenshtein
+//!    backends) are held to bit-identical results — the blocked kernel's
+//!    f32 scan is only a bounding pass, its decisions are verified in
+//!    f64, and Myers/banded bit-parallel edit distances are exact by
+//!    construction. End-to-end, a full solve must serialize identically
+//!    across exact kernels AND across thread counts.
+//!  - the **simd** kernel computes f32 rows: results are held to a
+//!    bounded relative error, it must report
+//!    `uniform_precision() == false`, and its `dist_batch_pruned` must
+//!    fall back to the plain batch (bounds computed by exact arithmetic
+//!    cannot prune inexact values).
 
 use std::sync::Arc;
 
+use mrcoreset::coordinator::{solve_traced, ClusterConfig};
 use mrcoreset::data::strings::StringClusterSpec;
 use mrcoreset::data::synth::GaussianMixtureSpec;
 use mrcoreset::metric::counter;
 use mrcoreset::metric::counting::CountingSpace;
 use mrcoreset::metric::dense::{ChebyshevSpace, EuclideanSpace, ManhattanSpace};
 use mrcoreset::metric::extra::HammingSpace;
-use mrcoreset::metric::levenshtein::StringSpace;
-use mrcoreset::metric::MetricSpace;
+use mrcoreset::metric::kernel::KernelKind;
+use mrcoreset::metric::levenshtein::{levenshtein, levenshtein_banded, StringSpace};
+use mrcoreset::metric::{MetricSpace, Objective};
+use mrcoreset::obs::{MemSink, Recorder};
 use mrcoreset::prop_assert;
 use mrcoreset::util::prop::check;
 use mrcoreset::util::rng::Rng;
 
-/// A space under test plus whether its nearest_batch path is exact
-/// (f64 end-to-end) or f32-tiled (Euclidean).
+/// A space under an explicit kernel, plus whether that backend is exact
+/// (bit-identical to scalar `dist` loops) or f32-approximate.
 struct Case {
     space: Box<dyn MetricSpace>,
-    exact_nearest: bool,
+    exact: bool,
+}
+
+impl Case {
+    fn label(&self) -> String {
+        format!("{}/{}", self.space.name(), self.space.kernel_name())
+    }
 }
 
 fn cases(rng: &mut Rng) -> Vec<Case> {
@@ -57,12 +72,48 @@ fn cases(rng: &mut Rng) -> Vec<Case> {
         .map(|i| (0..8).map(|b| ((i >> b) & 1) as u8 + rng.below(2) as u8).collect())
         .collect();
     vec![
-        Case { space: Box::new(EuclideanSpace::new(shared.clone())), exact_nearest: false },
-        Case { space: Box::new(ManhattanSpace::new(shared.clone())), exact_nearest: true },
-        Case { space: Box::new(ChebyshevSpace::new(shared)), exact_nearest: true },
-        Case { space: Box::new(StringSpace::new(strs)), exact_nearest: true },
-        Case { space: Box::new(HammingSpace::new(codes)), exact_nearest: true },
+        Case {
+            space: Box::new(EuclideanSpace::with_kernel(shared.clone(), KernelKind::Scalar)),
+            exact: true,
+        },
+        Case {
+            space: Box::new(EuclideanSpace::with_kernel(shared.clone(), KernelKind::Blocked)),
+            exact: true,
+        },
+        Case {
+            space: Box::new(EuclideanSpace::with_kernel(shared.clone(), KernelKind::Simd)),
+            exact: false,
+        },
+        Case {
+            space: Box::new(ManhattanSpace::with_kernel(shared.clone(), KernelKind::Blocked)),
+            exact: true,
+        },
+        Case {
+            space: Box::new(ManhattanSpace::with_kernel(shared.clone(), KernelKind::Simd)),
+            exact: false,
+        },
+        Case {
+            space: Box::new(ChebyshevSpace::with_kernel(shared.clone(), KernelKind::Blocked)),
+            exact: true,
+        },
+        Case {
+            space: Box::new(ChebyshevSpace::with_kernel(shared, KernelKind::Simd)),
+            exact: false,
+        },
+        Case {
+            space: Box::new(StringSpace::with_kernel(strs.clone(), KernelKind::Scalar)),
+            exact: true,
+        },
+        // Auto selects the Myers/banded bit-parallel backend — exact
+        Case { space: Box::new(StringSpace::with_kernel(strs, KernelKind::Auto)), exact: true },
+        Case { space: Box::new(HammingSpace::new(codes)), exact: true },
     ]
+}
+
+/// f32-row error envelope: generous relative bound covering the d-term
+/// f32 accumulation (d ≤ 6 here, each step losing at most one f32 ulp).
+fn simd_tol(want: f64) -> f64 {
+    1e-4 * (1.0 + want)
 }
 
 fn pick_queries(rng: &mut Rng, n: usize) -> (Vec<u32>, Vec<u32>) {
@@ -74,8 +125,8 @@ fn pick_queries(rng: &mut Rng, n: usize) -> (Vec<u32>, Vec<u32>) {
 }
 
 #[test]
-fn prop_dist_batch_equals_scalar_dist() {
-    check("dist-batch-equivalence", 0xBA7C, 20, |rng| {
+fn prop_dist_batch_matches_scalar_dist_per_kernel() {
+    check("kernel-dist-batch", 0xBA7C, 20, |rng| {
         for case in cases(rng) {
             let space = case.space.as_ref();
             let n = space.n_points();
@@ -85,10 +136,15 @@ fn prop_dist_batch_equals_scalar_dist() {
                 space.dist_batch(&pts, c, &mut out);
                 for (i, &p) in pts.iter().enumerate() {
                     let want = space.dist(p, c);
+                    let ok = if case.exact {
+                        out[i].to_bits() == want.to_bits()
+                    } else {
+                        (out[i] - want).abs() <= simd_tol(want)
+                    };
                     prop_assert!(
-                        (out[i] - want).abs() <= 1e-12,
+                        ok,
                         "{}: dist_batch[{i}] = {} vs dist = {want}",
-                        space.name(),
+                        case.label(),
                         out[i]
                     );
                 }
@@ -99,30 +155,49 @@ fn prop_dist_batch_equals_scalar_dist() {
 }
 
 #[test]
-fn prop_nearest_batch_equals_scalar_loop() {
-    check("nearest-batch-equivalence", 0x4EA2, 20, |rng| {
+fn prop_nearest_batch_matches_scalar_loop_per_kernel() {
+    check("kernel-nearest-batch", 0x4EA2, 20, |rng| {
         for case in cases(rng) {
             let space = case.space.as_ref();
             let n = space.n_points();
             let (pts, centers) = pick_queries(rng, n);
             let a = space.nearest_batch(&pts, &centers);
             for (i, &p) in pts.iter().enumerate() {
-                let want =
-                    centers.iter().map(|&c| space.dist(p, c)).fold(f64::INFINITY, f64::min);
-                let tol = if case.exact_nearest { 1e-12 } else { 1e-6 * (1.0 + want) };
-                prop_assert!(
-                    (a.dist[i] - want).abs() <= tol,
-                    "{}: nearest_batch dist[{i}] = {} vs scalar min {want}",
-                    space.name(),
-                    a.dist[i]
-                );
-                // winner self-consistency is exact on every space
-                let via_idx = space.dist(p, centers[a.idx[i] as usize]);
-                prop_assert!(
-                    (a.dist[i] - via_idx).abs() <= 1e-12,
-                    "{}: dist[{i}] inconsistent with reported winner",
-                    space.name()
-                );
+                // exact kernels must reproduce the strict-< scalar fold
+                // bit for bit, winner index included
+                let mut want = f64::INFINITY;
+                let mut want_idx = 0u32;
+                for (j, &c) in centers.iter().enumerate() {
+                    let dj = space.dist(p, c);
+                    if dj < want {
+                        want = dj;
+                        want_idx = j as u32;
+                    }
+                }
+                if case.exact {
+                    prop_assert!(
+                        a.dist[i].to_bits() == want.to_bits() && a.idx[i] == want_idx,
+                        "{}: nearest[{i}] = ({}, {}) vs scalar ({want}, {want_idx})",
+                        case.label(),
+                        a.dist[i],
+                        a.idx[i]
+                    );
+                } else {
+                    prop_assert!(
+                        (a.dist[i] - want).abs() <= simd_tol(want),
+                        "{}: nearest dist[{i}] = {} vs scalar min {want}",
+                        case.label(),
+                        a.dist[i]
+                    );
+                    // the reported winner must explain the reported
+                    // distance to within the same f32 envelope
+                    let via_idx = space.dist(p, centers[a.idx[i] as usize]);
+                    prop_assert!(
+                        (a.dist[i] - via_idx).abs() <= simd_tol(via_idx),
+                        "{}: dist[{i}] inconsistent with reported winner",
+                        case.label()
+                    );
+                }
             }
         }
         Ok(())
@@ -130,8 +205,8 @@ fn prop_nearest_batch_equals_scalar_loop() {
 }
 
 #[test]
-fn prop_min_update_equals_scalar_fold() {
-    check("min-update-equivalence", 0x31FD, 20, |rng| {
+fn prop_min_update_matches_scalar_fold_per_kernel() {
+    check("kernel-min-update", 0x31FD, 20, |rng| {
         for case in cases(rng) {
             let space = case.space.as_ref();
             let n = space.n_points();
@@ -147,12 +222,16 @@ fn prop_min_update_equals_scalar_fold() {
                     }
                 }
             }
-            let tol = if case.exact_nearest { 1e-12 } else { 1e-6 };
             for i in 0..pts.len() {
+                let ok = if case.exact {
+                    cur[i].to_bits() == want[i].to_bits()
+                } else {
+                    (cur[i] - want[i]).abs() <= simd_tol(want[i])
+                };
                 prop_assert!(
-                    (cur[i] - want[i]).abs() <= tol * (1.0 + want[i]),
+                    ok,
                     "{}: min_update[{i}] = {} vs {}",
-                    space.name(),
+                    case.label(),
                     cur[i],
                     want[i]
                 );
@@ -162,9 +241,12 @@ fn prop_min_update_equals_scalar_fold() {
     });
 }
 
+/// The honest-work contract is kernel-invariant: whichever backend
+/// serves a bulk query, it charges exactly |pts|·|centers| — so
+/// `dist_evals` in reports and traces stays comparable across kernels.
 #[test]
-fn prop_bulk_queries_charge_point_center_pairs() {
-    check("dist-eval-accounting", 0xACC7, 20, |rng| {
+fn prop_bulk_queries_charge_point_center_pairs_per_kernel() {
+    check("kernel-eval-accounting", 0xACC7, 20, |rng| {
         for case in cases(rng) {
             let space = case.space.as_ref();
             let n = space.n_points();
@@ -173,7 +255,7 @@ fn prop_bulk_queries_charge_point_center_pairs() {
             prop_assert!(
                 e == (pts.len() * centers.len()) as u64,
                 "{}: nearest_batch charged {e}, want {}",
-                space.name(),
+                case.label(),
                 pts.len() * centers.len()
             );
             let mut out = vec![0.0f64; pts.len()];
@@ -181,7 +263,7 @@ fn prop_bulk_queries_charge_point_center_pairs() {
             prop_assert!(
                 e == pts.len() as u64,
                 "{}: dist_batch charged {e}, want {}",
-                space.name(),
+                case.label(),
                 pts.len()
             );
             let mut cur = vec![f64::INFINITY; pts.len()];
@@ -189,12 +271,214 @@ fn prop_bulk_queries_charge_point_center_pairs() {
             prop_assert!(
                 e == pts.len() as u64,
                 "{}: min_update charged {e}, want {}",
-                space.name(),
+                case.label(),
                 pts.len()
             );
         }
         Ok(())
     });
+}
+
+/// Inexact kernels must refuse to prune: their `dist_batch_pruned`
+/// ignores the (exact-arithmetic) bounds, computes the full plain batch,
+/// and reports every entry as charged — even when the bounds would have
+/// pruned everything under an exact kernel.
+#[test]
+fn prop_inexact_kernel_pruned_batch_equals_plain_batch() {
+    check("simd-pruned-fallback", 0xFA11, 20, |rng| {
+        let n = 20 + rng.below(80);
+        let (data, _) = GaussianMixtureSpec {
+            n,
+            d: 1 + rng.below(6),
+            k: 2,
+            spread: 1.0 + rng.f64() * 20.0,
+            outlier_frac: 0.0,
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let shared = Arc::new(data);
+        let spaces: Vec<Box<dyn MetricSpace>> = vec![
+            Box::new(EuclideanSpace::with_kernel(shared.clone(), KernelKind::Simd)),
+            Box::new(ManhattanSpace::with_kernel(shared.clone(), KernelKind::Simd)),
+            Box::new(ChebyshevSpace::with_kernel(shared, KernelKind::Simd)),
+        ];
+        let pts: Vec<u32> = (0..n as u32).collect();
+        let c = rng.below(n) as u32;
+        // adversarial bounds: would prune every entry if honoured
+        let lower = vec![f64::INFINITY; n];
+        let cutoff = vec![0.0f64; n];
+        for space in &spaces {
+            prop_assert!(
+                !space.uniform_precision(),
+                "{}: simd kernel must report uniform_precision() == false",
+                space.name()
+            );
+            let mut plain = vec![0.0f64; n];
+            space.dist_batch(&pts, c, &mut plain);
+            let mut out = vec![0.0f64; n];
+            let computed = space.dist_batch_pruned(&pts, c, &lower, &cutoff, &mut out);
+            prop_assert!(
+                computed == n,
+                "{}: fallback must charge all {n} entries, got {computed}",
+                space.name()
+            );
+            for i in 0..n {
+                prop_assert!(
+                    out[i].to_bits() == plain[i].to_bits(),
+                    "{}: pruned fallback [{i}] = {} differs from plain batch {}",
+                    space.name(),
+                    out[i],
+                    plain[i]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The two Levenshtein backends (two-row DP vs Myers/banded
+/// bit-parallel) are both exact: plain batches bit-identical, and the
+/// pruned batch — where the banded backend may store the sentinel for
+/// over-cutoff entries — must make identical keep/skip decisions and
+/// charge identically.
+#[test]
+fn prop_string_backends_bit_identical() {
+    check("string-kernel-parity", 0x5712, 15, |rng| {
+        let n = 20 + rng.below(60);
+        let (strs, _) = StringClusterSpec {
+            n,
+            clusters: 1 + rng.below(5),
+            base_len: 6 + rng.below(20),
+            max_edits: rng.below(6),
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let scalar = StringSpace::with_kernel(strs.clone(), KernelKind::Scalar);
+        let bitp = StringSpace::with_kernel(strs, KernelKind::Auto);
+        let (pts, centers) = pick_queries(rng, n);
+        let a = scalar.nearest_batch(&pts, &centers);
+        let b = bitp.nearest_batch(&pts, &centers);
+        prop_assert!(a.idx == b.idx, "winner indices differ between string backends");
+        for i in 0..pts.len() {
+            prop_assert!(
+                a.dist[i].to_bits() == b.dist[i].to_bits(),
+                "nearest dist[{i}] differs: {} vs {}",
+                a.dist[i],
+                b.dist[i]
+            );
+        }
+        let c = centers[0];
+        let mut want = vec![0.0f64; pts.len()];
+        scalar.dist_batch(&pts, c, &mut want);
+        let mut got = vec![0.0f64; pts.len()];
+        bitp.dist_batch(&pts, c, &mut got);
+        for i in 0..pts.len() {
+            prop_assert!(
+                got[i].to_bits() == want[i].to_bits(),
+                "dist_batch[{i}] differs: {got:?} vs {want:?}"
+            );
+        }
+        // pruned: same cutoff, both backends — identical charges and
+        // identical keep/skip decisions (the bitparallel backend may
+        // store INFINITY where the scalar one stores an exact value
+        // above the cutoff; both are valid under the trait contract)
+        for cut in [0.0, 1.0, 2.5, 6.0, f64::INFINITY] {
+            let lower = vec![0.0f64; pts.len()];
+            let cutoff = vec![cut; pts.len()];
+            let mut so = vec![0.0f64; pts.len()];
+            let sc = scalar.dist_batch_pruned(&pts, c, &lower, &cutoff, &mut so);
+            let mut bo = vec![0.0f64; pts.len()];
+            let bc = bitp.dist_batch_pruned(&pts, c, &lower, &cutoff, &mut bo);
+            prop_assert!(sc == bc, "cut={cut}: charges differ ({sc} vs {bc})");
+            for i in 0..pts.len() {
+                prop_assert!(
+                    (so[i] <= cut) == (bo[i] <= cut),
+                    "cut={cut}: decision differs at [{i}]: {} vs {}",
+                    so[i],
+                    bo[i]
+                );
+                if bo[i].is_finite() {
+                    prop_assert!(
+                        bo[i].to_bits() == so[i].to_bits(),
+                        "cut={cut}: finite value differs at [{i}]: {} vs {}",
+                        so[i],
+                        bo[i]
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Banded Levenshtein vs the full DP, including the band-overflow
+/// sentinel: `Some(d)` iff the exact distance is ≤ k, and then `d` is
+/// exact — probed at and around the decision boundary.
+#[test]
+fn prop_banded_levenshtein_matches_full_dp() {
+    check("banded-levenshtein", 0xBA2D, 60, |rng| {
+        let alphabet = b"abcd";
+        let mut randstr = |len: usize| -> Vec<u8> {
+            (0..len).map(|_| alphabet[rng.below(4)]).collect()
+        };
+        let a = randstr(rng.below(40));
+        let b = randstr(rng.below(40));
+        let exact = levenshtein(&a, &b);
+        let probes =
+            [0, exact.saturating_sub(1), exact, exact + 1, exact + 5, rng.below(45)];
+        for &k in &probes {
+            match levenshtein_banded(&a, &b, k) {
+                Some(d) => prop_assert!(
+                    d == exact && exact <= k,
+                    "k={k}: banded returned {d}, exact {exact}"
+                ),
+                None => prop_assert!(
+                    exact > k,
+                    "k={k}: banded overflowed but exact {exact} <= k"
+                ),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end: the exact Euclidean kernels must produce bit-identical
+/// solves — same report JSON, same stable trace lines, same
+/// `dist_evals` — across kernels AND across executor thread counts.
+/// (Only the recorded kernel identity may differ; it is normalized out.)
+#[test]
+fn exact_kernels_solve_bit_identical_across_kernels_and_threads() {
+    let (data, _) =
+        GaussianMixtureSpec { n: 2000, d: 3, k: 5, seed: 77, ..Default::default() }.generate();
+    let shared = Arc::new(data);
+    let pts: Vec<u32> = (0..2000).collect();
+    let mut runs: Vec<(String, String, Vec<String>)> = Vec::new();
+    for kind in [KernelKind::Scalar, KernelKind::Blocked] {
+        let space = EuclideanSpace::with_kernel(shared.clone(), kind);
+        for threads in [1usize, 8] {
+            let sink = Arc::new(MemSink::new());
+            let rec: Arc<dyn Recorder> = sink.clone();
+            let mut cfg = ClusterConfig::new(Objective::Median, 4, 0.5);
+            cfg.threads = Some(threads);
+            let rep = solve_traced(&space, &pts, &cfg, rec);
+            assert_eq!(rep.kernel, kind.name(), "report must record the resolved kernel");
+            let ktag = format!("\"kernel\":\"{}\"", kind.name());
+            let json = rep.to_json().replace(&ktag, "\"kernel\":\"<k>\"");
+            let ltag = format!("kernel={}", kind.name());
+            let trace: Vec<String> = sink
+                .snapshot()
+                .iter()
+                .map(|e| e.stable_json().replace(&ltag, "kernel=<k>"))
+                .collect();
+            assert!(trace.len() > 5, "expected run/round/reducer events");
+            runs.push((format!("{} x{threads}", kind.name()), json, trace));
+        }
+    }
+    let (ref_label, ref_json, ref_trace) = &runs[0];
+    for (label, json, trace) in &runs[1..] {
+        assert_eq!(ref_json, json, "{ref_label} vs {label}: reports differ");
+        assert_eq!(ref_trace, trace, "{ref_label} vs {label}: traces differ");
+    }
 }
 
 /// The counting wrapper must delegate bulk queries (keeping the inner
@@ -209,6 +493,7 @@ fn counting_space_delegates_and_meters_bulk_queries() {
 
     let a = counting.nearest_batch(&pts, &centers);
     assert_eq!(counting.evals(), (40 * 3) as u64);
+    assert_eq!(counting.kernel_name(), inner.kernel_name(), "wrapper must forward the kernel id");
     let b = inner.nearest_batch(&pts, &centers);
     assert_eq!(a.dist, b.dist);
     assert_eq!(a.idx, b.idx);

@@ -25,6 +25,7 @@ use mrcoreset::data::strings::StringClusterSpec;
 use mrcoreset::data::synth::GaussianMixtureSpec;
 use mrcoreset::mapreduce::{PartitionStrategy, Simulator};
 use mrcoreset::metric::dense::{EuclideanSpace, ManhattanSpace};
+use mrcoreset::metric::kernel::KernelKind;
 use mrcoreset::metric::levenshtein::StringSpace;
 use mrcoreset::metric::{MetricSpace, Objective};
 use mrcoreset::outliers::{local_search_outliers, local_search_outliers_reference};
@@ -63,9 +64,11 @@ fn random_vector_spaces(rng: &mut Rng) -> (Vec<Box<dyn MetricSpace>>, usize) {
     }
     .generate();
     let shared = Arc::new(data);
+    // pinned to an exact kernel: these are bit-for-bit pruning contracts,
+    // and must hold even when MRCORESET_KERNEL selects an inexact backend
     let spaces: Vec<Box<dyn MetricSpace>> = vec![
-        Box::new(EuclideanSpace::new(shared.clone())),
-        Box::new(ManhattanSpace::new(shared)),
+        Box::new(EuclideanSpace::with_kernel(shared.clone(), KernelKind::Blocked)),
+        Box::new(ManhattanSpace::with_kernel(shared, KernelKind::Blocked)),
     ];
     (spaces, n)
 }
