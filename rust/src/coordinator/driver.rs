@@ -139,6 +139,11 @@ pub struct RunReport {
     /// (`scalar`/`blocked`/`simd`/`engine`/`bitparallel`, see
     /// [`crate::metric::kernel`]).
     pub kernel: &'static str,
+    /// Reducer re-executions recovered by the fault-tolerant round
+    /// engine (sum of `faults.retries` across rounds; 0 in a fault-free
+    /// run). Retried work is charged like first-attempt work, so every
+    /// other field is unaffected by recovery.
+    pub retries: u64,
     pub wall: std::time::Duration,
     pub stats: JobStats,
 }
@@ -182,21 +187,21 @@ pub fn try_solve_traced(
     let n = pts.len();
     let l = cfg.l.unwrap_or_else(|| default_l(n, cfg.k));
     let m = cfg.m.unwrap_or(2 * cfg.k).max(cfg.k);
+    // the run label doubles as the checkpoint fingerprint: resuming
+    // under different parameters must be refused, not silently mixed
+    let label = format!(
+        "{} k={} n={} eps={} seed={} kernel={}",
+        cfg.objective,
+        cfg.k,
+        n,
+        cfg.eps,
+        cfg.seed,
+        space.kernel_name()
+    );
     if recorder.enabled() {
-        recorder.record(&Event::RunStart {
-            schema: TRACE_SCHEMA_VERSION,
-            label: format!(
-                "{} k={} n={} eps={} seed={} kernel={}",
-                cfg.objective,
-                cfg.k,
-                n,
-                cfg.eps,
-                cfg.seed,
-                space.kernel_name()
-            ),
-        });
+        recorder.record(&Event::RunStart { schema: TRACE_SCHEMA_VERSION, label: label.clone() });
     }
-    let exec = cfg.executor.build(cfg.threads, recorder.clone())?;
+    let exec = cfg.executor.build_tagged(cfg.threads, recorder.clone(), &label)?;
     let ccfg = CoresetConfig { eps: cfg.eps, beta: cfg.beta, m, tl: cfg.tl, seed: cfg.seed };
     let use_robust = cfg.outliers > 0 || cfg.final_algo == FinalAlgo::RobustLocalSearch;
 
@@ -314,6 +319,7 @@ pub fn try_solve_traced(
         max_local_bytes: stats.max_local_bytes(),
         dist_evals: stats.total_dist_evals(),
         kernel: space.kernel_name(),
+        retries: stats.counter_total("faults.retries"),
         wall: t0.elapsed(),
         stats,
         solution,

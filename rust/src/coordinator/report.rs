@@ -42,6 +42,18 @@ impl RunReport {
             self.kernel,
             self.wall.as_secs_f64()
         ));
+        if self.retries > 0 {
+            s.push_str(&format!(
+                "recovery: retries={} backoff_sim={}us (injected faults: panic={} read={} \
+                 write={} flip={})\n",
+                self.retries,
+                self.stats.counter_total("faults.backoff_sim_us"),
+                self.stats.counter_total("faults.injected.panic"),
+                self.stats.counter_total("faults.injected.read"),
+                self.stats.counter_total("faults.injected.write"),
+                self.stats.counter_total("faults.injected.flip"),
+            ));
+        }
         for r in &self.stats.rounds {
             let md = r.mem_distribution();
             s.push_str(&format!(
@@ -100,6 +112,13 @@ impl RunReport {
         // which kernel produced them. Exact kernels serialize identical
         // metrics, so this never masks a real determinism diff.
         o.set("kernel", Json::str(self.kernel));
+        // Gated like the outlier keys: a fault-free run's JSON is
+        // byte-identical to one produced before fault tolerance existed
+        // (and to a recovered run's modulo this key and the faults.*
+        // counters — the acceptance diff strips exactly those).
+        if self.retries > 0 {
+            o.set("retries", Json::num(self.retries as f64));
+        }
         let rounds: Vec<Json> = self
             .stats
             .rounds

@@ -33,7 +33,7 @@ use mrcoreset::coreset::TlAlgo;
 use mrcoreset::data::csv;
 use mrcoreset::data::synth::{GaussianMixtureSpec, NoiseSpec};
 use mrcoreset::eval::{run_experiment, validate_ids, ALL_IDS};
-use mrcoreset::mapreduce::{parse_bytes, ExecBackend, PartitionStrategy};
+use mrcoreset::mapreduce::{parse_bytes, ExecBackend, FaultPlan, PartitionStrategy};
 use mrcoreset::metric::dense::EuclideanSpace;
 use mrcoreset::metric::kernel::KernelKind;
 use mrcoreset::metric::{MetricSpace, Objective};
@@ -50,6 +50,7 @@ const USAGE: &str = "usage: mrcoreset <run|exp|gen|report|bench-diff|info> [flag
        [--partition rr|contig|shuffle] [--seed S] [--no-engine]
        [--kernel auto|scalar|blocked|simd]
        [--executor mem|spill] [--mem-budget BYTES] [--spill-dir DIR]
+       [--faults SPEC] [--retries N] [--checkpoint-dir DIR]
        [--trace FILE] [--json]
   exp  <e1..e12|all> [--full] [--kernel auto|scalar|blocked|simd]
   gen  --n N --d D --k K --out FILE [--spread S] [--outliers F] [--noise N]
@@ -81,6 +82,18 @@ const USAGE: &str = "usage: mrcoreset <run|exp|gen|report|bench-diff|info> [flag
               instead of an OOM kill. Both executors enforce it
   --spill-dir D
               shard directory for --executor spill (default: fresh temp)
+  --faults S  deterministic fault injection: `;`-separated entries, each
+              KIND@ROUND.REDUCER[xCOUNT] (KIND = panic|read|write|flip)
+              or chaos:KIND:PERMILLE:SEED. Same spec + same run config
+              replays bit-identically on both executors. Env default:
+              MRCORESET_FAULTS
+  --retries N transient reducer failures retried up to N times (default
+              2; simulated backoff, recorded not slept). Env default:
+              MRCORESET_RETRIES
+  --checkpoint-dir D
+              (spill executor) persist each completed round to D and, on
+              restart with the same config, resume at the first
+              incomplete round — checksummed, parameter-fingerprinted
   --trace F   write per-round/per-reducer telemetry events to F (JSONL)
   --json      print the run report as deterministic JSON (no wall-clock)";
 
@@ -240,6 +253,21 @@ fn cmd_run(args: &Args) {
     }
     if let Some(dir) = args.get("spill-dir") {
         cfg.executor.spill_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if let Some(spec) = args.get("faults") {
+        match FaultPlan::parse(spec) {
+            Ok(plan) => cfg.executor.faults = Some(plan),
+            Err(e) => {
+                eprintln!("error: invalid --faults spec: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if args.has("retries") {
+        cfg.executor.retries = args.require("retries");
+    }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.executor.checkpoint_dir = Some(std::path::PathBuf::from(dir));
     }
 
     // the robust pipeline (--z, or --final robust on its own) has its
@@ -630,6 +658,7 @@ mod tests {
                 wall_us: 0,
                 spill_read: 1008,
                 spill_write: 232,
+                attempts: 1,
                 counters: vec![
                     ("cover.evals_baseline".to_string(), 1000),
                     ("cover.evals_charged".to_string(), 600),
@@ -647,6 +676,7 @@ mod tests {
                 wall_us: 0,
                 spill_read: 1008,
                 spill_write: 192,
+                attempts: 1,
                 counters: vec![("cover.evals_charged".to_string(), 200)],
             },
             Event::RoundEnd {

@@ -1,0 +1,411 @@
+//! Round-level checkpoint/resume for the spill backend.
+//!
+//! MapReduce round boundaries are natural checkpoints: each round's
+//! output is a self-contained shard manifest, and the mergeable-coreset
+//! structure means no cross-shard state ever needs re-deriving. A
+//! [`CheckpointStore`] persists, for every completed round, the round's
+//! output shards (CRC-framed, same codec as the spill store) plus a
+//! JSON manifest carrying the full [`RoundStats`] — so a resumed run
+//! replays completed rounds *with their original accounting* and the
+//! final `RunReport` is bit-identical to an uninterrupted run's.
+//!
+//! Resume validation is strict: a checkpoint is only replayed when its
+//! `meta.json` fingerprint matches the resuming run (the driver passes
+//! its run label — objective, k, n, eps, seed, kernel), the round name
+//! and shard count match what the executor is about to run, and every
+//! persisted shard passes its checksum. Anything else — a missing
+//! round file, a flipped bit, a different config — truncates the
+//! usable prefix and the run simply re-executes from there.
+//!
+//! Layout under the checkpoint dir:
+//!
+//! ```text
+//! meta.json          {"version":1,"fingerprint":"..."}
+//! round-<idx>.json   {"round":i,"name":...,"shards":[...],"stats":{...}}
+//! ckpt-r<idx>-<slot>.shard   CRC-framed shard payloads
+//! ```
+//!
+//! Manifest writes are atomic (tmp + rename), so a run killed mid-write
+//! leaves at worst a missing round, never a half-valid one.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::executor::ExecError;
+use super::spill::{ShardRef, SpillStore};
+use super::RoundStats;
+
+const META_FILE: &str = "meta.json";
+const CHECKPOINT_VERSION: u64 = 1;
+
+/// One persisted round: enough to splice it back into a resumed job.
+#[derive(Clone, Debug)]
+pub struct CheckpointRound {
+    pub name: String,
+    pub shards: Vec<ShardRef>,
+    pub stats: RoundStats,
+}
+
+/// Durable store of completed rounds (see module docs).
+pub struct CheckpointStore {
+    dir: PathBuf,
+    store: Arc<SpillStore>,
+    /// Validated contiguous prefix of completed rounds, loaded at open;
+    /// truncated when a resume finds a mismatching round.
+    rounds: Mutex<Vec<CheckpointRound>>,
+}
+
+fn ck_err(context: &str, detail: impl std::fmt::Display) -> ExecError {
+    ExecError::Checkpoint { context: context.to_string(), detail: detail.to_string() }
+}
+
+impl CheckpointStore {
+    /// Open (or create) a checkpoint store at `dir` for a run with the
+    /// given `fingerprint`. A pre-existing store with a *different*
+    /// fingerprint is a hard error — a checkpoint must never be
+    /// replayed into a different job. On success, the validated
+    /// contiguous prefix of completed rounds is loaded (every shard is
+    /// re-read and checksum-verified up front, so a resume decision is
+    /// never made on bytes that would later fail).
+    pub fn open(dir: &Path, fingerprint: &str) -> Result<CheckpointStore, ExecError> {
+        fs::create_dir_all(dir).map_err(|e| ck_err("create checkpoint dir", e))?;
+        let meta_path = dir.join(META_FILE);
+        match fs::read_to_string(&meta_path) {
+            Ok(text) => {
+                let v = Json::parse(&text).map_err(|e| ck_err("parse meta.json", e))?;
+                let have = v.get("fingerprint").and_then(|f| f.as_str()).unwrap_or("");
+                if have != fingerprint {
+                    return Err(ck_err(
+                        "fingerprint mismatch",
+                        format!(
+                            "checkpoint at {} was written by run `{have}`, \
+                             refusing to resume run `{fingerprint}`",
+                            dir.display()
+                        ),
+                    ));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                let mut meta = Json::obj();
+                meta.set("version", Json::num(CHECKPOINT_VERSION as f64));
+                meta.set("fingerprint", Json::str(fingerprint));
+                write_atomic(&meta_path, meta.to_string().as_bytes())
+                    .map_err(|e| ck_err("write meta.json", e))?;
+            }
+            Err(e) => return Err(ck_err("read meta.json", e)),
+        }
+        let store = Arc::new(
+            SpillStore::create(Some(dir)).map_err(|e| ck_err("open checkpoint shards", e))?,
+        );
+        let mut rounds = Vec::new();
+        loop {
+            let idx = rounds.len();
+            let path = dir.join(format!("round-{idx}.json"));
+            let text = match fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => break,
+                Err(e) => return Err(ck_err("read round manifest", e)),
+            };
+            match parse_round(&text, idx) {
+                Ok(r) => {
+                    // verify every shard now: a corrupt checkpoint is a
+                    // shorter usable prefix, not a later hard failure
+                    let ok = r.shards.iter().all(|s| store.read(s).is_ok());
+                    if !ok {
+                        crate::obs::log::warn(&format!(
+                            "checkpoint: round {idx} has corrupt shards; resuming from round {idx}"
+                        ));
+                        break;
+                    }
+                    rounds.push(r);
+                }
+                Err(e) => {
+                    crate::obs::log::warn(&format!(
+                        "checkpoint: round {idx} manifest invalid ({e}); \
+                         resuming from round {idx}"
+                    ));
+                    break;
+                }
+            }
+        }
+        if !rounds.is_empty() {
+            crate::obs::log::info(&format!(
+                "checkpoint: {} completed round(s) available at {}",
+                rounds.len(),
+                dir.display()
+            ));
+        }
+        Ok(CheckpointStore { dir: dir.to_path_buf(), store, rounds: Mutex::new(rounds) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of validated completed rounds available for replay.
+    pub fn rounds_available(&self) -> usize {
+        self.rounds.lock().unwrap().len()
+    }
+
+    /// Shard store backing the persisted rounds (for replayed
+    /// manifests).
+    pub(crate) fn shard_store(&self) -> Arc<SpillStore> {
+        Arc::clone(&self.store)
+    }
+
+    /// The persisted round at `idx`, if it matches what the executor is
+    /// about to run. A name or shard-count mismatch truncates the
+    /// usable prefix at `idx` (the job diverged; later checkpoints are
+    /// for rounds that will never come back).
+    pub(crate) fn take_resumable(
+        &self,
+        idx: usize,
+        name: &str,
+        n_shards: usize,
+    ) -> Option<CheckpointRound> {
+        let mut rounds = self.rounds.lock().unwrap();
+        if idx >= rounds.len() {
+            return None;
+        }
+        let r = &rounds[idx];
+        if r.name != name || r.shards.len() != n_shards {
+            crate::obs::log::warn(&format!(
+                "checkpoint: round {idx} was '{}' with {} shard(s), job wants '{name}' \
+                 with {n_shards}; re-executing from round {idx}",
+                r.name,
+                r.shards.len()
+            ));
+            rounds.truncate(idx);
+            return None;
+        }
+        Some(r.clone())
+    }
+
+    /// Persist one completed round: copy its output shards out of the
+    /// run's spill store (re-reading them checksum-verified) and write
+    /// the round manifest atomically.
+    pub(crate) fn persist(
+        &self,
+        idx: usize,
+        name: &str,
+        stats: &RoundStats,
+        src: &SpillStore,
+        shards: &[ShardRef],
+    ) -> Result<(), ExecError> {
+        let mut persisted = Vec::with_capacity(shards.len());
+        for (slot, s) in shards.iter().enumerate() {
+            let payload = src
+                .read(s)
+                .map_err(|e| ck_err("copy shard into checkpoint", e))?;
+            let tag = format!("ckpt-r{idx}-{slot}");
+            let sref = self
+                .store
+                .write(&tag, &payload)
+                .map_err(|e| ck_err("write checkpoint shard", e))?;
+            persisted.push(sref);
+        }
+        let mut o = Json::obj();
+        o.set("round", Json::num(idx as f64));
+        o.set("name", Json::str(name));
+        let shard_arr: Vec<Json> = persisted
+            .iter()
+            .map(|s| {
+                let mut sj = Json::obj();
+                sj.set("tag", Json::str(s.tag.clone()));
+                sj.set("bytes", Json::num(s.bytes as f64));
+                sj
+            })
+            .collect();
+        o.set("shards", Json::Arr(shard_arr));
+        o.set("stats", stats_to_json(stats));
+        write_atomic(&self.dir.join(format!("round-{idx}.json")), o.to_string().as_bytes())
+            .map_err(|e| ck_err("write round manifest", e))?;
+        Ok(())
+    }
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    fs::write(&tmp, bytes)?;
+    fs::rename(&tmp, path)
+}
+
+fn parse_round(text: &str, idx: usize) -> Result<CheckpointRound, String> {
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    let stored_idx =
+        v.get("round").and_then(|j| j.as_u64()).ok_or("missing `round` index")? as usize;
+    if stored_idx != idx {
+        return Err(format!("manifest claims round {stored_idx}, file name says {idx}"));
+    }
+    let name =
+        v.get("name").and_then(|j| j.as_str()).ok_or("missing `name`")?.to_string();
+    let shards = v
+        .get("shards")
+        .and_then(|j| j.as_arr())
+        .ok_or("missing `shards`")?
+        .iter()
+        .map(|sj| {
+            let tag = sj.get("tag").and_then(|t| t.as_str()).ok_or("shard without tag")?;
+            let bytes = sj.get("bytes").and_then(|b| b.as_u64()).ok_or("shard without bytes")?;
+            Ok(ShardRef { tag: tag.to_string(), bytes })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let stats = stats_from_json(v.get("stats").ok_or("missing `stats`")?)?;
+    Ok(CheckpointRound { name, shards, stats })
+}
+
+/// `RoundStats` → JSON with every deterministic field (`wall` is
+/// wall-clock and restores as zero — the report never serializes it).
+fn stats_to_json(s: &RoundStats) -> Json {
+    fn arr_u64(v: &[u64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::num(x as f64)).collect())
+    }
+    let mut o = Json::obj();
+    o.set("name", Json::str(s.name.clone()));
+    o.set("reducers", Json::num(s.reducers as f64));
+    o.set("max_local_peak", Json::num(s.max_local_peak as f64));
+    o.set("aggregate_peak", Json::num(s.aggregate_peak as f64));
+    o.set(
+        "reducer_mem_peaks",
+        Json::Arr(s.reducer_mem_peaks.iter().map(|&x| Json::num(x as f64)).collect()),
+    );
+    o.set("reducer_mem_bytes", arr_u64(&s.reducer_mem_bytes));
+    o.set("max_local_bytes", Json::num(s.max_local_bytes as f64));
+    o.set("spill_read_bytes", Json::num(s.spill_read_bytes as f64));
+    o.set("spill_write_bytes", Json::num(s.spill_write_bytes as f64));
+    o.set("reducer_dist_evals", arr_u64(&s.reducer_dist_evals));
+    o.set("dist_evals", Json::num(s.dist_evals as f64));
+    o.set("in_items", Json::num(s.in_items as f64));
+    o.set("out_items", Json::num(s.out_items as f64));
+    let mut cj = Json::obj();
+    for (k, v) in &s.counters {
+        cj.set(k, Json::num(*v as f64));
+    }
+    o.set("counters", cj);
+    o.set("budget_violations", Json::num(s.budget_violations as f64));
+    o
+}
+
+fn stats_from_json(v: &Json) -> Result<RoundStats, String> {
+    fn u64s(v: &Json, key: &str) -> Result<Vec<u64>, String> {
+        v.get(key)
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| format!("missing array `{key}`"))?
+            .iter()
+            .map(|x| x.as_u64().ok_or_else(|| format!("non-u64 entry in `{key}`")))
+            .collect()
+    }
+    fn num(v: &Json, key: &str) -> Result<u64, String> {
+        v.get(key).and_then(|j| j.as_u64()).ok_or_else(|| format!("missing field `{key}`"))
+    }
+    let counters = v
+        .get("counters")
+        .and_then(|j| j.as_obj())
+        .ok_or("missing `counters`")?
+        .iter()
+        .map(|(k, val)| {
+            val.as_u64().map(|n| (k.clone(), n)).ok_or_else(|| format!("non-u64 counter `{k}`"))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(RoundStats {
+        name: v.get("name").and_then(|j| j.as_str()).ok_or("missing `name`")?.to_string(),
+        reducers: num(v, "reducers")? as usize,
+        max_local_peak: num(v, "max_local_peak")? as usize,
+        aggregate_peak: num(v, "aggregate_peak")? as usize,
+        reducer_mem_peaks: u64s(v, "reducer_mem_peaks")?.into_iter().map(|x| x as usize).collect(),
+        reducer_mem_bytes: u64s(v, "reducer_mem_bytes")?,
+        max_local_bytes: num(v, "max_local_bytes")?,
+        spill_read_bytes: num(v, "spill_read_bytes")?,
+        spill_write_bytes: num(v, "spill_write_bytes")?,
+        reducer_dist_evals: u64s(v, "reducer_dist_evals")?,
+        dist_evals: num(v, "dist_evals")?,
+        in_items: num(v, "in_items")?,
+        out_items: num(v, "out_items")?,
+        counters,
+        wall: Duration::ZERO,
+        budget_violations: num(v, "budget_violations")? as usize,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stats() -> RoundStats {
+        RoundStats {
+            name: "r0".to_string(),
+            reducers: 2,
+            max_local_peak: 5,
+            aggregate_peak: 8,
+            reducer_mem_peaks: vec![5, 3],
+            reducer_mem_bytes: vec![40, 24],
+            max_local_bytes: 40,
+            spill_read_bytes: 64,
+            spill_write_bytes: 64,
+            reducer_dist_evals: vec![10, 4],
+            dist_evals: 14,
+            in_items: 6,
+            out_items: 6,
+            counters: vec![("cover.iterations".to_string(), 3), ("faults.retries".to_string(), 1)],
+            wall: Duration::from_millis(7),
+            budget_violations: 0,
+        }
+    }
+
+    #[test]
+    fn round_stats_round_trip_through_json() {
+        let s = sample_stats();
+        let back = stats_from_json(&stats_to_json(&s)).expect("parse");
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.reducer_mem_peaks, s.reducer_mem_peaks);
+        assert_eq!(back.reducer_mem_bytes, s.reducer_mem_bytes);
+        assert_eq!(back.reducer_dist_evals, s.reducer_dist_evals);
+        assert_eq!(back.counters, s.counters);
+        assert_eq!(back.dist_evals, s.dist_evals);
+        assert_eq!(back.wall, Duration::ZERO, "wall-clock is not persisted");
+    }
+
+    #[test]
+    fn open_persist_reload_and_validate() {
+        let dir = std::env::temp_dir().join(format!("mrc-ckpt-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let src = SpillStore::create(None).expect("src store");
+        let shard = src.write("r0-0", &[1, 2, 3, 4]).expect("write");
+
+        let ck = CheckpointStore::open(&dir, "fp-a").expect("open");
+        assert_eq!(ck.rounds_available(), 0);
+        ck.persist(0, "round-zero", &sample_stats(), &src, &[shard]).expect("persist");
+
+        // reopen with the same fingerprint: the round replays
+        let ck2 = CheckpointStore::open(&dir, "fp-a").expect("reopen");
+        assert_eq!(ck2.rounds_available(), 1);
+        let r = ck2.take_resumable(0, "round-zero", 1).expect("resumable");
+        assert_eq!(r.stats.dist_evals, 14);
+        assert_eq!(ck2.shard_store().read(&r.shards[0]).expect("shard"), vec![1, 2, 3, 4]);
+
+        // a name mismatch truncates instead of replaying wrong data
+        assert!(ck2.take_resumable(0, "different", 1).is_none());
+        assert_eq!(ck2.rounds_available(), 0);
+
+        // a different fingerprint refuses to open at all
+        let err = CheckpointStore::open(&dir, "fp-b").expect_err("mismatch");
+        assert!(matches!(err, ExecError::Checkpoint { .. }), "{err}");
+
+        // corrupting a persisted shard shortens the usable prefix
+        let ck3 = CheckpointStore::open(&dir, "fp-a").expect("reopen");
+        assert_eq!(ck3.rounds_available(), 1);
+        let shard_path = dir.join("ckpt-r0-0.shard");
+        let mut bytes = fs::read(&shard_path).expect("raw");
+        let n = bytes.len();
+        bytes[n - 5] ^= 0x80;
+        fs::write(&shard_path, &bytes).expect("corrupt");
+        let ck4 = CheckpointStore::open(&dir, "fp-a").expect("reopen");
+        assert_eq!(ck4.rounds_available(), 0, "corrupt shard must not be replayed");
+
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -35,20 +35,64 @@ use std::sync::Arc;
 
 use crate::obs::Recorder;
 
+use super::checkpoint::CheckpointStore;
+use super::faults::FaultPlan;
 use super::memory::MemoryMeter;
-use super::spill::{ShardRef, SpillStore, Spillable};
+use super::spill::{ShardRef, SpillError, SpillStore, Spillable};
 use super::{Cardinality, JobStats, Simulator, SlotOut};
 
-/// Structured executor failure. Over-budget is the interesting one: it
-/// carries exactly which round/reducer refused which charge, so a run
-/// that does not fit in its memory budget dies with an actionable error
-/// instead of an OOM kill.
+/// Structured executor failure. Every variant names its site, so a run
+/// that does not fit its budget, hits bad disk, or exhausts its retries
+/// dies with an actionable error instead of an OOM kill or a panic.
+///
+/// Retry semantics (see `Simulator::round_impl`): `Io`, `Corrupt`, and
+/// `ReducerPanic` are transient — a fresh idempotent re-execution from
+/// the input manifest can clear them, so the round engine retries them
+/// up to its attempt bound. `OverBudget` is deterministic (the same
+/// charges refuse again) and `Checkpoint` is a coordinator-side setup
+/// failure; neither is retried.
 #[derive(Debug)]
 pub enum ExecError {
     OverBudget { round: String, reducer: usize, needed: u64, budget: u64, resident: u64 },
     Io { context: String, source: std::io::Error },
     Codec { context: String, detail: String },
+    /// A shard's bytes failed integrity validation (truncation, bad
+    /// frame, CRC-32 mismatch). `round` is `"<manifest>"` for
+    /// coordinator-side reads outside any round.
+    Corrupt { round: String, reducer: usize, shard: String, detail: String },
+    /// A reducer closure panicked; the payload is summarized in
+    /// `detail`. Only produced when recovery is enabled (a fault plan
+    /// or retry budget is configured) — otherwise panics propagate.
+    ReducerPanic { round: String, reducer: usize, detail: String },
+    /// Checkpoint store setup or persistence failed (not retryable).
+    Checkpoint { context: String, detail: String },
 }
+
+impl ExecError {
+    /// True when an idempotent re-execution of the failing reducer can
+    /// clear the error.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            ExecError::Io { .. } | ExecError::Corrupt { .. } | ExecError::ReducerPanic { .. }
+        )
+    }
+
+    /// Fill in the (round, reducer) site on corruption errors that were
+    /// detected by a coordinator-side manifest read inside a round.
+    pub(crate) fn at_site(mut self, round: &str, reducer: usize) -> ExecError {
+        if let ExecError::Corrupt { round: r, reducer: rd, .. } = &mut self {
+            if r == MANIFEST_SITE {
+                *r = round.to_string();
+                *rd = reducer;
+            }
+        }
+        self
+    }
+}
+
+/// Placeholder round name for shard reads outside any round.
+const MANIFEST_SITE: &str = "<manifest>";
 
 impl fmt::Display for ExecError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -61,6 +105,17 @@ impl fmt::Display for ExecError {
             ExecError::Io { context, source } => write!(f, "spill I/O failed ({context}): {source}"),
             ExecError::Codec { context, detail } => {
                 write!(f, "corrupt spill shard ({context}): {detail}")
+            }
+            ExecError::Corrupt { round, reducer, shard, detail } => write!(
+                f,
+                "shard integrity failure in round '{round}' reducer {reducer} \
+                 (shard {shard}): {detail}"
+            ),
+            ExecError::ReducerPanic { round, reducer, detail } => {
+                write!(f, "reducer {reducer} of round '{round}' panicked: {detail}")
+            }
+            ExecError::Checkpoint { context, detail } => {
+                write!(f, "checkpoint failure ({context}): {detail}")
             }
         }
     }
@@ -104,9 +159,16 @@ impl<T> std::ops::Deref for Shard<'_, T> {
 }
 
 fn decode_shard<T: Spillable>(store: &SpillStore, shard: &ShardRef) -> Result<T, ExecError> {
-    let payload = store.read(shard).map_err(|e| ExecError::Io {
-        context: format!("read shard {}", shard.tag),
-        source: e,
+    let payload = store.read(shard).map_err(|e| match e {
+        SpillError::Io(source) => {
+            ExecError::Io { context: format!("read shard {}", shard.tag), source }
+        }
+        SpillError::Corrupt { detail } => ExecError::Corrupt {
+            round: MANIFEST_SITE.to_string(),
+            reducer: 0,
+            shard: shard.tag.clone(),
+            detail,
+        },
     })?;
     let mut d = super::spill::Decoder::new(&payload);
     let value = T::decode(&mut d).map_err(|e| ExecError::Codec {
@@ -264,7 +326,7 @@ impl Executor for Simulator {
         let outs = self.round_impl(name, inputs.len(), |i, meter| {
             let in_bytes = inputs.shard_bytes(i);
             charge(meter, name, i, in_bytes)?;
-            let shard = inputs.load(i)?;
+            let shard = inputs.load(i).map_err(|e| e.at_site(name, i))?;
             let input: &I = &shard;
             let in_card = input.cardinality();
             let out = f(i, input, meter);
@@ -298,6 +360,10 @@ pub struct SpillExecutor {
     sim: Simulator,
     store: Arc<SpillStore>,
     seq: AtomicU64,
+    /// When set, every completed round is persisted (shards + stats)
+    /// and a fresh run over the same checkpoint dir replays completed
+    /// rounds instead of re-executing them.
+    checkpoint: Option<Arc<CheckpointStore>>,
 }
 
 impl SpillExecutor {
@@ -309,7 +375,14 @@ impl SpillExecutor {
             context: "create spill store".to_string(),
             source: e,
         })?;
-        Ok(SpillExecutor { sim, store: Arc::new(store), seq: AtomicU64::new(0) })
+        Ok(SpillExecutor { sim, store: Arc::new(store), seq: AtomicU64::new(0), checkpoint: None })
+    }
+
+    /// Enable round-level checkpoint/resume against `store` (see
+    /// [`CheckpointStore::open`] for the validation a resume performs).
+    pub fn with_checkpoint(mut self, store: CheckpointStore) -> SpillExecutor {
+        self.checkpoint = Some(Arc::new(store));
+        self
     }
 
     pub fn store_dir(&self) -> &Path {
@@ -350,13 +423,28 @@ impl Executor for SpillExecutor {
         O: Spillable + Cardinality + Send,
         F: Fn(usize, &I, &mut MemoryMeter) -> O + Sync,
     {
+        // Resume: a checkpoint that already holds this round (validated
+        // name, shard count, checksums) is replayed — its stats enter
+        // the job as if the round had run, and its shards become the
+        // round's output manifest. No reducer executes.
+        let round_idx = self.sim.rounds_so_far();
+        if let Some(ck) = &self.checkpoint {
+            if let Some(r) = ck.take_resumable(round_idx, name, inputs.len()) {
+                crate::obs::log::info(&format!(
+                    "checkpoint: replaying round {round_idx} '{name}' from {}",
+                    ck.dir().display()
+                ));
+                self.sim.push_stats(r.stats);
+                return Ok(Manifest::Spill { store: ck.shard_store(), shards: r.shards });
+            }
+        }
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
         let store = &self.store;
         let from_disk = matches!(inputs, Manifest::Spill { .. });
         let shards = self.sim.round_impl(name, inputs.len(), |i, meter| {
             let in_bytes = inputs.shard_bytes(i);
             charge(meter, name, i, in_bytes)?;
-            let shard = inputs.load(i)?;
+            let shard = inputs.load(i).map_err(|e| e.at_site(name, i))?;
             let input: &I = &shard;
             let in_card = input.cardinality();
             let out = f(i, input, meter);
@@ -383,6 +471,9 @@ impl Executor for SpillExecutor {
                 spill_write: out_bytes,
             })
         })?;
+        if let Some(ck) = &self.checkpoint {
+            ck.persist(round_idx, name, &self.sim.last_round_stats(), &self.store, &shards)?;
+        }
         Ok(Manifest::Spill { store: Arc::clone(&self.store), shards })
     }
 
@@ -414,10 +505,13 @@ pub fn parse_bytes(s: &str) -> Option<u64> {
 
 /// Declarative executor choice carried by `ClusterConfig`.
 ///
-/// The default reads `MRCORESET_EXECUTOR` and `MRCORESET_MEM_BUDGET`
-/// from the environment (falling back to unbudgeted in-memory), so an
-/// entire test suite or CI leg can be switched out-of-core without
-/// touching code.
+/// The default reads `MRCORESET_EXECUTOR`, `MRCORESET_MEM_BUDGET`,
+/// `MRCORESET_FAULTS`, and `MRCORESET_RETRIES` from the environment
+/// (falling back to unbudgeted in-memory with 2 retries), so an entire
+/// test suite or CI leg can be switched out-of-core — or run under a
+/// chaos fault plan — without touching code. The explicit constructors
+/// (`in_memory()` / `spill()`) ignore the environment, which is what
+/// lets backend-pinning tests coexist with env-driven CI legs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecutorCfg {
     pub backend: ExecBackend,
@@ -425,7 +519,19 @@ pub struct ExecutorCfg {
     pub mem_budget: Option<u64>,
     /// Spill shard directory; fresh temp dir when `None`.
     pub spill_dir: Option<PathBuf>,
+    /// Deterministic fault schedule injected into every round.
+    pub faults: Option<FaultPlan>,
+    /// Transient-failure retries per reducer (attempts = retries + 1).
+    pub retries: u32,
+    /// Round-level checkpoint directory (spill backend only): completed
+    /// rounds are persisted there and replayed on resume.
+    pub checkpoint_dir: Option<PathBuf>,
 }
+
+/// Default retries for executor-driven runs: two idempotent
+/// re-executions absorb any single-site fault plus one repeat without
+/// changing fault-free behavior at all.
+pub const DEFAULT_RETRIES: u32 = 2;
 
 impl Default for ExecutorCfg {
     fn default() -> ExecutorCfg {
@@ -435,21 +541,64 @@ impl Default for ExecutorCfg {
         };
         let mem_budget =
             std::env::var("MRCORESET_MEM_BUDGET").ok().and_then(|s| parse_bytes(&s));
-        ExecutorCfg { backend, mem_budget, spill_dir: None }
+        let faults = std::env::var("MRCORESET_FAULTS").ok().and_then(|spec| {
+            match FaultPlan::parse(&spec) {
+                Ok(p) if !p.is_empty() => Some(p),
+                Ok(_) => None,
+                Err(e) => {
+                    crate::obs::log::warn(&format!("ignoring MRCORESET_FAULTS: {e}"));
+                    None
+                }
+            }
+        });
+        let retries = std::env::var("MRCORESET_RETRIES")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(DEFAULT_RETRIES);
+        ExecutorCfg {
+            backend,
+            mem_budget,
+            spill_dir: None,
+            faults,
+            retries,
+            checkpoint_dir: None,
+        }
     }
 }
 
 impl ExecutorCfg {
     pub fn in_memory() -> ExecutorCfg {
-        ExecutorCfg { backend: ExecBackend::InMemory, mem_budget: None, spill_dir: None }
+        ExecutorCfg {
+            backend: ExecBackend::InMemory,
+            mem_budget: None,
+            spill_dir: None,
+            faults: None,
+            retries: DEFAULT_RETRIES,
+            checkpoint_dir: None,
+        }
     }
 
     pub fn spill() -> ExecutorCfg {
-        ExecutorCfg { backend: ExecBackend::Spill, mem_budget: None, spill_dir: None }
+        ExecutorCfg { backend: ExecBackend::Spill, ..ExecutorCfg::in_memory() }
     }
 
     pub fn with_budget(mut self, bytes: u64) -> ExecutorCfg {
         self.mem_budget = Some(bytes);
+        self
+    }
+
+    pub fn with_faults(mut self, plan: FaultPlan) -> ExecutorCfg {
+        self.faults = Some(plan);
+        self
+    }
+
+    pub fn with_retries(mut self, retries: u32) -> ExecutorCfg {
+        self.retries = retries;
+        self
+    }
+
+    pub fn with_checkpoint_dir(mut self, dir: PathBuf) -> ExecutorCfg {
+        self.checkpoint_dir = Some(dir);
         self
     }
 
@@ -460,17 +609,44 @@ impl ExecutorCfg {
         threads: Option<usize>,
         recorder: Arc<dyn Recorder>,
     ) -> Result<ExecutorHandle, ExecError> {
-        let mut sim = Simulator::new().with_recorder(recorder);
+        self.build_tagged(threads, recorder, "")
+    }
+
+    /// [`ExecutorCfg::build`] with a run fingerprint for the checkpoint
+    /// store: a resumed run must present the same fingerprint that
+    /// created the checkpoint (the driver passes its run label), so a
+    /// checkpoint can never be replayed into a different job's rounds.
+    pub fn build_tagged(
+        &self,
+        threads: Option<usize>,
+        recorder: Arc<dyn Recorder>,
+        fingerprint: &str,
+    ) -> Result<ExecutorHandle, ExecError> {
+        let mut sim = Simulator::new().with_recorder(recorder).with_max_attempts(self.retries + 1);
         if let Some(t) = threads {
             sim = sim.with_threads(t);
         }
         if let Some(b) = self.mem_budget {
             sim = sim.with_byte_budget(b);
         }
+        if let Some(plan) = &self.faults {
+            sim = sim.with_faults(plan.clone());
+        }
         match self.backend {
-            ExecBackend::InMemory => Ok(ExecutorHandle::Mem(sim)),
+            ExecBackend::InMemory => {
+                if self.checkpoint_dir.is_some() {
+                    crate::obs::log::warn(
+                        "checkpointing requires the spill backend; --checkpoint-dir ignored",
+                    );
+                }
+                Ok(ExecutorHandle::Mem(sim))
+            }
             ExecBackend::Spill => {
-                Ok(ExecutorHandle::Spill(SpillExecutor::new(sim, self.spill_dir.as_deref())?))
+                let mut sp = SpillExecutor::new(sim, self.spill_dir.as_deref())?;
+                if let Some(dir) = &self.checkpoint_dir {
+                    sp = sp.with_checkpoint(CheckpointStore::open(dir, fingerprint)?);
+                }
+                Ok(ExecutorHandle::Spill(sp))
             }
         }
     }

@@ -1,0 +1,342 @@
+//! Deterministic fault injection for the MapReduce executor layer.
+//!
+//! A [`FaultPlan`] names exactly which (round, reducer, attempt) sites
+//! fail and how: a reducer panic, a spill-read I/O error, a spill-write
+//! I/O error, or a shard bit-flip (surfacing as a checksum failure).
+//! The round engine (`Simulator::round_impl`) consults the plan *before
+//! and after* running each reducer attempt, so injection is completely
+//! backend-agnostic — the same plan fires at the same sites whether the
+//! manifests live in RAM or on disk, at any thread count.
+//!
+//! # Determinism contract
+//!
+//! Same plan (same spec string, including chaos seeds) ⇒ same injected
+//! sites ⇒ same retry schedule ⇒ same final report. Concretely:
+//!
+//! - [`FaultPlan::fault_at`] is a pure function of
+//!   `(round, reducer, attempt)` — no interior mutability, no wall
+//!   clock, no global RNG. Chaos entries hash the site with splitmix64
+//!   under a caller-chosen seed.
+//! - Every retry attempt starts from the reducer's *input manifest*
+//!   (reducers are idempotent) with a fresh memory meter and fresh
+//!   distance/counter snapshots, so the numbers recorded for a
+//!   recovered reducer come from its successful attempt alone and are
+//!   bit-identical to a fault-free run's.
+//! - The only values a fault leaves behind are the explicitly-labelled
+//!   `attempts` span field and the `faults.*` round counters; backoff
+//!   is *simulated* (a deterministic function of the attempt number,
+//!   recorded in `faults.backoff_sim_us`, never slept).
+//!
+//! # Plan grammar
+//!
+//! A spec is `;`- or `,`-separated entries (CLI `--faults`, env
+//! `MRCORESET_FAULTS`):
+//!
+//! ```text
+//! entry := KIND '@' ROUND '.' REDUCER ['x' COUNT]   deterministic site
+//!        | 'chaos:' KIND ':' PERMILLE ':' SEED      seeded random sites
+//! KIND  := 'panic' | 'read' | 'write' | 'flip'
+//! ```
+//!
+//! `panic@0.2` panics reducer 2 of round 0 on its first attempt;
+//! `read@1.0x2` fails the first *two* attempts of reducer 0 in round 1
+//! (so recovery needs at least 2 retries); `chaos:flip:50:7` flips a
+//! shard in ~5% of (round, reducer) sites chosen by seed 7. The first
+//! matching entry wins; chaos entries only ever fire on attempt 1, so a
+//! single retry always clears them.
+
+use std::any::Any;
+use std::fmt;
+use std::panic;
+use std::sync::Once;
+
+/// What kind of failure to inject at a site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The reducer closure panics mid-work (caught by the round engine).
+    Panic,
+    /// Reading the reducer's input shard fails with an I/O error.
+    ReadErr,
+    /// Writing the reducer's output shard fails with an I/O error
+    /// (after the work ran — the expensive case for retry accounting).
+    WriteErr,
+    /// The reducer's input shard arrives corrupted (checksum mismatch).
+    BitFlip,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "panic" => Some(FaultKind::Panic),
+            "read" => Some(FaultKind::ReadErr),
+            "write" => Some(FaultKind::WriteErr),
+            "flip" => Some(FaultKind::BitFlip),
+            _ => None,
+        }
+    }
+
+    /// Round-counter name charged when this kind fires.
+    pub(crate) fn counter_name(self) -> &'static str {
+        match self {
+            FaultKind::Panic => "faults.injected.panic",
+            FaultKind::ReadErr => "faults.injected.read",
+            FaultKind::WriteErr => "faults.injected.write",
+            FaultKind::BitFlip => "faults.injected.flip",
+        }
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FaultKind::Panic => "panic",
+            FaultKind::ReadErr => "read",
+            FaultKind::WriteErr => "write",
+            FaultKind::BitFlip => "flip",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One deterministic site: fires on attempts `1..=count`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct FaultSite {
+    kind: FaultKind,
+    round: u32,
+    reducer: usize,
+    count: u32,
+}
+
+/// Seeded random sites: fires on attempt 1 at ~`permille`/1000 of all
+/// (round, reducer) pairs, chosen by hashing the site under `seed`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct ChaosRule {
+    kind: FaultKind,
+    permille: u64,
+    seed: u64,
+}
+
+/// A parsed, immutable fault schedule. See the module docs for the
+/// grammar and the determinism contract.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    sites: Vec<FaultSite>,
+    chaos: Vec<ChaosRule>,
+}
+
+impl FaultPlan {
+    /// Parse a plan spec; `Err` carries a message naming the bad entry.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split([';', ',']).map(str::trim).filter(|e| !e.is_empty()) {
+            if let Some(rest) = entry.strip_prefix("chaos:") {
+                let mut it = rest.split(':');
+                let kind = it
+                    .next()
+                    .and_then(FaultKind::parse)
+                    .ok_or_else(|| format!("bad fault kind in chaos entry `{entry}`"))?;
+                let permille: u64 = it
+                    .next()
+                    .and_then(|p| p.parse().ok())
+                    .ok_or_else(|| format!("bad permille in chaos entry `{entry}`"))?;
+                let seed: u64 = it
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| format!("bad seed in chaos entry `{entry}`"))?;
+                if it.next().is_some() {
+                    return Err(format!("trailing fields in chaos entry `{entry}`"));
+                }
+                plan.chaos.push(ChaosRule { kind, permille: permille.min(1000), seed });
+                continue;
+            }
+            let (kind_s, site) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("fault entry `{entry}` is not KIND@ROUND.REDUCER[xN]"))?;
+            let kind = FaultKind::parse(kind_s)
+                .ok_or_else(|| format!("unknown fault kind `{kind_s}` in `{entry}`"))?;
+            let (rr, count) = match site.split_once('x') {
+                Some((rr, c)) => {
+                    let count: u32 = c
+                        .parse()
+                        .ok()
+                        .filter(|&c| c >= 1)
+                        .ok_or_else(|| format!("bad repeat count in `{entry}`"))?;
+                    (rr, count)
+                }
+                None => (site, 1),
+            };
+            let (round_s, reducer_s) = rr
+                .split_once('.')
+                .ok_or_else(|| format!("fault entry `{entry}` is missing ROUND.REDUCER"))?;
+            let round: u32 = round_s
+                .parse()
+                .map_err(|_| format!("bad round index in `{entry}`"))?;
+            let reducer: usize = reducer_s
+                .parse()
+                .map_err(|_| format!("bad reducer index in `{entry}`"))?;
+            plan.sites.push(FaultSite { kind, round, reducer, count });
+        }
+        Ok(plan)
+    }
+
+    /// The fault (if any) scheduled at this site on this attempt
+    /// (attempts are 1-based). First matching entry wins; deterministic
+    /// sites before chaos rules.
+    pub fn fault_at(&self, round: u32, reducer: usize, attempt: u32) -> Option<FaultKind> {
+        for s in &self.sites {
+            if s.round == round && s.reducer == reducer && attempt <= s.count {
+                return Some(s.kind);
+            }
+        }
+        if attempt == 1 {
+            for c in &self.chaos {
+                let h = site_hash(c.seed, round, reducer);
+                if h % 1000 < c.permille {
+                    return Some(c.kind);
+                }
+            }
+        }
+        None
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty() && self.chaos.is_empty()
+    }
+}
+
+/// splitmix64 over the (seed, round, reducer) site — the same finalizer
+/// `util::rng` seeds from, giving well-mixed site selection with zero
+/// state.
+fn site_hash(seed: u64, round: u32, reducer: usize) -> u64 {
+    let mut z = seed ^ ((round as u64) << 32) ^ (reducer as u64);
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic *simulated* exponential backoff before retry `attempt`
+/// (microseconds). Recorded in `faults.backoff_sim_us`, never slept —
+/// wall time stays out of the deterministic surface.
+pub(crate) fn sim_backoff_us(attempt: u32) -> u64 {
+    1000u64 << (attempt.min(16) - 1)
+}
+
+/// Panic payload used by [`FaultKind::Panic`] injection, recognized by
+/// the quiet hook so injected panics don't spray backtraces over test
+/// output. Genuine reducer panics keep the default hook behavior.
+struct InjectedPanic {
+    round: u32,
+    reducer: usize,
+    attempt: u32,
+}
+
+/// Raise an injected panic (called inside the round engine's
+/// `catch_unwind` region).
+pub(crate) fn raise_injected(round: u32, reducer: usize, attempt: u32) -> ! {
+    panic::panic_any(InjectedPanic { round, reducer, attempt })
+}
+
+/// Human-readable description of a caught reducer-panic payload.
+pub(crate) fn panic_detail(payload: &(dyn Any + Send)) -> String {
+    if let Some(p) = payload.downcast_ref::<InjectedPanic>() {
+        format!("injected panic at round {} reducer {} attempt {}", p.round, p.reducer, p.attempt)
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+static QUIET_HOOK: Once = Once::new();
+
+/// Install (once per process) a panic hook that suppresses the default
+/// stderr report for [`InjectedPanic`] payloads only. Called when a
+/// simulator is configured with a fault plan; all other panics are
+/// reported exactly as before.
+pub(crate) fn install_quiet_hook() {
+    QUIET_HOOK.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<InjectedPanic>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sites_counts_and_chaos() {
+        let p = FaultPlan::parse("panic@0.2; read@1.0x3, flip@2.1 ;chaos:write:250:9").unwrap();
+        assert_eq!(p.fault_at(0, 2, 1), Some(FaultKind::Panic));
+        assert_eq!(p.fault_at(0, 2, 2), None, "count defaults to 1");
+        for a in 1..=3 {
+            assert_eq!(p.fault_at(1, 0, a), Some(FaultKind::ReadErr));
+        }
+        assert_eq!(p.fault_at(1, 0, 4), None);
+        assert_eq!(p.fault_at(2, 1, 1), Some(FaultKind::BitFlip));
+        assert_eq!(p.fault_at(5, 5, 1), p.fault_at(5, 5, 1), "pure function");
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        for bad in
+            ["boom@0.1", "panic@x.1", "panic@0", "panic@0.1x0", "chaos:read:abc:1", "panic0.1"]
+        {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn chaos_rate_is_roughly_permille_and_seed_dependent() {
+        let p = FaultPlan::parse("chaos:panic:100:42").unwrap();
+        let hits = (0..10u32)
+            .flat_map(|r| (0..100usize).map(move |i| (r, i)))
+            .filter(|&(r, i)| p.fault_at(r, i, 1).is_some())
+            .count();
+        // ~10% of 1000 sites; splitmix64 keeps this well inside [50, 200]
+        assert!((50..200).contains(&hits), "hit rate {hits}/1000");
+        let q = FaultPlan::parse("chaos:panic:100:43").unwrap();
+        let differs = (0..10u32)
+            .flat_map(|r| (0..100usize).map(move |i| (r, i)))
+            .any(|(r, i)| p.fault_at(r, i, 1) != q.fault_at(r, i, 1));
+        assert!(differs, "different seeds must pick different sites");
+        // chaos never fires past the first attempt: one retry clears it
+        for r in 0..10u32 {
+            for i in 0..100usize {
+                assert_eq!(p.fault_at(r, i, 2), None);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_sites_shadow_chaos() {
+        let p = FaultPlan::parse("read@0.0; chaos:panic:1000:1").unwrap();
+        assert_eq!(p.fault_at(0, 0, 1), Some(FaultKind::ReadErr));
+        assert_eq!(p.fault_at(0, 1, 1), Some(FaultKind::Panic), "permille 1000 = every site");
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        assert_eq!(sim_backoff_us(1), 1000);
+        assert_eq!(sim_backoff_us(2), 2000);
+        assert_eq!(sim_backoff_us(3), 4000);
+        assert_eq!(sim_backoff_us(40), sim_backoff_us(16), "shift is clamped");
+    }
+
+    #[test]
+    fn panic_detail_names_injected_sites() {
+        let d = panic_detail(&InjectedPanic { round: 1, reducer: 3, attempt: 2 });
+        assert!(d.contains("round 1 reducer 3 attempt 2"), "{d}");
+        assert_eq!(panic_detail(&"boom"), "boom");
+        assert_eq!(panic_detail(&"boom".to_string()), "boom");
+    }
+}

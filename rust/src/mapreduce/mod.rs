@@ -27,20 +27,26 @@
 //! makes (E7 asserts the paper's 3 rounds).
 
 pub mod cardinality;
+pub mod checkpoint;
 pub mod executor;
+pub mod faults;
 pub mod memory;
 pub mod partition;
 pub mod spill;
 
 pub use cardinality::Cardinality;
+pub use checkpoint::CheckpointStore;
 pub use executor::{
     parse_bytes, ExecBackend, ExecError, Executor, ExecutorCfg, ExecutorHandle, InMemoryExecutor,
-    Manifest, Shard, SpillExecutor,
+    Manifest, Shard, SpillExecutor, DEFAULT_RETRIES,
 };
+pub use faults::{FaultKind, FaultPlan};
 pub use memory::{MemoryMeter, OverBudget};
 pub use partition::{default_l, partition, partition_reported, PartitionStrategy};
-pub use spill::{CodecError, Decoder, ShardRef, SpillStore, Spillable};
+pub use spill::{CodecError, Decoder, ShardRef, SpillError, SpillStore, Spillable};
 
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -198,6 +204,12 @@ pub struct Simulator {
     /// are emitted by the coordinator thread in (round, reducer) order,
     /// so traces are bit-identical across `threads` settings.
     recorder: Arc<dyn Recorder>,
+    /// Deterministic fault schedule consulted at every (round, reducer,
+    /// attempt) site; `None` injects nothing.
+    faults: Option<Arc<FaultPlan>>,
+    /// Attempts per reducer (1 = no recovery, the historical behavior:
+    /// reducer panics propagate and transient errors fail the round).
+    max_attempts: u32,
     stats: Mutex<JobStats>,
 }
 
@@ -208,6 +220,8 @@ impl Simulator {
             local_budget: None,
             byte_budget: None,
             recorder: obs::noop(),
+            faults: None,
+            max_attempts: 1,
             stats: Mutex::new(JobStats::default()),
         }
     }
@@ -229,6 +243,25 @@ impl Simulator {
 
     pub fn with_recorder(mut self, recorder: Arc<dyn Recorder>) -> Simulator {
         self.recorder = recorder;
+        self
+    }
+
+    /// Attach a deterministic fault schedule (see [`faults`]). Also
+    /// installs the process-wide quiet panic hook so injected panics
+    /// don't spray backtraces.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Simulator {
+        faults::install_quiet_hook();
+        self.faults = Some(Arc::new(plan));
+        self
+    }
+
+    /// Allow up to `attempts` executions per reducer (min 1). Anything
+    /// above 1 enables recovery: reducer panics are caught and
+    /// transient [`ExecError`]s are retried with a fresh meter and
+    /// fresh counter snapshots, so a recovered run's accounting is
+    /// bit-identical to a fault-free run's.
+    pub fn with_max_attempts(mut self, attempts: u32) -> Simulator {
+        self.max_attempts = attempts.max(1);
         self
     }
 
@@ -262,7 +295,9 @@ impl Simulator {
         });
         match res {
             Ok(outs) => outs,
-            Err(e) => unreachable!("legacy in-RAM rounds never charge bytes: {e}"),
+            // legacy rounds never charge bytes, so the only reachable
+            // errors are injected faults that exhausted their retries
+            Err(e) => panic!("round '{name}' failed: {e}"),
         }
     }
 
@@ -270,6 +305,17 @@ impl Simulator {
     /// reducer on the thread pool, brackets it with distance/counter
     /// tallies, emits trace events in (round, reducer) input order on
     /// this thread, and folds `SlotOut` accounting into `RoundStats`.
+    ///
+    /// Recovery: when `max_attempts > 1` (or a fault plan is attached),
+    /// each reducer runs inside `catch_unwind` and transient failures —
+    /// I/O errors, shard corruption, reducer panics — are re-executed
+    /// idempotently from the input manifest, up to the attempt bound.
+    /// Every attempt starts with a *fresh* memory meter and fresh
+    /// distance/counter snapshots, so the recorded numbers come from
+    /// the successful attempt alone and a recovered run's stats are
+    /// bit-identical to a fault-free run's; the recovery itself is
+    /// visible only in the span's `attempts` field and the `faults.*`
+    /// counters. Backoff is simulated (recorded, never slept).
     ///
     /// Failure is deterministic: all workers run to completion, then the
     /// error of the lowest-indexed failing reducer is returned — never
@@ -297,40 +343,124 @@ impl Simulator {
                 reducers: reducers as u32,
             });
         }
+        // catching panics changes observable behavior (a poisoned
+        // process vs a structured error), so it is strictly opt-in via
+        // recovery config; the default simulator propagates as always
+        let recovery = self.max_attempts > 1 || self.faults.is_some();
         let results = scoped_map(reducers, self.threads, |i| {
-            let mut meter = MemoryMeter::with_budgets(self.local_budget, self.byte_budget);
-            // the reducer runs entirely on this thread, so the tally
-            // deltas (dist_evals and named obs counters) are exactly its
-            // own work
-            let evals0 = counter::thread_count();
-            let obs0 = obs_counters::snapshot();
-            let rt0 = Instant::now();
-            let slot = work(i, &mut meter);
-            let wall_us = rt0.elapsed().as_micros() as u64;
-            // every charge must be released by the time the reducer
-            // returns — a leak here inflates cross-round peaks and turns
-            // the M_L scaling stats into nonsense. (On the error path
-            // the in-flight charges are expected: the round aborts.)
-            if slot.is_ok() {
-                debug_assert_eq!(
-                    meter.current(),
-                    0,
-                    "reducer {i} of round '{name}' returned with unreleased memory charges"
-                );
-                debug_assert_eq!(
-                    meter.bytes_current(),
-                    0,
-                    "reducer {i} of round '{name}' returned with unreleased byte charges"
-                );
+            let mut injected: BTreeMap<&'static str, u64> = BTreeMap::new();
+            let mut backoff_us = 0u64;
+            let mut attempt = 0u32;
+            loop {
+                attempt += 1;
+                let mut meter = MemoryMeter::with_budgets(self.local_budget, self.byte_budget);
+                // the reducer runs entirely on this thread, so the tally
+                // deltas (dist_evals and named obs counters) are exactly
+                // its own work — snapshotted per attempt, so failed
+                // attempts never leak into the recorded numbers
+                let evals0 = counter::thread_count();
+                let obs0 = obs_counters::snapshot();
+                let rt0 = Instant::now();
+                let fault = self.faults.as_ref().and_then(|p| p.fault_at(round_idx, i, attempt));
+                let mut fired = fault;
+                let slot: Result<SlotOut<R>, ExecError> = match fault {
+                    Some(FaultKind::ReadErr) => Err(ExecError::Io {
+                        context: format!(
+                            "injected read fault at round '{name}' reducer {i} attempt {attempt}"
+                        ),
+                        source: std::io::Error::other("injected fault"),
+                    }),
+                    Some(FaultKind::BitFlip) => Err(ExecError::Corrupt {
+                        round: name.to_string(),
+                        reducer: i,
+                        shard: format!("injected@attempt{attempt}"),
+                        detail: "injected shard bit-flip (checksum mismatch)".to_string(),
+                    }),
+                    _ => {
+                        let res = if recovery {
+                            catch_unwind(AssertUnwindSafe(|| {
+                                if matches!(fault, Some(FaultKind::Panic)) {
+                                    faults::raise_injected(round_idx, i, attempt);
+                                }
+                                work(i, &mut meter)
+                            }))
+                            .unwrap_or_else(|payload| {
+                                Err(ExecError::ReducerPanic {
+                                    round: name.to_string(),
+                                    reducer: i,
+                                    detail: faults::panic_detail(payload.as_ref()),
+                                })
+                            })
+                        } else {
+                            work(i, &mut meter)
+                        };
+                        match res {
+                            Ok(s) if matches!(fault, Some(FaultKind::WriteErr)) => {
+                                drop(s);
+                                Err(ExecError::Io {
+                                    context: format!(
+                                        "injected write fault at round '{name}' reducer {i} \
+                                         attempt {attempt}"
+                                    ),
+                                    source: std::io::Error::other("injected fault"),
+                                })
+                            }
+                            other => {
+                                // a write fault only fires once the work
+                                // actually produced output to lose
+                                if other.is_err() && matches!(fault, Some(FaultKind::WriteErr)) {
+                                    fired = None;
+                                }
+                                other
+                            }
+                        }
+                    }
+                };
+                let wall_us = rt0.elapsed().as_micros() as u64;
+                match slot {
+                    Ok(s) => {
+                        // every charge must be released by the time the
+                        // reducer returns — a leak here inflates
+                        // cross-round peaks and turns the M_L scaling
+                        // stats into nonsense
+                        debug_assert_eq!(
+                            meter.current(),
+                            0,
+                            "reducer {i} of round '{name}' returned with unreleased memory charges"
+                        );
+                        debug_assert_eq!(
+                            meter.bytes_current(),
+                            0,
+                            "reducer {i} of round '{name}' returned with unreleased byte charges"
+                        );
+                        let evals = counter::thread_count() - evals0;
+                        let mut cnt = obs_counters::delta_since(&obs0);
+                        if attempt > 1 {
+                            cnt = merge_fault_counters(cnt, &injected, attempt - 1, backoff_us);
+                        }
+                        return (Ok(s), meter, evals, cnt, wall_us, attempt);
+                    }
+                    Err(e) => {
+                        if let Some(kind) = fired {
+                            *injected.entry(kind.counter_name()).or_insert(0) += 1;
+                        }
+                        if e.is_transient() && attempt < self.max_attempts {
+                            backoff_us += faults::sim_backoff_us(attempt);
+                            obs::log::debug(&format!(
+                                "round '{name}' reducer {i}: attempt {attempt} failed ({e}); \
+                                 retrying"
+                            ));
+                            continue;
+                        }
+                        return (Err(e), meter, 0, Vec::new(), wall_us, attempt);
+                    }
+                }
             }
-            let evals = counter::thread_count() - evals0;
-            let cnt = obs_counters::delta_since(&obs0);
-            (slot, meter, evals, cnt, wall_us)
         });
         // deterministic failure: first error in input order wins
         let mut slots = Vec::with_capacity(reducers);
-        for (slot, meter, evals, cnt, wall_us) in results {
-            slots.push((slot?, meter, evals, cnt, wall_us));
+        for (slot, meter, evals, cnt, wall_us, attempts) in results {
+            slots.push((slot?, meter, evals, cnt, wall_us, attempts));
         }
         let mut outs = Vec::with_capacity(reducers);
         let mut max_peak = 0usize;
@@ -347,7 +477,7 @@ impl Simulator {
         let mut per_counters = Vec::with_capacity(reducers);
         // collection (and hence event emission) is in input order on
         // this thread — never in worker arrival order
-        for (i, (slot, meter, evals, cnt, wall_us)) in slots.into_iter().enumerate() {
+        for (i, (slot, meter, evals, cnt, wall_us, attempts)) in slots.into_iter().enumerate() {
             max_peak = max_peak.max(meter.peak());
             agg += meter.peak();
             violations += usize::from(meter.violated());
@@ -372,6 +502,7 @@ impl Simulator {
                     spill_read: slot.spill_read,
                     spill_write: slot.spill_write,
                     wall_us,
+                    attempts: attempts as u64,
                     counters: cnt.clone(),
                 });
             }
@@ -424,6 +555,69 @@ impl Simulator {
     pub fn take_stats(&self) -> JobStats {
         std::mem::take(&mut self.stats.lock().unwrap())
     }
+
+    /// Number of rounds recorded so far in the current job. Used by the
+    /// spill executor to index checkpoint entries.
+    pub(crate) fn rounds_so_far(&self) -> usize {
+        self.stats.lock().unwrap().rounds.len()
+    }
+
+    /// Append externally produced round statistics — the checkpoint
+    /// replay path, where a round is restored rather than re-executed.
+    pub(crate) fn push_stats(&self, stats: RoundStats) {
+        self.stats.lock().unwrap().rounds.push(stats);
+    }
+
+    /// The statistics of the most recently completed round.
+    ///
+    /// Panics if no round has completed; callers invoke this right
+    /// after a successful `round_impl`.
+    pub(crate) fn last_round_stats(&self) -> RoundStats {
+        self.stats
+            .lock()
+            .unwrap()
+            .rounds
+            .last()
+            .expect("last_round_stats called before any round completed")
+            .clone()
+    }
+}
+
+/// Fold the fault-recovery tallies of a reducer into its name-sorted
+/// counter vector. `faults.*` names slot in at their alphabetical
+/// position so the vector stays sorted (the merge in
+/// `obs::counters::merge` relies on that ordering).
+fn merge_fault_counters(
+    cnt: Vec<(String, u64)>,
+    injected: &BTreeMap<&'static str, u64>,
+    retries: u32,
+    backoff_us: u64,
+) -> Vec<(String, u64)> {
+    let mut extra: Vec<(String, u64)> = injected
+        .iter()
+        .map(|(name, n)| (name.to_string(), *n))
+        .collect();
+    extra.push(("faults.backoff_sim_us".to_string(), backoff_us));
+    extra.push(("faults.retries".to_string(), u64::from(retries)));
+    extra.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut out = Vec::with_capacity(cnt.len() + extra.len());
+    let mut a = cnt.into_iter().peekable();
+    let mut b = extra.into_iter().peekable();
+    loop {
+        match (a.peek(), b.peek()) {
+            (Some(x), Some(y)) => {
+                if x.0 <= y.0 {
+                    out.push(a.next().unwrap());
+                } else {
+                    out.push(b.next().unwrap());
+                }
+            }
+            (Some(_), None) => out.push(a.next().unwrap()),
+            (None, Some(_)) => out.push(b.next().unwrap()),
+            (None, None) => break,
+        }
+    }
+    out
 }
 
 impl Default for Simulator {
@@ -552,6 +746,95 @@ mod tests {
         });
         assert_eq!(sim.take_stats().num_rounds(), 1);
         assert_eq!(sim.take_stats().num_rounds(), 0);
+    }
+
+    #[test]
+    fn fault_counters_merge_in_sorted_position() {
+        let cnt = vec![("cover.iterations".to_string(), 2), ("pruned.give_up".to_string(), 1)];
+        let mut injected = BTreeMap::new();
+        injected.insert(FaultKind::ReadErr.counter_name(), 1u64);
+        let merged = merge_fault_counters(cnt, &injected, 1, 1000);
+        let names: Vec<&str> = merged.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "cover.iterations",
+                "faults.backoff_sim_us",
+                "faults.injected.read",
+                "faults.retries",
+                "pruned.give_up"
+            ]
+        );
+        assert!(names.windows(2).all(|w| w[0] < w[1]), "must stay name-sorted");
+    }
+
+    /// A recovered round's accounting is bit-identical to a fault-free
+    /// run's; the recovery itself shows up only in the `faults.*`
+    /// counters (and the span `attempts` field).
+    #[test]
+    fn injected_faults_recover_with_clean_accounting() {
+        let plan = FaultPlan::parse("read@0.0x2; panic@0.1").unwrap();
+        let faulty = Simulator::new().with_threads(2).with_faults(plan).with_max_attempts(3);
+        let parts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![4, 5]];
+        let work = |_: usize, part: &Vec<u32>, m: &mut MemoryMeter| {
+            m.charge(part.len());
+            let s: u32 = part.iter().sum();
+            m.release(part.len());
+            s
+        };
+        let sums = faulty.round("sum", parts.clone(), work);
+        assert_eq!(sums, vec![6, 9], "results must survive recovery");
+        let fs = faulty.take_stats();
+
+        let clean = Simulator::new().with_threads(2);
+        let _ = clean.round("sum", parts, work);
+        let cs = clean.take_stats();
+        assert_eq!(fs.rounds[0].reducer_mem_peaks, cs.rounds[0].reducer_mem_peaks);
+        assert_eq!(fs.rounds[0].in_items, cs.rounds[0].in_items);
+        assert_eq!(fs.rounds[0].out_items, cs.rounds[0].out_items);
+
+        // reducer 0: read fails attempts 1+2 (2 retries); reducer 1:
+        // panic on attempt 1 (1 retry)
+        assert_eq!(fs.counter_total("faults.retries"), 3);
+        assert_eq!(fs.counter_total("faults.injected.read"), 2);
+        assert_eq!(fs.counter_total("faults.injected.panic"), 1);
+        assert_eq!(fs.counter_total("faults.backoff_sim_us"), 1000 + 2000 + 1000);
+        assert_eq!(cs.counter_total("faults.retries"), 0, "fault-free runs stay counter-free");
+    }
+
+    /// Exhausting the attempt bound surfaces the injected failure as a
+    /// structured error through the manifest API — never a panic.
+    #[test]
+    fn exhausted_retries_surface_structured_errors() {
+        let plan = FaultPlan::parse("read@0.0x9").unwrap();
+        let sim = Simulator::new().with_threads(1).with_faults(plan).with_max_attempts(2);
+        let inputs = sim.scatter(vec![vec![1u32]]).expect("scatter");
+        let err = match Executor::round(&sim, "r", &inputs, |_, p: &Vec<u32>, _| p.clone()) {
+            Ok(_) => panic!("attempts must be exhausted"),
+            Err(e) => e,
+        };
+        assert!(err.is_transient(), "injected I/O faults are transient: {err}");
+        assert!(matches!(err, ExecError::Io { .. }), "{err}");
+    }
+
+    /// Injected panics are caught and converted; a fault plan alone
+    /// (without extra attempts) still yields the structured error.
+    #[test]
+    fn injected_panic_without_retries_is_structured() {
+        let plan = FaultPlan::parse("panic@0.0").unwrap();
+        let sim = Simulator::new().with_threads(1).with_faults(plan);
+        let inputs = sim.scatter(vec![vec![1u32]]).expect("scatter");
+        let err = match Executor::round(&sim, "r", &inputs, |_, p: &Vec<u32>, _| p.clone()) {
+            Ok(_) => panic!("max_attempts is 1, the panic must surface"),
+            Err(e) => e,
+        };
+        match err {
+            ExecError::ReducerPanic { round, reducer, detail } => {
+                assert_eq!((round.as_str(), reducer), ("r", 0));
+                assert!(detail.contains("injected panic"), "{detail}");
+            }
+            other => panic!("expected ReducerPanic, got {other}"),
+        }
     }
 
     /// Regression (meter leaks): reducers that charge without releasing

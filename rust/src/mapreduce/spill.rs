@@ -5,13 +5,17 @@
 //! lives on disk as a *shard* — one file per value, framed as
 //!
 //! ```text
-//! +----------+----------------+-----------------+
-//! | b"MRCSPILL" | payload len (u64 LE) | payload |
-//! +----------+----------------+-----------------+
+//! +-------------+----------------------+---------+---------------+
+//! | b"MRCSPILL" | payload len (u64 LE) | payload | crc32 (u32 LE)|
+//! +-------------+----------------------+---------+---------------+
 //! ```
 //!
 //! — and is materialized one at a time, after its encoded size has been
-//! charged against the hard byte budget. The codec is deliberately dumb:
+//! charged against the hard byte budget. The footer is a CRC-32
+//! (ISO-HDLC, the zlib polynomial) over the payload: a truncated file,
+//! a bad magic, a length mismatch, or any flipped payload bit surfaces
+//! as [`SpillError::Corrupt`] on read — never as garbage handed to the
+//! decoder, and never as a panic. The codec is deliberately dumb:
 //! fixed-width little-endian integers, `f64` via `to_bits` (bit-exact
 //! round-trip, NaN payloads included), `u64` length prefixes on
 //! sequences. [`Spillable::encoded_len`] must equal the exact encoded
@@ -31,6 +35,69 @@ use crate::points::WeightedSet;
 
 const MAGIC: &[u8; 8] = b"MRCSPILL";
 const READ_CHUNK: usize = 1 << 20;
+
+/// CRC-32/ISO-HDLC lookup table (reflected 0xEDB88320 polynomial).
+const CRC_TABLE: [u32; 256] = {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+};
+
+/// CRC-32 (ISO-HDLC / zlib) of `data` — the shard footer checksum.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Incremental twin of [`crc32`] for chunked reads.
+fn crc32_update(mut c: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+/// A shard read failed: either the file system did (`Io`) or the bytes
+/// on disk are not the bytes that were written (`Corrupt` — truncation,
+/// bad magic, length mismatch, checksum mismatch). The distinction
+/// matters to the executor: both are retryable, but `Corrupt` is
+/// reported as integrity loss, not as an I/O failure.
+#[derive(Debug)]
+pub enum SpillError {
+    Io(io::Error),
+    Corrupt { detail: String },
+}
+
+impl std::fmt::Display for SpillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpillError::Io(e) => write!(f, "{e}"),
+            SpillError::Corrupt { detail } => f.write_str(detail),
+        }
+    }
+}
+
+impl std::error::Error for SpillError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SpillError::Io(e) => Some(e),
+            SpillError::Corrupt { .. } => None,
+        }
+    }
+}
 
 /// A shard failed to decode (truncated, trailing bytes, inconsistent
 /// lengths). Carries a human-readable detail string.
@@ -280,17 +347,46 @@ pub struct SpillStore {
 impl SpillStore {
     /// Open a store at `dir`, or at a fresh unique directory under the
     /// system temp dir when `None` (removed again on drop).
+    ///
+    /// Ephemeral names carry a per-process random suffix next to the
+    /// pid/sequence pair, and creation retries on collision: a stale
+    /// directory left by a killed run (same pid recycled, same
+    /// sequence) can therefore never be silently adopted and
+    /// cross-contaminate shards between runs.
     pub fn create(dir: Option<&Path>) -> io::Result<SpillStore> {
-        let (dir, ephemeral) = match dir {
-            Some(d) => (d.to_path_buf(), false),
-            None => {
-                let seq = STORE_SEQ.fetch_add(1, Ordering::Relaxed);
-                let name = format!("mrcoreset-spill-{}-{seq}", std::process::id());
-                (std::env::temp_dir().join(name), true)
+        let Some(d) = dir else {
+            let seq = STORE_SEQ.fetch_add(1, Ordering::Relaxed);
+            let mut nonce = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0)
+                ^ ((std::process::id() as u64) << 32)
+                ^ seq;
+            for _ in 0..16 {
+                // splitmix64 finalizer: cheap, well-mixed suffixes
+                nonce = nonce.wrapping_add(0x9E3779B97F4A7C15);
+                let mut z = nonce;
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+                z ^= z >> 31;
+                let name =
+                    format!("mrcoreset-spill-{}-{seq}-{z:016x}", std::process::id());
+                let path = std::env::temp_dir().join(name);
+                // create_dir (not _all): an existing dir is a collision,
+                // not a success — pick a new suffix instead of adopting
+                match fs::create_dir(&path) {
+                    Ok(()) => return Ok(SpillStore { dir: path, ephemeral: true }),
+                    Err(e) if e.kind() == io::ErrorKind::AlreadyExists => continue,
+                    Err(e) => return Err(e),
+                }
             }
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                "could not create a unique spill temp dir after 16 attempts",
+            ));
         };
-        fs::create_dir_all(&dir)?;
-        Ok(SpillStore { dir, ephemeral })
+        fs::create_dir_all(d)?;
+        Ok(SpillStore { dir: d.to_path_buf(), ephemeral: false })
     }
 
     pub fn dir(&self) -> &Path {
@@ -301,41 +397,78 @@ impl SpillStore {
         self.dir.join(format!("{tag}.shard"))
     }
 
-    /// Write one shard; `tag` must be unique within the store.
+    /// Write one shard; `tag` must be unique within the store (retried
+    /// reducer attempts reuse their tag — `File::create` truncates, so
+    /// the successful attempt's bytes are what remains on disk).
     pub fn write(&self, tag: &str, payload: &[u8]) -> io::Result<ShardRef> {
         let mut w = BufWriter::new(File::create(self.path_of(tag))?);
         w.write_all(MAGIC)?;
         w.write_all(&(payload.len() as u64).to_le_bytes())?;
         w.write_all(payload)?;
+        w.write_all(&crc32(payload).to_le_bytes())?;
         w.flush()?;
         Ok(ShardRef { tag: tag.to_string(), bytes: payload.len() as u64 })
     }
 
-    /// Read a shard's payload back, validating frame and length.
-    pub fn read(&self, shard: &ShardRef) -> io::Result<Vec<u8>> {
-        let mut f = File::open(self.path_of(&shard.tag))?;
+    /// Read a shard's payload back, validating frame, length, and the
+    /// CRC-32 footer. A missing/unreadable file is [`SpillError::Io`];
+    /// anything that means "these are not the written bytes" —
+    /// truncation, bad magic, length mismatch, checksum mismatch — is
+    /// [`SpillError::Corrupt`].
+    pub fn read(&self, shard: &ShardRef) -> Result<Vec<u8>, SpillError> {
+        fn exact(
+            f: &mut File,
+            buf: &mut [u8],
+            tag: &str,
+            what: &str,
+        ) -> Result<(), SpillError> {
+            f.read_exact(buf).map_err(|e| {
+                if e.kind() == io::ErrorKind::UnexpectedEof {
+                    SpillError::Corrupt { detail: format!("shard {tag}: truncated {what}") }
+                } else {
+                    SpillError::Io(e)
+                }
+            })
+        }
+        let mut f = File::open(self.path_of(&shard.tag)).map_err(SpillError::Io)?;
         let mut header = [0u8; 16];
-        f.read_exact(&mut header)?;
+        exact(&mut f, &mut header, &shard.tag, "frame header")?;
         if &header[..8] != MAGIC {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!("shard {}: bad magic", shard.tag),
-            ));
+            return Err(SpillError::Corrupt {
+                detail: format!("shard {}: bad magic", shard.tag),
+            });
         }
         let len = u64::from_le_bytes(header[8..].try_into().expect("8-byte slice"));
         if len != shard.bytes {
-            let detail =
-                format!("shard {}: frame len {len} != manifest len {}", shard.tag, shard.bytes);
-            return Err(io::Error::new(io::ErrorKind::InvalidData, detail));
+            return Err(SpillError::Corrupt {
+                detail: format!(
+                    "shard {}: frame len {len} != manifest len {}",
+                    shard.tag, shard.bytes
+                ),
+            });
         }
         let mut payload = Vec::with_capacity(len as usize);
         let mut chunk = vec![0u8; READ_CHUNK.min(len.max(1) as usize)];
         let mut left = len as usize;
+        let mut crc = 0xFFFF_FFFFu32;
         while left > 0 {
             let want = left.min(chunk.len());
-            f.read_exact(&mut chunk[..want])?;
+            exact(&mut f, &mut chunk[..want], &shard.tag, "payload")?;
+            crc = crc32_update(crc, &chunk[..want]);
             payload.extend_from_slice(&chunk[..want]);
             left -= want;
+        }
+        crc ^= 0xFFFF_FFFF;
+        let mut footer = [0u8; 4];
+        exact(&mut f, &mut footer, &shard.tag, "checksum footer")?;
+        let stored = u32::from_le_bytes(footer);
+        if stored != crc {
+            return Err(SpillError::Corrupt {
+                detail: format!(
+                    "shard {}: checksum mismatch (stored {stored:08x}, computed {crc:08x})",
+                    shard.tag
+                ),
+            });
         }
         Ok(payload)
     }
@@ -344,7 +477,16 @@ impl SpillStore {
 impl Drop for SpillStore {
     fn drop(&mut self) {
         if self.ephemeral {
-            let _ = fs::remove_dir_all(&self.dir);
+            if let Err(e) = fs::remove_dir_all(&self.dir) {
+                // leftover shards are disk leakage worth a warning —
+                // except when the dir is already gone, which is clean
+                if e.kind() != io::ErrorKind::NotFound {
+                    crate::obs::log::warn(&format!(
+                        "failed to clean up spill dir {}: {e}",
+                        self.dir.display()
+                    ));
+                }
+            }
         }
     }
 }
@@ -454,6 +596,58 @@ mod tests {
         // a manifest/frame length mismatch is surfaced, not trusted
         let lying = ShardRef { tag: "t-0".to_string(), bytes: shard.bytes + 1 };
         assert!(store.read(&lying).is_err());
+    }
+
+    #[test]
+    fn crc32_matches_the_iso_hdlc_check_value() {
+        // the standard check value for CRC-32/ISO-HDLC
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn bit_flip_and_truncation_surface_as_corrupt() {
+        let store = SpillStore::create(None).expect("temp store");
+        let mut buf = Vec::new();
+        vec![10u32, 20, 30].encode(&mut buf);
+        let shard = store.write("c-0", &buf).expect("write");
+        let path = store.dir().join("c-0.shard");
+        let clean = fs::read(&path).expect("raw file");
+
+        // flip one payload bit: the footer no longer matches
+        let mut flipped = clean.clone();
+        flipped[MAGIC.len() + 8] ^= 0x01;
+        fs::write(&path, &flipped).expect("rewrite");
+        match store.read(&shard) {
+            Err(SpillError::Corrupt { detail }) => {
+                assert!(detail.contains("checksum mismatch"), "{detail}")
+            }
+            other => panic!("expected checksum corruption, got {other:?}"),
+        }
+
+        // truncate mid-payload: corrupt, not a bare I/O error
+        fs::write(&path, &clean[..clean.len() - 6]).expect("truncate");
+        match store.read(&shard) {
+            Err(SpillError::Corrupt { detail }) => {
+                assert!(detail.contains("truncated"), "{detail}")
+            }
+            other => panic!("expected truncation corruption, got {other:?}"),
+        }
+
+        // a missing file stays an I/O error (retry may recreate it)
+        fs::remove_file(&path).expect("remove");
+        assert!(matches!(store.read(&shard), Err(SpillError::Io(_))));
+    }
+
+    #[test]
+    fn ephemeral_dirs_are_unique_even_with_equal_sequence_starts() {
+        let a = SpillStore::create(None).expect("store a");
+        let b = SpillStore::create(None).expect("store b");
+        assert_ne!(a.dir(), b.dir());
+        let name = a.dir().file_name().unwrap().to_string_lossy().to_string();
+        assert!(name.starts_with("mrcoreset-spill-"), "{name}");
+        // pid, sequence, and a 16-hex-digit random suffix
+        assert!(name.rsplit('-').next().unwrap().len() == 16, "{name}");
     }
 
     #[test]

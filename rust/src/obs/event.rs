@@ -7,7 +7,7 @@
 //! |---------------|------------------------------------------------------------------------|
 //! | `run_start`   | `schema`, `label`                                                      |
 //! | `round_start` | `round`, `name`, `reducers`                                            |
-//! | `reducer`     | `round`, `reducer`, `name`, `in_items`, `out_items`, `dist_evals`, `mem_peak`, `mem_bytes`, `wall_us`, `spill_read`, `spill_write`, `counters{}` |
+//! | `reducer`     | `round`, `reducer`, `name`, `in_items`, `out_items`, `dist_evals`, `mem_peak`, `mem_bytes`, `wall_us`, `spill_read`, `spill_write`, `attempts`, `counters{}` |
 //! | `round_end`   | `round`, `name`, `reducers`, `dist_evals`, `mem_max`, `mem_p50`, `mem_p95`, `bytes_max`, `evals_max`, `evals_p50`, `evals_p95`, `violations`, `wall_us` |
 //! | `run_end`     | `rounds`, `dist_evals`, `max_local_memory`, `max_local_bytes`          |
 //!
@@ -17,6 +17,13 @@
 //! form), while `spill_read` / `spill_write` are actual disk traffic
 //! (backend-dependent, so gated like `wall_us`). v1 traces still parse;
 //! the new numeric fields default to 0.
+//!
+//! Schema v3 adds fault recovery: `attempts` on reducer spans counts
+//! executions of that reducer (1 = first try succeeded). It is emitted
+//! only when > 1, so fault-free traces carry no extra bytes, and it is
+//! part of the *full* and *stable* forms alike — under a deterministic
+//! fault plan the retry pattern is itself deterministic. On parse the
+//! field defaults to 1 when absent (v1/v2 traces).
 //!
 //! Determinism contract: every field except `wall_us`, `spill_read` and
 //! `spill_write` is a deterministic function of the run's inputs (seeded
@@ -29,7 +36,7 @@
 use crate::util::json::Json;
 
 /// Version stamp written by `run_start`; bump on breaking field changes.
-pub const TRACE_SCHEMA_VERSION: u64 = 2;
+pub const TRACE_SCHEMA_VERSION: u64 = 3;
 
 /// One telemetry event. See the module docs for the field schema.
 #[derive(Clone, Debug, PartialEq)]
@@ -59,6 +66,10 @@ pub enum Event {
         /// so wall-gated out of the stable form like `wall_us`.
         spill_read: u64,
         spill_write: u64,
+        /// Executions of this reducer (1 = no retries). Serialized only
+        /// when > 1; deterministic under a seeded fault plan, so part
+        /// of the stable form.
+        attempts: u64,
         /// Name-sorted deltas of `obs::counters` charged by this reducer.
         counters: Vec<(String, u64)>,
     },
@@ -136,6 +147,7 @@ impl Event {
                 wall_us,
                 spill_read,
                 spill_write,
+                attempts,
                 counters,
             } => {
                 o.set("round", Json::num(*round as f64));
@@ -150,6 +162,9 @@ impl Event {
                     o.set("wall_us", Json::num(*wall_us as f64));
                     o.set("spill_read", Json::num(*spill_read as f64));
                     o.set("spill_write", Json::num(*spill_write as f64));
+                }
+                if *attempts > 1 {
+                    o.set("attempts", Json::num(*attempts as f64));
                 }
                 let mut c = Json::obj();
                 for (k, v) in counters {
@@ -242,6 +257,7 @@ impl Event {
                     wall_us: opt_u64(&v, "wall_us"),
                     spill_read: opt_u64(&v, "spill_read"),
                     spill_write: opt_u64(&v, "spill_write"),
+                    attempts: opt_u64(&v, "attempts").max(1),
                     counters,
                 }
             }
@@ -328,6 +344,7 @@ mod tests {
             wall_us: 777,
             spill_read: 4008,
             spill_write: 400,
+            attempts: 1,
             counters: vec![("cover.iterations".to_string(), 42), ("pruned.give_up".to_string(), 1)],
         }
     }
@@ -403,6 +420,28 @@ mod tests {
         let err = Event::parse("{\"ev\":\"round_start\",\"round\":0,\"name\":\"x\"}").unwrap_err();
         assert!(err.contains("`reducers`"), "{err}");
         assert!(Event::parse("not json at all").is_err());
+    }
+
+    #[test]
+    fn attempts_emitted_only_when_retried() {
+        let clean = sample_reducer();
+        assert!(!clean.to_json().contains("attempts"), "attempts=1 must stay implicit");
+        let mut retried = clean;
+        if let Event::Reducer { attempts, .. } = &mut retried {
+            *attempts = 3;
+        }
+        let full = retried.to_json();
+        let stable = retried.stable_json();
+        assert!(full.contains("\"attempts\":3"), "{full}");
+        assert!(stable.contains("\"attempts\":3"), "retries are part of the stable form: {stable}");
+        assert_eq!(Event::parse(&full).unwrap(), retried);
+        // v2 lines without the field parse as a single attempt
+        let line = "{\"ev\":\"reducer\",\"round\":0,\"reducer\":1,\"name\":\"r\",\"in_items\":3,\
+                    \"out_items\":1,\"dist_evals\":9,\"mem_peak\":3,\"counters\":{}}";
+        match Event::parse(line).unwrap() {
+            Event::Reducer { attempts, .. } => assert_eq!(attempts, 1),
+            other => panic!("expected reducer, got {other:?}"),
+        }
     }
 
     #[test]

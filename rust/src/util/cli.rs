@@ -67,8 +67,28 @@ impl Args {
         self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
     }
 
+    /// Look up a value-taking flag. `Ok(None)` when absent, `Err` when
+    /// the flag was written without a value — `--key` as the last token
+    /// or directly followed by another flag parses as boolean, and
+    /// accessing it through a value getter is a usage error that must
+    /// name the flag, not silently read as "not given".
+    pub fn try_get(&self, key: &str) -> Result<Option<&str>, String> {
+        if let Some(v) = self.flags.get(key) {
+            return Ok(Some(v.as_str()));
+        }
+        if self.bools.iter().any(|b| b == key) {
+            return Err(format!("flag --{key} requires a value"));
+        }
+        Ok(None)
+    }
+
+    /// [`Args::try_get`] with the usage error reported and exit(2) —
+    /// the behavior every typed getter builds on.
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+        self.try_get(key).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        })
     }
 
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -163,6 +183,19 @@ mod tests {
         let a = args("run --json -q");
         assert!(a.has("json"), "--json must stay boolean: {a:?}");
         assert!(a.has("q"));
-        assert_eq!(a.get("json"), None);
+        assert_eq!(a.try_get("json"), Err("flag --json requires a value".to_string()));
+    }
+
+    #[test]
+    fn trailing_value_flag_is_a_usage_error_naming_the_flag() {
+        // `--n` with nothing after it parses as boolean; reading it as a
+        // value must surface a structured error, never a silent default
+        let a = args("run --eps 0.5 --n");
+        assert_eq!(a.try_get("eps"), Ok(Some("0.5")));
+        let err = a.try_get("n").unwrap_err();
+        assert!(err.contains("--n"), "error must name the flag: {err}");
+        assert!(err.contains("requires a value"), "{err}");
+        // absent flags stay a clean None
+        assert_eq!(a.try_get("k"), Ok(None));
     }
 }

@@ -102,6 +102,116 @@ fn solver_still_works_with_broken_engine() {
     assert!(rep.full_cost.is_finite());
 }
 
+// ---- spill-shard integrity + injected faults ------------------------
+//
+// The MRCSPILL frame carries a CRC32 footer; any on-disk damage to a
+// shard must surface through the executor API as a structured
+// `ExecError` naming the round/reducer/shard — never garbage decode
+// output and never a panic.
+
+use mrcoreset::mapreduce::{
+    ExecError, Executor, ExecutorCfg, FaultPlan, Simulator, SpillExecutor,
+};
+use mrcoreset::obs;
+
+/// Build a spill executor over an explicit directory, scatter two
+/// partitions, and hand back (executor, manifest, path of shard 0).
+fn spill_fixture(
+    name: &str,
+) -> (SpillExecutor, mrcoreset::mapreduce::Manifest<Vec<u32>>, std::path::PathBuf) {
+    let d = tmpdir(name);
+    let ex = SpillExecutor::new(Simulator::new().with_threads(1), Some(&d)).expect("store");
+    let inputs = ex.scatter(vec![vec![1u32, 2, 3], vec![4, 5]]).expect("scatter");
+    let shard0 = d.join("s0-0.shard");
+    assert!(shard0.is_file(), "scatter must have written {}", shard0.display());
+    (ex, inputs, shard0)
+}
+
+#[test]
+fn truncated_spill_shard_is_a_structured_corrupt_error() {
+    let (ex, inputs, shard0) = spill_fixture("trunc_shard");
+    let bytes = std::fs::read(&shard0).unwrap();
+    std::fs::write(&shard0, &bytes[..bytes.len() - 6]).unwrap(); // lose CRC + tail
+    let err = match ex.round("r-trunc", &inputs, |_, p: &Vec<u32>, _| p.clone()) {
+        Ok(_) => panic!("truncated shard must fail the round"),
+        Err(e) => e,
+    };
+    match err {
+        ExecError::Corrupt { round, reducer, shard, detail } => {
+            assert_eq!((round.as_str(), reducer), ("r-trunc", 0));
+            assert_eq!(shard, "s0-0");
+            assert!(detail.contains("truncated"), "{detail}");
+        }
+        other => panic!("expected Corrupt, got {other}"),
+    }
+}
+
+#[test]
+fn bit_flipped_spill_shard_is_a_structured_corrupt_error() {
+    let (ex, inputs, shard0) = spill_fixture("flip_shard");
+    let mut bytes = std::fs::read(&shard0).unwrap();
+    let i = bytes.len() - 7; // inside the payload, ahead of the CRC footer
+    bytes[i] ^= 0x40;
+    std::fs::write(&shard0, &bytes).unwrap();
+    let err = match ex.round("r-flip", &inputs, |_, p: &Vec<u32>, _| p.clone()) {
+        Ok(_) => panic!("checksum mismatch must fail the round"),
+        Err(e) => e,
+    };
+    match err {
+        ExecError::Corrupt { round, reducer, shard, detail } => {
+            assert_eq!((round.as_str(), reducer), ("r-flip", 0));
+            assert_eq!(shard, "s0-0");
+            assert!(detail.contains("checksum"), "{detail}");
+        }
+        other => panic!("expected Corrupt, got {other}"),
+    }
+}
+
+#[test]
+fn fault_plan_injected_read_error_is_structured_io() {
+    let plan = FaultPlan::parse("read@0.1").unwrap();
+    let sim = Simulator::new().with_threads(2).with_faults(plan);
+    let inputs = sim.scatter(vec![vec![1u32], vec![2u32]]).expect("scatter");
+    let err = match Executor::round(&sim, "r-inj", &inputs, |_, p: &Vec<u32>, _| p.clone()) {
+        Ok(_) => panic!("max_attempts defaults to 1 on a bare simulator"),
+        Err(e) => e,
+    };
+    match err {
+        ExecError::Io { context, source } => {
+            assert!(context.contains("injected read fault"), "{context}");
+            assert!(context.contains("reducer 1"), "{context}");
+            let _ = source.to_string(); // Display + Error::source stay usable
+        }
+        other => panic!("expected Io, got {other}"),
+    }
+}
+
+/// The same contract holds through the full solver stack: a fault plan
+/// that outlives the retry budget turns the whole run into an `Err`,
+/// never an abort.
+#[test]
+fn exhausted_fault_plan_fails_a_full_solve_structurally() {
+    use mrcoreset::coordinator::try_solve_traced;
+    use mrcoreset::data::synth::GaussianMixtureSpec;
+    let (data, _) =
+        GaussianMixtureSpec { n: 400, d: 2, k: 3, seed: 9, ..Default::default() }.generate();
+    let space = EuclideanSpace::new(Arc::new(data));
+    let pts: Vec<u32> = (0..400).collect();
+    let mut cfg = ClusterConfig::new(Objective::Median, 3, 0.5);
+    cfg.executor = ExecutorCfg::spill()
+        .with_faults(FaultPlan::parse("flip@0.0x9").unwrap())
+        .with_retries(1);
+    let err = try_solve_traced(&space, &pts, &cfg, obs::noop())
+        .expect_err("a x9 fault site outlives 2 attempts");
+    match err {
+        ExecError::Corrupt { reducer, detail, .. } => {
+            assert_eq!(reducer, 0);
+            assert!(detail.contains("bit-flip"), "{detail}");
+        }
+        other => panic!("expected Corrupt, got {other}"),
+    }
+}
+
 #[test]
 fn csv_error_paths() {
     let d = tmpdir("csv");

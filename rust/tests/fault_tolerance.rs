@@ -1,0 +1,183 @@
+//! Fault-tolerance acceptance suite.
+//!
+//! Contract 1 (recovery transparency): a seeded fault plan covering
+//! every fault kind — reducer panics, spill read/write I/O errors, and
+//! shard bit-flips — recovers on BOTH backends at 1 and 8 threads, and
+//! the final report JSON and stable trace are bit-identical to the
+//! fault-free run once the recovery bookkeeping itself (`attempts`
+//! span fields, `faults.*` counters, the report `retries` key) is
+//! stripped. Faults must never change *what* was computed.
+//!
+//! Contract 2 (checkpoint/resume): a checkpointed spill run that dies
+//! mid-job (here: a fault site that outlives the retry budget) resumes
+//! from the completed-round prefix and finishes with a report
+//! bit-identical to an uninterrupted run.
+
+use std::sync::Arc;
+
+use mrcoreset::coordinator::{try_solve_traced, ClusterConfig, RunReport};
+use mrcoreset::data::synth::GaussianMixtureSpec;
+use mrcoreset::mapreduce::{ExecutorCfg, FaultPlan};
+use mrcoreset::metric::dense::EuclideanSpace;
+use mrcoreset::metric::Objective;
+use mrcoreset::obs::{self, Event, MemSink, Recorder};
+
+fn mixture(n: usize, seed: u64) -> (EuclideanSpace, Vec<u32>) {
+    let (data, _) =
+        GaussianMixtureSpec { n, d: 2, k: 5, seed, ..Default::default() }.generate();
+    (EuclideanSpace::new(Arc::new(data)), (0..n as u32).collect())
+}
+
+/// Report JSON with the recovery bookkeeping stripped: the `retries`
+/// key and every `faults.*` round counter. Everything else — solution,
+/// costs, memory/byte peaks, dist_evals, per-round stats — must be
+/// byte-identical between a fault-free and a recovered run.
+fn scrubbed_report(mut rep: RunReport) -> String {
+    rep.retries = 0;
+    for r in &mut rep.stats.rounds {
+        r.counters.retain(|(k, _)| !k.starts_with("faults."));
+    }
+    rep.to_json()
+}
+
+/// Stable trace lines with the same bookkeeping stripped from reducer
+/// spans (`attempts` back to 1, `faults.*` counters dropped).
+fn scrubbed_trace(events: Vec<Event>) -> Vec<String> {
+    events
+        .into_iter()
+        .map(|mut e| {
+            if let Event::Reducer { attempts, counters, .. } = &mut e {
+                *attempts = 1;
+                counters.retain(|(k, _)| !k.starts_with("faults."));
+            }
+            e.stable_json()
+        })
+        .collect()
+}
+
+/// One traced solve; returns (scrubbed report, scrubbed stable trace,
+/// raw retries) so callers can assert both transparency and that
+/// recovery actually happened.
+fn run(
+    space: &EuclideanSpace,
+    pts: &[u32],
+    executor: ExecutorCfg,
+    threads: usize,
+) -> (String, Vec<String>, u64) {
+    let sink = Arc::new(MemSink::new());
+    let rec: Arc<dyn Recorder> = sink.clone();
+    let mut cfg = ClusterConfig::new(Objective::Median, 5, 0.4);
+    cfg.threads = Some(threads);
+    cfg.executor = executor;
+    let rep = try_solve_traced(space, pts, &cfg, rec).expect("run must recover");
+    let retries = rep.retries;
+    (scrubbed_report(rep), scrubbed_trace(sink.snapshot()), retries)
+}
+
+/// A plan exercising all four fault kinds at sites every run visits
+/// (round 0 is the L-way local round; later rounds keep reducer 0).
+/// Within the default 2-retry budget: the worst site fails twice.
+fn mixed_plan() -> FaultPlan {
+    FaultPlan::parse("read@0.0x2; panic@0.1; flip@1.0; write@2.0").unwrap()
+}
+
+#[test]
+fn recovered_runs_are_bit_identical_modulo_bookkeeping() {
+    let (space, pts) = mixture(2500, 42);
+    let (ref_json, ref_trace, ref_retries) =
+        run(&space, &pts, ExecutorCfg::in_memory(), 1);
+    assert_eq!(ref_retries, 0, "reference run must be fault-free");
+    assert!(ref_trace.len() > 5, "expected run/round/reducer events");
+
+    let variants: [(&str, ExecutorCfg, usize); 4] = [
+        ("mem/1", ExecutorCfg::in_memory().with_faults(mixed_plan()), 1),
+        ("mem/8", ExecutorCfg::in_memory().with_faults(mixed_plan()), 8),
+        ("spill/1", ExecutorCfg::spill().with_faults(mixed_plan()), 1),
+        ("spill/8", ExecutorCfg::spill().with_faults(mixed_plan()), 8),
+    ];
+    for (label, executor, threads) in variants {
+        let (json, trace, retries) = run(&space, &pts, executor, threads);
+        assert_eq!(retries, 5, "{label}: 5 injected failures -> 5 retries");
+        assert_eq!(ref_json, json, "{label}: scrubbed report differs");
+        assert_eq!(ref_trace, trace, "{label}: scrubbed stable trace differs");
+    }
+}
+
+/// Chaos mode: probabilistic faults from a seeded hash are as
+/// recoverable and as transparent as pinned sites, and the SAME plan
+/// fires at the SAME (round, reducer) sites on both backends.
+#[test]
+fn chaos_plan_is_backend_invariant_and_transparent() {
+    let (space, pts) = mixture(1500, 7);
+    let (ref_json, ref_trace, _) = run(&space, &pts, ExecutorCfg::in_memory(), 1);
+    let chaos = || FaultPlan::parse("chaos:panic:500:1234; chaos:read:500:77").unwrap();
+    let (mem_json, mem_trace, mem_retries) =
+        run(&space, &pts, ExecutorCfg::in_memory().with_faults(chaos()), 8);
+    let (sp_json, sp_trace, sp_retries) =
+        run(&space, &pts, ExecutorCfg::spill().with_faults(chaos()), 1);
+    assert!(mem_retries > 0, "400 permille over dozens of reducers must fire");
+    assert_eq!(mem_retries, sp_retries, "chaos sites must be backend-agnostic");
+    assert_eq!(ref_json, mem_json);
+    assert_eq!(mem_json, sp_json);
+    assert_eq!(ref_trace, mem_trace);
+    assert_eq!(mem_trace, sp_trace);
+}
+
+#[test]
+fn checkpointed_run_killed_mid_job_resumes_bit_identically() {
+    let (space, pts) = mixture(1800, 21);
+    let ckpt = std::env::temp_dir()
+        .join(format!("mrcoreset-ckpt-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt);
+
+    let cfg_with = |executor: ExecutorCfg| {
+        let mut cfg = ClusterConfig::new(Objective::Median, 5, 0.4);
+        cfg.threads = Some(2);
+        cfg.executor = executor;
+        cfg
+    };
+
+    // Reference: the same job, uninterrupted, no checkpointing.
+    let reference = try_solve_traced(&space, &pts, &cfg_with(ExecutorCfg::spill()), obs::noop())
+        .expect("reference run");
+
+    // "Kill" a checkpointed run after round 0: a round-1 fault site
+    // that outlives a zero-retry budget aborts the job exactly where a
+    // worker crash would, with round 0 already persisted.
+    let doomed = cfg_with(
+        ExecutorCfg::spill()
+            .with_faults(FaultPlan::parse("read@1.0x9").unwrap())
+            .with_retries(0)
+            .with_checkpoint_dir(ckpt.clone()),
+    );
+    let err = try_solve_traced(&space, &pts, &doomed, obs::noop())
+        .expect_err("the doomed run must die in round 1");
+    assert!(err.to_string().contains("injected"), "{err}");
+    assert!(
+        ckpt.join("round-0.json").is_file(),
+        "round 0 must have been checkpointed before the crash"
+    );
+
+    // Resume over the same checkpoint dir with a clean plan: round 0
+    // replays from disk, the rest executes, and the report matches the
+    // uninterrupted run byte for byte.
+    let resumed_cfg = cfg_with(ExecutorCfg::spill().with_checkpoint_dir(ckpt.clone()));
+    let resumed = try_solve_traced(&space, &pts, &resumed_cfg, obs::noop())
+        .expect("resume must complete");
+    assert_eq!(
+        reference.to_json(),
+        resumed.to_json(),
+        "resumed report must be bit-identical to the uninterrupted run"
+    );
+    assert_eq!(reference.dist_evals, resumed.dist_evals);
+
+    // A different job config must NOT be able to consume the
+    // checkpoint: the fingerprint check rejects it up front.
+    let mut other = cfg_with(ExecutorCfg::spill().with_checkpoint_dir(ckpt.clone()));
+    other.k = 4;
+    let err = try_solve_traced(&space, &pts, &other, obs::noop())
+        .expect_err("fingerprint mismatch must be refused");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
