@@ -187,8 +187,6 @@ pub fn try_solve_traced(
     let n = pts.len();
     let l = cfg.l.unwrap_or_else(|| default_l(n, cfg.k));
     let m = cfg.m.unwrap_or(2 * cfg.k).max(cfg.k);
-    // the run label doubles as the checkpoint fingerprint: resuming
-    // under different parameters must be refused, not silently mixed
     let label = format!(
         "{} k={} n={} eps={} seed={} kernel={}",
         cfg.objective,
@@ -201,7 +199,28 @@ pub fn try_solve_traced(
     if recorder.enabled() {
         recorder.record(&Event::RunStart { schema: TRACE_SCHEMA_VERSION, label: label.clone() });
     }
-    let exec = cfg.executor.build_tagged(cfg.threads, recorder.clone(), &label)?;
+    // The checkpoint fingerprint must cover *every* result-affecting
+    // input — resuming under different parameters (or a different
+    // dataset of the same size) must be refused, not silently mixed —
+    // so it extends the display label with the remaining config fields
+    // and a content hash of the input. The data probe costs a handful
+    // of distance evaluations, so it runs only when checkpointing is on.
+    let fingerprint = if cfg.executor.checkpoint_dir.is_some() {
+        format!(
+            "{label} l={l} m={m} beta={} tl={:?} final={:?} z={} strategy={:?} \
+             one_round={} data={:016x}",
+            cfg.beta,
+            cfg.tl,
+            cfg.final_algo,
+            cfg.outliers,
+            cfg.strategy,
+            cfg.one_round,
+            data_fingerprint(space, pts)
+        )
+    } else {
+        label.clone()
+    };
+    let exec = cfg.executor.build_tagged(cfg.threads, recorder.clone(), &fingerprint)?;
     let ccfg = CoresetConfig { eps: cfg.eps, beta: cfg.beta, m, tl: cfg.tl, seed: cfg.seed };
     let use_robust = cfg.outliers > 0 || cfg.final_algo == FinalAlgo::RobustLocalSearch;
 
@@ -326,6 +345,34 @@ pub fn try_solve_traced(
     })
 }
 
+/// Content identity of the input instance for the checkpoint
+/// fingerprint: FNV-1a over the point-id list plus a deterministic
+/// sample of pairwise distances. The distance probes make two datasets
+/// that merely share a size hash differently — the failure mode a
+/// size-only fingerprint cannot catch — while staying O(|P|) cheap
+/// (the id fold) with at most ~128 distance evaluations.
+fn data_fingerprint(space: &dyn MetricSpace, pts: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |h: &mut u64, x: u64| {
+        *h ^= x;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    let n = pts.len();
+    mix(&mut h, n as u64);
+    for &p in pts {
+        mix(&mut h, u64::from(p));
+    }
+    if n > 0 {
+        let step = (n / 64).max(1);
+        for i in (0..n).step_by(step) {
+            let j = (i + n / 2) % n;
+            mix(&mut h, space.dist(pts[0], pts[i]).to_bits());
+            mix(&mut h, space.dist(pts[i], pts[j]).to_bits());
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +399,23 @@ mod tests {
             assert!(rep.dist_evals > 0, "{obj}: distance work must be accounted");
             assert_eq!(rep.dist_evals, rep.stats.total_dist_evals());
         }
+    }
+
+    #[test]
+    fn data_fingerprint_separates_same_size_datasets() {
+        let (a, pts) = mixture(500, 4, 1);
+        let (b, _) = mixture(500, 4, 2);
+        assert_eq!(data_fingerprint(&a, &pts), data_fingerprint(&a, &pts), "deterministic");
+        assert_ne!(
+            data_fingerprint(&a, &pts),
+            data_fingerprint(&b, &pts),
+            "two datasets of the same size must fingerprint differently"
+        );
+        assert_ne!(
+            data_fingerprint(&a, &pts),
+            data_fingerprint(&a, &pts[..499]),
+            "a subset must fingerprint differently"
+        );
     }
 
     #[test]

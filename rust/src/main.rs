@@ -88,8 +88,8 @@ const USAGE: &str = "usage: mrcoreset <run|exp|gen|report|bench-diff|info> [flag
               replays bit-identically on both executors. Env default:
               MRCORESET_FAULTS
   --retries N transient reducer failures retried up to N times (default
-              2; simulated backoff, recorded not slept). Env default:
-              MRCORESET_RETRIES
+              0 — recovery is opt-in; simulated backoff, recorded not
+              slept). Env default: MRCORESET_RETRIES
   --checkpoint-dir D
               (spill executor) persist each completed round to D and, on
               restart with the same config, resume at the first
@@ -118,10 +118,20 @@ fn main() {
     }
 }
 
+/// Unwrap a CLI accessor result; a usage error prints and exits(2).
+/// This is the only layer where flag errors terminate the process —
+/// the `Args` getters themselves are `Result`-based library code.
+fn usage<T>(r: Result<T, String>) -> T {
+    r.unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    })
+}
+
 /// Parse `--kernel` if present; a typo is a usage error, not a silent
 /// fall-through (unlike the `MRCORESET_KERNEL` env override).
 fn kernel_of(args: &Args) -> Option<KernelKind> {
-    args.get("kernel").map(|s| match KernelKind::parse(s) {
+    usage(args.try_get("kernel")).map(|s| match KernelKind::parse(s) {
         Some(kind) => kind,
         None => {
             eprintln!("error: unknown --kernel {s} (want auto, scalar, blocked, or simd)");
@@ -131,7 +141,7 @@ fn kernel_of(args: &Args) -> Option<KernelKind> {
 }
 
 fn objective_of(args: &Args) -> Objective {
-    match args.str_or("alg", "kmedian") {
+    match usage(args.str_or("alg", "kmedian")) {
         "kmedian" | "k-median" | "median" => Objective::Median,
         "kmeans" | "k-means" | "means" => Objective::Means,
         other => {
@@ -143,8 +153,8 @@ fn objective_of(args: &Args) -> Objective {
 
 fn cmd_run(args: &Args) {
     let obj = objective_of(args);
-    let k: usize = args.parse_or("k", 8);
-    let eps: f64 = args.parse_or("eps", 0.5);
+    let k: usize = usage(args.parse_or("k", 8));
+    let eps: f64 = usage(args.parse_or("eps", 0.5));
 
     // data: CSV positional, or synthetic with --n/--d
     let data = if let Some(file) = args.positional.first() {
@@ -161,10 +171,10 @@ fn cmd_run(args: &Args) {
             }
         }
     } else {
-        let n: usize = args.parse_or("n", 10_000);
-        let d: usize = args.parse_or("d", 2);
-        let seed: u64 = args.parse_or("data-seed", 1);
-        let noise: usize = args.parse_or("noise", 0);
+        let n: usize = usage(args.parse_or("n", 10_000));
+        let d: usize = usage(args.parse_or("d", 2));
+        let seed: u64 = usage(args.parse_or("data-seed", 1));
+        let noise: usize = usage(args.parse_or("noise", 0));
         let spec = GaussianMixtureSpec { n, d, k: k.max(2), seed, ..Default::default() };
         if noise > 0 {
             let nspec = NoiseSpec { count: noise, seed: seed ^ 0xBAD, ..Default::default() };
@@ -194,16 +204,16 @@ fn cmd_run(args: &Args) {
 
     let mut cfg = ClusterConfig::new(obj, k, eps);
     if args.has("l") {
-        cfg.l = Some(args.parse_or("l", 0));
+        cfg.l = Some(usage(args.parse_or("l", 0)));
     }
     if args.has("m") {
-        cfg.m = Some(args.parse_or("m", 2 * k));
+        cfg.m = Some(usage(args.parse_or("m", 2 * k)));
     }
-    cfg.beta = args.parse_or("beta", cfg.beta);
-    cfg.seed = args.parse_or("seed", cfg.seed);
-    cfg.outliers = args.parse_or("z", 0);
+    cfg.beta = usage(args.parse_or("beta", cfg.beta));
+    cfg.seed = usage(args.parse_or("seed", cfg.seed));
+    cfg.outliers = usage(args.parse_or("z", 0));
     cfg.one_round = args.has("one-round");
-    cfg.tl = match args.str_or("tl", "dpp") {
+    cfg.tl = match usage(args.str_or("tl", "dpp")) {
         "dpp" => TlAlgo::DppSeeding,
         "local-search" => TlAlgo::LocalSearch,
         "gonzalez" => TlAlgo::Gonzalez,
@@ -212,7 +222,7 @@ fn cmd_run(args: &Args) {
             std::process::exit(2);
         }
     };
-    cfg.final_algo = match args.str_or("final", "local-search") {
+    cfg.final_algo = match usage(args.str_or("final", "local-search")) {
         "local-search" => FinalAlgo::LocalSearch,
         "pam" => FinalAlgo::Pam,
         "robust" | "robust-local-search" => FinalAlgo::RobustLocalSearch,
@@ -222,7 +232,10 @@ fn cmd_run(args: &Args) {
         }
     };
     // --partition is the documented name; --strategy stays as an alias
-    let strat = args.get("partition").unwrap_or_else(|| args.str_or("strategy", "rr"));
+    let strat = match usage(args.try_get("partition")) {
+        Some(s) => s,
+        None => usage(args.str_or("strategy", "rr")),
+    };
     cfg.strategy = match strat {
         "rr" => PartitionStrategy::RoundRobin,
         "contig" => PartitionStrategy::Contiguous,
@@ -232,7 +245,7 @@ fn cmd_run(args: &Args) {
             std::process::exit(2);
         }
     };
-    if let Some(backend) = args.get("executor") {
+    if let Some(backend) = usage(args.try_get("executor")) {
         cfg.executor.backend = match backend {
             "mem" | "in-memory" => ExecBackend::InMemory,
             "spill" => ExecBackend::Spill,
@@ -242,7 +255,7 @@ fn cmd_run(args: &Args) {
             }
         };
     }
-    if let Some(b) = args.get("mem-budget") {
+    if let Some(b) = usage(args.try_get("mem-budget")) {
         match parse_bytes(b) {
             Some(bytes) => cfg.executor.mem_budget = Some(bytes),
             None => {
@@ -251,10 +264,10 @@ fn cmd_run(args: &Args) {
             }
         }
     }
-    if let Some(dir) = args.get("spill-dir") {
+    if let Some(dir) = usage(args.try_get("spill-dir")) {
         cfg.executor.spill_dir = Some(std::path::PathBuf::from(dir));
     }
-    if let Some(spec) = args.get("faults") {
+    if let Some(spec) = usage(args.try_get("faults")) {
         match FaultPlan::parse(spec) {
             Ok(plan) => cfg.executor.faults = Some(plan),
             Err(e) => {
@@ -264,9 +277,9 @@ fn cmd_run(args: &Args) {
         }
     }
     if args.has("retries") {
-        cfg.executor.retries = args.require("retries");
+        cfg.executor.retries = usage(args.require("retries"));
     }
-    if let Some(dir) = args.get("checkpoint-dir") {
+    if let Some(dir) = usage(args.try_get("checkpoint-dir")) {
         cfg.executor.checkpoint_dir = Some(std::path::PathBuf::from(dir));
     }
 
@@ -290,7 +303,7 @@ fn cmd_run(args: &Args) {
         }
     }
 
-    let recorder: Arc<dyn Recorder> = match args.get("trace") {
+    let recorder: Arc<dyn Recorder> = match usage(args.try_get("trace")) {
         Some(path) => match JsonlSink::create(Path::new(path)) {
             Ok(sink) => {
                 log::debug(&format!("trace: writing telemetry to {path}"));
@@ -350,15 +363,15 @@ fn cmd_gen(args: &Args) {
     // scripted run/gen pipeline fails here, not at the next stage
     let _ = kernel_of(args);
     let spec = GaussianMixtureSpec {
-        n: args.parse_or("n", 10_000),
-        d: args.parse_or("d", 2),
-        k: args.parse_or("k", 8),
-        spread: args.parse_or("spread", 20.0),
-        outlier_frac: args.parse_or("outliers", 0.0),
-        seed: args.parse_or("seed", 1),
+        n: usage(args.parse_or("n", 10_000)),
+        d: usage(args.parse_or("d", 2)),
+        k: usage(args.parse_or("k", 8)),
+        spread: usage(args.parse_or("spread", 20.0)),
+        outlier_frac: usage(args.parse_or("outliers", 0.0)),
+        seed: usage(args.parse_or("seed", 1)),
     };
-    let out = args.str_or("out", "points.csv");
-    let noise: usize = args.parse_or("noise", 0);
+    let out = usage(args.str_or("out", "points.csv"));
+    let noise: usize = usage(args.parse_or("noise", 0));
     let (data, _) = if noise > 0 {
         spec.generate_with_noise(&NoiseSpec {
             count: noise,
@@ -523,7 +536,7 @@ fn cmd_bench_diff(args: &Args) {
             std::process::exit(2);
         }
     };
-    let tolerance: f64 = args.parse_or("tolerance", 0.02);
+    let tolerance: f64 = usage(args.parse_or("tolerance", 0.02));
     let load = |p: &str| -> Json {
         let text = std::fs::read_to_string(p).unwrap_or_else(|e| {
             eprintln!("error: {p}: {e}");

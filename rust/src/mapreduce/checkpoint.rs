@@ -11,11 +11,18 @@
 //!
 //! Resume validation is strict: a checkpoint is only replayed when its
 //! `meta.json` fingerprint matches the resuming run (the driver passes
-//! its run label — objective, k, n, eps, seed, kernel), the round name
-//! and shard count match what the executor is about to run, and every
-//! persisted shard passes its checksum. Anything else — a missing
-//! round file, a flipped bit, a different config — truncates the
-//! usable prefix and the run simply re-executes from there.
+//! its full run fingerprint — every result-affecting config field plus
+//! a content hash of the input data), the round name and shard count
+//! match what the executor is about to run, and every persisted shard
+//! passes its checksum. Anything else — a missing round file, a
+//! flipped bit, a different config — truncates the usable prefix and
+//! the run simply re-executes from there. Truncation is durable: the
+//! manifests and shards of every round past the divergence point are
+//! *deleted from disk*, never just skipped in memory — otherwise a
+//! resume killed after re-executing part of the divergent suffix
+//! could, on the next open, splice a stale round from the
+//! pre-divergence run back into the fresh prefix (its checksums still
+//! pass; only the delete makes the divergence unrecoverable).
 //!
 //! Layout under the checkpoint dir:
 //!
@@ -132,6 +139,11 @@ impl CheckpointStore {
                 }
             }
         }
+        // everything past the validated prefix is unusable (corrupt,
+        // invalid, or orphaned beyond a gap) — delete it now so a later
+        // partial re-execution can never splice it back in
+        purge_from(dir, rounds.len())
+            .map_err(|e| ck_err("purge stale checkpoint rounds", e))?;
         if !rounds.is_empty() {
             crate::obs::log::info(&format!(
                 "checkpoint: {} completed round(s) available at {}",
@@ -159,17 +171,20 @@ impl CheckpointStore {
 
     /// The persisted round at `idx`, if it matches what the executor is
     /// about to run. A name or shard-count mismatch truncates the
-    /// usable prefix at `idx` (the job diverged; later checkpoints are
-    /// for rounds that will never come back).
+    /// usable prefix at `idx` — in memory *and on disk*: the job
+    /// diverged, and stale manifests left behind would pass their
+    /// checksums on a later resume and replay data from a run already
+    /// known to be wrong. A failed delete is therefore a hard error,
+    /// not a warning.
     pub(crate) fn take_resumable(
         &self,
         idx: usize,
         name: &str,
         n_shards: usize,
-    ) -> Option<CheckpointRound> {
+    ) -> Result<Option<CheckpointRound>, ExecError> {
         let mut rounds = self.rounds.lock().unwrap();
         if idx >= rounds.len() {
-            return None;
+            return Ok(None);
         }
         let r = &rounds[idx];
         if r.name != name || r.shards.len() != n_shards {
@@ -180,9 +195,11 @@ impl CheckpointStore {
                 r.shards.len()
             ));
             rounds.truncate(idx);
-            return None;
+            purge_from(&self.dir, idx)
+                .map_err(|e| ck_err("purge diverged checkpoint rounds", e))?;
+            return Ok(None);
         }
-        Some(r.clone())
+        Ok(Some(r.clone()))
     }
 
     /// Persist one completed round: copy its output shards out of the
@@ -232,6 +249,34 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
     let tmp = path.with_extension("json.tmp");
     fs::write(&tmp, bytes)?;
     fs::rename(&tmp, path)
+}
+
+/// Round index of a `round-<idx>.json` manifest file name.
+fn round_file_idx(name: &str) -> Option<usize> {
+    name.strip_prefix("round-")?.strip_suffix(".json")?.parse().ok()
+}
+
+/// Round index of a `ckpt-r<idx>-<slot>.shard` payload file name.
+fn shard_file_idx(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix("ckpt-r")?.strip_suffix(".shard")?;
+    rest.split_once('-')?.0.parse().ok()
+}
+
+/// Delete every persisted round at index >= `from` — manifests and
+/// shard payloads both. Files that are not checkpoint artifacts
+/// (`meta.json`, foreign shards) are left alone.
+fn purge_from(dir: &Path, from: usize) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stale = round_file_idx(name).is_some_and(|i| i >= from)
+            || shard_file_idx(name).is_some_and(|i| i >= from);
+        if stale {
+            fs::remove_file(entry.path())?;
+        }
+    }
+    Ok(())
 }
 
 fn parse_round(text: &str, idx: usize) -> Result<CheckpointRound, String> {
@@ -383,28 +428,83 @@ mod tests {
         // reopen with the same fingerprint: the round replays
         let ck2 = CheckpointStore::open(&dir, "fp-a").expect("reopen");
         assert_eq!(ck2.rounds_available(), 1);
-        let r = ck2.take_resumable(0, "round-zero", 1).expect("resumable");
+        let r = ck2.take_resumable(0, "round-zero", 1).expect("no purge").expect("resumable");
         assert_eq!(r.stats.dist_evals, 14);
         assert_eq!(ck2.shard_store().read(&r.shards[0]).expect("shard"), vec![1, 2, 3, 4]);
-
-        // a name mismatch truncates instead of replaying wrong data
-        assert!(ck2.take_resumable(0, "different", 1).is_none());
-        assert_eq!(ck2.rounds_available(), 0);
 
         // a different fingerprint refuses to open at all
         let err = CheckpointStore::open(&dir, "fp-b").expect_err("mismatch");
         assert!(matches!(err, ExecError::Checkpoint { .. }), "{err}");
 
-        // corrupting a persisted shard shortens the usable prefix
-        let ck3 = CheckpointStore::open(&dir, "fp-a").expect("reopen");
-        assert_eq!(ck3.rounds_available(), 1);
+        // corrupting a persisted shard shortens the usable prefix —
+        // and deletes the now-unusable round from disk
         let shard_path = dir.join("ckpt-r0-0.shard");
         let mut bytes = fs::read(&shard_path).expect("raw");
         let n = bytes.len();
         bytes[n - 5] ^= 0x80;
         fs::write(&shard_path, &bytes).expect("corrupt");
-        let ck4 = CheckpointStore::open(&dir, "fp-a").expect("reopen");
-        assert_eq!(ck4.rounds_available(), 0, "corrupt shard must not be replayed");
+        let ck3 = CheckpointStore::open(&dir, "fp-a").expect("reopen");
+        assert_eq!(ck3.rounds_available(), 0, "corrupt shard must not be replayed");
+        assert!(!dir.join("round-0.json").exists(), "corrupt round purged from disk");
+        assert!(!shard_path.exists(), "corrupt shard purged from disk");
+
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn divergence_deletes_stale_rounds_from_disk() {
+        let dir = std::env::temp_dir().join(format!("mrc-ckpt-purge-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let src = SpillStore::create(None).expect("src store");
+        let s0 = src.write("a", &[1, 2]).expect("write");
+        let s1 = src.write("b", &[3, 4]).expect("write");
+
+        let ck = CheckpointStore::open(&dir, "fp").expect("open");
+        ck.persist(0, "r-zero", &sample_stats(), &src, &[s0]).expect("persist 0");
+        ck.persist(1, "r-one", &sample_stats(), &src, &[s1]).expect("persist 1");
+
+        let ck2 = CheckpointStore::open(&dir, "fp").expect("reopen");
+        assert_eq!(ck2.rounds_available(), 2);
+        // the job diverged at round 0: BOTH rounds must vanish from
+        // disk, or a resume killed mid-suffix could splice the stale
+        // round 1 back into a fresh prefix on the next open
+        assert!(ck2.take_resumable(0, "different", 1).expect("purge ok").is_none());
+        assert_eq!(ck2.rounds_available(), 0);
+        for f in ["round-0.json", "round-1.json", "ckpt-r0-0.shard", "ckpt-r1-0.shard"] {
+            assert!(!dir.join(f).exists(), "{f} must be deleted at divergence");
+        }
+        let ck3 = CheckpointStore::open(&dir, "fp").expect("reopen after purge");
+        assert_eq!(ck3.rounds_available(), 0, "nothing stale left to splice back");
+        assert!(dir.join("meta.json").is_file(), "meta survives the purge");
+
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_deletes_rounds_past_a_corrupt_prefix() {
+        let dir = std::env::temp_dir().join(format!("mrc-ckpt-prefix-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let src = SpillStore::create(None).expect("src store");
+        let s0 = src.write("a", &[1, 2]).expect("write");
+        let s1 = src.write("b", &[3, 4]).expect("write");
+
+        let ck = CheckpointStore::open(&dir, "fp").expect("open");
+        ck.persist(0, "r-zero", &sample_stats(), &src, &[s0]).expect("persist 0");
+        ck.persist(1, "r-one", &sample_stats(), &src, &[s1]).expect("persist 1");
+        drop(ck);
+
+        // round 0 goes bad: the prefix ends there, and round 1 —
+        // though its own checksums still pass — must not survive
+        let shard_path = dir.join("ckpt-r0-0.shard");
+        let mut bytes = fs::read(&shard_path).expect("raw");
+        let n = bytes.len();
+        bytes[n - 5] ^= 0x80;
+        fs::write(&shard_path, &bytes).expect("corrupt");
+
+        let ck2 = CheckpointStore::open(&dir, "fp").expect("reopen");
+        assert_eq!(ck2.rounds_available(), 0);
+        assert!(!dir.join("round-1.json").exists(), "orphaned round 1 must be deleted");
+        assert!(!dir.join("ckpt-r1-0.shard").exists());
 
         let _ = fs::remove_dir_all(&dir);
     }

@@ -426,10 +426,12 @@ impl Executor for SpillExecutor {
         // Resume: a checkpoint that already holds this round (validated
         // name, shard count, checksums) is replayed — its stats enter
         // the job as if the round had run, and its shards become the
-        // round's output manifest. No reducer executes.
+        // round's output manifest. No reducer executes, and no span
+        // events are re-emitted for the replayed round (see the
+        // checkpoint-resume caveat in `obs::event`).
         let round_idx = self.sim.rounds_so_far();
         if let Some(ck) = &self.checkpoint {
-            if let Some(r) = ck.take_resumable(round_idx, name, inputs.len()) {
+            if let Some(r) = ck.take_resumable(round_idx, name, inputs.len())? {
                 crate::obs::log::info(&format!(
                     "checkpoint: replaying round {round_idx} '{name}' from {}",
                     ck.dir().display()
@@ -507,7 +509,7 @@ pub fn parse_bytes(s: &str) -> Option<u64> {
 ///
 /// The default reads `MRCORESET_EXECUTOR`, `MRCORESET_MEM_BUDGET`,
 /// `MRCORESET_FAULTS`, and `MRCORESET_RETRIES` from the environment
-/// (falling back to unbudgeted in-memory with 2 retries), so an entire
+/// (falling back to unbudgeted in-memory with no retries), so an entire
 /// test suite or CI leg can be switched out-of-core — or run under a
 /// chaos fault plan — without touching code. The explicit constructors
 /// (`in_memory()` / `spill()`) ignore the environment, which is what
@@ -528,10 +530,13 @@ pub struct ExecutorCfg {
     pub checkpoint_dir: Option<PathBuf>,
 }
 
-/// Default retries for executor-driven runs: two idempotent
-/// re-executions absorb any single-site fault plus one repeat without
-/// changing fault-free behavior at all.
-pub const DEFAULT_RETRIES: u32 = 2;
+/// Default retries for executor-driven runs. Zero: recovery — and with
+/// it the `catch_unwind` wrapper around reducers — is strictly opt-in,
+/// so a genuine logic-bug panic propagates and deterministic failures
+/// are not silently re-executed. CI chaos legs and fault-tolerance
+/// tests opt in explicitly (`--retries` / `MRCORESET_RETRIES` /
+/// `with_retries`).
+pub const DEFAULT_RETRIES: u32 = 0;
 
 impl Default for ExecutorCfg {
     fn default() -> ExecutorCfg {
@@ -614,8 +619,10 @@ impl ExecutorCfg {
 
     /// [`ExecutorCfg::build`] with a run fingerprint for the checkpoint
     /// store: a resumed run must present the same fingerprint that
-    /// created the checkpoint (the driver passes its run label), so a
-    /// checkpoint can never be replayed into a different job's rounds.
+    /// created the checkpoint (the driver passes its full run
+    /// fingerprint — every result-affecting config field plus a content
+    /// hash of the input), so a checkpoint can never be replayed into a
+    /// different job's rounds.
     pub fn build_tagged(
         &self,
         threads: Option<usize>,

@@ -25,6 +25,15 @@
 //! fault plan the retry pattern is itself deterministic. On parse the
 //! field defaults to 1 when absent (v1/v2 traces).
 //!
+//! Checkpoint-resume caveat: a run resumed from a round-level
+//! checkpoint emits span events only for the rounds it actually
+//! re-executes. Replayed rounds restore their `RoundStats` into the run
+//! report (which stays bit-identical to an uninterrupted run), but the
+//! per-reducer item/counter breakdown needed to reconstruct their
+//! `round_start`/`reducer`/`round_end` spans is not persisted, so a
+//! resumed trace is a *suffix* of the uninterrupted trace. Compare
+//! resumed runs by report, not by trace.
+//!
 //! Determinism contract: every field except `wall_us`, `spill_read` and
 //! `spill_write` is a deterministic function of the run's inputs (seeded
 //! RNGs, fixed partitioning, byte-parity executor charges), and events

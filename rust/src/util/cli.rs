@@ -82,45 +82,30 @@ impl Args {
         Ok(None)
     }
 
-    /// [`Args::try_get`] with the usage error reported and exit(2) —
-    /// the behavior every typed getter builds on.
-    pub fn get(&self, key: &str) -> Option<&str> {
-        self.try_get(key).unwrap_or_else(|e| {
-            eprintln!("error: {e}");
-            std::process::exit(2);
-        })
+    /// String flag with a fallback. All typed getters are `Result`s so
+    /// library and test consumers can handle usage errors; only the
+    /// top-level command layer turns an `Err` into exit(2).
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str, String> {
+        Ok(self.try_get(key)?.unwrap_or(default))
     }
 
-    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
-        self.get(key).unwrap_or(default)
-    }
-
-    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
     where
         T::Err: std::fmt::Display,
     {
-        match self.get(key) {
-            None => default,
-            Some(v) => v.parse().unwrap_or_else(|e| {
-                eprintln!("error: --{key} {v}: {e}");
-                std::process::exit(2);
-            }),
+        match self.try_get(key)? {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key} {v}: {e}")),
         }
     }
 
-    pub fn require<T: std::str::FromStr>(&self, key: &str) -> T
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, String>
     where
         T::Err: std::fmt::Display,
     {
-        match self.get(key) {
-            Some(v) => v.parse().unwrap_or_else(|e| {
-                eprintln!("error: --{key} {v}: {e}");
-                std::process::exit(2);
-            }),
-            None => {
-                eprintln!("error: missing required flag --{key}");
-                std::process::exit(2);
-            }
+        match self.try_get(key)? {
+            Some(v) => v.parse().map_err(|e| format!("--{key} {v}: {e}")),
+            None => Err(format!("missing required flag --{key}")),
         }
     }
 }
@@ -138,8 +123,8 @@ mod tests {
     fn parses_subcommand_and_flags() {
         let a = args("run data.csv --n 1000 --eps=0.25 --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("run"));
-        assert_eq!(a.get("n"), Some("1000"));
-        assert_eq!(a.get("eps"), Some("0.25"));
+        assert_eq!(a.try_get("n"), Ok(Some("1000")));
+        assert_eq!(a.try_get("eps"), Ok(Some("0.25")));
         assert!(a.has("verbose"));
         assert_eq!(a.positional, vec!["data.csv"]);
     }
@@ -147,38 +132,53 @@ mod tests {
     #[test]
     fn typed_getters() {
         let a = args("run --n 1000");
-        assert_eq!(a.parse_or("n", 5usize), 1000);
-        assert_eq!(a.parse_or("k", 5usize), 5);
-        assert!((a.parse_or("eps", 0.5f64) - 0.5).abs() < 1e-12);
+        assert_eq!(a.parse_or("n", 5usize), Ok(1000));
+        assert_eq!(a.parse_or("k", 5usize), Ok(5));
+        assert!((a.parse_or("eps", 0.5f64).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(a.require::<usize>("n"), Ok(1000));
+    }
+
+    #[test]
+    fn typed_getters_report_usage_errors_instead_of_exiting() {
+        let a = args("run --n ten --flag");
+        // bad parse, missing required flag, and value-less flag are all
+        // recoverable Errs naming the flag — no exit path in the library
+        let err = a.parse_or("n", 5usize).unwrap_err();
+        assert!(err.contains("--n ten"), "{err}");
+        let err = a.require::<f64>("eps").unwrap_err();
+        assert!(err.contains("missing required flag --eps"), "{err}");
+        let err = a.str_or("flag", "dflt").unwrap_err();
+        assert!(err.contains("--flag requires a value"), "{err}");
+        assert_eq!(a.str_or("absent", "dflt"), Ok("dflt"));
     }
 
     #[test]
     fn bool_flag_before_flag() {
         let a = args("run --fast --n 10");
         assert!(a.has("fast"));
-        assert_eq!(a.get("n"), Some("10"));
+        assert_eq!(a.try_get("n"), Ok(Some("10")));
     }
 
     #[test]
     fn no_subcommand() {
         let a = args("--n 10");
         assert_eq!(a.subcommand, None);
-        assert_eq!(a.get("n"), Some("10"));
+        assert_eq!(a.try_get("n"), Ok(Some("10")));
     }
 
     #[test]
     fn negative_number_value() {
         let a = args("run --shift=-3.5");
-        assert_eq!(a.get("shift"), Some("-3.5"));
+        assert_eq!(a.try_get("shift"), Ok(Some("-3.5")));
         let a = args("run --shift -3.5");
-        assert_eq!(a.get("shift"), Some("-3.5"));
+        assert_eq!(a.try_get("shift"), Ok(Some("-3.5")));
     }
 
     #[test]
     fn short_flags_are_boolean() {
         let a = args("run -v --n 10");
         assert!(a.has("v"));
-        assert_eq!(a.get("n"), Some("10"));
+        assert_eq!(a.try_get("n"), Ok(Some("10")));
         // a short flag after a long flag is NOT consumed as its value
         let a = args("run --json -q");
         assert!(a.has("json"), "--json must stay boolean: {a:?}");

@@ -76,7 +76,8 @@ fn run(
 
 /// A plan exercising all four fault kinds at sites every run visits
 /// (round 0 is the L-way local round; later rounds keep reducer 0).
-/// Within the default 2-retry budget: the worst site fails twice.
+/// Within an explicit 2-retry budget (recovery is opt-in — the default
+/// is zero retries): the worst site fails twice.
 fn mixed_plan() -> FaultPlan {
     FaultPlan::parse("read@0.0x2; panic@0.1; flip@1.0; write@2.0").unwrap()
 }
@@ -89,11 +90,13 @@ fn recovered_runs_are_bit_identical_modulo_bookkeeping() {
     assert_eq!(ref_retries, 0, "reference run must be fault-free");
     assert!(ref_trace.len() > 5, "expected run/round/reducer events");
 
+    let faulty_mem = || ExecutorCfg::in_memory().with_faults(mixed_plan()).with_retries(2);
+    let faulty_spill = || ExecutorCfg::spill().with_faults(mixed_plan()).with_retries(2);
     let variants: [(&str, ExecutorCfg, usize); 4] = [
-        ("mem/1", ExecutorCfg::in_memory().with_faults(mixed_plan()), 1),
-        ("mem/8", ExecutorCfg::in_memory().with_faults(mixed_plan()), 8),
-        ("spill/1", ExecutorCfg::spill().with_faults(mixed_plan()), 1),
-        ("spill/8", ExecutorCfg::spill().with_faults(mixed_plan()), 8),
+        ("mem/1", faulty_mem(), 1),
+        ("mem/8", faulty_mem(), 8),
+        ("spill/1", faulty_spill(), 1),
+        ("spill/8", faulty_spill(), 8),
     ];
     for (label, executor, threads) in variants {
         let (json, trace, retries) = run(&space, &pts, executor, threads);
@@ -112,9 +115,9 @@ fn chaos_plan_is_backend_invariant_and_transparent() {
     let (ref_json, ref_trace, _) = run(&space, &pts, ExecutorCfg::in_memory(), 1);
     let chaos = || FaultPlan::parse("chaos:panic:500:1234; chaos:read:500:77").unwrap();
     let (mem_json, mem_trace, mem_retries) =
-        run(&space, &pts, ExecutorCfg::in_memory().with_faults(chaos()), 8);
+        run(&space, &pts, ExecutorCfg::in_memory().with_faults(chaos()).with_retries(2), 8);
     let (sp_json, sp_trace, sp_retries) =
-        run(&space, &pts, ExecutorCfg::spill().with_faults(chaos()), 1);
+        run(&space, &pts, ExecutorCfg::spill().with_faults(chaos()).with_retries(2), 1);
     assert!(mem_retries > 0, "400 permille over dozens of reducers must fire");
     assert_eq!(mem_retries, sp_retries, "chaos sites must be backend-agnostic");
     assert_eq!(ref_json, mem_json);
@@ -177,6 +180,20 @@ fn checkpointed_run_killed_mid_job_resumes_bit_identically() {
     other.k = 4;
     let err = try_solve_traced(&space, &pts, &other, obs::noop())
         .expect_err("fingerprint mismatch must be refused");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+
+    // ...including fields the run label does not carry (--m) ...
+    let mut other_m = cfg_with(ExecutorCfg::spill().with_checkpoint_dir(ckpt.clone()));
+    other_m.m = Some(7);
+    let err = try_solve_traced(&space, &pts, &other_m, obs::noop())
+        .expect_err("a changed --m must be refused");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+
+    // ...and a *different dataset of the same size*, which only the
+    // content hash can tell apart.
+    let (other_space, other_pts) = mixture(1800, 22);
+    let err = try_solve_traced(&other_space, &other_pts, &resumed_cfg, obs::noop())
+        .expect_err("a different same-size dataset must be refused");
     assert!(err.to_string().contains("fingerprint"), "{err}");
 
     let _ = std::fs::remove_dir_all(&ckpt);
